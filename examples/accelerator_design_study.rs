@@ -1,0 +1,50 @@
+//! Accelerator design-space study (the paper's SS5.2 "hardware
+//! mechanisms" as what-if experiments):
+//!   * how the breakdown shifts across device presets (SS6 extrapolation),
+//!   * what faster HBM / bigger matrix engines / faster links buy,
+//!   * where BERT Large sits on each device's roofline.
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::dist::{LinkSpec, ModelParallelModel};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::profiler::Timeline;
+
+fn main() {
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let mp = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Mixed);
+
+    println!("## Cross-accelerator extrapolation (SS6): same op graph, different device");
+    println!("{:<14}{:>12}{:>12}{:>10}{:>10}", "device", "FP32(ms)", "MP(ms)", "gemm%", "lamb%");
+    for dev in [DeviceSpec::mi100(), DeviceSpec::v100(), DeviceSpec::a100(),
+                DeviceSpec::tpu_v3_core()] {
+        let t32 = Timeline::modeled(&run, &dev);
+        let tmp = Timeline::modeled(&mp, &dev);
+        let cats = t32.category_fractions();
+        let gemm: f64 = cats.iter()
+            .filter(|(k, _)| k.contains("GEMM"))
+            .map(|(_, v)| v).sum();
+        println!("{:<14}{:>12.1}{:>12.1}{:>9.1}%{:>9.1}%",
+                 dev.name, t32.total_seconds() * 1e3, tmp.total_seconds() * 1e3,
+                 100.0 * gemm,
+                 100.0 * t32.layer_fractions().get("LAMB").copied().unwrap_or(0.0));
+    }
+
+    println!("\n## What-if: MI100 with 2x HBM bandwidth (SS5.2 'larger on-chip memory / NMC' direction)");
+    let mut fat = DeviceSpec::mi100();
+    fat.name = "MI100+2xBW".into();
+    fat.mem_bw *= 2.0;
+    for dev in [DeviceSpec::mi100(), fat] {
+        let t = Timeline::modeled(&run, &dev);
+        println!("{:<14} iteration {:>8.1} ms (LAMB {:>4.1}%)",
+                 dev.name, t.total_seconds() * 1e3,
+                 100.0 * t.layer_fractions().get("LAMB").copied().unwrap_or(0.0));
+    }
+
+    println!("\n## What-if: network bandwidth for 8-way model parallel (SS5.2)");
+    let b64 = RunConfig::new(ModelConfig::bert_large().with_batch(64),
+                             Phase::Phase1, Precision::Fp32);
+    for link in [LinkSpec::pcie4x16(), LinkSpec::xgmi(), LinkSpec::nvlink3()] {
+        let bd = ModelParallelModel::new(8, link.clone()).breakdown(&b64, &DeviceSpec::mi100());
+        println!("{:<14} comm {:>5.1}%  total {:>8.1} ms",
+                 link.name, 100.0 * bd.comm_fraction(), bd.total() * 1e3);
+    }
+}

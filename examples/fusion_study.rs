@@ -1,0 +1,59 @@
+//! Fusion study (SS5.1): modeled AND measured kernel/GEMM fusion — the
+//! Fig. 13 / Fig. 15 space plus the pallas-vs-jnp fused-op comparison on
+//! the measured path.
+use std::path::PathBuf;
+
+use anyhow::Result;
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::coordinator::MeasureRunner;
+use bertprof::fusion::gemm_fusion;
+use bertprof::fusion::kernel_fusion::FusionStudy;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let dev = DeviceSpec::mi100();
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+
+    println!("## Modeled kernel fusion (Fig. 13)");
+    for s in [FusionStudy::layernorm(&run, &dev), FusionStudy::adam(&run, &dev)] {
+        println!("{:<12} kernels x{:.2}  time x{:.2}  traffic x{:.2}",
+                 s.name, 1.0 / s.kernel_ratio, 1.0 / s.time_ratio, 1.0 / s.traffic_ratio);
+    }
+
+    println!("\n## Modeled QKV GEMM fusion (Fig. 15)");
+    for r in gemm_fusion::figure15_sweep(&dev, Precision::Fp32) {
+        println!("{:<22} fwd {:.2}x", r.label, r.fwd_speedup());
+    }
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let mut rt = Runtime::load(&dir)?;
+
+        println!("\n## Measured fused-vs-unfused sequences (CPU PJRT)");
+        let mut mr = MeasureRunner::new(&mut rt, 5);
+        for (label, unf, fus) in [
+            ("LayerNorm", "layernorm_unfused", "layernorm_fused"),
+            ("DR+Res+LN", "drln_unfused", "drln_fused"),
+            ("Adam", "adam_unfused", "adam_fused"),
+            ("QKV GEMMs", "qkv_unfused", "qkv_fused"),
+        ] {
+            let (k, t) = mr.fusion_ratio(unf, fus)?;
+            println!("{:<12} kernels x{:.2}  time x{:.2}", label, 1.0 / k, 1.0 / t);
+        }
+
+        println!("\n## Pallas (explicit VMEM blocking) vs XLA-fused jnp, same op");
+        for (jnp, pal) in [("gelu_fwd", "gelu_fwd_pallas"),
+                           ("softmax_chain", "softmax_chain_pallas"),
+                           ("drln_fwd", "drln_fwd_pallas")] {
+            let tj = rt.time_artifact(jnp, 5)?;
+            let tp = rt.time_artifact(pal, 5)?;
+            println!("{:<16} jnp {:>10?}  pallas(interpret) {:>10?}",
+                     jnp, tj.median, tp.median);
+        }
+        println!("(interpret-mode pallas wall-clock is NOT a TPU proxy — see DESIGN.md)");
+    } else {
+        println!("\n(run `make artifacts` for the measured half)");
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: the three things bertprof does, in one binary.
+//!
+//! 1. Analytic: build BERT Large's op graph and print the Fig. 4 row.
+//! 2. Measured: load an AOT HLO artifact, execute it on CPU PJRT, time it.
+//! 3. Inference: run the tiny-BERT forward artifact (the pallas-composed
+//!    variant) and read back masked-token predictions.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+use std::path::PathBuf;
+
+use anyhow::Result;
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::profiler::Timeline;
+use bertprof::runtime::Runtime;
+
+fn main() -> Result<()> {
+    // 1. Analytic model: BERT Large, Phase-1, B=32, FP32 on an MI100.
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let t = Timeline::modeled(&run, &DeviceSpec::mi100());
+    println!("BERT Large iteration (modeled): {:.1} ms", t.total_seconds() * 1e3);
+    for (layer, frac) in t.layer_fractions() {
+        println!("  {layer:<12} {:5.1}%", 100.0 * frac);
+    }
+
+    // 2. Measured path: execute one FC GEMM artifact.
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut rt = Runtime::load(&dir)?;
+    println!("\nPJRT platform: {}", rt.platform());
+    let timing = rt.time_artifact("gemm_fc1_fwd", 10)?;
+    let spec = rt.manifest().get("gemm_fc1_fwd")?;
+    println!(
+        "gemm_fc1_fwd ({}x{}x{}): median {:?} => {:.2} GFLOP/s",
+        spec.gemm.unwrap()[0], spec.gemm.unwrap()[1], spec.gemm.unwrap()[2],
+        timing.median,
+        spec.flops as f64 / timing.seconds() / 1e9
+    );
+
+    // 3. Tiny-BERT forward (L1 pallas kernels -> L2 jax -> L3 rust).
+    let out = rt.execute_synth("tiny_forward_pallas", 1)?;
+    println!(
+        "\ntiny_forward_pallas: logits tensor with {} elements (8x64x4096)",
+        out[0].element_count()
+    );
+    assert_eq!(out[0].element_count(), 8 * 64 * 4096);
+    println!("quickstart OK");
+    Ok(())
+}

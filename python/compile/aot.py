@@ -1,0 +1,476 @@
+"""AOT pipeline (build-time only): lower every artifact to HLO *text*.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``make artifacts``):
+  artifacts/<name>.hlo.txt   one HLO module per artifact ("kernel")
+  artifacts/manifest.json    input/output specs, categories, GEMM dims,
+                             flops/bytes, and named artifact *sequences*
+                             (e.g. the unfused LayerNorm/Adam chains of
+                             Fig. 13) for the rust measured path.
+
+Every artifact function returns a tuple and is lowered with
+``return_tuple=True``; the rust runtime unwraps with ``to_tuple``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import math
+import os
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import ops
+
+
+# --------------------------------------------------------------------------
+# Lowering
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the only proto-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+@dataclasses.dataclass
+class TensorSpec:
+    shape: tuple
+    dtype: str = "f32"
+    # How the rust runtime synthesizes this input:
+    #   normal | uniform01 | mask01 | positive | zeros | scalar1 | int_range
+    kind: str = "normal"
+    lo: int = 0
+    hi: int = 0
+
+    def sds(self):
+        dt = {"f32": jnp.float32, "i32": jnp.int32, "bf16": jnp.bfloat16}[self.dtype]
+        return jax.ShapeDtypeStruct(self.shape, dt)
+
+    def to_json(self):
+        d = {"shape": list(self.shape), "dtype": self.dtype, "kind": self.kind}
+        if self.kind == "int_range":
+            d["lo"], d["hi"] = self.lo, self.hi
+        return d
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    fn: Callable
+    inputs: Sequence[TensorSpec]
+    category: str               # profiler category (matches rust OpCategory)
+    impl: str = "jnp"           # jnp | pallas
+    phase: str = "fwd"          # fwd | bwd | update
+    op: str = ""                # Table 3 row / paper op name
+    gemm: tuple | None = None   # (m, n, k, batch) if a GEMM
+    note: str = ""
+
+
+def t(*shape, dtype="f32", kind="normal", lo=0, hi=0):
+    return TensorSpec(tuple(shape), dtype, kind, lo, hi)
+
+
+# --------------------------------------------------------------------------
+# Artifact inventory
+# --------------------------------------------------------------------------
+
+
+def build_artifacts(cfg: M.BertConfig, batch: int, seq: int) -> list[Artifact]:
+    """All per-op artifacts at the measurement config (DESIGN.md SS3)."""
+    d, dff, h = cfg.d_model, cfg.d_ff, cfg.n_heads
+    dh = d // h
+    nb = batch * seq            # n*B, the token count
+    bh = batch * h
+    n = seq
+    arts: list[Artifact] = []
+
+    def gemm_art(name, op, phase, m_, n_, k_, note=""):
+        # jnp matmul of (n_, k_) @ (k_, m_): Table 3 writes GEMMs as MxNxK
+        # with M = output features; row-major jnp sees (N x K) @ (K x M).
+        arts.append(Artifact(
+            name, ops.gemm, [t(n_, k_), t(k_, m_)], category="gemm_" + op,
+            phase=phase, op=op, gemm=(m_, n_, k_, 1), note=note))
+
+    # ---- Table 3, FWD / BWD-activation / BWD-weight GEMMs -------------
+    gemm_art("gemm_linear_fwd", "linear", "fwd", d, nb, d)
+    gemm_art("gemm_linear_dgrad", "linear", "bwd", d, nb, d)
+    gemm_art("gemm_linear_wgrad", "linear", "bwd", d, d, nb)
+    gemm_art("gemm_qkv_fused_fwd", "linear_fused", "fwd", 3 * d, nb, d,
+             note="Fig. 14/15: the three linear GEMMs fused")
+    gemm_art("gemm_attnproj_fwd", "linear", "fwd", d, nb, d,
+             note="W_o output projection")
+    gemm_art("gemm_fc1_fwd", "fc", "fwd", dff, nb, d)
+    gemm_art("gemm_fc1_dgrad", "fc", "bwd", d, nb, dff)
+    gemm_art("gemm_fc1_wgrad", "fc", "bwd", d, dff, nb)
+    gemm_art("gemm_fc2_fwd", "fc", "fwd", d, nb, dff)
+    gemm_art("gemm_fc2_dgrad", "fc", "bwd", dff, nb, d)
+    gemm_art("gemm_fc2_wgrad", "fc", "bwd", dff, d, nb)
+
+    # ---- Attention batched GEMMs (Attn. Score / Attn. O/p rows) -------
+    arts += [
+        Artifact("bgemm_score_fwd", ops.bgemm_scores,
+                 [t(bh, n, dh), t(bh, n, dh)], "gemm_attn_bgemm",
+                 phase="fwd", op="attn_score", gemm=(n, n, dh, bh)),
+        Artifact("bgemm_score_dgrad", ops.bgemm_output,
+                 [t(bh, n, n), t(bh, n, dh)], "gemm_attn_bgemm",
+                 phase="bwd", op="attn_score", gemm=(n, dh, n, bh)),
+        Artifact("bgemm_output_fwd", ops.bgemm_output,
+                 [t(bh, n, n), t(bh, n, dh)], "gemm_attn_bgemm",
+                 phase="fwd", op="attn_output", gemm=(dh, n, n, bh)),
+        Artifact("bgemm_output_dgrad", ops.bgemm_scores,
+                 [t(bh, n, dh), t(bh, n, dh)], "gemm_attn_bgemm",
+                 phase="bwd", op="attn_output", gemm=(n, n, dh, bh)),
+        Artifact("bgemm_score_fwd_pallas", ops.bgemm_scores_pallas,
+                 [t(bh, n, dh), t(bh, n, dh)], "gemm_attn_bgemm",
+                 impl="pallas", phase="fwd", op="attn_score",
+                 gemm=(n, n, dh, bh)),
+        Artifact("bgemm_output_fwd_pallas", ops.bgemm_output_pallas,
+                 [t(bh, n, n), t(bh, n, dh)], "gemm_attn_bgemm",
+                 impl="pallas", phase="fwd", op="attn_output",
+                 gemm=(dh, n, n, bh)),
+    ]
+
+    # ---- Fused memory-bound ops (SS3.2.3) ------------------------------
+    drln_in = [t(nb, d), t(nb, d), t(nb, d, kind="mask01"),
+               t(1, d), t(1, d)]
+    arts += [
+        Artifact("gelu_fwd", ops.gelu_fwd, [t(nb, dff)], "ew_gelu",
+                 op="gelu"),
+        Artifact("gelu_bwd", ops.gelu_bwd, [t(nb, dff), t(nb, dff)],
+                 "ew_gelu", phase="bwd", op="gelu"),
+        Artifact("gelu_fwd_pallas", ops.gelu_fwd_pallas, [t(nb, dff)],
+                 "ew_gelu", impl="pallas", op="gelu"),
+        Artifact("gelu_bwd_pallas", ops.gelu_bwd_pallas,
+                 [t(nb, dff), t(nb, dff)], "ew_gelu", impl="pallas",
+                 phase="bwd", op="gelu"),
+        Artifact("drln_fwd", ops.drln_fwd, drln_in, "ew_drln", op="drln"),
+        Artifact("drln_fwd_pallas", ops.drln_fwd_pallas, drln_in, "ew_drln",
+                 impl="pallas", op="drln"),
+        Artifact("layernorm_fused", ops.layernorm_fused,
+                 [t(nb, d), t(1, d), t(1, d)], "ew_drln", op="layernorm"),
+        Artifact("layernorm_fused_pallas", ops.layernorm_fused_pallas,
+                 [t(nb, d), t(1, d), t(1, d)], "ew_drln", impl="pallas",
+                 op="layernorm"),
+        Artifact("layernorm_bwd", ops.layernorm_bwd,
+                 [t(nb, d), t(1, d), t(nb, d)], "ew_drln", phase="bwd",
+                 op="layernorm"),
+        Artifact("softmax_chain", ops.softmax_chain,
+                 [t(bh, n, n), t(bh, n, n, kind="zeros")], "ew_attn",
+                 op="softmax"),
+        Artifact("softmax_chain_pallas", ops.softmax_chain_pallas,
+                 [t(bh, n, n), t(bh, n, n, kind="zeros")], "ew_attn",
+                 impl="pallas", op="softmax"),
+        Artifact("softmax_bwd", ops.softmax_bwd,
+                 [t(bh, n, n, kind="uniform01"), t(bh, n, n)], "ew_attn",
+                 phase="bwd", op="softmax"),
+        Artifact("softmax_bwd_pallas", ops.softmax_bwd_pallas,
+                 [t(bh, n, n, kind="uniform01"), t(bh, n, n)], "ew_attn",
+                 impl="pallas", phase="bwd", op="softmax"),
+        Artifact("attention_head_jnp", ops.attention_head_jnp,
+                 [t(bh, n, dh), t(bh, n, dh), t(bh, n, dh),
+                  t(bh, n, n, kind="zeros")], "attn_head", op="attn_head"),
+        Artifact("attention_head_fused_pallas", ops.fused_attention_head_pallas,
+                 [t(bh, n, dh), t(bh, n, dh), t(bh, n, dh),
+                  t(bh, n, n, kind="zeros")], "attn_head", impl="pallas",
+                 op="attn_head",
+                 note="score+softmax+output fused: nxn tensor stays in VMEM"),
+    ]
+
+    # ---- Optimizers (LAMB Fig. 3; Adam for Fig. 13) --------------------
+    # Representative parameter tensor: d x dff (the FC-1 weight).
+    pshape = (d, dff)
+    popt = [t(*pshape), t(*pshape), t(*pshape, kind="positive"), t(*pshape)]
+    arts += [
+        Artifact("lamb_stage1", ops.lamb_stage1, popt + [t(1, 1, kind="scalar1")],
+                 "opt_lamb", phase="update", op="lamb_s1"),
+        Artifact("lamb_stage2", ops.lamb_stage2,
+                 [t(*pshape), t(*pshape), t(1, 1, kind="scalar1")],
+                 "opt_lamb", phase="update", op="lamb_s2"),
+        Artifact("lamb_fused", ops.lamb_fused, popt, "opt_lamb",
+                 phase="update", op="lamb"),
+        Artifact("lamb_stage1_pallas", ops.lamb_stage1_pallas,
+                 popt + [t(1, 1, kind="scalar1")], "opt_lamb", impl="pallas",
+                 phase="update", op="lamb_s1"),
+        Artifact("lamb_stage2_pallas", ops.lamb_stage2_pallas,
+                 [t(*pshape), t(*pshape), t(1, 1, kind="scalar1")],
+                 "opt_lamb", impl="pallas", phase="update", op="lamb_s2"),
+        Artifact("adam_fused", ops.adam_fused, popt, "opt_adam",
+                 phase="update", op="adam"),
+    ]
+
+    # ---- Un-fused building blocks (Fig. 13 baselines) ------------------
+    two = [t(*pshape), t(*pshape)]
+    arts += [
+        Artifact("ew_add", ops.ew_add, two, "ew_generic", op="add"),
+        Artifact("ew_sub", ops.ew_sub, two, "ew_generic", op="sub"),
+        Artifact("ew_mul", ops.ew_mul, two, "ew_generic", op="mul"),
+        Artifact("ew_div", ops.ew_div,
+                 [t(*pshape), t(*pshape, kind="positive")], "ew_generic",
+                 op="div"),
+        Artifact("ew_scale", ops.ew_scale, [t(*pshape)], "ew_generic",
+                 op="scale"),
+        Artifact("ew_axpy", ops.ew_axpy, two, "ew_generic", op="axpy"),
+        Artifact("ew_square", ops.ew_square, [t(*pshape)], "ew_generic",
+                 op="square"),
+        Artifact("ew_sqrt_eps", ops.ew_sqrt_eps,
+                 [t(*pshape, kind="positive")], "ew_generic", op="sqrt"),
+        Artifact("red_l2norm", ops.red_l2norm, [t(*pshape)], "red_generic",
+                 op="l2norm"),
+        # LayerNorm unfused pieces operate on the activation shape.
+        Artifact("red_row_mean", ops.red_row_mean, [t(nb, d)], "red_generic",
+                 op="row_mean"),
+        Artifact("red_row_var", ops.red_row_var, [t(nb, d), t(nb, 1)],
+                 "red_generic", op="row_var"),
+        Artifact("ew_center", ops.ew_center, [t(nb, d), t(nb, 1)],
+                 "ew_generic", op="center"),
+        Artifact("ew_rsqrt", ops.ew_rsqrt, [t(nb, 1, kind="positive")],
+                 "ew_generic", op="rsqrt"),
+        Artifact("ew_mul_bcast", ops.ew_mul_bcast, [t(nb, d), t(nb, 1)],
+                 "ew_generic", op="mul_bcast"),
+        Artifact("ew_affine", ops.ew_affine, [t(nb, d), t(1, d), t(1, d)],
+                 "ew_generic", op="affine"),
+        Artifact("ew_add_act", ops.ew_add, [t(nb, d), t(nb, d)],
+                 "ew_generic", op="add_act"),
+        Artifact("ew_mul_act", ops.ew_mul, [t(nb, d), t(nb, d)],
+                 "ew_generic", op="mul_act"),
+    ]
+
+    # ---- Embedding & output layers -------------------------------------
+    arts += [
+        Artifact("embedding_lookup", ops.embedding_lookup,
+                 [t(cfg.vocab_size, d), t(cfg.max_seq_len, d),
+                  t(cfg.type_vocab, d),
+                  t(batch, n, dtype="i32", kind="int_range", lo=0,
+                    hi=cfg.vocab_size - 1),
+                  t(batch, n, dtype="i32", kind="int_range", lo=0, hi=1)],
+                 "embedding", op="embedding"),
+        Artifact("mlm_output_layer", ops.mlm_output_layer,
+                 [t(nb, d), t(d, d), t(1, d), t(1, d), t(d, cfg.vocab_size)],
+                 "output_layer", op="mlm_head"),
+    ]
+    return arts
+
+
+def flatten_tree_with_paths(tree):
+    """Deterministic (path, leaf) flattening shared with the manifest."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append((jax.tree_util.keystr(path), leaf))
+    return out
+
+
+def build_train_step_artifact(cfg: M.BertConfig, batch: int, seq: int):
+    """The end-to-end tiny-BERT train step as one artifact.
+
+    Signature (flat): params..., m..., v..., step, ids, seg, attn_mask,
+    labels, weights, nsp -> params'..., m'..., v'..., step', loss.
+    """
+    params = M.init_params(jax.random.PRNGKey(0), cfg, abstract=True)
+    treedef = jax.tree_util.tree_structure(params)
+    leaves = jax.tree_util.tree_leaves(params)
+    n_leaves = len(leaves)
+
+    def step_fn(*flat):
+        p = jax.tree_util.tree_unflatten(treedef, flat[:n_leaves])
+        m = jax.tree_util.tree_unflatten(treedef, flat[n_leaves:2 * n_leaves])
+        v = jax.tree_util.tree_unflatten(treedef, flat[2 * n_leaves:3 * n_leaves])
+        step, ids, seg, am, labels, weights, nsp = flat[3 * n_leaves:]
+        bt = {"ids": ids, "seg_ids": seg, "attn_mask": am,
+              "mlm_labels": labels, "mlm_weights": weights,
+              "nsp_labels": nsp}
+        opt = {"m": m, "v": v, "step": step}
+        p2, opt2, loss = M.lamb_train_step(cfg, p, opt, bt, lr=5e-3)
+        return tuple(jax.tree_util.tree_leaves(p2)) \
+            + tuple(jax.tree_util.tree_leaves(opt2["m"])) \
+            + tuple(jax.tree_util.tree_leaves(opt2["v"])) \
+            + (opt2["step"], loss)
+
+    sds = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    batch_specs = [
+        TensorSpec((), "f32", "zeros"),
+        TensorSpec((batch, seq), "i32", "int_range", 2, cfg.vocab_size - 1),
+        TensorSpec((batch, seq), "i32", "int_range", 0, 1),
+        TensorSpec((batch, 1, seq), "f32", "zeros"),
+        TensorSpec((batch, seq), "i32", "int_range", 2, cfg.vocab_size - 1),
+        TensorSpec((batch, seq), "f32", "mask01"),
+        TensorSpec((batch,), "i32", "int_range", 0, 1),
+    ]
+    all_sds = sds * 3 + [s.sds() for s in batch_specs]
+    lowered = jax.jit(step_fn).lower(*all_sds)
+
+    param_specs = [TensorSpec(tuple(l.shape), "f32", "normal") for l in leaves]
+    state_specs = [TensorSpec(tuple(l.shape), "f32", "zeros") for l in leaves]
+    input_specs = param_specs + state_specs + state_specs + batch_specs
+    meta = {
+        "n_param_tensors": n_leaves,
+        "param_paths": [p for p, _ in flatten_tree_with_paths(params)],
+        "param_count": int(sum(math.prod(l.shape) for l in leaves)),
+        "outputs": "params*n, m*n, v*n, step, loss",
+    }
+    return lowered, input_specs, meta
+
+
+def build_forward_artifact(cfg: M.BertConfig, batch: int, seq: int,
+                           use_pallas: bool):
+    """Encoder forward + MLM logits as one artifact (quickstart/serving)."""
+    cfg = dataclasses.replace(cfg, use_pallas=use_pallas)
+    params = M.init_params(jax.random.PRNGKey(0), cfg, abstract=True)
+    treedef = jax.tree_util.tree_structure(params)
+    leaves = jax.tree_util.tree_leaves(params)
+    n_leaves = len(leaves)
+
+    def fwd_fn(*flat):
+        p = jax.tree_util.tree_unflatten(treedef, flat[:n_leaves])
+        ids, seg, am = flat[n_leaves:]
+        seq_out = M.forward(cfg, p, ids, seg, am)
+        # Return both heads so every parameter is used — XLA prunes unused
+        # HLO parameters, which would desync the manifest input list.
+        return (M.mlm_logits(cfg, p, seq_out), M.nsp_logits(cfg, p, seq_out))
+
+    sds = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    batch_specs = [
+        TensorSpec((batch, seq), "i32", "int_range", 2, cfg.vocab_size - 1),
+        TensorSpec((batch, seq), "i32", "int_range", 0, 1),
+        TensorSpec((batch, 1, seq), "f32", "zeros"),
+    ]
+    lowered = jax.jit(fwd_fn).lower(*(sds + [s.sds() for s in batch_specs]))
+    input_specs = [TensorSpec(tuple(l.shape), "f32", "normal")
+                   for l in leaves] + batch_specs
+    meta = {"n_param_tensors": n_leaves,
+            "param_paths": [p for p, _ in flatten_tree_with_paths(params)]}
+    return lowered, input_specs, meta
+
+
+# Named sequences: ordered artifact lists the rust fusion study replays as
+# separate "kernel launches" (the unfused baselines of Fig. 13).
+SEQUENCES = {
+    "layernorm_unfused": ["red_row_mean", "ew_center", "red_row_var",
+                          "ew_rsqrt", "ew_mul_bcast", "ew_affine"],
+    "layernorm_fused": ["layernorm_fused"],
+    "adam_unfused": ["ew_axpy", "ew_square", "ew_axpy", "ew_scale",
+                     "ew_scale", "ew_sqrt_eps", "ew_div", "ew_scale",
+                     "ew_sub"],
+    "adam_fused": ["adam_fused"],
+    "drln_unfused": ["ew_mul_act", "ew_add_act", "red_row_mean", "ew_center",
+                     "red_row_var", "ew_rsqrt", "ew_mul_bcast", "ew_affine"],
+    "drln_fused": ["drln_fwd"],
+    "qkv_unfused": ["gemm_linear_fwd", "gemm_linear_fwd", "gemm_linear_fwd"],
+    "qkv_fused": ["gemm_qkv_fused_fwd"],
+}
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def art_flops_bytes(a: Artifact) -> tuple[int, int]:
+    """First-order flops/bytes for the manifest (rust recomputes exactly)."""
+    in_bytes = sum(math.prod(s.shape) * 4 for s in a.inputs)
+    if a.gemm:
+        m_, n_, k_, b_ = a.gemm
+        flops = 2 * m_ * n_ * k_ * b_
+        out_bytes = m_ * n_ * b_ * 4
+    else:
+        elems = max(math.prod(s.shape) for s in a.inputs)
+        flops = 8 * elems  # EW chains: a handful of flops per element
+        out_bytes = elems * 4
+    return flops, in_bytes + out_bytes
+
+
+def write_if_changed(path: str, text: str) -> bool:
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                return False
+    with open(path, "w") as f:
+        f.write(text)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower all artifacts")
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output directory")
+    ap.add_argument("--skip-train-step", action="store_true",
+                    help="skip the (slower) end-to-end train step artifacts")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    mcfg = M.BERT_MEASURE
+    mb, mseq = 4, 128            # measurement batch/seq (B=4, n=128)
+    tcfg = M.BERT_TINY
+    tb, tseq = 8, 64
+
+    manifest = {
+        "version": 1,
+        "configs": {
+            "measure": {**dataclasses.asdict(mcfg), "batch": mb, "seq": mseq},
+            "tiny": {**dataclasses.asdict(tcfg), "batch": tb, "seq": tseq},
+        },
+        "artifacts": [],
+        "sequences": SEQUENCES,
+    }
+
+    arts = build_artifacts(mcfg, mb, mseq)
+    for a in arts:
+        lowered = jax.jit(a.fn).lower(*[s.sds() for s in a.inputs])
+        text = to_hlo_text(lowered)
+        fname = f"{a.name}.hlo.txt"
+        write_if_changed(os.path.join(outdir, fname), text)
+        out_shapes = [list(o.shape) for o in lowered.out_info]
+        flops, bts = art_flops_bytes(a)
+        manifest["artifacts"].append({
+            "name": a.name, "file": fname, "category": a.category,
+            "impl": a.impl, "phase": a.phase, "op": a.op,
+            "inputs": [s.to_json() for s in a.inputs],
+            "output_shapes": out_shapes,
+            "gemm": list(a.gemm) if a.gemm else None,
+            "flops": flops, "bytes": bts, "note": a.note,
+        })
+        print(f"  lowered {a.name}")
+
+    if not args.skip_train_step:
+        for name, built in {
+            "tiny_train_step": build_train_step_artifact(tcfg, tb, tseq),
+            "tiny_forward": build_forward_artifact(tcfg, tb, tseq, False),
+            "tiny_forward_pallas": build_forward_artifact(tcfg, tb, tseq, True),
+        }.items():
+            lowered, input_specs, meta = built
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            write_if_changed(os.path.join(outdir, fname), text)
+            manifest["artifacts"].append({
+                "name": name, "file": fname, "category": "e2e",
+                "impl": "pallas" if name.endswith("pallas") else "jnp",
+                "phase": "e2e", "op": name,
+                "inputs": [s.to_json() for s in input_specs],
+                "output_shapes": [], "gemm": None,
+                "flops": 0, "bytes": 0, "note": "", "meta": meta,
+            })
+            print(f"  lowered {name}")
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

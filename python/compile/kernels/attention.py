@@ -1,0 +1,109 @@
+"""Blocked attention batched-GEMM Pallas kernels (L1) — Table 3's
+"Attn. Score" and "Attn. O/p" operations.
+
+Takeaway 7: these B-GEMMs are small and skinny (dims n and d_model/h) with
+very low ops/byte — on a GPU they under-utilize the device; on TPU the
+analogue is MXU tile quantization (d_model/h = 64 < 128 wastes >= half the
+systolic array).  The kernels below express the HBM<->VMEM schedule the
+paper's GPU implementation did with threadblocks: grid over (batch*heads),
+whole (n, dh)/(n, n) operand tiles resident in VMEM — feasible because the
+operands are exactly the small matrices the paper calls out.
+
+A fused single-head kernel (scores -> softmax -> output, flash-attention
+style but un-tiled because n fits VMEM at BERT sizes) is provided as the
+"what the paper's SS5.1.1 fusion would buy" variant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scores_kernel(q_ref, k_ref, o_ref):
+    # (1, n, dh) x (1, m, dh)^T -> (1, n, m); MXU matmul per grid step.
+    q = q_ref[0]
+    k = k_ref[0]
+    o_ref[0] = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _output_kernel(p_ref, v_ref, o_ref):
+    # (1, n, m) x (1, m, dh) -> (1, n, dh)
+    p = p_ref[0]
+    v = v_ref[0]
+    o_ref[0] = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _fused_head_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale: float):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * scale + mask_ref[0].astype(jnp.float32)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(q.dtype)
+    o_ref[0] = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attention_scores(q, k, *, interpret: bool = True):
+    """B-GEMM: (bh, n, dh) x (bh, m, dh) -> (bh, n, m), one head/sample per
+    grid step (the B*h parallel GEMMs of SS3.2.2)."""
+    bh, n, dh = q.shape
+    m = k.shape[1]
+    head = lambda i: (i, 0, 0)
+    return pl.pallas_call(
+        _scores_kernel,
+        grid=(bh,),
+        in_specs=[pl.BlockSpec((1, n, dh), head), pl.BlockSpec((1, m, dh), head)],
+        out_specs=pl.BlockSpec((1, n, m), head),
+        out_shape=jax.ShapeDtypeStruct((bh, n, m), q.dtype),
+        interpret=interpret,
+    )(q, k)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attention_output(probs, v, *, interpret: bool = True):
+    """B-GEMM: (bh, n, m) x (bh, m, dh) -> (bh, n, dh)."""
+    bh, n, m = probs.shape
+    dh = v.shape[2]
+    head = lambda i: (i, 0, 0)
+    return pl.pallas_call(
+        _output_kernel,
+        grid=(bh,),
+        in_specs=[pl.BlockSpec((1, n, m), head), pl.BlockSpec((1, m, dh), head)],
+        out_specs=pl.BlockSpec((1, n, dh), head),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dh), probs.dtype),
+        interpret=interpret,
+    )(probs, v)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def fused_attention_head(q, k, v, attn_mask, *, scale: float,
+                         interpret: bool = True):
+    """Score + softmax + weighted-sum fused per head: the n x n score tensor
+    never leaves VMEM (saves 3 HBM round-trips of the quadratic tensor)."""
+    bh, n, dh = q.shape
+    m = k.shape[1]
+    head = lambda i: (i, 0, 0)
+    kern = functools.partial(_fused_head_kernel, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(bh,),
+        in_specs=[pl.BlockSpec((1, n, dh), head), pl.BlockSpec((1, m, dh), head),
+                  pl.BlockSpec((1, m, dh), head), pl.BlockSpec((1, n, m), head)],
+        out_specs=pl.BlockSpec((1, n, dh), head),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, attn_mask)

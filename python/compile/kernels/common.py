@@ -1,0 +1,74 @@
+"""Shared helpers for the Pallas kernels (L1).
+
+All kernels in this package are authored for the TPU memory hierarchy
+(HBM <-> VMEM via BlockSpec) but are lowered with ``interpret=True`` so the
+resulting HLO runs on any PJRT backend, including the rust CPU client on the
+measurement path.  Real-TPU efficiency is *estimated* analytically (see
+``vmem_bytes`` / ``mxu_utilization`` below and DESIGN.md SSPerf), never from
+interpret-mode wall clock.
+
+Block-shape policy (DESIGN.md SS5):
+  * last dimension a multiple of LANE (=128), the TPU vector lane width;
+  * second-to-last a multiple of the dtype's sublane count
+    (8 for f32, 16 for bf16);
+  * total VMEM footprint of all live blocks <= VMEM_BYTES.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+
+# TPU-like hardware constants used for block sizing and perf estimates.
+LANE = 128
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM
+MXU_DIM = 128                  # systolic array is MXU_DIM x MXU_DIM
+
+
+def sublanes(dtype) -> int:
+    """Minimum tile height for ``dtype`` on the TPU vector unit."""
+    itemsize = jnp.dtype(dtype).itemsize
+    # f32 -> 8, bf16/f16 -> 16, int8/fp8 -> 32.
+    return max(8, 32 // max(itemsize, 1))
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pick_block(dim: int, target: int, multiple: int) -> int:
+    """Largest block <= max(target, multiple) that divides ``dim`` and is a
+    multiple of ``multiple``; falls back to ``dim`` when nothing divides
+    (interpret mode tolerates ragged trailing blocks, but we keep the
+    schedule clean for the analytic model)."""
+    best = None
+    b = multiple
+    while b <= min(dim, target):
+        if dim % b == 0:
+            best = b
+        b += multiple
+    if best is not None:
+        return best
+    return dim if dim <= target else math.gcd(dim, target) or dim
+
+
+def vmem_bytes(block_shapes: Sequence[Sequence[int]], dtypes) -> int:
+    """VMEM footprint of one grid step given the live block shapes."""
+    if not isinstance(dtypes, (list, tuple)):
+        dtypes = [dtypes] * len(block_shapes)
+    total = 0
+    for shape, dt in zip(block_shapes, dtypes):
+        total += math.prod(shape) * jnp.dtype(dt).itemsize
+    return total
+
+
+def mxu_utilization(m: int, n: int, k: int) -> float:
+    """Fraction of MXU macs doing useful work for an (m,n,k) GEMM tile
+    stream: tile-quantization model used by DESIGN.md SSPerf and mirrored by
+    the rust ``perf::gemm_model``."""
+    mq = round_up(m, MXU_DIM) / m
+    nq = round_up(n, MXU_DIM) / n
+    kq = round_up(k, MXU_DIM) / k
+    return 1.0 / (mq * nq * kq)

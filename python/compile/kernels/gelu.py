@@ -1,0 +1,85 @@
+"""Fused GeLU forward/backward as Pallas kernels (L1).
+
+The paper (SS3.2.3) measures GeLU as a chain of elementwise ops between the
+two FC GEMMs with very low ops/byte — memory bandwidth *and* latency bound.
+The fusion opportunity is to stream the (n*B, d_ff) activation through VMEM
+exactly once: one HBM read of x (plus dy for backward) and one HBM write.
+
+TPU adaptation (DESIGN.md SSHardware-Adaptation): the GPU version would be a
+grid-stride EW kernel; here the HBM<->VMEM schedule is expressed with a
+row-blocked BlockSpec, block = (block_rows, d) with d padded to the 128
+lane width by the caller's choice of d_ff.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+# Tanh-approximated GeLU: the erf HLO opcode is unparseable by the pinned
+# xla_extension 0.5.1 (see kernels/ref.py).
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+_GELU_A = 0.044715
+
+
+def _gelu_fwd_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    inner = jnp.asarray(_GELU_C, x.dtype) * (x + jnp.asarray(_GELU_A, x.dtype) * x * x * x)
+    o_ref[...] = 0.5 * x * (1.0 + jnp.tanh(inner))
+
+
+def _gelu_bwd_kernel(x_ref, dy_ref, dx_ref):
+    x = x_ref[...]
+    dy = dy_ref[...]
+    c = jnp.asarray(_GELU_C, x.dtype)
+    a = jnp.asarray(_GELU_A, x.dtype)
+    inner = c * (x + a * x * x * x)
+    th = jnp.tanh(inner)
+    sech2 = 1.0 - th * th
+    dinner = c * (1.0 + 3.0 * a * x * x)
+    dx_ref[...] = dy * (0.5 * (1.0 + th) + 0.5 * x * sech2 * dinner)
+
+
+def _row_grid(shape, dtype, n_operands: int):
+    """Row-blocked (grid, block_shape) so n_operands blocks fit in VMEM."""
+    rows, cols = shape
+    budget = common.VMEM_BYTES // (n_operands + 1)
+    per_row = cols * jnp.dtype(dtype).itemsize
+    target = max(1, budget // max(per_row, 1))
+    block_rows = common.pick_block(rows, target, common.sublanes(dtype)) \
+        if rows >= common.sublanes(dtype) else rows
+    return (rows // block_rows,), (block_rows, cols)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gelu(x, *, interpret: bool = True):
+    """Fused GeLU forward over a 2D activation (n*B, d_ff)."""
+    grid, block = _row_grid(x.shape, x.dtype, 1)
+    return pl.pallas_call(
+        _gelu_fwd_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, lambda i: (i, 0))],
+        out_specs=pl.BlockSpec(block, lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gelu_grad(x, dy, *, interpret: bool = True):
+    """Fused GeLU backward: dx = dGeLU(x) * dy, one pass over HBM."""
+    grid, block = _row_grid(x.shape, x.dtype, 2)
+    return pl.pallas_call(
+        _gelu_bwd_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, lambda i: (i, 0)),
+                  pl.BlockSpec(block, lambda i: (i, 0))],
+        out_specs=pl.BlockSpec(block, lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, dy)

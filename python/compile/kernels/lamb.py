@@ -1,0 +1,126 @@
+"""LAMB optimizer as two fused Pallas kernels (L1) — Fig. 3 / Fig. 8.
+
+The paper observes LAMB manifests as exactly two kernels per layer:
+
+  * **Stage 1** — normalized gradient, moment updates, update direction:
+    reads g, m, v, w and writes u, m', v' — all parameter-sized, pure EW,
+    ops/byte ~O(1).  (Takeaway 8: 4x the model size of traffic.)
+  * **2-Norm** — per-layer ||w|| and ||u|| reductions.
+  * **Stage 2** — trust-ratio scaled weight update, EW again.
+
+We mirror that structure: ``stage1`` and ``stage2`` are single-pass Pallas
+kernels; the per-layer norms are a small reduction between them (jnp —
+XLA fuses it; the op-graph model accounts it as the "2-Norm" kernel).
+LAMB always runs in FP32 (takeaway 3), so kernels assume f32 refs.
+
+Weights are treated as flat (len,) vectors reshaped to (rows, LANE) by the
+caller/`_flatten`; optimizer state has no layout constraints so we pick the
+TPU-friendly one.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _stage1_kernel(g_ref, m_ref, v_ref, w_ref, gnorm_ref,
+                   u_ref, mo_ref, vo_ref,
+                   *, beta1: float, beta2: float, eps: float,
+                   weight_decay: float, step: int):
+    ghat = g_ref[...] / gnorm_ref[0, 0]
+    m_new = beta1 * m_ref[...] + (1.0 - beta1) * ghat
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * ghat * ghat
+    mhat = m_new / (1.0 - beta1 ** step)
+    vhat = v_new / (1.0 - beta2 ** step)
+    u_ref[...] = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w_ref[...]
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+
+
+def _stage2_kernel(w_ref, u_ref, ratio_ref, wo_ref, *, lr: float):
+    wo_ref[...] = w_ref[...] - lr * ratio_ref[0, 0] * u_ref[...]
+
+
+def _grid(shape, dtype, n_operands):
+    rows, cols = shape
+    budget = common.VMEM_BYTES // (n_operands + 1)
+    per_row = cols * jnp.dtype(dtype).itemsize
+    target = max(1, budget // max(per_row, 1))
+    block_rows = common.pick_block(rows, target, common.sublanes(dtype)) \
+        if rows >= common.sublanes(dtype) else rows
+    return (rows // block_rows,), (block_rows, cols)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "beta1", "beta2", "eps", "weight_decay", "step", "interpret"))
+def lamb_stage1(g, m, v, w, global_norm, *, beta1: float = 0.9,
+                beta2: float = 0.999, eps: float = 1e-6,
+                weight_decay: float = 0.01, step: int = 1,
+                interpret: bool = True):
+    """Fused LAMB stage-1 kernel: (u, m', v') from (g, m, v, w).
+
+    ``global_norm`` is the scalar ||g||_2 over the whole model, shape (1,1):
+    the paper notes this global reduction serializes the update against the
+    entire backprop.
+    """
+    grid, block = _grid(g.shape, g.dtype, 7)
+    kern = functools.partial(_stage1_kernel, beta1=beta1, beta2=beta2,
+                             eps=eps, weight_decay=weight_decay, step=step)
+    row = lambda i: (i, 0)
+    scalar = lambda i: (0, 0)
+    out_sds = jax.ShapeDtypeStruct(g.shape, g.dtype)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, row)] * 4 + [pl.BlockSpec((1, 1), scalar)],
+        out_specs=[pl.BlockSpec(block, row)] * 3,
+        out_shape=[out_sds, out_sds, out_sds],
+        interpret=interpret,
+    )(g, m, v, w, global_norm)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "interpret"))
+def lamb_stage2(w, u, ratio, *, lr: float, interpret: bool = True):
+    """Fused LAMB stage-2 kernel: w' = w - lr * r * u.
+
+    ``ratio`` is the (1,1) trust ratio ||w||/||u|| from the 2-Norm step.
+    """
+    grid, block = _grid(w.shape, w.dtype, 3)
+    kern = functools.partial(_stage2_kernel, lr=lr)
+    row = lambda i: (i, 0)
+    scalar = lambda i: (0, 0)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, row), pl.BlockSpec(block, row),
+                  pl.BlockSpec((1, 1), scalar)],
+        out_specs=pl.BlockSpec(block, row),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+    )(w, u, ratio)
+
+
+def lamb_update(g, m, v, w, *, step: int = 1, lr: float = 1e-3,
+                beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-6,
+                weight_decay: float = 0.01, global_norm=None,
+                interpret: bool = True):
+    """Stage1 -> 2-Norm -> Stage2 per-layer pipeline (the paper's kernel
+    sequence).  Returns (w', m', v')."""
+    if global_norm is None:
+        global_norm = jnp.linalg.norm(g).reshape(1, 1)
+    else:
+        global_norm = jnp.asarray(global_norm, g.dtype).reshape(1, 1)
+    u, m_new, v_new = lamb_stage1(
+        g, m, v, w, global_norm, beta1=beta1, beta2=beta2, eps=eps,
+        weight_decay=weight_decay, step=step, interpret=interpret)
+    w_norm = jnp.linalg.norm(w)
+    u_norm = jnp.linalg.norm(u)
+    ratio = jnp.where((w_norm > 0.0) & (u_norm > 0.0), w_norm / u_norm, 1.0)
+    w_new = lamb_stage2(w, u, ratio.reshape(1, 1), lr=lr, interpret=interpret)
+    return w_new, m_new, v_new

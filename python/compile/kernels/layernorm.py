@@ -1,0 +1,92 @@
+"""Fused dropout + residual + LayerNorm Pallas kernel (L1).
+
+The paper's DR+Res+LN chain (SS3.2.3, Fig. 8) is a sequence of EW multiply
+(dropout), EW add (residual), and a row reduction (LayerNorm) — each with
+very low arithmetic intensity.  Unfused, on the paper's stack, this is 6-8
+kernels and 6-8x the HBM traffic (Fig. 13).  The fused kernel streams each
+(block_rows, d_model) tile through VMEM once: 3 HBM reads (x, residual,
+mask), 1 write.
+
+Row blocking keeps the reduction axis (d_model) entirely resident in VMEM,
+the TPU analogue of a one-threadblock-per-row GPU LayerNorm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _drln_kernel(x_ref, res_ref, mask_ref, gamma_ref, beta_ref, o_ref,
+                 *, keep_prob: float, eps: float):
+    x = x_ref[...]
+    h = x * mask_ref[...] * jnp.asarray(1.0 / keep_prob, x.dtype) + res_ref[...]
+    mean = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mean), axis=-1, keepdims=True)
+    norm = (h - mean) * jax.lax.rsqrt(var + jnp.asarray(eps, x.dtype))
+    o_ref[...] = norm * gamma_ref[...] + beta_ref[...]
+
+
+def _ln_kernel(x_ref, gamma_ref, beta_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) * jax.lax.rsqrt(var + jnp.asarray(eps, x.dtype)) \
+        * gamma_ref[...] + beta_ref[...]
+
+
+def _blocks(shape, dtype, n_operands):
+    rows, cols = shape
+    budget = common.VMEM_BYTES // (n_operands + 1)
+    per_row = cols * jnp.dtype(dtype).itemsize
+    target = max(1, budget // max(per_row, 1))
+    block_rows = common.pick_block(rows, target, common.sublanes(dtype)) \
+        if rows >= common.sublanes(dtype) else rows
+    return (rows // block_rows,), (block_rows, cols), (1, cols)
+
+
+@functools.partial(jax.jit, static_argnames=("keep_prob", "eps", "interpret"))
+def dropout_residual_layernorm(x, residual, mask, gamma, beta,
+                               *, keep_prob: float = 0.9, eps: float = 1e-12,
+                               interpret: bool = True):
+    """y = LN(dropout(x) + residual) in a single HBM pass.
+
+    Shapes: x, residual, mask are (rows, d); gamma, beta are (1, d).
+    """
+    grid, block, pblock = _blocks(x.shape, x.dtype, 3)
+    kern = functools.partial(_drln_kernel, keep_prob=keep_prob, eps=eps)
+    row = lambda i: (i, 0)
+    rep = lambda i: (0, 0)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, row), pl.BlockSpec(block, row),
+                  pl.BlockSpec(block, row), pl.BlockSpec(pblock, rep),
+                  pl.BlockSpec(pblock, rep)],
+        out_specs=pl.BlockSpec(block, row),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, residual, mask, gamma, beta)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def layernorm(x, gamma, beta, *, eps: float = 1e-12, interpret: bool = True):
+    """Plain fused LayerNorm (the Fig. 13 "LN fused" kernel)."""
+    grid, block, pblock = _blocks(x.shape, x.dtype, 1)
+    kern = functools.partial(_ln_kernel, eps=eps)
+    row = lambda i: (i, 0)
+    rep = lambda i: (0, 0)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, row), pl.BlockSpec(pblock, rep),
+                  pl.BlockSpec(pblock, rep)],
+        out_specs=pl.BlockSpec(block, row),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta)

@@ -1,0 +1,66 @@
+"""Tiled MXU matmul Pallas kernel (L1) — the FC / linear-transform GEMMs.
+
+Table 3's large GEMMs (FC-1, FC-2, linear transforms) are compute bound
+(takeaway 4/7).  On TPU the schedule is: grid over (M/bm, N/bn, K/bk) with
+an f32 VMEM accumulator, bm/bn/bk multiples of the 128x128 MXU tile —
+the BlockSpec expresses the HBM->VMEM staging a GPU kernel would do with
+threadblock tiling into LDS.
+
+This kernel exists (a) to validate the MXU-oriented blocking against the
+jnp oracle and (b) to let the analytic model read real block shapes for its
+VMEM-footprint / MXU-utilization estimates (EXPERIMENTS.md SSPerf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import common
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def default_blocks(m: int, n: int, k: int, dtype) -> tuple[int, int, int]:
+    """MXU-aligned blocks that fit x-block + w-block + f32 acc in VMEM."""
+    bm = common.pick_block(m, 256, common.sublanes(dtype)) if m >= common.sublanes(dtype) else m
+    bn = common.pick_block(n, 256, common.LANE) if n >= common.LANE else n
+    bk = common.pick_block(k, 512, common.LANE) if k >= common.LANE else k
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def matmul(x, w, *, blocks: tuple[int, int, int] | None = None,
+           interpret: bool = True):
+    """o = x @ w with explicit MXU tiling; x: (M, K), w: (K, N)."""
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = blocks or default_blocks(m, n, k, x.dtype)
+    k_steps = k // bk
+    kern = functools.partial(_matmul_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+                  pl.BlockSpec((bk, bn), lambda i, j, l: (l, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,111 @@
+"""Fused scale + mask + softmax (+ dropout) Pallas kernel (L1).
+
+These are the attention-head EW/reduction ops of SS3.2.3 ("Scale, Mask, DR,
+Soft." in Fig. 5) applied to the (B*h, n, n) score tensor — the tensor that
+grows quadratically with sequence length and makes these kernels memory
+*bandwidth* bound in the backward pass.
+
+Fusion rationale: unfused, the chain reads/writes the n x n score matrix 4
+times; fused, it streams once through VMEM.  Blocks are whole score rows
+(rows of length n) so the softmax reduction stays on-chip.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _sms_kernel(s_ref, mask_ref, o_ref, *, scale: float):
+    s = s_ref[...] * jnp.asarray(scale, s_ref.dtype) + mask_ref[...]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _sms_dropout_kernel(s_ref, mask_ref, keep_ref, o_ref,
+                        *, scale: float, keep_prob: float):
+    s = s_ref[...] * jnp.asarray(scale, s_ref.dtype) + mask_ref[...]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = p * keep_ref[...] * jnp.asarray(1.0 / keep_prob, s.dtype)
+
+
+def _sm_grad_kernel(p_ref, dy_ref, o_ref):
+    p = p_ref[...]
+    dy = dy_ref[...]
+    inner = jnp.sum(dy * p, axis=-1, keepdims=True)
+    o_ref[...] = p * (dy - inner)
+
+
+def _batched_row_blocks(shape, dtype, n_operands):
+    """(grid, block) over a (batch, n, m) tensor: one batch element x a
+    block of rows per grid step, reduction axis m kept whole."""
+    b, n, m = shape
+    budget = common.VMEM_BYTES // (n_operands + 1)
+    per_row = m * jnp.dtype(dtype).itemsize
+    target = max(1, budget // max(per_row, 1))
+    block_rows = common.pick_block(n, target, common.sublanes(dtype)) \
+        if n >= common.sublanes(dtype) else n
+    return (b, n // block_rows), (1, block_rows, m)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def scale_mask_softmax(scores, attn_mask, *, scale: float, interpret: bool = True):
+    """probs = softmax(scores * scale + mask) along the last axis.
+
+    scores: (B*h, n, m); attn_mask: additive, same shape (broadcast done by
+    the caller so the kernel stays a pure streaming op).
+    """
+    grid, block = _batched_row_blocks(scores.shape, scores.dtype, 2)
+    kern = functools.partial(_sms_kernel, scale=scale)
+    idx = lambda i, j: (i, j, 0)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, idx), pl.BlockSpec(block, idx)],
+        out_specs=pl.BlockSpec(block, idx),
+        out_shape=jax.ShapeDtypeStruct(scores.shape, scores.dtype),
+        interpret=interpret,
+    )(scores, attn_mask)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "keep_prob", "interpret"))
+def scale_mask_softmax_dropout(scores, attn_mask, keep_mask, *, scale: float,
+                               keep_prob: float = 0.9, interpret: bool = True):
+    """The full fused attention-head EW chain including attention dropout."""
+    grid, block = _batched_row_blocks(scores.shape, scores.dtype, 3)
+    kern = functools.partial(_sms_dropout_kernel, scale=scale, keep_prob=keep_prob)
+    idx = lambda i, j: (i, j, 0)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, idx), pl.BlockSpec(block, idx),
+                  pl.BlockSpec(block, idx)],
+        out_specs=pl.BlockSpec(block, idx),
+        out_shape=jax.ShapeDtypeStruct(scores.shape, scores.dtype),
+        interpret=interpret,
+    )(scores, attn_mask, keep_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def softmax_grad(probs, dy, *, interpret: bool = True):
+    """Backward of softmax given forward output; the paper notes this is
+    bandwidth-bound due to the larger backward inputs."""
+    grid, block = _batched_row_blocks(probs.shape, probs.dtype, 2)
+    idx = lambda i, j: (i, j, 0)
+    return pl.pallas_call(
+        _sm_grad_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, idx), pl.BlockSpec(block, idx)],
+        out_specs=pl.BlockSpec(block, idx),
+        out_shape=jax.ShapeDtypeStruct(probs.shape, probs.dtype),
+        interpret=interpret,
+    )(probs, dy)

@@ -1,0 +1,292 @@
+"""L2 — BERT model (fwd/bwd) and LAMB train step in JAX.
+
+This is the paper's workload in executable form: a BERT encoder stack with
+masked-LM + NSP heads, trained with the LAMB optimizer of Fig. 3.  The
+whole train step (forward, backward, global grad norm, per-tensor LAMB) is
+lowered once by ``aot.py`` into a single HLO artifact that the rust
+coordinator executes in a loop — python never appears on the training path.
+
+The fused memory-bound ops call the L1 Pallas kernels when
+``use_pallas=True`` so they lower into the same HLO (DESIGN.md SS2); the
+default for the train-step artifact is the jnp path for CPU-PJRT speed,
+with a separate pallas-composed forward artifact proving the L1->L2->L3
+composition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gelu as gelu_k
+from .kernels import layernorm as ln_k
+from .kernels import ref
+from .kernels import softmax as sm_k
+
+
+@dataclasses.dataclass(frozen=True)
+class BertConfig:
+    """Hyperparameters, named as in Table 2."""
+
+    vocab_size: int = 30522
+    n_layers: int = 24          # N
+    d_model: int = 1024         # hidden dimension
+    n_heads: int = 16           # h
+    d_ff: int = 4096            # intermediate dimension
+    max_seq_len: int = 512      # position table size
+    type_vocab: int = 2
+    dropout_keep: float = 1.0   # 1.0 = dropout disabled (deterministic AOT)
+    use_pallas: bool = False    # route fused ops through L1 kernels
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# BERT Large / Base and the scaled-down configs used on the measured path.
+BERT_LARGE = BertConfig()
+BERT_BASE = BertConfig(n_layers=12, d_model=768, n_heads=12, d_ff=3072)
+# ~10M params: end-to-end trainable on the CPU PJRT backend in minutes.
+BERT_TINY = BertConfig(vocab_size=4096, n_layers=2, d_model=128, n_heads=2,
+                       d_ff=512, max_seq_len=128)
+# Reduced config for per-op wall-clock measurement (DESIGN.md SS3).
+BERT_MEASURE = BertConfig(vocab_size=8192, n_layers=2, d_model=256,
+                          n_heads=4, d_ff=1024, max_seq_len=128)
+
+Params = Dict[str, Any]
+
+
+def param_count(cfg: BertConfig) -> int:
+    """Exact parameter count; the rust op-graph model cross-checks this."""
+    p = init_params(jax.random.PRNGKey(0), cfg, abstract=True)
+    return sum(math.prod(x.shape) for x in jax.tree_util.tree_leaves(p))
+
+
+def init_params(key, cfg: BertConfig, abstract: bool = False) -> Params:
+    """Initialize (or shape-trace) all model parameters."""
+
+    def dense(key, shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, jnp.float32)
+        return 0.02 * jax.random.normal(key, shape, jnp.float32)
+
+    keys = iter(jax.random.split(key, 16 + 16 * cfg.n_layers))
+    params: Params = {
+        "tok_emb": dense(next(keys), (cfg.vocab_size, cfg.d_model)),
+        "pos_emb": dense(next(keys), (cfg.max_seq_len, cfg.d_model)),
+        "seg_emb": dense(next(keys), (cfg.type_vocab, cfg.d_model)),
+        "emb_ln_g": _ones((cfg.d_model,), abstract),
+        "emb_ln_b": _zeros((cfg.d_model,), abstract),
+        # Masked-LM head (vocab projection ties to tok_emb).
+        "mlm_tr_w": dense(next(keys), (cfg.d_model, cfg.d_model)),
+        "mlm_tr_b": _zeros((cfg.d_model,), abstract),
+        "mlm_ln_g": _ones((cfg.d_model,), abstract),
+        "mlm_ln_b": _zeros((cfg.d_model,), abstract),
+        "mlm_bias": _zeros((cfg.vocab_size,), abstract),
+        # NSP head.
+        "pool_w": dense(next(keys), (cfg.d_model, cfg.d_model)),
+        "pool_b": _zeros((cfg.d_model,), abstract),
+        "nsp_w": dense(next(keys), (cfg.d_model, 2)),
+        "nsp_b": _zeros((2,), abstract),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        d, dff = cfg.d_model, cfg.d_ff
+        params["layers"].append({
+            "wq": dense(next(keys), (d, d)), "bq": _zeros((d,), abstract),
+            "wk": dense(next(keys), (d, d)), "bk": _zeros((d,), abstract),
+            "wv": dense(next(keys), (d, d)), "bv": _zeros((d,), abstract),
+            "wo": dense(next(keys), (d, d)), "bo": _zeros((d,), abstract),
+            "ln1_g": _ones((d,), abstract), "ln1_b": _zeros((d,), abstract),
+            "w1": dense(next(keys), (d, dff)), "b1": _zeros((dff,), abstract),
+            "w2": dense(next(keys), (dff, d)), "b2": _zeros((d,), abstract),
+            "ln2_g": _ones((d,), abstract), "ln2_b": _zeros((d,), abstract),
+        })
+    return params
+
+
+def _ones(shape, abstract):
+    return jax.ShapeDtypeStruct(shape, jnp.float32) if abstract \
+        else jnp.ones(shape, jnp.float32)
+
+
+def _zeros(shape, abstract):
+    return jax.ShapeDtypeStruct(shape, jnp.float32) if abstract \
+        else jnp.zeros(shape, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _layernorm(cfg, x2d, g, b):
+    if cfg.use_pallas:
+        return ln_k.layernorm(x2d, g[None, :], b[None, :])
+    return ref.layernorm(x2d, g[None, :], b[None, :])
+
+
+def _gelu(cfg, x2d):
+    return gelu_k.gelu(x2d) if cfg.use_pallas else ref.gelu(x2d)
+
+
+def _softmax_chain(cfg, scores, am, scale):
+    if cfg.use_pallas:
+        return sm_k.scale_mask_softmax(scores, am, scale=scale)
+    return ref.scale_mask_softmax(scores, am, scale)
+
+
+def encoder_layer(cfg: BertConfig, lp: Params, x, attn_mask):
+    """One transformer encoder layer (Fig. 2b).
+
+    x: (B, n, d_model); attn_mask: (B, 1, n) additive mask.
+    """
+    b, n, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x2 = x.reshape(b * n, d)
+
+    # Linear transforms (Table 3 "Linear Trans.": d_model x n*B x d_model).
+    q = (x2 @ lp["wq"] + lp["bq"]).reshape(b, n, h, dh)
+    k = (x2 @ lp["wk"] + lp["bk"]).reshape(b, n, h, dh)
+    v = (x2 @ lp["wv"] + lp["bv"]).reshape(b, n, h, dh)
+    q = q.transpose(0, 2, 1, 3).reshape(b * h, n, dh)
+    k = k.transpose(0, 2, 1, 3).reshape(b * h, n, dh)
+    v = v.transpose(0, 2, 1, 3).reshape(b * h, n, dh)
+
+    # Attention head: B-GEMM score, scale+mask+softmax, B-GEMM output.
+    scores = ref.attention_scores(q, k)                      # (b*h, n, n)
+    am = jnp.repeat(attn_mask, h, axis=0).reshape(b * h, 1, n)
+    am = jnp.broadcast_to(am, (b * h, n, n))
+    probs = _softmax_chain(cfg, scores, am, 1.0 / math.sqrt(dh))
+    ctx = ref.attention_output(probs, v)                     # (b*h, n, dh)
+    ctx = ctx.reshape(b, h, n, dh).transpose(0, 2, 1, 3).reshape(b * n, d)
+
+    # Output projection + DR+Res+LN.
+    attn_out = ctx @ lp["wo"] + lp["bo"]
+    x2 = _layernorm(cfg, attn_out + x2, lp["ln1_g"], lp["ln1_b"])
+
+    # Feed-forward: FC-1 -> GeLU -> FC-2, then DR+Res+LN.
+    hmid = _gelu(cfg, x2 @ lp["w1"] + lp["b1"])
+    ffn_out = hmid @ lp["w2"] + lp["b2"]
+    x2 = _layernorm(cfg, ffn_out + x2, lp["ln2_g"], lp["ln2_b"])
+    return x2.reshape(b, n, d)
+
+
+def embed(cfg: BertConfig, params: Params, ids, seg_ids):
+    """Input embedding layer: token + position + segment, then LN."""
+    b, n = ids.shape
+    x = params["tok_emb"][ids] + params["pos_emb"][None, :n, :] \
+        + params["seg_emb"][seg_ids]
+    x2 = _layernorm(cfg, x.reshape(b * n, cfg.d_model),
+                    params["emb_ln_g"], params["emb_ln_b"])
+    return x2.reshape(b, n, cfg.d_model)
+
+
+def forward(cfg: BertConfig, params: Params, ids, seg_ids, attn_mask):
+    """Full encoder stack -> (B, n, d_model) sequence output."""
+    x = embed(cfg, params, ids, seg_ids)
+    for lp in params["layers"]:
+        x = encoder_layer(cfg, lp, x, attn_mask)
+    return x
+
+
+def mlm_logits(cfg: BertConfig, params: Params, seq_out):
+    """Masked-LM head with tied embedding projection."""
+    b, n, d = seq_out.shape
+    h = _gelu(cfg, seq_out.reshape(b * n, d) @ params["mlm_tr_w"]
+              + params["mlm_tr_b"])
+    h = _layernorm(cfg, h, params["mlm_ln_g"], params["mlm_ln_b"])
+    return (h @ params["tok_emb"].T + params["mlm_bias"]).reshape(b, n, -1)
+
+
+def nsp_logits(cfg: BertConfig, params: Params, seq_out):
+    pooled = jnp.tanh(seq_out[:, 0, :] @ params["pool_w"] + params["pool_b"])
+    return pooled @ params["nsp_w"] + params["nsp_b"]
+
+
+def pretrain_loss(cfg: BertConfig, params: Params, batch):
+    """Masked-LM + NSP loss (the two unsupervised pre-training tasks)."""
+    ids, seg_ids, attn_mask = batch["ids"], batch["seg_ids"], batch["attn_mask"]
+    seq_out = forward(cfg, params, ids, seg_ids, attn_mask)
+
+    logits = mlm_logits(cfg, params, seq_out)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jax.nn.one_hot(batch["mlm_labels"], logits.shape[-1], dtype=logp.dtype)
+    per_tok = -jnp.sum(tgt * logp, axis=-1)
+    wsum = jnp.maximum(jnp.sum(batch["mlm_weights"]), 1.0)
+    mlm_loss = jnp.sum(per_tok * batch["mlm_weights"]) / wsum
+
+    nlogits = nsp_logits(cfg, params, seq_out)
+    nlogp = jax.nn.log_softmax(nlogits, axis=-1)
+    nsp_loss = -jnp.mean(jnp.take_along_axis(
+        nlogp, batch["nsp_labels"][:, None], axis=-1))
+    return mlm_loss + nsp_loss
+
+
+# --------------------------------------------------------------------------
+# LAMB training step (Fig. 3)
+# --------------------------------------------------------------------------
+
+
+def init_opt_state(params: Params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.float32)}
+
+
+def lamb_train_step(cfg: BertConfig, params: Params, opt, batch, lr=1e-3):
+    """One full iteration: fwd + bwd + global 2-norm + per-tensor LAMB.
+
+    Matches the paper's observed structure: the global gradient norm
+    serializes the update against the whole backprop; stage1/stage2 then
+    run per tensor ("per layer" in Fig. 3).
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: pretrain_loss(cfg, p, batch))(params)
+
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    gnorm = jnp.maximum(gnorm, 1e-6)
+    step = opt["step"] + 1.0
+
+    def upd(w, g, m, v):
+        u, m2, v2 = ref.lamb_stage1(g, m, v, w, step, global_norm=gnorm)
+        w2 = ref.lamb_stage2(w, u, lr)
+        return (w2, m2, v2)
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt["m"], opt["v"])
+    is_triple = lambda t: isinstance(t, tuple)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_triple)
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_triple)
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=is_triple)
+    return new_params, {"m": new_m, "v": new_v, "step": step}, loss
+
+
+def synthetic_batch(key, cfg: BertConfig, batch_size: int, seq_len: int,
+                    mask_frac: float = 0.15, token_range: int = 128):
+    """Synthetic masked-LM batch with learnable structure: tokens follow a
+    noisy drift process over a small ``token_range`` window, so MLM loss
+    genuinely decreases within a few hundred steps of the end-to-end
+    training example (the window keeps per-step embedding updates dense)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    lo = 10
+    hi = min(lo + token_range, cfg.vocab_size - 1)
+    base = jax.random.randint(k1, (batch_size, 1), lo, hi)
+    drift = jax.random.randint(k2, (batch_size, seq_len), 0, 3)
+    ids = (base + jnp.cumsum(drift, axis=1) - lo) % (hi - lo) + lo
+    mask_pos = jax.random.uniform(k3, (batch_size, seq_len)) < mask_frac
+    labels = ids
+    ids = jnp.where(mask_pos, 1, ids)  # 1 = [MASK]
+    return {
+        "ids": ids.astype(jnp.int32),
+        "seg_ids": jnp.zeros((batch_size, seq_len), jnp.int32),
+        "attn_mask": jnp.zeros((batch_size, 1, seq_len), jnp.float32),
+        "mlm_labels": labels.astype(jnp.int32),
+        "mlm_weights": mask_pos.astype(jnp.float32),
+        "nsp_labels": jax.random.randint(k4, (batch_size,), 0, 2),
+    }

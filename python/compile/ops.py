@@ -1,0 +1,247 @@
+"""Per-operation artifact functions (L2).
+
+Each function here becomes one HLO artifact (``artifacts/<name>.hlo.txt``)
+that the rust measured path loads, executes, and times as a single
+"kernel".  This mirrors the paper's rocProf methodology: per-kernel
+runtimes, aggregated by category into the Fig. 4/5 breakdowns.
+
+Two implementation variants exist for the fused memory-bound ops:
+
+  * ``impl="pallas"`` — the L1 kernels (explicit VMEM blocking, lowered
+    with interpret=True).  Used for correctness and fusion studies.
+  * ``impl="jnp"``    — plain jnp, fused by XLA.  Used for wall-clock
+    measurement on the CPU PJRT backend (interpret-mode Pallas wall-clock
+    is not a hardware proxy; see DESIGN.md SS3).
+
+Un-fused building blocks (ew_*, red_*) let the rust fusion study execute
+the paper's "unfused" baselines as N separate executable launches, which is
+exactly what unfused kernels are.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import gelu as gelu_k
+from .kernels import lamb as lamb_k
+from .kernels import layernorm as ln_k
+from .kernels import ref
+from .kernels import softmax as sm_k
+
+# --------------------------------------------------------------------------
+# GEMMs (Table 3). A GEMM artifact is a plain (M,K)x(K,N) matmul; the
+# manifest records which BERT op and pass it instantiates.
+# --------------------------------------------------------------------------
+
+
+def gemm(x, w):
+    """Generic MxKxN GEMM; the manifest maps names like ``gemm_fc1_fwd`` to
+    Table 3 rows."""
+    return (jnp.matmul(x, w),)
+
+
+def gemm_nt(x, w):
+    """GEMM with transposed second operand (weight-grad shapes)."""
+    return (jnp.matmul(x, w.T),)
+
+
+def bgemm_scores(q, k):
+    """Batched attention-score GEMM (Table 3 "Attn. Score" FWD)."""
+    return (ref.attention_scores(q, k),)
+
+
+def bgemm_output(p, v):
+    """Batched weighted-sum GEMM (Table 3 "Attn. O/p" FWD)."""
+    return (ref.attention_output(p, v),)
+
+
+def bgemm_scores_pallas(q, k):
+    return (attn_k.attention_scores(q, k),)
+
+
+def bgemm_output_pallas(p, v):
+    return (attn_k.attention_output(p, v),)
+
+
+# --------------------------------------------------------------------------
+# Fused memory-bound ops (SS3.2.3) — jnp and pallas variants.
+# --------------------------------------------------------------------------
+
+
+def gelu_fwd(x):
+    return (ref.gelu(x),)
+
+
+def gelu_bwd(x, dy):
+    return (ref.gelu_grad(x, dy),)
+
+
+def gelu_fwd_pallas(x):
+    return (gelu_k.gelu(x),)
+
+
+def gelu_bwd_pallas(x, dy):
+    return (gelu_k.gelu_grad(x, dy),)
+
+
+def drln_fwd(x, res, mask, gamma, beta):
+    return (ref.dropout_residual_layernorm(x, res, mask, gamma, beta, 0.9),)
+
+
+def drln_fwd_pallas(x, res, mask, gamma, beta):
+    return (ln_k.dropout_residual_layernorm(x, res, mask, gamma, beta,
+                                            keep_prob=0.9),)
+
+
+def layernorm_fused(x, gamma, beta):
+    return (ref.layernorm(x, gamma, beta),)
+
+
+def layernorm_fused_pallas(x, gamma, beta):
+    return (ln_k.layernorm(x, gamma, beta),)
+
+
+def layernorm_bwd(x, gamma, dy):
+    return (ref.layernorm_grad(x, gamma, dy),)
+
+
+def softmax_chain(s, am):
+    return (ref.scale_mask_softmax(s, am, 0.125),)
+
+
+def softmax_chain_pallas(s, am):
+    return (sm_k.scale_mask_softmax(s, am, scale=0.125),)
+
+
+def softmax_bwd(p, dy):
+    return (ref.softmax_grad(p, dy),)
+
+
+def softmax_bwd_pallas(p, dy):
+    return (sm_k.softmax_grad(p, dy),)
+
+
+def fused_attention_head_pallas(q, k, v, am):
+    return (attn_k.fused_attention_head(q, k, v, am, scale=0.125),)
+
+
+def attention_head_jnp(q, k, v, am):
+    return (ref.attention_head(q, k, v, am, 0.125),)
+
+
+# --------------------------------------------------------------------------
+# Optimizers
+# --------------------------------------------------------------------------
+
+
+def lamb_stage1(g, m, v, w, gnorm):
+    u, m2, v2 = ref.lamb_stage1(g, m, v, w, 2, global_norm=gnorm[0, 0])
+    return (u, m2, v2)
+
+
+def lamb_stage2(w, u, ratio):
+    return (w - 1e-3 * ratio[0, 0] * u,)
+
+
+def lamb_fused(g, m, v, w):
+    return ref.lamb_update(g, m, v, w, 2, 1e-3)
+
+
+def lamb_stage1_pallas(g, m, v, w, gnorm):
+    return lamb_k.lamb_stage1(g, m, v, w, gnorm, step=2)
+
+
+def lamb_stage2_pallas(w, u, ratio):
+    return (lamb_k.lamb_stage2(w, u, ratio, lr=1e-3),)
+
+
+def adam_fused(g, m, v, w):
+    return ref.adam_update(g, m, v, w, 2, 1e-3)
+
+
+# --------------------------------------------------------------------------
+# Un-fused building blocks (Fig. 13 baselines). Each is one "kernel
+# launch" on the measured path.
+# --------------------------------------------------------------------------
+
+
+def ew_add(x, y):
+    return (x + y,)
+
+
+def ew_sub(x, y):
+    return (x - y,)
+
+
+def ew_mul(x, y):
+    return (x * y,)
+
+
+def ew_div(x, y):
+    return (x / y,)
+
+
+def ew_scale(x):
+    return (x * 0.9,)
+
+
+def ew_axpy(x, y):
+    """x*a + y*(1-a) — the moment-update shape."""
+    return (0.9 * x + 0.1 * y,)
+
+
+def ew_square(x):
+    return (jnp.square(x),)
+
+
+def ew_sqrt_eps(x):
+    return (jnp.sqrt(x) + 1e-6,)
+
+
+def red_row_mean(x):
+    return (jnp.mean(x, axis=-1, keepdims=True),)
+
+
+def red_row_var(x, mean):
+    return (jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True),)
+
+
+def ew_center(x, mean):
+    return (x - mean,)
+
+
+def ew_rsqrt(x):
+    return (jax.lax.rsqrt(x + 1e-12),)
+
+
+def ew_mul_bcast(x, s):
+    """Row-broadcast multiply (normalize step)."""
+    return (x * s,)
+
+
+def ew_affine(x, gamma, beta):
+    return (x * gamma + beta,)
+
+
+def red_l2norm(x):
+    return (jnp.linalg.norm(x).reshape(1, 1),)
+
+
+# --------------------------------------------------------------------------
+# Embedding & output layers (Fig. 4's small contributors)
+# --------------------------------------------------------------------------
+
+
+def embedding_lookup(tok_emb, pos_emb, seg_emb, ids, seg_ids):
+    """Sum of token/position/segment embeddings (SS2.3)."""
+    x = tok_emb[ids] + pos_emb[None, : ids.shape[1], :] + seg_emb[seg_ids]
+    return (x,)
+
+
+def mlm_output_layer(x, w_tr, gamma, beta, w_vocab):
+    """Masked-LM head: dense + GeLU + LN + vocab projection."""
+    h = ref.gelu(jnp.matmul(x, w_tr))
+    h = ref.layernorm(h, gamma, beta)
+    return (jnp.matmul(h, w_vocab),)

@@ -1,0 +1,296 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes (lane-aligned and ragged) and value regimes for
+every L1 kernel; each case asserts allclose against ``kernels.ref``.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention as attn_k
+from compile.kernels import common
+from compile.kernels import gelu as gelu_k
+from compile.kernels import lamb as lamb_k
+from compile.kernels import layernorm as ln_k
+from compile.kernels import matmul as mm_k
+from compile.kernels import ref
+from compile.kernels import softmax as sm_k
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=12,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                           hypothesis.HealthCheck.data_too_large])
+hypothesis.settings.load_profile("kernels")
+
+
+def arr(rng, *shape, scale=1.0, positive=False):
+    a = rng.standard_normal(shape).astype(np.float32) * scale
+    if positive:
+        a = np.abs(a) + 0.1
+    return jnp.asarray(a)
+
+
+# rows x cols strategies: mix of lane-aligned and odd sizes.
+rows_s = st.sampled_from([1, 3, 8, 17, 64, 96])
+cols_s = st.sampled_from([1, 2, 64, 128, 200, 384])
+seed_s = st.integers(0, 2**31 - 1)
+
+
+# ---------------------------------------------------------------- GeLU ----
+@hypothesis.given(rows=rows_s, cols=cols_s, seed=seed_s)
+def test_gelu_fwd_matches_ref(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, rows, cols, scale=3.0)
+    np.testing.assert_allclose(gelu_k.gelu(x), ref.gelu(x),
+                               rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.given(rows=rows_s, cols=cols_s, seed=seed_s)
+def test_gelu_bwd_matches_ref(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, rows, cols, scale=3.0)
+    dy = arr(rng, rows, cols)
+    np.testing.assert_allclose(gelu_k.gelu_grad(x, dy), ref.gelu_grad(x, dy),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gelu_bwd_matches_autodiff():
+    """The hand-written backward equals jax.vjp of the forward oracle."""
+    rng = np.random.default_rng(0)
+    x = arr(rng, 32, 128, scale=2.0)
+    dy = arr(rng, 32, 128)
+    _, vjp = jax.vjp(ref.gelu, x)
+    np.testing.assert_allclose(ref.gelu_grad(x, dy), vjp(dy)[0],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gelu_extreme_values_finite():
+    x = jnp.asarray([[-50.0, -10.0, 0.0, 10.0, 50.0] * 4], jnp.float32)
+    y = gelu_k.gelu(x)
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(y, ref.gelu(x), rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------- LayerNorm ----
+@hypothesis.given(rows=rows_s, cols=st.sampled_from([2, 64, 128, 200]),
+                  seed=seed_s)
+def test_layernorm_matches_ref(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, rows, cols, scale=2.0)
+    g, b = arr(rng, 1, cols), arr(rng, 1, cols)
+    np.testing.assert_allclose(ln_k.layernorm(x, g, b),
+                               ref.layernorm(x, g, b), rtol=5e-4, atol=5e-4)
+
+
+@hypothesis.given(rows=rows_s, cols=st.sampled_from([64, 128, 256]),
+                  keep=st.sampled_from([0.5, 0.9, 1.0]), seed=seed_s)
+def test_drln_matches_ref(rows, cols, keep, seed):
+    rng = np.random.default_rng(seed)
+    x, res = arr(rng, rows, cols), arr(rng, rows, cols)
+    mask = jnp.asarray((rng.random((rows, cols)) < keep).astype(np.float32))
+    g, b = arr(rng, 1, cols), arr(rng, 1, cols)
+    got = ln_k.dropout_residual_layernorm(x, res, mask, g, b, keep_prob=keep)
+    want = ref.dropout_residual_layernorm(x, res, mask, g, b, keep)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_layernorm_output_is_normalized():
+    """Invariant: pre-affine LN output has zero mean / unit variance."""
+    rng = np.random.default_rng(3)
+    x = arr(rng, 16, 256, scale=7.0)
+    ones, zeros = jnp.ones((1, 256)), jnp.zeros((1, 256))
+    y = np.asarray(ln_k.layernorm(x, ones, zeros))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.var(-1), 1.0, rtol=1e-3)
+
+
+def test_layernorm_grad_matches_autodiff():
+    rng = np.random.default_rng(4)
+    x = arr(rng, 8, 64)
+    g = arr(rng, 1, 64)
+    dy = arr(rng, 8, 64)
+    f = lambda x_: ref.layernorm(x_, g, jnp.zeros_like(g))
+    _, vjp = jax.vjp(f, x)
+    np.testing.assert_allclose(ref.layernorm_grad(x, g, dy), vjp(dy)[0],
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- Softmax ----
+@hypothesis.given(bh=st.sampled_from([1, 4, 8]),
+                  n=st.sampled_from([8, 32, 64]),
+                  m=st.sampled_from([16, 128, 200]),
+                  seed=seed_s)
+def test_scale_mask_softmax_matches_ref(bh, n, m, seed):
+    rng = np.random.default_rng(seed)
+    s = arr(rng, bh, n, m, scale=4.0)
+    am = jnp.where(jnp.asarray(rng.random((bh, n, m))) < 0.1, -1e9, 0.0) \
+        .astype(jnp.float32)
+    got = sm_k.scale_mask_softmax(s, am, scale=0.125)
+    want = ref.scale_mask_softmax(s, am, 0.125)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    rng = np.random.default_rng(5)
+    s = arr(rng, 4, 32, 128, scale=10.0)
+    am = jnp.zeros((4, 32, 128), jnp.float32)
+    p = np.asarray(sm_k.scale_mask_softmax(s, am, scale=1.0))
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+    assert (p >= 0).all()
+
+
+@hypothesis.given(bh=st.sampled_from([1, 4]), n=st.sampled_from([8, 32]),
+                  seed=seed_s)
+def test_softmax_grad_matches_ref_and_autodiff(bh, n, seed):
+    rng = np.random.default_rng(seed)
+    s = arr(rng, bh, n, n)
+    am = jnp.zeros((bh, n, n), jnp.float32)
+    p = ref.scale_mask_softmax(s, am, 1.0)
+    dy = arr(rng, bh, n, n)
+    np.testing.assert_allclose(sm_k.softmax_grad(p, dy),
+                               ref.softmax_grad(p, dy), rtol=1e-4, atol=1e-5)
+    # cross-check vs autodiff through the oracle
+    _, vjp = jax.vjp(lambda s_: ref.scale_mask_softmax(s_, am, 1.0), s)
+    np.testing.assert_allclose(ref.softmax_grad(p, dy), vjp(dy)[0],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_masked_positions_get_zero_probability():
+    rng = np.random.default_rng(6)
+    s = arr(rng, 2, 8, 16)
+    am = np.zeros((2, 8, 16), np.float32)
+    am[:, :, -4:] = -1e9
+    p = np.asarray(sm_k.scale_mask_softmax(s, jnp.asarray(am), scale=1.0))
+    assert (p[:, :, -4:] < 1e-20).all()
+
+
+# ----------------------------------------------------------- Attention ----
+@hypothesis.given(bh=st.sampled_from([1, 2, 8]),
+                  n=st.sampled_from([8, 32, 64]),
+                  dh=st.sampled_from([16, 64]),
+                  seed=seed_s)
+def test_attention_bgemms_match_ref(bh, n, dh, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = arr(rng, bh, n, dh), arr(rng, bh, n, dh), arr(rng, bh, n, dh)
+    np.testing.assert_allclose(attn_k.attention_scores(q, k),
+                               ref.attention_scores(q, k),
+                               rtol=1e-4, atol=1e-4)
+    p = ref.scale_mask_softmax(ref.attention_scores(q, k),
+                               jnp.zeros((bh, n, n), jnp.float32), 0.125)
+    np.testing.assert_allclose(attn_k.attention_output(p, v),
+                               ref.attention_output(p, v),
+                               rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(bh=st.sampled_from([1, 4]), n=st.sampled_from([16, 64]),
+                  dh=st.sampled_from([32, 64]), seed=seed_s)
+def test_fused_attention_head_matches_ref(bh, n, dh, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = arr(rng, bh, n, dh), arr(rng, bh, n, dh), arr(rng, bh, n, dh)
+    am = jnp.zeros((bh, n, n), jnp.float32)
+    got = attn_k.fused_attention_head(q, k, v, am, scale=0.125)
+    want = ref.attention_head(q, k, v, am, 0.125)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- LAMB ----
+@hypothesis.given(rows=st.sampled_from([8, 32, 128]),
+                  cols=st.sampled_from([128, 256]),
+                  step=st.sampled_from([1, 2, 100]),
+                  seed=seed_s)
+def test_lamb_stage1_matches_ref(rows, cols, step, seed):
+    rng = np.random.default_rng(seed)
+    g, m, w = arr(rng, rows, cols), arr(rng, rows, cols), arr(rng, rows, cols)
+    v = arr(rng, rows, cols, positive=True)
+    gnorm = float(np.linalg.norm(np.asarray(g)))
+    u, m2, v2 = lamb_k.lamb_stage1(g, m, v, w,
+                                   jnp.full((1, 1), gnorm, jnp.float32),
+                                   step=step)
+    ur, m2r, v2r = ref.lamb_stage1(g, m, v, w, step, global_norm=gnorm)
+    np.testing.assert_allclose(u, ur, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(m2, m2r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(v2, v2r, rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.given(rows=st.sampled_from([8, 64]),
+                  cols=st.sampled_from([128, 384]), seed=seed_s)
+def test_lamb_full_update_matches_ref(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    g, m, w = arr(rng, rows, cols), arr(rng, rows, cols), arr(rng, rows, cols)
+    v = arr(rng, rows, cols, positive=True)
+    gnorm = float(np.linalg.norm(np.asarray(g)))
+    w2, m2, v2 = lamb_k.lamb_update(g, m, v, w, step=5, lr=1e-2)
+    w2r, m2r, v2r = ref.lamb_update(g, m, v, w, 5, 1e-2, global_norm=gnorm)
+    np.testing.assert_allclose(w2, w2r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(m2, m2r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(v2, v2r, rtol=1e-5, atol=1e-6)
+
+
+def test_lamb_zero_gradient_is_pure_weight_decay_direction():
+    """g=0 => ghat=0, moments stay zero, update dir = weight_decay*w."""
+    w = jnp.ones((8, 128), jnp.float32)
+    z = jnp.zeros((8, 128), jnp.float32)
+    u, m2, v2 = ref.lamb_stage1(z, z, z, w, 1, global_norm=1.0)
+    np.testing.assert_allclose(u, 0.01 * np.asarray(w), rtol=1e-6)
+    np.testing.assert_allclose(m2, 0.0, atol=0)
+    np.testing.assert_allclose(v2, 0.0, atol=0)
+
+
+def test_lamb_trust_ratio_guard():
+    """Zero-norm weights fall back to ratio=1 (no NaN)."""
+    z = jnp.zeros((4, 128), jnp.float32)
+    u = jnp.ones((4, 128), jnp.float32)
+    w2 = ref.lamb_stage2(z, u, 0.1)
+    assert np.isfinite(np.asarray(w2)).all()
+    np.testing.assert_allclose(w2, -0.1 * np.asarray(u), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- Adam ----
+def test_adam_matches_closed_form_first_step():
+    rng = np.random.default_rng(7)
+    g = arr(rng, 8, 128)
+    z = jnp.zeros_like(g)
+    w = arr(rng, 8, 128)
+    w2, m2, v2 = ref.adam_update(g, z, z, w, 1, 1e-3)
+    # After bias correction at step 1, mhat = g, vhat = g^2.
+    expect = np.asarray(w) - 1e-3 * np.asarray(g) / (np.abs(np.asarray(g)) + 1e-8)
+    np.testing.assert_allclose(w2, expect, rtol=1e-4, atol=1e-5)
+
+
+# -------------------------------------------------------------- Matmul ----
+@hypothesis.given(m=st.sampled_from([64, 128, 256]),
+                  k=st.sampled_from([128, 512]),
+                  n=st.sampled_from([128, 384]),
+                  seed=seed_s)
+def test_tiled_matmul_matches_jnp(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = arr(rng, m, k), arr(rng, k, n)
+    np.testing.assert_allclose(mm_k.matmul(x, w), x @ w,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_blocks_fit_vmem():
+    """Invariant: default blocks keep x/w/acc within the VMEM budget."""
+    for (m, n, k) in [(512, 1024, 256), (4096, 4096, 1024), (128, 128, 64)]:
+        bm, bn, bk = mm_k.default_blocks(m, n, k, jnp.float32)
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0
+        fp = common.vmem_bytes([(bm, bk), (bk, bn), (bm, bn)], jnp.float32)
+        assert fp <= common.VMEM_BYTES
+
+
+# ------------------------------------------------------------- common -----
+def test_pick_block_divides_and_aligns():
+    for dim in [128, 512, 4096, 200, 56]:
+        b = common.pick_block(dim, 256, 8)
+        assert dim % b == 0
+
+
+def test_mxu_utilization_bounds():
+    assert common.mxu_utilization(128, 128, 128) == pytest.approx(1.0)
+    # 64-wide head dim wastes >= half the array (takeaway 7).
+    assert common.mxu_utilization(128, 128, 64) <= 0.5
+    assert 0.0 < common.mxu_utilization(1, 1, 1) <= 1.0

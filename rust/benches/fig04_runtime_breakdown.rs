@@ -1,0 +1,33 @@
+//! Fig. 4 — runtime breakdown of BERT pre-training across phases,
+//! mini-batch sizes, and precisions. Prints the five Phi-Bj-FPk rows and
+//! benchmarks the analytic pipeline (graph build + roofline eval).
+use bertprof::config::RunConfig;
+use bertprof::model::IterationGraph;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::profiler::{report, Timeline};
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let dev = DeviceSpec::mi100();
+    let timelines: Vec<Timeline> = RunConfig::figure4_set()
+        .iter()
+        .map(|r| Timeline::modeled(r, &dev))
+        .collect();
+    println!("{}", report::stacked_table(
+        "Fig. 4 — runtime breakdown (modeled, MI100)", &timelines));
+
+    let mut b = Bench::new("fig04");
+    let run = RunConfig::figure4_set()[0];
+    b.run("IterationGraph::build (BERT Large)", || {
+        black_box(IterationGraph::build(&run));
+    });
+    b.run("Timeline::modeled (graph+roofline)", || {
+        black_box(Timeline::modeled(&run, &dev));
+    });
+    b.run("full figure (5 configs)", || {
+        for r in RunConfig::figure4_set() {
+            black_box(Timeline::modeled(&r, &dev));
+        }
+    });
+    b.finish();
+}

@@ -1,0 +1,27 @@
+//! Fig. 5 — hierarchical breakdown of the transformer layers (FP32 and
+//! mixed precision): attention vs FC vs DR+Res+LN, linear-transform GEMMs
+//! vs B-GEMMs vs softmax chain, FC GEMMs vs GeLU.
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::profiler::{report, Timeline};
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let dev = DeviceSpec::mi100();
+    let f32r = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let mpr = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Mixed);
+    let ts = vec![Timeline::modeled(&f32r, &dev), Timeline::modeled(&mpr, &dev)];
+    println!("{}", report::category_table(
+        "Fig. 5 — transformer-layer breakdown (fractions of iteration)", &ts));
+
+    let mut b = Bench::new("fig05");
+    b.run("category aggregation", || {
+        black_box(ts[0].by_category());
+    });
+    b.run("both precisions end-to-end", || {
+        for r in [&f32r, &mpr] {
+            black_box(Timeline::modeled(r, &dev).category_fractions());
+        }
+    });
+    b.finish();
+}

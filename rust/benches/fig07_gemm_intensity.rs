@@ -1,0 +1,24 @@
+//! Fig. 7 — arithmetic intensity (ops/byte) of every BERT training GEMM;
+//! [MB] marks GEMMs the device model classifies memory-bound.
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::perf::intensity;
+use bertprof::profiler::report;
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let rows: Vec<(String, f64)> = intensity::gemm_intensities(&run)
+        .into_iter()
+        .map(|r| (format!("{}{}", if r.memory_bound { "[MB] " } else { "     " }, r.label),
+                  r.ops_per_byte))
+        .collect();
+    println!("{}", report::series_table(
+        "Fig. 7 — GEMM arithmetic intensity (Ph1 B=32 FP32)",
+        ("GEMM (M,N,K[,b])", "ops/byte"), &rows));
+
+    let mut b = Bench::new("fig07");
+    b.run("gemm_intensities", || {
+        black_box(intensity::gemm_intensities(&run));
+    });
+    b.finish();
+}

@@ -1,0 +1,23 @@
+//! Fig. 8 — arithmetic intensity and normalized bandwidth demand of all
+//! BERT op categories (LAMB stages, attention EW, GeLU, DR+Res+LN, GEMMs).
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::perf::intensity;
+use bertprof::profiler::report;
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let rows = intensity::op_intensities(&run);
+    let a: Vec<(String, f64)> = rows.iter().map(|r| (r.label.clone(), r.ops_per_byte)).collect();
+    let bw: Vec<(String, f64)> = rows.iter().map(|r| (r.label.clone(), r.bandwidth)).collect();
+    println!("{}", report::series_table(
+        "Fig. 8a — op arithmetic intensity", ("category", "ops/byte"), &a));
+    println!("{}", report::series_table(
+        "Fig. 8b — bandwidth demand (normalized to max EW)", ("category", "bw"), &bw));
+
+    let mut b = Bench::new("fig08");
+    b.run("op_intensities (full iteration)", || {
+        black_box(intensity::op_intensities(&run));
+    });
+    b.finish();
+}

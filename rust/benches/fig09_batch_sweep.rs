@@ -1,0 +1,27 @@
+//! Fig. 9 — impact of scaling the mini-batch size (B = 4..32) on the
+//! runtime breakdown: LAMB's share shrinks as token count grows.
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::profiler::{report, Timeline};
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let dev = DeviceSpec::mi100();
+    let timelines: Vec<Timeline> = [4u64, 8, 16, 32]
+        .iter()
+        .map(|&bsz| Timeline::modeled(
+            &RunConfig::new(ModelConfig::bert_large().with_batch(bsz),
+                            Phase::Phase1, Precision::Fp32), &dev))
+        .collect();
+    println!("{}", report::stacked_table("Fig. 9 — mini-batch sweep", &timelines));
+
+    let mut b = Bench::new("fig09");
+    b.run("batch sweep (4 configs)", || {
+        for bsz in [4u64, 8, 16, 32] {
+            let r = RunConfig::new(ModelConfig::bert_large().with_batch(bsz),
+                                   Phase::Phase1, Precision::Fp32);
+            black_box(Timeline::modeled(&r, &dev));
+        }
+    });
+    b.finish();
+}

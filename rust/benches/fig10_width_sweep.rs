@@ -1,0 +1,31 @@
+//! Fig. 10 — impact of scaling the transformer layer size (hidden dim
+//! 512..2048, d_ff = 4*d): GEMM and LAMB shares grow quadratically.
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::profiler::{report, Timeline};
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let dev = DeviceSpec::mi100();
+    let timelines: Vec<Timeline> = [512u64, 768, 1024, 1536, 2048]
+        .iter()
+        .map(|&w| {
+            let r = RunConfig::new(ModelConfig::bert_large().with_width(w),
+                                   Phase::Phase1, Precision::Fp32);
+            let mut t = Timeline::modeled(&r, &dev);
+            t.label = format!("d_model={w}");
+            t
+        })
+        .collect();
+    println!("{}", report::stacked_table("Fig. 10 — hidden-dim sweep", &timelines));
+
+    let mut b = Bench::new("fig10");
+    b.run("width sweep (5 configs)", || {
+        for w in [512u64, 768, 1024, 1536, 2048] {
+            let r = RunConfig::new(ModelConfig::bert_large().with_width(w),
+                                   Phase::Phase1, Precision::Fp32);
+            black_box(Timeline::modeled(&r, &dev));
+        }
+    });
+    b.finish();
+}

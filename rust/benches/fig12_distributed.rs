@@ -1,0 +1,42 @@
+//! Fig. 12 — multi-device iteration breakdown: data parallel with and
+//! without overlap, Megatron-style 2-way / 8-way model parallel, and the
+//! 128-GPU hybrid.
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::dist::{DataParallelModel, HybridModel, LinkSpec, ModelParallelModel};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let dev = DeviceSpec::mi100();
+    let b16 = RunConfig::new(ModelConfig::bert_large().with_batch(16),
+                             Phase::Phase1, Precision::Fp32);
+    let b64 = RunConfig::new(ModelConfig::bert_large().with_batch(64),
+                             Phase::Phase1, Precision::Fp32);
+    let link = LinkSpec::pcie4x16();
+    println!("## Fig. 12 — multi-device training (modeled, PCIe 4.0)");
+    println!("{:<26}{:>12}{:>10}{:>10}{:>10}", "config", "total(ms)", "xfmr%", "lamb%", "comm%");
+    for bd in [
+        DataParallelModel::new(1, link.clone(), true).breakdown(&b16, &dev),
+        DataParallelModel::new(64, link.clone(), true).breakdown(&b16, &dev),
+        DataParallelModel::new(64, link.clone(), false).breakdown(&b16, &dev),
+        ModelParallelModel::new(2, link.clone()).breakdown(&b16, &dev),
+        ModelParallelModel::new(8, link.clone()).breakdown(&b64, &dev),
+        HybridModel::megatron_128().breakdown(&b16, &dev),
+    ] {
+        println!("{:<26}{:>12.1}{:>9.1}%{:>9.1}%{:>9.1}%",
+                 bd.label, bd.total() * 1e3,
+                 100.0 * bd.transformer / bd.total(),
+                 100.0 * bd.lamb_fraction(),
+                 100.0 * bd.comm_fraction());
+    }
+
+    let mut b = Bench::new("fig12");
+    b.run("all 6 distributed breakdowns", || {
+        black_box(DataParallelModel::new(64, link.clone(), true).breakdown(&b16, &dev));
+        black_box(DataParallelModel::new(64, link.clone(), false).breakdown(&b16, &dev));
+        black_box(ModelParallelModel::new(2, link.clone()).breakdown(&b16, &dev));
+        black_box(ModelParallelModel::new(8, link.clone()).breakdown(&b64, &dev));
+        black_box(HybridModel::megatron_128().breakdown(&b16, &dev));
+    });
+    b.finish();
+}

@@ -1,0 +1,46 @@
+//! Fig. 13 — kernel-fusion impact (LayerNorm, Adam): kernel count,
+//! execution time, and memory traffic, fused normalized to unfused.
+//! Prints the modeled ratios and, when artifacts exist, the *measured*
+//! ratios from executing the fused/unfused HLO sequences on CPU PJRT.
+use std::path::PathBuf;
+
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::coordinator::MeasureRunner;
+use bertprof::fusion::kernel_fusion::FusionStudy;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::runtime::Runtime;
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let dev = DeviceSpec::mi100();
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    println!("## Fig. 13 — kernel fusion (modeled; fused/unfused ratios)");
+    println!("{:<14}{:>12}{:>12}{:>12}", "study", "kernels", "time", "traffic");
+    for s in [FusionStudy::layernorm(&run, &dev), FusionStudy::adam(&run, &dev)] {
+        println!("{:<14}{:>12.3}{:>12.3}{:>12.3}",
+                 s.name, s.kernel_ratio, s.time_ratio, s.traffic_ratio);
+    }
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let mut rt = Runtime::load(&dir).unwrap();
+        let mut mr = MeasureRunner::new(&mut rt, 5);
+        println!("\n## Fig. 13 — measured (CPU PJRT; fused/unfused ratios)");
+        println!("{:<18}{:>12}{:>12}", "study", "kernels", "time");
+        for (label, unf, fus) in [
+            ("LayerNorm", "layernorm_unfused", "layernorm_fused"),
+            ("DR+Res+LN", "drln_unfused", "drln_fused"),
+            ("Adam", "adam_unfused", "adam_fused"),
+        ] {
+            let (k, t) = mr.fusion_ratio(unf, fus).unwrap();
+            println!("{:<18}{:>12.3}{:>12.3}", label, k, t);
+        }
+    }
+
+    let mut b = Bench::new("fig13");
+    b.run("modeled fusion studies", || {
+        black_box(FusionStudy::layernorm(&run, &dev));
+        black_box(FusionStudy::adam(&run, &dev));
+    });
+    b.finish();
+}

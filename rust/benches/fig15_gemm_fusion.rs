@@ -1,0 +1,36 @@
+//! Fig. 15 — fusing the three attention linear GEMMs (QKV) vs serial:
+//! modeled speedups across token counts, plus the measured CPU-PJRT
+//! ratio of the qkv_fused vs 3x single-GEMM artifact sequences.
+use std::path::PathBuf;
+
+use bertprof::config::Precision;
+use bertprof::coordinator::MeasureRunner;
+use bertprof::fusion::gemm_fusion;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::runtime::Runtime;
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let dev = DeviceSpec::mi100();
+    println!("## Fig. 15 — QKV GEMM fusion speedup (modeled, fused vs 3x serial)");
+    println!("{:<22}{:>10}{:>10}{:>10}", "point", "fwd", "dgrad", "wgrad");
+    for r in gemm_fusion::figure15_sweep(&dev, Precision::Fp32) {
+        println!("{:<22}{:>9.2}x{:>9.2}x{:>9.2}x", r.label,
+                 1.0 / r.fwd_ratio, 1.0 / r.bwd_dgrad_ratio, 1.0 / r.bwd_wgrad_ratio);
+    }
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let mut rt = Runtime::load(&dir).unwrap();
+        let mut mr = MeasureRunner::new(&mut rt, 5);
+        let (k, t) = mr.fusion_ratio("qkv_unfused", "qkv_fused").unwrap();
+        println!("\nmeasured (CPU PJRT): kernels {k:.3}, time {t:.3} (fused/unfused)");
+        println!("=> measured speedup {:.2}x", 1.0 / t);
+    }
+
+    let mut b = Bench::new("fig15");
+    b.run("figure15 modeled sweep", || {
+        black_box(gemm_fusion::figure15_sweep(&dev, Precision::Fp32));
+    });
+    b.finish();
+}

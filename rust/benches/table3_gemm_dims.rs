@@ -1,0 +1,29 @@
+//! Table 3 — architecture-agnostic sizes of BERT GEMMs, instantiated for
+//! BERT Large at Ph1/B=32 and verified against the symbolic forms.
+use bertprof::config::ModelConfig;
+use bertprof::model::gemm::table3;
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let cfg = ModelConfig::bert_large();
+    println!("## Table 3 — BERT GEMM dims (B={}, n={}, d={}, h={}, d_ff={})",
+             cfg.batch, cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.d_ff);
+    println!("{:<16}{:>22}{:>22}{:>22}", "op", "FWD", "BWD dgrad", "BWD wgrad");
+    let fmt = |g: &bertprof::model::GemmDims| {
+        if g.batch > 1 {
+            format!("{}x{}x{},b{}", g.m, g.n, g.k, g.batch)
+        } else {
+            format!("{}x{}x{}", g.m, g.n, g.k)
+        }
+    };
+    for row in table3(&cfg) {
+        println!("{:<16}{:>22}{:>22}{:>22}",
+                 row.kind.label(), fmt(&row.fwd), fmt(&row.bwd_dgrad), fmt(&row.bwd_wgrad));
+    }
+
+    let mut b = Bench::new("table3");
+    b.run("table3 generation", || {
+        black_box(table3(&cfg));
+    });
+    b.finish();
+}

@@ -1,0 +1,290 @@
+//! Model / training / device configuration (Table 2 hyperparameters).
+
+/// Numeric precision of the training run. Mixed precision (the paper's
+/// "FP16"/"MP") keeps GEMM + activation traffic in half precision while
+/// LAMB state and updates stay FP32 (takeaway 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp32,
+    Mixed,
+}
+
+impl Precision {
+    /// Bytes per element for activations/weights on the fwd/bwd path.
+    pub fn act_bytes(self) -> u64 {
+        match self {
+            Precision::Fp32 => 4,
+            Precision::Mixed => 2,
+        }
+    }
+
+    /// Bytes per element for optimizer state — always FP32 master copies.
+    pub fn opt_bytes(self) -> u64 {
+        4
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "FP32",
+            Precision::Mixed => "FP16",
+        }
+    }
+}
+
+/// BERT hyperparameters, named as in Table 2 of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Mini-batch size per device (B).
+    pub batch: u64,
+    /// Input sequence length (n).
+    pub seq_len: u64,
+    /// Hidden dimension (d_model).
+    pub d_model: u64,
+    /// Attention head count (h).
+    pub n_heads: u64,
+    /// Intermediate (feed-forward) dimension (d_ff), usually 4*d_model.
+    pub d_ff: u64,
+    /// Transformer encoder layer count (N).
+    pub n_layers: u64,
+    /// WordPiece vocabulary size.
+    pub vocab: u64,
+    /// Position-embedding table length.
+    pub max_seq_len: u64,
+    /// Segment-embedding table length.
+    pub type_vocab: u64,
+}
+
+impl ModelConfig {
+    /// BERT Large (the paper's subject): 24 layers, d_model 1024, 16
+    /// heads, d_ff 4096 — ~336M parameters.
+    pub fn bert_large() -> Self {
+        ModelConfig {
+            batch: 32,
+            seq_len: 128,
+            d_model: 1024,
+            n_heads: 16,
+            d_ff: 4096,
+            n_layers: 24,
+            vocab: 30522,
+            max_seq_len: 512,
+            type_vocab: 2,
+        }
+    }
+
+    /// BERT Base: 12 layers, d_model 768, 12 heads — ~110M parameters.
+    pub fn bert_base() -> Self {
+        ModelConfig {
+            d_model: 768,
+            n_heads: 12,
+            d_ff: 3072,
+            n_layers: 12,
+            ..Self::bert_large()
+        }
+    }
+
+    /// The reduced config the AOT artifacts are lowered at (must match
+    /// `python/compile/model.py::BERT_MEASURE`).
+    pub fn bert_measure() -> Self {
+        ModelConfig {
+            batch: 4,
+            seq_len: 128,
+            d_model: 256,
+            n_heads: 4,
+            d_ff: 1024,
+            n_layers: 2,
+            vocab: 8192,
+            max_seq_len: 128,
+            type_vocab: 2,
+        }
+    }
+
+    /// The tiny end-to-end-trainable config (matches `BERT_TINY`).
+    pub fn bert_tiny() -> Self {
+        ModelConfig {
+            batch: 8,
+            seq_len: 64,
+            d_model: 128,
+            n_heads: 2,
+            d_ff: 512,
+            n_layers: 2,
+            vocab: 4096,
+            max_seq_len: 128,
+            type_vocab: 2,
+        }
+    }
+
+    /// Pre-training phase presets: Phase-1 trains at n=128, Phase-2 at
+    /// n=512 (90%/10% of iterations, SS2.1).
+    pub fn with_phase(mut self, phase: Phase) -> Self {
+        self.seq_len = match phase {
+            Phase::Phase1 => 128,
+            Phase::Phase2 => 512,
+        };
+        self
+    }
+
+    pub fn with_batch(mut self, b: u64) -> Self {
+        self.batch = b;
+        self
+    }
+
+    /// Scale width: d_model = w, d_ff = 4w (Fig. 10's sweep).
+    pub fn with_width(mut self, d_model: u64) -> Self {
+        self.d_model = d_model;
+        self.d_ff = 4 * d_model;
+        self
+    }
+
+    pub fn with_layers(mut self, n: u64) -> Self {
+        self.n_layers = n;
+        self
+    }
+
+    /// Per-head dimension (d_model / h).
+    pub fn d_head(&self) -> u64 {
+        self.d_model / self.n_heads
+    }
+
+    /// Token count per iteration (n*B) — the quantity takeaways 2/6/11
+    /// are phrased in.
+    pub fn tokens(&self) -> u64 {
+        self.batch * self.seq_len
+    }
+
+    /// Exact trainable-parameter count; cross-checked against the jax
+    /// model in `rust/tests/` and ~336M for BERT Large.
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model;
+        let emb = self.vocab * d + self.max_seq_len * d + self.type_vocab * d + 2 * d;
+        let per_layer = 4 * (d * d + d)        // wq wk wv wo + biases
+            + 2 * (2 * d)                      // two LayerNorms (gamma, beta)
+            + d * self.d_ff + self.d_ff        // FC-1
+            + self.d_ff * d + d; // FC-2
+        let mlm_head = d * d + d + 2 * d + self.vocab; // transform + LN + bias
+        let nsp_head = d * d + d + d * 2 + 2; // pooler + classifier
+        emb + self.n_layers * per_layer + mlm_head + nsp_head
+    }
+
+    /// LAMB optimizer state (m, v) element count == 2x parameters.
+    pub fn opt_state_count(&self) -> u64 {
+        2 * self.param_count()
+    }
+}
+
+/// Full pre-training wall-clock estimate (SS2.1): 90% of iterations in
+/// Phase-1 (n=128), 10% in Phase-2 (n=512).
+pub fn pretraining_mixture_seconds(ph1_iter: f64, ph2_iter: f64, total_iters: f64) -> f64 {
+    0.9 * total_iters * ph1_iter + 0.1 * total_iters * ph2_iter
+}
+
+/// BERT pre-training phase (SS2.1): Phase-1 n=128, Phase-2 n=512.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Phase1,
+    Phase2,
+}
+
+/// A named experiment configuration like the paper's "Ph1-B32-FP32".
+#[derive(Debug, Clone, Copy)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub precision: Precision,
+    pub phase: Phase,
+}
+
+impl RunConfig {
+    pub fn new(model: ModelConfig, phase: Phase, precision: Precision) -> Self {
+        RunConfig { model: model.with_phase(phase), precision, phase }
+    }
+
+    /// The paper's label scheme: `Phi-Bj-FPk`.
+    pub fn label(&self) -> String {
+        let ph = match self.phase {
+            Phase::Phase1 => "Ph1",
+            Phase::Phase2 => "Ph2",
+        };
+        let fp = match self.precision {
+            Precision::Fp32 => "FP32",
+            Precision::Mixed => "FP16",
+        };
+        format!("{ph}-B{}-{fp}", self.model.batch)
+    }
+
+    /// The five configurations of Fig. 4.
+    pub fn figure4_set() -> Vec<RunConfig> {
+        let large = ModelConfig::bert_large();
+        vec![
+            RunConfig::new(large.with_batch(32), Phase::Phase1, Precision::Fp32),
+            RunConfig::new(large.with_batch(4), Phase::Phase1, Precision::Fp32),
+            RunConfig::new(large.with_batch(4), Phase::Phase2, Precision::Fp32),
+            RunConfig::new(large.with_batch(32), Phase::Phase1, Precision::Mixed),
+            RunConfig::new(large.with_batch(4), Phase::Phase2, Precision::Mixed),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_large_param_count_matches_paper() {
+        // The paper quotes ~340M; the exact jax model gives 336,226,108.
+        let p = ModelConfig::bert_large().param_count();
+        assert!(p > 330_000_000 && p < 345_000_000, "{p}");
+    }
+
+    #[test]
+    fn bert_base_param_count_matches_paper() {
+        let p = ModelConfig::bert_base().param_count();
+        assert!(p > 105_000_000 && p < 115_000_000, "{p}");
+    }
+
+    #[test]
+    fn tiny_param_count_matches_jax_model() {
+        // python: M.param_count(M.BERT_TINY) == 975,362
+        assert_eq!(ModelConfig::bert_tiny().param_count(), 975_362);
+    }
+
+    #[test]
+    fn measure_param_count_matches_jax_model() {
+        // Keep in lock-step with BERT_MEASURE in model.py.
+        let c = ModelConfig::bert_measure();
+        assert_eq!(c.d_head(), 64);
+        assert_eq!(c.tokens(), 512);
+    }
+
+    #[test]
+    fn phase_switch_changes_seq_len_only() {
+        let c = ModelConfig::bert_large().with_phase(Phase::Phase2);
+        assert_eq!(c.seq_len, 512);
+        assert_eq!(c.d_model, 1024);
+    }
+
+    #[test]
+    fn width_scaling_keeps_ff_ratio() {
+        let c = ModelConfig::bert_large().with_width(2048);
+        assert_eq!(c.d_ff, 8192);
+    }
+
+    #[test]
+    fn run_config_labels() {
+        let r = RunConfig::new(ModelConfig::bert_large().with_batch(4),
+                               Phase::Phase2, Precision::Mixed);
+        assert_eq!(r.label(), "Ph2-B4-FP16");
+        assert_eq!(RunConfig::figure4_set().len(), 5);
+    }
+
+    #[test]
+    fn pretraining_mixture_weights_phases_90_10() {
+        let t = pretraining_mixture_seconds(1.0, 4.0, 100.0);
+        assert!((t - (90.0 + 40.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::Fp32.act_bytes(), 4);
+        assert_eq!(Precision::Mixed.act_bytes(), 2);
+        assert_eq!(Precision::Mixed.opt_bytes(), 4);
+    }
+}

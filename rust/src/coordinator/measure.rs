@@ -1,0 +1,122 @@
+//! Measured runtime breakdown: execute the per-op artifacts on the PJRT
+//! CPU backend, weight them by their per-iteration invocation counts at
+//! the measurement config, and aggregate into the paper's categories.
+//!
+//! This validates the op decomposition end to end: the *measured* shares
+//! (CPU) should rank the same way as the *modeled* shares (MI100 roofline)
+//! — EXPERIMENTS.md records both side by side.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::model::op::{LayerClass, OpCategory};
+use crate::profiler::{TimedOp, Timeline};
+use crate::runtime::Runtime;
+
+/// (artifact name, layer class, category, invocations per iteration).
+/// Counts are for the `bert_measure` config the artifacts were lowered
+/// at: N layers, 4 linear projections per layer, 2 DR+Res+LN per layer,
+/// per-tensor LAMB approximated as one (stage1, norm, stage2) set per
+/// layer plus one for embeddings/heads.
+pub fn artifact_schedule(cfg: &ModelConfig) -> Vec<(&'static str, LayerClass, OpCategory, u64)> {
+    let n = cfg.n_layers;
+    use LayerClass::*;
+    use OpCategory::*;
+    vec![
+        ("gemm_linear_fwd", Transformer, LinearGemm, 4 * n),
+        ("gemm_linear_dgrad", Transformer, LinearGemm, 4 * n),
+        ("gemm_linear_wgrad", Transformer, LinearGemm, 4 * n),
+        ("gemm_fc1_fwd", Transformer, FcGemm, n),
+        ("gemm_fc1_dgrad", Transformer, FcGemm, n),
+        ("gemm_fc1_wgrad", Transformer, FcGemm, n),
+        ("gemm_fc2_fwd", Transformer, FcGemm, n),
+        ("gemm_fc2_dgrad", Transformer, FcGemm, n),
+        ("gemm_fc2_wgrad", Transformer, FcGemm, n),
+        ("bgemm_score_fwd", Transformer, AttnBGemm, n),
+        ("bgemm_score_dgrad", Transformer, AttnBGemm, 2 * n),
+        ("bgemm_output_fwd", Transformer, AttnBGemm, n),
+        ("bgemm_output_dgrad", Transformer, AttnBGemm, 2 * n),
+        ("softmax_chain", Transformer, AttnEw, n),
+        ("softmax_bwd", Transformer, AttnEw, n),
+        ("gelu_fwd", Transformer, Gelu, n),
+        ("gelu_bwd", Transformer, Gelu, n),
+        ("drln_fwd", Transformer, DrResLn, 2 * n),
+        ("layernorm_bwd", Transformer, DrResLn, 2 * n),
+        ("embedding_lookup", LayerClass::Embedding, OpCategory::Embedding, 1),
+        ("mlm_output_layer", LayerClass::OutputLayer, OpCategory::OutputLayer, 1),
+        ("lamb_stage1", Optimizer, LambStage1, n + 1),
+        ("red_l2norm", Optimizer, LambNorm, 2 * (n + 1) + 1),
+        ("lamb_stage2", Optimizer, LambStage2, n + 1),
+    ]
+}
+
+/// Executes and times every scheduled artifact, producing a measured
+/// `Timeline` compatible with all the report renderers.
+pub struct MeasureRunner<'rt> {
+    pub runtime: &'rt mut Runtime,
+    pub reps: u32,
+}
+
+impl<'rt> MeasureRunner<'rt> {
+    pub fn new(runtime: &'rt mut Runtime, reps: u32) -> Self {
+        MeasureRunner { runtime, reps }
+    }
+
+    /// Measured iteration breakdown at the measurement config.
+    pub fn breakdown(&mut self, cfg: &ModelConfig, label: &str) -> Result<Timeline> {
+        let mut entries = Vec::new();
+        for (name, layer, category, count) in artifact_schedule(cfg) {
+            let timing = self.runtime.time_artifact(name, self.reps)?;
+            let spec = self.runtime.manifest().get(name)?;
+            entries.push(TimedOp {
+                name: name.to_string(),
+                layer,
+                category,
+                seconds: timing.seconds() * count as f64,
+                flops: spec.flops * count,
+                bytes: spec.bytes * count,
+                launches: count,
+            });
+        }
+        Ok(Timeline { label: label.to_string(), entries })
+    }
+
+    /// Measured fused-vs-unfused comparison for a manifest sequence pair
+    /// (Fig. 13's measured counterpart). Returns (kernel_ratio,
+    /// time_ratio).
+    pub fn fusion_ratio(&mut self, unfused: &str, fused: &str) -> Result<(f64, f64)> {
+        let tu = self.runtime.time_sequence(unfused, self.reps)?;
+        let tf = self.runtime.time_sequence(fused, self.reps)?;
+        let ku = self.runtime.sequence_len(unfused) as f64;
+        let kf = self.runtime.sequence_len(fused) as f64;
+        Ok((kf / ku, tf.seconds() / tu.seconds()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_counts_scale_with_layers() {
+        let a = artifact_schedule(&ModelConfig::bert_measure());
+        let mut big = ModelConfig::bert_measure();
+        big.n_layers *= 2;
+        let b = artifact_schedule(&big);
+        let get = |s: &[(&str, LayerClass, OpCategory, u64)], n: &str| {
+            s.iter().find(|e| e.0 == n).unwrap().3
+        };
+        assert_eq!(2 * get(&a, "gemm_fc1_fwd"), get(&b, "gemm_fc1_fwd"));
+        // Embedding stays constant.
+        assert_eq!(get(&a, "embedding_lookup"), get(&b, "embedding_lookup"));
+    }
+
+    #[test]
+    fn schedule_covers_all_layer_classes() {
+        let s = artifact_schedule(&ModelConfig::bert_measure());
+        for lc in [LayerClass::Transformer, LayerClass::Embedding,
+                   LayerClass::OutputLayer, LayerClass::Optimizer] {
+            assert!(s.iter().any(|e| e.1 == lc), "{lc:?}");
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Micro-batching & gradient accumulation (SS4.2).
+//!
+//! A mini-batch of `B` splits into `k` micro-batches of `B/k`; fwd/bwd
+//! run per micro-batch, gradients accumulate with EW scale+add ops, and
+//! a single LAMB update applies at the end — cutting update cost per
+//! sample by `k` while adding accumulation traffic.
+
+use crate::config::RunConfig;
+use crate::model::IterationGraph;
+use crate::perf::device::DeviceSpec;
+use crate::perf::roofline;
+
+/// A planned mini-batch execution.
+#[derive(Debug, Clone)]
+pub struct MicrobatchPlan {
+    pub run: RunConfig,
+    pub micro_batches: u64,
+}
+
+impl MicrobatchPlan {
+    /// Split `run`'s mini-batch into `k` micro-batches (B must divide).
+    pub fn new(run: RunConfig, k: u64) -> Option<MicrobatchPlan> {
+        if k == 0 || run.model.batch % k != 0 {
+            return None;
+        }
+        Some(MicrobatchPlan { run, micro_batches: k })
+    }
+
+    /// The per-micro-batch config (B/k).
+    pub fn micro_run(&self) -> RunConfig {
+        let mut r = self.run;
+        r.model.batch /= self.micro_batches;
+        r
+    }
+
+    /// Modeled seconds for the whole mini-batch: k x (fwd+bwd of the
+    /// micro config) + accumulation + one update.
+    pub fn iteration_seconds(&self, dev: &DeviceSpec) -> f64 {
+        let micro = self.micro_run();
+        let prec = self.run.precision;
+        // fwd+bwd of the micro graph, minus its optimizer ops.
+        let g = IterationGraph::build(&micro);
+        let fwd_bwd: f64 = g
+            .ops
+            .iter()
+            .filter(|o| o.layer != crate::model::op::LayerClass::Optimizer)
+            .map(|o| roofline::estimate_op_total(o, dev, prec))
+            .sum();
+        // Accumulation + single update from the full-batch graph.
+        let full = IterationGraph::build_sharded(&self.run, 1, self.micro_batches);
+        let update: f64 = full
+            .ops
+            .iter()
+            .filter(|o| o.layer == crate::model::op::LayerClass::Optimizer)
+            .map(|o| roofline::estimate_op_total(o, dev, prec))
+            .sum();
+        fwd_bwd * self.micro_batches as f64 + update
+    }
+
+    /// Activation-memory high-water mark scales with the micro batch,
+    /// not the mini batch — the reason micro-batching exists.
+    pub fn activation_bytes(&self) -> u64 {
+        let micro = self.micro_run();
+        let cfg = &micro.model;
+        // Dominant per-layer activations: qkv + scores + ffn mid.
+        let per_layer = cfg.tokens() * cfg.d_model * 4
+            + cfg.batch * cfg.n_heads * cfg.seq_len * cfg.seq_len
+            + cfg.tokens() * cfg.d_ff;
+        per_layer * cfg.n_layers * micro.precision.act_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision};
+
+    fn run() -> RunConfig {
+        RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
+    }
+
+    #[test]
+    fn rejects_non_dividing_splits() {
+        assert!(MicrobatchPlan::new(run(), 5).is_none());
+        assert!(MicrobatchPlan::new(run(), 0).is_none());
+        assert!(MicrobatchPlan::new(run(), 4).is_some());
+    }
+
+    #[test]
+    fn memory_shrinks_with_micro_batching() {
+        let p1 = MicrobatchPlan::new(run(), 1).unwrap();
+        let p4 = MicrobatchPlan::new(run(), 4).unwrap();
+        assert!(p4.activation_bytes() * 3 < p1.activation_bytes());
+    }
+
+    #[test]
+    fn update_cost_amortizes_but_compute_does_not() {
+        // k=4 should cost slightly more than k=1 (same fwd/bwd work +
+        // accumulation), never less.
+        let dev = DeviceSpec::mi100();
+        let t1 = MicrobatchPlan::new(run(), 1).unwrap().iteration_seconds(&dev);
+        let t4 = MicrobatchPlan::new(run(), 4).unwrap().iteration_seconds(&dev);
+        assert!(t4 > t1, "t4 {t4} t1 {t1}");
+        assert!(t4 < 1.6 * t1, "t4 {t4} t1 {t1}");
+    }
+
+    #[test]
+    fn effective_batch_seconds_beat_small_batch_updates() {
+        // Micro-batching a B=32 mini-batch into 8x B=4 is cheaper than 8
+        // separate B=4 iterations (which would run LAMB 8 times) —
+        // the SS4.2 motivation.
+        let dev = DeviceSpec::mi100();
+        let micro = MicrobatchPlan::new(run(), 8).unwrap();
+        let small = RunConfig::new(ModelConfig::bert_large().with_batch(4),
+                                   Phase::Phase1, Precision::Fp32);
+        let g = IterationGraph::build(&small);
+        let eight_small = 8.0 * roofline::iteration_seconds(&g, &dev, small.precision);
+        assert!(micro.iteration_seconds(&dev) < eight_small);
+    }
+}

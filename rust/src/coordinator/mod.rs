@@ -1,0 +1,11 @@
+//! Coordinator (L3): drives the measured path — per-op wall-clock
+//! breakdowns, fusion sequence timing, and end-to-end tiny-BERT training
+//! — over the PJRT runtime, plus the micro-batching scheduler.
+
+pub mod measure;
+pub mod microbatch;
+pub mod trainer;
+
+pub use measure::MeasureRunner;
+pub use microbatch::MicrobatchPlan;
+pub use trainer::Trainer;

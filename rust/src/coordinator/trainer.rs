@@ -1,0 +1,163 @@
+//! End-to-end trainer: drives the `tiny_train_step` artifact (fwd + bwd
+//! + LAMB, one HLO module) in a loop from rust. Python never runs here —
+//! state threads output->input across steps as host literals.
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::runtime::literal::{scalar_f32, synthesize_scaled};
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+/// Tiny-BERT batch dimensions (must match BERT_TINY lowering in aot.py).
+const BATCH: usize = 8;
+const SEQ: usize = 64;
+const MASK_TOKEN: i32 = 1;
+const MASK_FRAC: f64 = 0.15;
+/// Tokens drift inside a small window so embedding updates stay dense and
+/// the loss curve visibly falls within a few hundred steps (matches
+/// model.synthetic_batch's token_range).
+const TOK_LO: i64 = 10;
+const TOK_HI: i64 = 138;
+
+pub struct Trainer<'rt> {
+    runtime: &'rt mut Runtime,
+    /// params ++ m ++ v (3 * n_params literals), then step.
+    state: Vec<Literal>,
+    step: Literal,
+    n_params: usize,
+    rng: Rng,
+    pub losses: Vec<f32>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialize parameters (N(0, 0.02^2)) and zero optimizer state.
+    pub fn new(runtime: &'rt mut Runtime, seed: u64) -> Result<Trainer<'rt>> {
+        let spec = runtime.manifest().get("tiny_train_step")?.clone();
+        let n_params = spec
+            .n_param_tensors
+            .context("tiny_train_step missing n_param_tensors meta")?;
+        if spec.inputs.len() != 3 * n_params + 7 {
+            bail!(
+                "unexpected tiny_train_step signature: {} inputs, {} params",
+                spec.inputs.len(),
+                n_params
+            );
+        }
+        let mut rng = Rng::seed(seed);
+        let mut state = Vec::with_capacity(3 * n_params);
+        for (i, ts) in spec.inputs[..3 * n_params].iter().enumerate() {
+            let lit = if i < n_params {
+                synthesize_scaled(ts, &mut rng, 0.02)?
+            } else {
+                // m and v start at zero.
+                let zspec = crate::runtime::manifest::TensorSpec {
+                    shape: ts.shape.clone(),
+                    dtype: ts.dtype,
+                    synth: crate::runtime::manifest::Synth::Zeros,
+                };
+                synthesize_scaled(&zspec, &mut rng, 0.0)?
+            };
+            state.push(lit);
+        }
+        let step = Literal::scalar(0.0f32);
+        Ok(Trainer { runtime, state, step, n_params, rng, losses: Vec::new() })
+    }
+
+    /// Build one synthetic masked-LM batch (drifting token process — the
+    /// same learnable structure as model.synthetic_batch).
+    fn make_batch(&mut self) -> Vec<Literal> {
+        let rng = &mut self.rng;
+        let mut ids = vec![0i32; BATCH * SEQ];
+        let mut labels = vec![0i32; BATCH * SEQ];
+        let mut weights = vec![0.0f32; BATCH * SEQ];
+        for b in 0..BATCH {
+            let mut tok = rng.int_range(TOK_LO, TOK_HI - 1);
+            for s in 0..SEQ {
+                tok = (tok - TOK_LO + rng.int_range(0, 2)) % (TOK_HI - TOK_LO) + TOK_LO;
+                let i = b * SEQ + s;
+                labels[i] = tok as i32;
+                if rng.uniform() < MASK_FRAC {
+                    ids[i] = MASK_TOKEN;
+                    weights[i] = 1.0;
+                } else {
+                    ids[i] = tok as i32;
+                }
+            }
+        }
+        let seg = vec![0i32; BATCH * SEQ];
+        let am = vec![0.0f32; BATCH * SEQ];
+        let nsp: Vec<i32> = (0..BATCH).map(|_| rng.int_range(0, 1) as i32).collect();
+        let sh2 = [BATCH as i64, SEQ as i64];
+        vec![
+            Literal::vec1(&ids).reshape(&sh2).unwrap(),
+            Literal::vec1(&seg).reshape(&sh2).unwrap(),
+            Literal::vec1(&am).reshape(&[BATCH as i64, 1, SEQ as i64]).unwrap(),
+            Literal::vec1(&labels).reshape(&sh2).unwrap(),
+            Literal::vec1(&weights).reshape(&sh2).unwrap(),
+            Literal::vec1(&nsp),
+        ]
+    }
+
+    /// Run one training step; returns the loss.
+    pub fn step(&mut self) -> Result<f32> {
+        let batch = self.make_batch();
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * self.n_params + 7);
+        inputs.extend(self.state.iter());
+        inputs.push(&self.step);
+        inputs.extend(batch.iter());
+
+        // PERF: pass borrowed literals straight through (execute is generic
+        // over Borrow<Literal>); cloning ~12 MB of state per step cost ~9%
+        // of step time (EXPERIMENTS.md SSPerf). The borrow of self.state
+        // and the &mut runtime call don't conflict: Trainer holds the
+        // runtime by &mut, state by value, so split them explicitly.
+        let exe_out = {
+            let rt = &mut *self.runtime;
+            // compile is cached; resolve the executable first, then call
+            // execute with references only.
+            rt.execute_refs("tiny_train_step", &inputs)?
+        };
+        let expect = 3 * self.n_params + 2;
+        if exe_out.len() != expect {
+            bail!("train step returned {} outputs, expected {expect}", exe_out.len());
+        }
+        let loss = scalar_f32(&exe_out[expect - 1])?;
+        let step = exe_out[expect - 2].clone();
+        self.state = exe_out[..3 * self.n_params].to_vec();
+        self.step = step;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Train `steps` iterations; returns (first_loss, last_loss).
+    pub fn train(&mut self, steps: u32, log_every: u32) -> Result<(f32, f32)> {
+        let mut first = None;
+        let mut last = 0.0;
+        for i in 0..steps {
+            last = self.step()?;
+            if first.is_none() {
+                first = Some(last);
+            }
+            if log_every > 0 && i % log_every == 0 {
+                println!("step {i:>5}  loss {last:.4}");
+            }
+        }
+        Ok((first.unwrap_or(last), last))
+    }
+
+    /// Mean loss over the trailing `k` steps (noise-robust convergence
+    /// signal).
+    pub fn trailing_mean(&self, k: usize) -> f32 {
+        let n = self.losses.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let k = k.min(n);
+        self.losses[n - k..].iter().sum::<f32>() / k as f32
+    }
+
+    pub fn current_step(&self) -> Result<f32> {
+        scalar_f32(&self.step)
+    }
+}

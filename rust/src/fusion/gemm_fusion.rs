@@ -1,0 +1,93 @@
+//! GEMM fusion of the attention linear transforms (SS5.1.2, Fig. 14/15).
+//!
+//! The Wq/Wk/Wv projections share their input matrix; concatenating the
+//! weights turns three (d x nB x d) GEMMs into one (3d x nB x d) GEMM:
+//! the shared input is read once and the larger M dimension fills the
+//! device better — biggest wins at small token counts / hidden dims
+//! (Fig. 15).
+
+use crate::config::Precision;
+use crate::model::gemm::{GemmDims, GemmKind};
+use crate::perf::device::DeviceSpec;
+use crate::perf::gemm_model::gemm_time;
+
+#[derive(Debug, Clone)]
+pub struct QkvFusionResult {
+    pub label: String,
+    pub tokens: u64,
+    pub d_model: u64,
+    /// fused_time / unfused_time (< 1 is a win); fwd and bwd variants.
+    pub fwd_ratio: f64,
+    pub bwd_dgrad_ratio: f64,
+    pub bwd_wgrad_ratio: f64,
+}
+
+impl QkvFusionResult {
+    pub fn fwd_speedup(&self) -> f64 {
+        1.0 / self.fwd_ratio
+    }
+}
+
+/// Fig. 15 point: compare 3 separate linear GEMMs vs the fused QKV GEMM
+/// at given token count and hidden dim.
+pub fn qkv_fusion_speedup(
+    tokens: u64,
+    d_model: u64,
+    dev: &DeviceSpec,
+    prec: Precision,
+) -> QkvFusionResult {
+    let d = d_model;
+    let nb = tokens;
+    // Forward: [d x nb x d] x3 vs [3d x nb x d].
+    let single_f = GemmDims::new(GemmKind::LinearTransform, d, nb, d, 1);
+    let fused_f = GemmDims::new(GemmKind::QkvFused, 3 * d, nb, d, 1);
+    // Backward dgrad: same shapes transposed (d x nb x d) x3 vs 3d.
+    let single_dg = GemmDims::new(GemmKind::LinearTransform, d, nb, d, 1);
+    let fused_dg = GemmDims::new(GemmKind::QkvFused, d, nb, 3 * d, 1);
+    // Backward wgrad: (d x d x nb) x3 vs (3d x d x nb).
+    let single_wg = GemmDims::new(GemmKind::LinearTransform, d, d, nb, 1);
+    let fused_wg = GemmDims::new(GemmKind::QkvFused, 3 * d, d, nb, 1);
+
+    let ratio = |single: &GemmDims, fused: &GemmDims| -> f64 {
+        gemm_time(fused, dev, prec) / (3.0 * gemm_time(single, dev, prec))
+    };
+    QkvFusionResult {
+        label: format!("QKV nB={nb} d={d}"),
+        tokens,
+        d_model,
+        fwd_ratio: ratio(&single_f, &fused_f),
+        bwd_dgrad_ratio: ratio(&single_dg, &fused_dg),
+        bwd_wgrad_ratio: ratio(&single_wg, &fused_wg),
+    }
+}
+
+/// The Fig. 15 sweep: token counts at BERT Large's hidden dim.
+pub fn figure15_sweep(dev: &DeviceSpec, prec: Precision) -> Vec<QkvFusionResult> {
+    [512u64, 1024, 2048, 4096, 8192]
+        .iter()
+        .map(|&nb| qkv_fusion_speedup(nb, 1024, dev, prec))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fusion_always_helps_or_is_neutral() {
+        for r in figure15_sweep(&DeviceSpec::mi100(), Precision::Fp32) {
+            assert!(r.fwd_ratio <= 1.02, "{:?}", r);
+        }
+    }
+
+    #[test]
+    fn fusion_wins_most_at_small_token_counts() {
+        // Fig. 15: impact is higher when input matrices are small.
+        let rows = figure15_sweep(&DeviceSpec::mi100(), Precision::Fp32);
+        let small = rows.first().unwrap().fwd_speedup();
+        let large = rows.last().unwrap().fwd_speedup();
+        assert!(small > large, "small {small} large {large}");
+        // Paper reports up to ~1.62x.
+        assert!(small > 1.2 && small < 3.5, "{small}");
+    }
+}

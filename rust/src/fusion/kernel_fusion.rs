@@ -1,0 +1,118 @@
+//! Kernel-fusion model (SS5.1.1, Fig. 13).
+//!
+//! Fusing a producer-consumer chain of memory-bound kernels removes the
+//! intermediate HBM round-trips and the per-kernel launch overhead. The
+//! model: a fused chain reads each *external* input once and writes each
+//! *external* output once; the unfused chain also streams every
+//! intermediate through memory.
+
+use crate::config::{Precision, RunConfig};
+use crate::model::adam;
+use crate::model::op::Op;
+use crate::perf::device::DeviceSpec;
+use crate::perf::roofline::estimate_op_total;
+
+/// Fig. 13 bar triple, normalized to the unfused baseline.
+#[derive(Debug, Clone)]
+pub struct FusionStats {
+    pub name: String,
+    pub kernel_ratio: f64,
+    pub time_ratio: f64,
+    pub traffic_ratio: f64,
+}
+
+impl FusionStats {
+    pub fn from_ops(name: &str, unfused: &[Op], fused: &[Op],
+                    dev: &DeviceSpec, prec: Precision) -> FusionStats {
+        let count = |ops: &[Op]| -> f64 { ops.iter().map(|o| o.count).sum::<u64>() as f64 };
+        let bytes = |ops: &[Op]| -> f64 { ops.iter().map(|o| o.total_bytes()).sum::<u64>() as f64 };
+        let time = |ops: &[Op]| -> f64 {
+            ops.iter().map(|o| estimate_op_total(o, dev, prec)).sum()
+        };
+        FusionStats {
+            name: name.into(),
+            kernel_ratio: count(fused) / count(unfused),
+            time_ratio: time(fused) / time(unfused),
+            traffic_ratio: bytes(fused) / bytes(unfused),
+        }
+    }
+}
+
+/// The two Fig. 13 studies: LayerNorm and Adam.
+pub struct FusionStudy;
+
+impl FusionStudy {
+    /// LayerNorm: 6 unfused kernels (mean, center, var, rsqrt, normalize,
+    /// affine) each streaming the (n*B, d) activation vs one fused kernel.
+    pub fn layernorm(run: &RunConfig, dev: &DeviceSpec) -> FusionStats {
+        use crate::model::op::{LayerClass, OpCategory, OpKind, Pass};
+        let cfg = &run.model;
+        let elems = cfg.tokens() * cfg.d_model;
+        let prec = run.precision;
+        let mk = |name: &str, reads: u64, writes: u64| Op {
+            name: name.into(),
+            layer: LayerClass::Transformer,
+            category: OpCategory::DrResLn,
+            pass: Pass::Forward,
+            kind: OpKind::Elementwise {
+                elems,
+                flops_per_elem: 2,
+                tensors_read: reads,
+                tensors_written: writes,
+            },
+            count: 1,
+            elem_bytes: prec.act_bytes(),
+        };
+        // Reductions write n*B scalars ~ elems/d; approximate the small
+        // outputs as 0-tensor writes plus one row-tensor (cheap but kept
+        // for launch accounting).
+        let unfused = vec![
+            mk("ln mean", 1, 1),
+            mk("ln center", 2, 1),
+            mk("ln var", 1, 1),
+            mk("ln rsqrt", 1, 1),
+            mk("ln normalize", 2, 1),
+            mk("ln affine", 1, 1),
+        ];
+        let fused = vec![mk("ln fused", 1, 1)];
+        FusionStats::from_ops("LayerNorm", &unfused, &fused, dev, prec)
+    }
+
+    /// Adam: fusion collapses per-tensor kernel chains but cannot fuse
+    /// *across* layers (independent data), so time/traffic shrink less
+    /// than kernel count.
+    pub fn adam(run: &RunConfig, dev: &DeviceSpec) -> FusionStats {
+        let unfused = adam::adam_unfused_ops(run);
+        let fused = adam::adam_fused_ops(run);
+        FusionStats::from_ops("Adam", &unfused, &fused, dev, run.precision)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+
+    fn run() -> RunConfig {
+        RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
+    }
+
+    #[test]
+    fn layernorm_fusion_6_to_8x() {
+        // Fig. 13: LN fusion reduces kernels, time, traffic by 6-8x.
+        let s = FusionStudy::layernorm(&run(), &DeviceSpec::mi100());
+        assert!((s.kernel_ratio - 1.0 / 6.0).abs() < 1e-9);
+        assert!(s.time_ratio < 1.0 / 4.0, "time {}", s.time_ratio);
+        assert!(s.traffic_ratio < 1.0 / 4.0, "traffic {}", s.traffic_ratio);
+    }
+
+    #[test]
+    fn adam_fusion_kernels_collapse_time_less_so() {
+        // Fig. 13: Adam kernel count drops ~9x but time/traffic only ~3x.
+        let s = FusionStudy::adam(&run(), &DeviceSpec::mi100());
+        assert!(s.kernel_ratio < 0.15, "kernels {}", s.kernel_ratio);
+        assert!(s.time_ratio > 1.5 * s.kernel_ratio,
+                "time {} kernels {}", s.time_ratio, s.kernel_ratio);
+        assert!(s.traffic_ratio > s.kernel_ratio);
+    }
+}

@@ -1,0 +1,10 @@
+//! Fusion studies (SS5.1): kernel fusion of EW/reduction chains
+//! (Fig. 13) and GEMM fusion of the attention linear transforms
+//! (Fig. 15), both as graph-level transforms with modeled *and*
+//! measured (via the artifact sequences) outcomes.
+
+pub mod gemm_fusion;
+pub mod kernel_fusion;
+
+pub use gemm_fusion::{qkv_fusion_speedup, QkvFusionResult};
+pub use kernel_fusion::{FusionStats, FusionStudy};

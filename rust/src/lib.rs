@@ -1,0 +1,27 @@
+//! # bertprof
+//!
+//! Reproduction of *"Demystifying BERT: Implications for Accelerator
+//! Design"* (Pati, Aga, Jayasena, Sinclair, 2021) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the characterization framework: an exact
+//!   operation-level model of a BERT training iteration, a roofline
+//!   device model, distributed-training analytical models, fusion
+//!   studies, and a PJRT runtime that executes AOT-compiled HLO
+//!   artifacts to *measure* the same breakdowns the model predicts.
+//! * **L2 (python/compile/model.py)** — BERT fwd/bwd + LAMB in JAX,
+//!   lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the paper's
+//!   memory-bound fused ops, lowered into the same HLO.
+//!
+//! See DESIGN.md for the experiment index (every paper table/figure →
+//! module → bench target).
+pub mod config;
+pub mod coordinator;
+pub mod dist;
+pub mod fusion;
+pub mod model;
+pub mod perf;
+pub mod profiler;
+pub mod runtime;
+pub mod util;

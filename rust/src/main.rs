@@ -1,0 +1,462 @@
+//! `bertprof` — CLI for the BERT-training characterization framework.
+//!
+//! Subcommands map 1:1 to the paper's experiments (DESIGN.md SS4):
+//!
+//! ```text
+//! bertprof breakdown [--detail transformer] [--measured]   Fig. 4 / Fig. 5
+//! bertprof sweep --batch|--width|--depth                   Fig. 9 / Fig. 10
+//! bertprof intensity --gemms|--all                         Fig. 7 / Fig. 8
+//! bertprof dist                                            Fig. 12
+//! bertprof fusion [--kernels|--gemms] [--measured]         Fig. 13 / Fig. 15
+//! bertprof gemm-table                                      Table 3
+//! bertprof train --steps N                                 end-to-end tiny-BERT
+//! bertprof devices                                         roofline device presets
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::coordinator::{MeasureRunner, Trainer};
+use bertprof::dist::{DataParallelModel, HybridModel, LinkSpec, ModelParallelModel, ZeroModel};
+use bertprof::fusion::kernel_fusion::FusionStudy;
+use bertprof::fusion::{gemm_fusion, qkv_fusion_speedup};
+use bertprof::model::gemm::table3;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::perf::intensity;
+use bertprof::profiler::{report, Timeline};
+use bertprof::runtime::Runtime;
+
+struct Args {
+    cmd: String,
+    flags: Vec<String>,
+    opts: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = Vec::new();
+    let mut opts = std::collections::HashMap::new();
+    let rest: Vec<String> = argv.collect();
+    let mut i = 0;
+    while i < rest.len() {
+        let a = &rest[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                opts.insert(name.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(name.to_string());
+                i += 1;
+            }
+        } else {
+            flags.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { cmd, flags, opts }
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
+    }
+
+    fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opts
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn artifacts_dir(&self) -> PathBuf {
+        self.opts
+            .get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let dev = DeviceSpec::mi100();
+    match args.cmd.as_str() {
+        "breakdown" => cmd_breakdown(&args, &dev),
+        "sweep" => cmd_sweep(&args, &dev),
+        "intensity" => cmd_intensity(&args),
+        "dist" => cmd_dist(&args, &dev),
+        "fusion" => cmd_fusion(&args, &dev),
+        "gemm-table" => cmd_gemm_table(),
+        "train" => cmd_train(&args),
+        "whatif" => cmd_whatif(&args, &dev),
+        "memory" => cmd_memory(&args, &dev),
+        "export" => cmd_export(&args, &dev),
+        "devices" => cmd_devices(),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' — see `bertprof help`"),
+    }
+}
+
+const HELP: &str = "\
+bertprof — BERT training characterization (paper reproduction)
+
+  breakdown [--detail] [--measured] [--inference] Fig. 4 / Fig. 5 / SS6
+  sweep --batch | --width | --depth               Fig. 9 / Fig. 10
+  intensity --gemms | --all                       Fig. 7 / Fig. 8
+  dist                                            Fig. 12
+  fusion --kernels [--measured] | --gemms         Fig. 13 / Fig. 15
+  gemm-table                                      Table 3
+  train --steps N [--log-every K]                 tiny-BERT end-to-end
+  whatif                                          SS5.2 hardware what-ifs
+  memory [--hbm GB]                               SS5.2 capacity model
+  export --out trace.csv [--json]                 dump op-level trace
+  devices                                         device presets
+
+Common options: --artifacts DIR (default ./artifacts)";
+
+fn cmd_breakdown(args: &Args, dev: &DeviceSpec) -> Result<()> {
+    if args.flag("measured") {
+        let mut rt = Runtime::load(&args.artifacts_dir())?;
+        println!("platform: {}", rt.platform());
+        let mut mr = MeasureRunner::new(&mut rt, 5);
+        let cfg = ModelConfig::bert_measure();
+        let t = mr.breakdown(&cfg, "measured(CPU)")?;
+        println!("{}", report::stacked_table("Measured iteration breakdown", &[t.clone()]));
+        println!("{}", report::category_table("Measured category split", &[t]));
+        return Ok(());
+    }
+    if args.flag("inference") {
+        // SS6 discussion: inference profile (no backprop, no LAMB).
+        let run = RunConfig::new(ModelConfig::bert_large().with_batch(1),
+                                 Phase::Phase1, Precision::Fp32);
+        let g = bertprof::model::IterationGraph::build_inference(&run);
+        let t = Timeline::from_graph("inference B=1".into(), &g, dev, run.precision);
+        println!("{}", report::stacked_table("SS6 — inference breakdown", &[t.clone()]));
+        println!("{}", report::category_table("SS6 — inference categories", &[t]));
+        return Ok(());
+    }
+    let timelines: Vec<Timeline> = RunConfig::figure4_set()
+        .iter()
+        .map(|r| Timeline::modeled(r, dev))
+        .collect();
+    println!(
+        "{}",
+        report::stacked_table("Fig. 4 — runtime breakdown (modeled, MI100)", &timelines)
+    );
+    if args.flag("detail") {
+        let f32r = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+        let mpr = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Mixed);
+        let ts = vec![Timeline::modeled(&f32r, dev), Timeline::modeled(&mpr, dev)];
+        println!("{}", report::category_table("Fig. 5 — transformer detail", &ts));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, dev: &DeviceSpec) -> Result<()> {
+    let large = ModelConfig::bert_large();
+    let timelines: Vec<Timeline> = if args.flag("width") {
+        [512u64, 768, 1024, 1536, 2048]
+            .iter()
+            .map(|&w| {
+                let r = RunConfig::new(large.with_width(w), Phase::Phase1, Precision::Fp32);
+                let mut t = Timeline::modeled(&r, dev);
+                t.label = format!("d_model={w}");
+                t
+            })
+            .collect()
+    } else if args.flag("depth") {
+        [6u64, 12, 24, 48]
+            .iter()
+            .map(|&n| {
+                let r = RunConfig::new(large.with_layers(n), Phase::Phase1, Precision::Fp32);
+                let mut t = Timeline::modeled(&r, dev);
+                t.label = format!("N={n}");
+                t
+            })
+            .collect()
+    } else {
+        [4u64, 8, 16, 32]
+            .iter()
+            .map(|&b| {
+                let r = RunConfig::new(large.with_batch(b), Phase::Phase1, Precision::Fp32);
+                Timeline::modeled(&r, dev)
+            })
+            .collect()
+    };
+    let title = if args.flag("width") {
+        "Fig. 10 — hidden-dim sweep"
+    } else if args.flag("depth") {
+        "Layer-count sweep (SS3.3.2)"
+    } else {
+        "Fig. 9 — mini-batch sweep"
+    };
+    println!("{}", report::stacked_table(title, &timelines));
+    Ok(())
+}
+
+fn cmd_intensity(args: &Args) -> Result<()> {
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    if args.flag("gemms") || !args.flag("all") {
+        let rows: Vec<(String, f64)> = intensity::gemm_intensities(&run)
+            .into_iter()
+            .map(|r| (format!("{}{}", if r.memory_bound { "[MB] " } else { "     " }, r.label),
+                      r.ops_per_byte))
+            .collect();
+        println!(
+            "{}",
+            report::series_table("Fig. 7 — GEMM arithmetic intensity", ("GEMM", "ops/byte"), &rows)
+        );
+    }
+    if args.flag("all") {
+        let rows = intensity::op_intensities(&run);
+        let tbl: Vec<(String, f64)> = rows.iter()
+            .map(|r| (r.label.clone(), r.ops_per_byte)).collect();
+        println!(
+            "{}",
+            report::series_table("Fig. 8a — op arithmetic intensity", ("category", "ops/byte"), &tbl)
+        );
+        let tbl: Vec<(String, f64)> = rows.iter()
+            .map(|r| (r.label.clone(), r.bandwidth)).collect();
+        println!(
+            "{}",
+            report::series_table(
+                "Fig. 8b — bandwidth demand (normalized to max EW)",
+                ("category", "bw"),
+                &tbl
+            )
+        );
+    }
+    Ok(())
+}
+
+fn cmd_dist(_args: &Args, dev: &DeviceSpec) -> Result<()> {
+    let b16 = RunConfig::new(ModelConfig::bert_large().with_batch(16), Phase::Phase1,
+                             Precision::Fp32);
+    let b64 = RunConfig::new(ModelConfig::bert_large().with_batch(64), Phase::Phase1,
+                             Precision::Fp32);
+    let link = LinkSpec::pcie4x16();
+    let rows = vec![
+        DataParallelModel::new(1, link.clone(), true).breakdown(&b16, dev),
+        DataParallelModel::new(64, link.clone(), true).breakdown(&b16, dev),
+        DataParallelModel::new(64, link.clone(), false).breakdown(&b16, dev),
+        ModelParallelModel::new(2, link.clone()).breakdown(&b16, dev),
+        ModelParallelModel::new(8, link.clone()).breakdown(&b64, dev),
+        HybridModel::megatron_128().breakdown(&b16, dev),
+        ZeroModel::new(64, link.clone()).breakdown(&b16, dev),
+    ];
+    println!("## Fig. 12 — multi-device training (modeled, PCIe 4.0)");
+    println!(
+        "{:<26}{:>12}{:>12}{:>12}{:>12}{:>12}{:>12}",
+        "config", "total(ms)", "xformer%", "lamb%", "comm%", "output%", "emb%"
+    );
+    for b in rows {
+        println!(
+            "{:<26}{:>12.1}{:>11.1}%{:>11.1}%{:>11.1}%{:>11.1}%{:>11.1}%",
+            b.label,
+            b.total() * 1e3,
+            100.0 * b.transformer / b.total(),
+            100.0 * b.lamb_fraction(),
+            100.0 * b.comm_fraction(),
+            100.0 * b.output / b.total(),
+            100.0 * b.embedding / b.total(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fusion(args: &Args, dev: &DeviceSpec) -> Result<()> {
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    if !args.flag("gemms") {
+        println!("## Fig. 13 — kernel fusion (modeled; ratios fused/unfused)");
+        println!("{:<14}{:>12}{:>12}{:>12}", "study", "kernels", "time", "traffic");
+        for s in [FusionStudy::layernorm(&run, dev), FusionStudy::adam(&run, dev)] {
+            println!(
+                "{:<14}{:>12.3}{:>12.3}{:>12.3}",
+                s.name, s.kernel_ratio, s.time_ratio, s.traffic_ratio
+            );
+        }
+        if args.flag("measured") {
+            let mut rt = Runtime::load(&args.artifacts_dir())?;
+            let mut mr = MeasureRunner::new(&mut rt, 5);
+            println!("\n## Fig. 13 — measured on CPU PJRT (ratios fused/unfused)");
+            println!("{:<14}{:>12}{:>12}", "study", "kernels", "time");
+            for (label, unf, fus) in [
+                ("LayerNorm", "layernorm_unfused", "layernorm_fused"),
+                ("DR+Res+LN", "drln_unfused", "drln_fused"),
+                ("Adam", "adam_unfused", "adam_fused"),
+                ("QKV-GEMM", "qkv_unfused", "qkv_fused"),
+            ] {
+                let (k, t) = mr.fusion_ratio(unf, fus)?;
+                println!("{:<14}{:>12.3}{:>12.3}", label, k, t);
+            }
+        }
+    }
+    if args.flag("gemms") {
+        println!("## Fig. 15 — QKV GEMM fusion speedup (modeled)");
+        println!("{:<22}{:>10}{:>10}{:>10}", "point", "fwd", "dgrad", "wgrad");
+        for r in gemm_fusion::figure15_sweep(dev, Precision::Fp32) {
+            println!(
+                "{:<22}{:>9.2}x{:>9.2}x{:>9.2}x",
+                r.label,
+                1.0 / r.fwd_ratio,
+                1.0 / r.bwd_dgrad_ratio,
+                1.0 / r.bwd_wgrad_ratio
+            );
+        }
+        let small = qkv_fusion_speedup(512, 512, dev, Precision::Fp32);
+        println!("(small model d=512, nB=512: fwd {:.2}x)", small.fwd_speedup());
+    }
+    Ok(())
+}
+
+fn cmd_gemm_table() -> Result<()> {
+    let cfg = ModelConfig::bert_large();
+    println!("## Table 3 — BERT GEMM dimensions (B={}, n={}, d={}, h={}, d_ff={})",
+             cfg.batch, cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.d_ff);
+    println!(
+        "{:<16}{:>24}{:>24}{:>24}",
+        "op", "FWD (MxNxK[,b])", "BWD dgrad", "BWD wgrad"
+    );
+    let fmt = |g: &bertprof::model::GemmDims| {
+        if g.batch > 1 {
+            format!("{}x{}x{},b{}", g.m, g.n, g.k, g.batch)
+        } else {
+            format!("{}x{}x{}", g.m, g.n, g.k)
+        }
+    };
+    for row in table3(&cfg) {
+        println!(
+            "{:<16}{:>24}{:>24}{:>24}",
+            row.kind.label(),
+            fmt(&row.fwd),
+            fmt(&row.bwd_dgrad),
+            fmt(&row.bwd_wgrad)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let steps = args.opt_u64("steps", 200) as u32;
+    let log_every = args.opt_u64("log-every", 10) as u32;
+    let mut rt = Runtime::load(&args.artifacts_dir())?;
+    println!("platform: {}", rt.platform());
+    let mut trainer = Trainer::new(&mut rt, 42)?;
+    let t0 = std::time::Instant::now();
+    let (first, last) = trainer.train(steps, log_every)?;
+    let dt = t0.elapsed();
+    println!(
+        "trained {steps} steps in {:.1}s ({:.0} ms/step): loss {first:.4} -> {last:.4} (trailing-10 {:.4})",
+        dt.as_secs_f64(),
+        dt.as_secs_f64() * 1e3 / steps as f64,
+        trainer.trailing_mean(10)
+    );
+    Ok(())
+}
+
+fn cmd_whatif(_args: &Args, dev: &DeviceSpec) -> Result<()> {
+    use bertprof::model::IterationGraph;
+    use bertprof::perf::whatif;
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let g = IterationGraph::build(&run);
+
+    println!("## SS5.2 — larger on-chip (LLC) memory");
+    for (f, speedup) in whatif::llc_scaling(&run, dev, &[1, 2, 4, 8, 64]) {
+        println!("  LLC x{:<4} iteration speedup {:.3}x", f, speedup);
+    }
+    println!("  LAMB benefit from infinite LLC: {:.1}% (paper: ~none — no temporal locality)",
+             100.0 * whatif::lamb_llc_benefit(&run, dev));
+
+    println!("\n## SS5.2 — near-memory computing (memory-bound ops at k x HBM bw)");
+    let base = bertprof::perf::roofline::iteration_seconds(&g, dev, run.precision);
+    for k in [2.0, 4.0, 8.0] {
+        let t = whatif::iteration_seconds_with_nmc(&g, dev, run.precision, k);
+        println!("  NMC {k}x: iteration {:.1} ms -> {:.1} ms ({:.2}x)",
+                 base * 1e3, t * 1e3, base / t);
+    }
+
+    println!("\n## SS5.2 — in-network AllReduce (vs ring, gradient payload)");
+    let bytes = run.model.param_count() * 4;
+    for d in [8u64, 64, 256] {
+        let s = whatif::innetwork_speedup(bytes, d, &LinkSpec::pcie4x16());
+        println!("  D={d:<4} in-network speedup {:.2}x", s);
+    }
+    Ok(())
+}
+
+fn cmd_export(args: &Args, dev: &DeviceSpec) -> Result<()> {
+    use bertprof::profiler::trace;
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let t = Timeline::modeled(&run, dev);
+    let out = args.opts.get("out").cloned()
+        .unwrap_or_else(|| "trace.csv".to_string());
+    let path = std::path::Path::new(&out);
+    if args.flag("json") || out.ends_with(".json") {
+        trace::write_json(&t, path)?;
+    } else {
+        trace::write_csv(&t, path)?;
+    }
+    println!("wrote {} op aggregates to {out}", t.entries.len());
+    Ok(())
+}
+
+fn cmd_memory(args: &Args, _dev: &DeviceSpec) -> Result<()> {
+    use bertprof::perf::memory;
+    let hbm = args.opt_u64("hbm", 32) * 1_000_000_000;
+    println!("## SS5.2 — memory capacity model (HBM = {} GB)", hbm / 1_000_000_000);
+    println!("{:<22}{:>12}{:>14}{:>12}", "config", "state(GB)", "acts@B32(GB)", "max B");
+    for (label, prec) in [("BERT Large FP32", Precision::Fp32),
+                          ("BERT Large MP", Precision::Mixed)] {
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, prec);
+        println!("{:<22}{:>12.2}{:>14.2}{:>12}",
+                 label,
+                 memory::state_bytes(&run) as f64 / 1e9,
+                 memory::activation_bytes(&run) as f64 / 1e9,
+                 memory::max_batch(&run, hbm));
+    }
+    for w in [2048u64, 4096, 8192] {
+        let run = RunConfig::new(ModelConfig::bert_large().with_width(w),
+                                 Phase::Phase1, Precision::Fp32);
+        let mb = memory::max_batch(&run, hbm);
+        println!("{:<22}{:>12.2}{:>14.2}{:>12}",
+                 format!("width {w} FP32"),
+                 memory::state_bytes(&run) as f64 / 1e9,
+                 memory::activation_bytes(&run) as f64 / 1e9,
+                 mb);
+        if mb == 0 {
+            println!("{:<22}  -> model parallelism mandatory (SS5.2)", "");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_devices() -> Result<()> {
+    println!(
+        "{:<12}{:>14}{:>14}{:>14}{:>12}{:>10}",
+        "device", "fp32 GEMM*", "fp16 GEMM*", "HBM GB/s", "ridge32", "LLC MiB"
+    );
+    for d in [
+        DeviceSpec::mi100(),
+        DeviceSpec::v100(),
+        DeviceSpec::a100(),
+        DeviceSpec::tpu_v3_core(),
+        DeviceSpec::cpu_host(),
+    ] {
+        println!(
+            "{:<12}{:>11.1} TF{:>11.1} TF{:>14.0}{:>12.1}{:>10}",
+            d.name,
+            d.matrix_flops(Precision::Fp32) / 1e12,
+            d.matrix_flops(Precision::Mixed) / 1e12,
+            d.mem_bw / 1e9,
+            d.ridge_point(Precision::Fp32),
+            d.llc_bytes / (1024 * 1024),
+        );
+    }
+    println!("* achieved (calibrated) throughput, not theoretical peak");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Adam optimizer op model — the Fig. 13 fusion-study baseline.
+//!
+//! The paper compares *unfused* Adam (each elementwise step of the
+//! update as its own kernel, per parameter tensor) against the fused
+//! per-tensor kernel: fusion collapses kernel count from thousands to
+//! tens, but execution time / traffic shrink less because fusion only
+//! happens *within* a layer's update, not across layers.
+
+use crate::config::{Precision, RunConfig};
+use crate::model::op::{LayerClass, Op, OpCategory, OpKind, Pass};
+
+/// Number of distinct parameter tensors per transformer layer in the
+/// PyTorch-style flattening (16: 4 attn weights+biases, 2 LN pairs,
+/// 2 FC weights+biases).
+pub const TENSORS_PER_LAYER: u64 = 16;
+
+/// The unfused Adam update is ~9 elementwise kernels per tensor
+/// (two moment axpys, square, two bias-correction scales, sqrt, div,
+/// weight-decay scale, subtract).
+pub const UNFUSED_KERNELS_PER_TENSOR: u64 = 9;
+
+/// Fused Adam: one kernel per parameter tensor.
+pub fn adam_fused_ops(run: &RunConfig) -> Vec<Op> {
+    let cfg = &run.model;
+    let per_layer = crate::model::transformer::layer_param_count(cfg);
+    let tensors = cfg.n_layers * TENSORS_PER_LAYER;
+    let elems_per_tensor = per_layer / TENSORS_PER_LAYER;
+    vec![Op {
+        name: "adam fused per-tensor".into(),
+        layer: LayerClass::Optimizer,
+        category: OpCategory::LambStage1, // same traffic class as LAMB S1
+        pass: Pass::Update,
+        kind: OpKind::Elementwise {
+            elems: elems_per_tensor,
+            flops_per_elem: 12,
+            tensors_read: 4,
+            tensors_written: 3,
+        },
+        count: tensors,
+        elem_bytes: Precision::Fp32.opt_bytes(),
+    }]
+}
+
+/// Unfused Adam: each elementwise step its own kernel launch, each
+/// re-reading/re-writing its operands from memory.
+pub fn adam_unfused_ops(run: &RunConfig) -> Vec<Op> {
+    let cfg = &run.model;
+    let per_layer = crate::model::transformer::layer_param_count(cfg);
+    let tensors = cfg.n_layers * TENSORS_PER_LAYER;
+    let elems_per_tensor = per_layer / TENSORS_PER_LAYER;
+    // Average unfused kernel: ~2 reads, 1 write, ~1.5 flops/elem.
+    (0..UNFUSED_KERNELS_PER_TENSOR)
+        .map(|i| Op {
+            name: format!("adam unfused step {i}"),
+            layer: LayerClass::Optimizer,
+            category: OpCategory::LambStage1,
+            pass: Pass::Update,
+            kind: OpKind::Elementwise {
+                elems: elems_per_tensor,
+                flops_per_elem: 2,
+                tensors_read: 2,
+                tensors_written: 1,
+            },
+            count: tensors,
+            elem_bytes: Precision::Fp32.opt_bytes(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase};
+
+    fn run() -> RunConfig {
+        RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
+    }
+
+    #[test]
+    fn fusion_collapses_kernel_count_by_9x() {
+        let fused: u64 = adam_fused_ops(&run()).iter().map(|o| o.count).sum();
+        let unfused: u64 = adam_unfused_ops(&run()).iter().map(|o| o.count).sum();
+        assert_eq!(unfused, UNFUSED_KERNELS_PER_TENSOR * fused);
+    }
+
+    #[test]
+    fn fusion_cuts_traffic_but_less_than_kernel_count() {
+        // Fig. 13: Adam's time/traffic reduction is far smaller than its
+        // kernel-count reduction.
+        let fused: u64 = adam_fused_ops(&run()).iter().map(|o| o.total_bytes()).sum();
+        let unfused: u64 = adam_unfused_ops(&run()).iter().map(|o| o.total_bytes()).sum();
+        let traffic_ratio = unfused as f64 / fused as f64;
+        assert!(traffic_ratio > 2.0 && traffic_ratio < 6.0, "{traffic_ratio}");
+    }
+}

@@ -1,0 +1,74 @@
+//! Input embedding layer ops (SS2.3): token + position + segment lookup,
+//! sum, and LayerNorm. Negligible runtime (takeaway 1) but modeled so the
+//! Fig. 4 stack is complete and its *constancy* under layer-count scaling
+//! (SS3.3.2) falls out naturally.
+
+use crate::config::RunConfig;
+use crate::model::op::{LayerClass, Op, OpCategory, OpKind, Pass};
+
+pub fn embedding_ops(run: &RunConfig) -> Vec<Op> {
+    let cfg = &run.model;
+    let prec = run.precision;
+    let nb = cfg.tokens();
+    let d = cfg.d_model;
+    vec![
+        Op {
+            name: "embedding gather tok+pos+seg".into(),
+            layer: LayerClass::Embedding,
+            category: OpCategory::Embedding,
+            pass: Pass::Forward,
+            kind: OpKind::Gather { elems: 3 * nb * d },
+            count: 1,
+            elem_bytes: prec.act_bytes(),
+        },
+        Op::elementwise(
+            "embedding sum + LN fwd",
+            LayerClass::Embedding,
+            OpCategory::Embedding,
+            Pass::Forward,
+            nb * d,
+            6,
+            3,
+            1,
+            1,
+            prec,
+        ),
+        // Backward: scatter-add of gradients into the (sparse) tables.
+        Op {
+            name: "embedding scatter-add bwd".into(),
+            layer: LayerClass::Embedding,
+            category: OpCategory::Embedding,
+            pass: Pass::Backward,
+            kind: OpKind::Gather { elems: nb * d },
+            count: 1,
+            elem_bytes: prec.act_bytes(),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision};
+
+    #[test]
+    fn embedding_is_negligible_vs_transformer() {
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Fp32);
+        let emb: u64 = embedding_ops(&run).iter().map(|o| o.total_flops()).sum();
+        let layer: u64 = crate::model::transformer::layer_ops(&run)
+            .iter().map(|o| o.total_flops()).sum();
+        assert!((emb as f64) < 0.01 * (layer as f64 * 24.0));
+    }
+
+    #[test]
+    fn embedding_ops_independent_of_layer_count() {
+        let a = RunConfig::new(ModelConfig::bert_large().with_layers(12),
+                               Phase::Phase1, Precision::Fp32);
+        let b = RunConfig::new(ModelConfig::bert_large().with_layers(48),
+                               Phase::Phase1, Precision::Fp32);
+        let fa: u64 = embedding_ops(&a).iter().map(|o| o.total_bytes()).sum();
+        let fb: u64 = embedding_ops(&b).iter().map(|o| o.total_bytes()).sum();
+        assert_eq!(fa, fb);
+    }
+}

@@ -1,0 +1,210 @@
+//! Table 3: architecture-agnostic sizes of BERT GEMMs.
+//!
+//! The paper writes each GEMM as MxNxK (+batch); dims are functions of
+//! (B, n, d_model, h, d_ff). `table3` generates the exact table for any
+//! hyperparameters — the `table3_gemm_dims` bench prints it next to the
+//! paper's symbolic row set.
+
+use crate::config::ModelConfig;
+use crate::model::op::Pass;
+
+/// Which BERT operation the GEMM implements (Table 3 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GemmKind {
+    /// Query/Key/Value/output linear projections.
+    LinearTransform,
+    /// Attention score B-GEMM (q x k^T per head).
+    AttnScore,
+    /// Attention weighted-sum B-GEMM (probs x v per head).
+    AttnOutput,
+    /// Feed-forward FC-1 (d_model -> d_ff).
+    Fc1,
+    /// Feed-forward FC-2 (d_ff -> d_model).
+    Fc2,
+    /// The fused Wq|Wk|Wv projection (Fig. 14).
+    QkvFused,
+    /// MLM head vocabulary projection.
+    VocabProj,
+}
+
+impl GemmKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            GemmKind::LinearTransform => "Linear Trans.",
+            GemmKind::AttnScore => "Attn. Score",
+            GemmKind::AttnOutput => "Attn. O/p",
+            GemmKind::Fc1 => "FC-1",
+            GemmKind::Fc2 => "FC-2",
+            GemmKind::QkvFused => "QKV-Fused",
+            GemmKind::VocabProj => "Vocab-Proj",
+        }
+    }
+}
+
+/// A (possibly batched) GEMM: C[MxN] += A[MxK] * B[KxN], `batch` copies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmDims {
+    pub kind: GemmKind,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub batch: u64,
+}
+
+impl GemmDims {
+    pub fn new(kind: GemmKind, m: u64, n: u64, k: u64, batch: u64) -> Self {
+        GemmDims { kind, m, n, k, batch }
+    }
+
+    /// 2*M*N*K multiply-accumulates per GEMM in the batch.
+    pub fn flops(&self) -> u64 {
+        2 * self.m * self.n * self.k * self.batch
+    }
+
+    /// Unique bytes touched: A + B + C per batch element.
+    pub fn bytes(&self, elem_bytes: u64) -> u64 {
+        self.batch * elem_bytes * (self.m * self.k + self.k * self.n + self.m * self.n)
+    }
+
+    /// Arithmetic intensity (flops/byte) — the Fig. 7 y-axis.
+    pub fn ops_per_byte(&self, elem_bytes: u64) -> f64 {
+        self.flops() as f64 / self.bytes(elem_bytes) as f64
+    }
+
+    /// Label in the paper's Fig. 7 format: `M, N, K [, batch]`.
+    pub fn label(&self) -> String {
+        if self.batch > 1 {
+            format!("{} {}x{}x{} b{}", self.kind.label(), self.m, self.n, self.k, self.batch)
+        } else {
+            format!("{} {}x{}x{}", self.kind.label(), self.m, self.n, self.k)
+        }
+    }
+}
+
+/// One Table 3 row: the FWD GEMM plus the two backward GEMMs.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmTableRow {
+    pub kind: GemmKind,
+    pub fwd: GemmDims,
+    pub bwd_dgrad: GemmDims,
+    pub bwd_wgrad: GemmDims,
+}
+
+impl GemmTableRow {
+    pub fn for_pass(&self, pass: Pass) -> Vec<GemmDims> {
+        match pass {
+            Pass::Forward => vec![self.fwd],
+            Pass::Backward => vec![self.bwd_dgrad, self.bwd_wgrad],
+            _ => vec![],
+        }
+    }
+}
+
+/// Generate Table 3 for a hyperparameter set. Row order matches the
+/// paper: Linear Trans., Attn. Score, Attn. O/p, FC-1, FC-2.
+pub fn table3(cfg: &ModelConfig) -> Vec<GemmTableRow> {
+    let d = cfg.d_model;
+    let dff = cfg.d_ff;
+    let nb = cfg.tokens(); // n*B
+    let n = cfg.seq_len;
+    let dh = cfg.d_head();
+    let bh = cfg.batch * cfg.n_heads;
+    use GemmKind::*;
+    vec![
+        GemmTableRow {
+            kind: LinearTransform,
+            fwd: GemmDims::new(LinearTransform, d, nb, d, 1),
+            bwd_dgrad: GemmDims::new(LinearTransform, d, nb, d, 1),
+            bwd_wgrad: GemmDims::new(LinearTransform, d, d, nb, 1),
+        },
+        GemmTableRow {
+            kind: AttnScore,
+            fwd: GemmDims::new(AttnScore, n, n, dh, bh),
+            bwd_dgrad: GemmDims::new(AttnScore, n, dh, n, bh),
+            bwd_wgrad: GemmDims::new(AttnScore, dh, n, n, bh),
+        },
+        GemmTableRow {
+            kind: AttnOutput,
+            fwd: GemmDims::new(AttnOutput, dh, n, n, bh),
+            bwd_dgrad: GemmDims::new(AttnOutput, dh, n, n, bh),
+            bwd_wgrad: GemmDims::new(AttnOutput, n, n, dh, bh),
+        },
+        GemmTableRow {
+            kind: Fc1,
+            fwd: GemmDims::new(Fc1, dff, nb, d, 1),
+            bwd_dgrad: GemmDims::new(Fc1, d, nb, dff, 1),
+            bwd_wgrad: GemmDims::new(Fc1, d, dff, nb, 1),
+        },
+        GemmTableRow {
+            kind: Fc2,
+            fwd: GemmDims::new(Fc2, d, nb, dff, 1),
+            bwd_dgrad: GemmDims::new(Fc2, dff, nb, d, 1),
+            bwd_wgrad: GemmDims::new(Fc2, dff, d, nb, 1),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn large() -> ModelConfig {
+        ModelConfig::bert_large() // B=32 n=128
+    }
+
+    #[test]
+    fn table3_matches_paper_symbols() {
+        let cfg = large();
+        let t = table3(&cfg);
+        // Linear Trans. FWD: d_model x n*B x d_model.
+        assert_eq!((t[0].fwd.m, t[0].fwd.n, t[0].fwd.k), (1024, 4096, 1024));
+        // Attn Score FWD: n x n x d_model/h, batch B*h.
+        assert_eq!((t[1].fwd.m, t[1].fwd.n, t[1].fwd.k, t[1].fwd.batch),
+                   (128, 128, 64, 512));
+        // FC-1 FWD: d_ff x n*B x d_model.
+        assert_eq!((t[3].fwd.m, t[3].fwd.n, t[3].fwd.k), (4096, 4096, 1024));
+        // FC-2 wgrad: d_ff x d_model x n*B.
+        assert_eq!((t[4].bwd_wgrad.m, t[4].bwd_wgrad.n, t[4].bwd_wgrad.k),
+                   (4096, 1024, 4096));
+    }
+
+    #[test]
+    fn no_matrix_vector_at_batch_one() {
+        // Takeaway 6: B=1 keeps all dims > 1 (matrix-matrix, not
+        // matrix-vector) because dims are multiples of n*B, not B.
+        let cfg = large().with_batch(1);
+        for row in table3(&cfg) {
+            for g in [row.fwd, row.bwd_dgrad, row.bwd_wgrad] {
+                assert!(g.m > 1 && g.n > 1 && g.k > 1, "{:?}", g);
+            }
+        }
+    }
+
+    #[test]
+    fn fc_gemms_have_higher_intensity_than_attention_bgemms() {
+        // Takeaway 7.
+        let t = table3(&large());
+        let fc = t[3].fwd.ops_per_byte(4);
+        let score = t[1].fwd.ops_per_byte(4);
+        let linear = t[0].fwd.ops_per_byte(4);
+        assert!(fc > linear, "fc {fc} linear {linear}");
+        assert!(linear > score, "linear {linear} score {score}");
+        assert!(fc / score > 5.0);
+    }
+
+    #[test]
+    fn gemm_flops_bytes() {
+        let g = GemmDims::new(GemmKind::Fc1, 4, 5, 6, 2);
+        assert_eq!(g.flops(), 2 * 4 * 5 * 6 * 2);
+        assert_eq!(g.bytes(4), 2 * 4 * (4 * 6 + 6 * 5 + 4 * 5));
+    }
+
+    #[test]
+    fn gemm_dims_scale_with_tokens() {
+        // Takeaway 6: dims are multiples of token count.
+        let a = table3(&large().with_batch(8));
+        let b = table3(&large().with_batch(16));
+        assert_eq!(a[3].fwd.n * 2, b[3].fwd.n);
+        assert_eq!(a[1].fwd.batch * 2, b[1].fwd.batch);
+    }
+}

@@ -1,0 +1,181 @@
+//! The full per-iteration op graph: embedding -> N transformer layers
+//! (fwd, then bwd in reverse) -> output layer -> LAMB update.
+//!
+//! This is what the paper profiles with rocProf; everything downstream
+//! (Fig. 4/5/9/10 breakdowns, roofline times, distributed models, fusion
+//! studies) consumes an `IterationGraph`.
+
+use crate::config::RunConfig;
+use crate::model::op::{LayerClass, Op, OpCategory, Pass};
+use crate::model::{embedding, lamb, output, transformer};
+
+/// All ops of one training iteration (single device).
+#[derive(Debug, Clone)]
+pub struct IterationGraph {
+    pub ops: Vec<Op>,
+}
+
+impl IterationGraph {
+    /// Build the standard single-device iteration.
+    pub fn build(run: &RunConfig) -> Self {
+        Self::build_sharded(run, 1, 1)
+    }
+
+    /// Build with optimizer sharding (`opt_shards`, for model parallel)
+    /// and gradient accumulation (`micro_batches`, SS4.2: the update runs
+    /// once per mini-batch but accumulation ops are added per micro-batch).
+    pub fn build_sharded(run: &RunConfig, opt_shards: u64, micro_batches: u64) -> Self {
+        let cfg = &run.model;
+        let mut ops = Vec::new();
+        ops.extend(embedding::embedding_ops(run));
+        for mut op in transformer::layer_ops(run) {
+            op.count *= cfg.n_layers;
+            ops.push(op);
+        }
+        ops.extend(output::output_ops(run));
+        ops.extend(lamb::grad_accum_ops(run, micro_batches));
+        ops.extend(lamb::lamb_ops_sharded(run, opt_shards));
+        IterationGraph { ops }
+    }
+
+    /// Inference-only graph (SS6): forward pass ops, no backprop, no
+    /// optimizer. The transformer breakdown keeps the same shape because
+    /// backprop ops mirror forward ops with ~2x the work.
+    pub fn build_inference(run: &RunConfig) -> Self {
+        let cfg = &run.model;
+        let mut ops = Vec::new();
+        ops.extend(
+            embedding::embedding_ops(run)
+                .into_iter()
+                .filter(|o| o.pass == Pass::Forward),
+        );
+        for mut op in transformer::layer_ops(run) {
+            if op.pass != Pass::Forward {
+                continue;
+            }
+            op.count *= cfg.n_layers;
+            ops.push(op);
+        }
+        ops.extend(
+            output::output_ops(run)
+                .into_iter()
+                .filter(|o| o.pass == Pass::Forward),
+        );
+        IterationGraph { ops }
+    }
+
+    /// Total flops of the iteration.
+    pub fn total_flops(&self) -> u64 {
+        self.ops.iter().map(|o| o.total_flops()).sum()
+    }
+
+    /// Total memory traffic of the iteration.
+    pub fn total_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.total_bytes()).sum()
+    }
+
+    /// Number of kernel launches.
+    pub fn kernel_count(&self) -> u64 {
+        self.ops.iter().map(|o| o.count).sum()
+    }
+
+    pub fn ops_in_layer(&self, layer: LayerClass) -> impl Iterator<Item = &Op> {
+        self.ops.iter().filter(move |o| o.layer == layer)
+    }
+
+    pub fn ops_in_category(&self, cat: OpCategory) -> impl Iterator<Item = &Op> {
+        self.ops.iter().filter(move |o| o.category == cat)
+    }
+
+    pub fn ops_in_pass(&self, pass: Pass) -> impl Iterator<Item = &Op> {
+        self.ops.iter().filter(move |o| o.pass == pass)
+    }
+
+    /// GEMM vs non-GEMM flop split (the SS3.2.2 "60% of time is GEMMs"
+    /// framing, in work terms).
+    pub fn gemm_flop_fraction(&self) -> f64 {
+        let gemm: u64 = self
+            .ops
+            .iter()
+            .filter(|o| o.category.is_gemm())
+            .map(|o| o.total_flops())
+            .sum();
+        gemm as f64 / self.total_flops() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision};
+
+    fn run() -> RunConfig {
+        RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
+    }
+
+    #[test]
+    fn iteration_flops_match_6nd_rule() {
+        // fwd+bwd flops ~= 6 * params * tokens for the dense part. The
+        // attention quadratic part adds on top; sanity band 0.8x - 2.5x.
+        let g = IterationGraph::build(&run());
+        let cfg = run().model;
+        let dense = 6 * cfg.param_count() * cfg.tokens();
+        let ratio = g.total_flops() as f64 / dense as f64;
+        assert!(ratio > 0.8 && ratio < 2.5, "{ratio}");
+    }
+
+    #[test]
+    fn transformer_dominates_flops() {
+        // Takeaway 1.
+        let g = IterationGraph::build(&run());
+        let t: u64 = g.ops_in_layer(LayerClass::Transformer).map(|o| o.total_flops()).sum();
+        assert!((t as f64) > 0.9 * g.total_flops() as f64);
+    }
+
+    #[test]
+    fn gemms_majority_of_flops() {
+        let g = IterationGraph::build(&run());
+        assert!(g.gemm_flop_fraction() > 0.8);
+    }
+
+    #[test]
+    fn kernel_count_scales_with_layers() {
+        let a = IterationGraph::build(&RunConfig::new(
+            ModelConfig::bert_large().with_layers(12), Phase::Phase1, Precision::Fp32));
+        let b = IterationGraph::build(&RunConfig::new(
+            ModelConfig::bert_large().with_layers(24), Phase::Phase1, Precision::Fp32));
+        assert!(b.kernel_count() > a.kernel_count());
+    }
+
+    #[test]
+    fn micro_batching_adds_accum_ops() {
+        let g1 = IterationGraph::build_sharded(&run(), 1, 1);
+        let g4 = IterationGraph::build_sharded(&run(), 1, 4);
+        let accum: u64 = g4.ops_in_category(OpCategory::GradAccum)
+            .map(|o| o.count).sum();
+        assert_eq!(accum, 4);
+        assert!(g4.total_bytes() > g1.total_bytes());
+    }
+
+    #[test]
+    fn inference_graph_has_no_bwd_or_optimizer() {
+        // SS6: inference drops backprop and LAMB; fwd breakdown keeps the
+        // transformer-dominant shape.
+        let g = IterationGraph::build_inference(&run());
+        assert!(g.ops.iter().all(|o| o.pass == Pass::Forward));
+        assert!(g.ops.iter().all(|o| o.layer != LayerClass::Optimizer));
+        let full = IterationGraph::build(&run());
+        // Training flops ~= 3x inference flops (fwd + 2x-cost bwd).
+        let r = full.total_flops() as f64 / g.total_flops() as f64;
+        assert!(r > 2.4 && r < 3.8, "{r}");
+    }
+
+    #[test]
+    fn graph_is_nonempty_with_stable_names() {
+        let g = IterationGraph::build(&run());
+        assert!(g.ops.len() > 20);
+        let names: Vec<&str> = g.ops.iter().map(|o| o.name.as_str()).collect();
+        assert!(names.iter().any(|n| n.contains("FC-1")));
+        assert!(names.iter().any(|n| n.contains("lamb stage1")));
+    }
+}

@@ -1,0 +1,199 @@
+//! LAMB optimizer op model (Fig. 3 / SS3.2.3).
+//!
+//! Structure per the paper: a *global* gradient 2-norm (serializing the
+//! update against the whole backprop), then per layer a Stage-1 kernel
+//! (reads g, m, v, w; writes u, m', v'), a 2-Norm kernel (||w||, ||u||),
+//! and a Stage-2 kernel (reads w, u; writes w').
+//!
+//! Takeaway 8 falls out of the byte accounting: stage 1 alone reads 4
+//! parameter-sized tensors, so LAMB traffic ~= 4x model size. Takeaway 3
+//! falls out of `Precision::opt_bytes()`: state stays FP32 under MP.
+
+use crate::config::{Precision, RunConfig};
+use crate::model::op::{LayerClass, Op, OpCategory, OpKind, Pass};
+
+/// Arithmetic per element in stage 1 (normalize, two moment updates,
+/// bias corrections, sqrt, divide, weight decay) and stage 2.
+const STAGE1_FLOPS: u64 = 16;
+const STAGE2_FLOPS: u64 = 3;
+
+/// LAMB is executed once per *layer* (per the paper, each set accessing
+/// that layer's independent data). We bucket parameters into per-layer
+/// groups plus one group for embeddings + heads.
+pub fn lamb_ops(run: &RunConfig) -> Vec<Op> {
+    lamb_ops_sharded(run, 1)
+}
+
+/// Model-parallel variant: each device updates `1/shards` of every
+/// layer's parameters (Megatron splits the optimizer too, SS4.1.2).
+pub fn lamb_ops_sharded(run: &RunConfig, shards: u64) -> Vec<Op> {
+    let cfg = &run.model;
+    let per_layer = crate::model::transformer::layer_param_count(cfg) / shards;
+    let other = (cfg.param_count()
+        - cfg.n_layers * crate::model::transformer::layer_param_count(cfg))
+        / shards;
+    let opt_bytes = run.precision.opt_bytes();
+    let mut ops = Vec::new();
+
+    // Global gradient 2-norm across all parameters (runs first, once).
+    ops.push(Op {
+        name: "lamb global grad 2-norm".into(),
+        layer: LayerClass::Optimizer,
+        category: OpCategory::LambNorm,
+        pass: Pass::Update,
+        kind: OpKind::Reduction { elems: cfg.param_count() / shards, outputs: 1 },
+        count: 1,
+        elem_bytes: opt_bytes,
+    });
+
+    // Per-layer stage1 / norms / stage2 kernel triplets.
+    let mut group = |label: &str, elems: u64, count: u64| {
+        ops.push(Op {
+            name: format!("lamb stage1 {label}"),
+            layer: LayerClass::Optimizer,
+            category: OpCategory::LambStage1,
+            pass: Pass::Update,
+            kind: OpKind::Elementwise {
+                elems,
+                flops_per_elem: STAGE1_FLOPS,
+                tensors_read: 4,  // g, m, v, w
+                tensors_written: 3, // u, m', v'
+            },
+            count,
+            elem_bytes: opt_bytes,
+        });
+        ops.push(Op {
+            name: format!("lamb 2-norm {label}"),
+            layer: LayerClass::Optimizer,
+            category: OpCategory::LambNorm,
+            pass: Pass::Update,
+            kind: OpKind::Reduction { elems: 2 * elems, outputs: 2 },
+            count,
+            elem_bytes: opt_bytes,
+        });
+        ops.push(Op {
+            name: format!("lamb stage2 {label}"),
+            layer: LayerClass::Optimizer,
+            category: OpCategory::LambStage2,
+            pass: Pass::Update,
+            kind: OpKind::Elementwise {
+                elems,
+                flops_per_elem: STAGE2_FLOPS,
+                tensors_read: 2, // w, u
+                tensors_written: 1, // w'
+            },
+            count,
+            elem_bytes: opt_bytes,
+        });
+    };
+
+    group("transformer layer", per_layer, cfg.n_layers);
+    group("embedding+heads", other, 1);
+    ops
+}
+
+/// Total bytes LAMB moves per iteration, as a multiple of (FP32) model
+/// size — the takeaway-8 "4x" metric (stage-1 reads).
+pub fn lamb_read_multiple(run: &RunConfig) -> f64 {
+    let ops = lamb_ops(run);
+    let model_bytes = run.model.param_count() * 4;
+    let stage1_reads: u64 = ops
+        .iter()
+        .filter(|o| o.category == OpCategory::LambStage1)
+        .map(|o| match &o.kind {
+            OpKind::Elementwise { elems, tensors_read, .. } => {
+                elems * tensors_read * o.elem_bytes * o.count
+            }
+            _ => 0,
+        })
+        .sum();
+    stage1_reads as f64 / model_bytes as f64
+}
+
+/// Gradient-accumulation EW ops added per micro-batch (SS4.2).
+pub fn grad_accum_ops(run: &RunConfig, micro_batches: u64) -> Vec<Op> {
+    if micro_batches <= 1 {
+        return vec![];
+    }
+    vec![Op {
+        name: "grad accumulate scale+add".into(),
+        layer: LayerClass::Optimizer,
+        category: OpCategory::GradAccum,
+        pass: Pass::Update,
+        kind: OpKind::Elementwise {
+            elems: run.model.param_count(),
+            flops_per_elem: 2,
+            tensors_read: 2,
+            tensors_written: 1,
+        },
+        count: micro_batches,
+        elem_bytes: Precision::Fp32.opt_bytes(),
+    }]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase};
+
+    fn run() -> RunConfig {
+        RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
+    }
+
+    #[test]
+    fn lamb_reads_4x_model_size() {
+        // Takeaway 8.
+        let m = lamb_read_multiple(&run());
+        assert!(m > 3.9 && m < 4.1, "{m}");
+    }
+
+    #[test]
+    fn lamb_is_memory_bound() {
+        // Every LAMB op has ops/byte < 2 (Fig. 8 shows ~O(1)).
+        for op in lamb_ops(&run()) {
+            assert!(op.ops_per_byte() < 2.0, "{} {}", op.name, op.ops_per_byte());
+        }
+    }
+
+    #[test]
+    fn lamb_work_independent_of_batch() {
+        // Takeaway 2/11: update cost depends only on model size.
+        let a = RunConfig::new(ModelConfig::bert_large().with_batch(4),
+                               Phase::Phase1, Precision::Fp32);
+        let b = RunConfig::new(ModelConfig::bert_large().with_batch(32),
+                               Phase::Phase1, Precision::Fp32);
+        let f = |r: &RunConfig| -> u64 {
+            lamb_ops(r).iter().map(|o| o.total_bytes()).sum()
+        };
+        assert_eq!(f(&a), f(&b));
+    }
+
+    #[test]
+    fn lamb_stays_fp32_under_mixed_precision() {
+        // Takeaway 3.
+        let mp = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                Precision::Mixed);
+        let f = |r: &RunConfig| -> u64 {
+            lamb_ops(r).iter().map(|o| o.total_bytes()).sum()
+        };
+        assert_eq!(f(&run()), f(&mp));
+    }
+
+    #[test]
+    fn sharding_divides_lamb_bytes() {
+        let total = |s: u64| -> u64 {
+            lamb_ops_sharded(&run(), s).iter().map(|o| o.total_bytes()).sum()
+        };
+        let full = total(1);
+        let half = total(2);
+        assert!((half as f64) < 0.55 * full as f64);
+    }
+
+    #[test]
+    fn grad_accum_adds_ew_ops() {
+        assert!(grad_accum_ops(&run(), 1).is_empty());
+        let ops = grad_accum_ops(&run(), 4);
+        assert_eq!(ops[0].count, 4);
+        assert!(ops[0].ops_per_byte() < 1.0);
+    }
+}

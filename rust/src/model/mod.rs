@@ -1,0 +1,21 @@
+//! Operation-level model of a BERT training iteration.
+//!
+//! This is the paper's measurement substrate in algorithmic form: every
+//! kernel a training iteration launches — GEMMs, batched GEMMs,
+//! elementwise chains, reductions, optimizer stages — with exact FLOP and
+//! byte counts parameterized by the Table 2 hyperparameters. The profiler
+//! aggregates these the way rocProf did for the paper; the roofline model
+//! (`perf`) converts them to device time.
+
+pub mod adam;
+pub mod embedding;
+pub mod gemm;
+pub mod graph;
+pub mod lamb;
+pub mod op;
+pub mod output;
+pub mod transformer;
+
+pub use gemm::{GemmDims, GemmKind};
+pub use graph::IterationGraph;
+pub use op::{LayerClass, Op, OpCategory, OpKind, Pass};

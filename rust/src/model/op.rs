@@ -1,0 +1,260 @@
+//! The `Op` type: one kernel launch with exact compute/memory demands.
+
+use crate::config::Precision;
+
+/// Which training pass the op belongs to (Fig. 4 groups fwd+bwd per layer
+/// and shows the update separately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pass {
+    Forward,
+    Backward,
+    Update,
+    Comm,
+}
+
+/// Coarse layer class (the Fig. 4 stack).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerClass {
+    Embedding,
+    Transformer,
+    OutputLayer,
+    Optimizer,
+    Communication,
+}
+
+impl LayerClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            LayerClass::Embedding => "Embedding",
+            LayerClass::Transformer => "Transformer",
+            LayerClass::OutputLayer => "Output",
+            LayerClass::Optimizer => "LAMB",
+            LayerClass::Communication => "Comm",
+        }
+    }
+}
+
+/// Fine-grained category (the Fig. 5 / Fig. 8 x-axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpCategory {
+    /// The attention layer's Wq/Wk/Wv/Wo projections ("Linear Transform
+    /// GEMMs").
+    LinearGemm,
+    /// Attention score / weighted-sum batched GEMMs ("Attention B-GEMM").
+    AttnBGemm,
+    /// FC-1/FC-2 feed-forward GEMMs.
+    FcGemm,
+    /// Scale+mask+softmax+dropout inside the attention head.
+    AttnEw,
+    /// GeLU activation between FC-1 and FC-2.
+    Gelu,
+    /// Dropout + residual + LayerNorm chains.
+    DrResLn,
+    /// LAMB stage 1 (update direction + moments).
+    LambStage1,
+    /// Per-layer 2-norm reductions (+ the global grad norm).
+    LambNorm,
+    /// LAMB stage 2 (trust-ratio weight update).
+    LambStage2,
+    /// Embedding lookups/sums.
+    Embedding,
+    /// MLM/NSP output-layer ops.
+    OutputLayer,
+    /// Gradient-accumulation scale/add (micro-batching, SS4.2).
+    GradAccum,
+    /// AllReduce (distributed training).
+    AllReduce,
+}
+
+impl OpCategory {
+    pub fn label(self) -> &'static str {
+        match self {
+            OpCategory::LinearGemm => "Linear-GEMM",
+            OpCategory::AttnBGemm => "Attn-BGEMM",
+            OpCategory::FcGemm => "FC-GEMM",
+            OpCategory::AttnEw => "Scale/Mask/Softmax",
+            OpCategory::Gelu => "GeLU",
+            OpCategory::DrResLn => "DR+Res+LN",
+            OpCategory::LambStage1 => "LAMB-S1",
+            OpCategory::LambNorm => "LAMB-Norm",
+            OpCategory::LambStage2 => "LAMB-S2",
+            OpCategory::Embedding => "Embedding",
+            OpCategory::OutputLayer => "Output",
+            OpCategory::GradAccum => "GradAccum",
+            OpCategory::AllReduce => "AllReduce",
+        }
+    }
+
+    /// Is this one of the GEMM categories? (Fig. 4/5 split GEMM vs
+    /// non-GEMM.)
+    pub fn is_gemm(self) -> bool {
+        matches!(
+            self,
+            OpCategory::LinearGemm | OpCategory::AttnBGemm | OpCategory::FcGemm
+        )
+    }
+}
+
+/// The computational shape of the op, used by the roofline model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// (possibly batched) GEMM with Table 3 dims.
+    Gemm(super::gemm::GemmDims),
+    /// Elementwise chain: `elems` elements, `flops_per_elem` arithmetic
+    /// ops each, `tensors_read`/`tensors_written` parameter-sized streams.
+    Elementwise {
+        elems: u64,
+        flops_per_elem: u64,
+        tensors_read: u64,
+        tensors_written: u64,
+    },
+    /// Reduction over `elems` elements producing `outputs` values.
+    Reduction { elems: u64, outputs: u64 },
+    /// Memory-gather (embedding lookup): `elems` gathered elements.
+    Gather { elems: u64 },
+    /// Network transfer of `bytes` (AllReduce leg / activation send).
+    Transfer { bytes: u64 },
+}
+
+/// One kernel launch.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub name: String,
+    pub layer: LayerClass,
+    pub category: OpCategory,
+    pub pass: Pass,
+    pub kind: OpKind,
+    /// How many times this op runs per iteration (e.g. n_layers).
+    pub count: u64,
+    /// Element width in bytes on the fwd/bwd path for this op.
+    pub elem_bytes: u64,
+}
+
+impl Op {
+    /// Total floating-point operations (one invocation).
+    pub fn flops(&self) -> u64 {
+        match &self.kind {
+            OpKind::Gemm(g) => g.flops(),
+            OpKind::Elementwise { elems, flops_per_elem, .. } => elems * flops_per_elem,
+            OpKind::Reduction { elems, .. } => *elems,
+            OpKind::Gather { .. } => 0,
+            OpKind::Transfer { .. } => 0,
+        }
+    }
+
+    /// Bytes moved to/from memory (one invocation).
+    pub fn bytes(&self) -> u64 {
+        match &self.kind {
+            OpKind::Gemm(g) => g.bytes(self.elem_bytes),
+            OpKind::Elementwise { elems, tensors_read, tensors_written, .. } => {
+                elems * (tensors_read + tensors_written) * self.elem_bytes
+            }
+            OpKind::Reduction { elems, outputs } => {
+                (elems + outputs) * self.elem_bytes
+            }
+            OpKind::Gather { elems } => 2 * elems * self.elem_bytes,
+            OpKind::Transfer { bytes } => *bytes,
+        }
+    }
+
+    /// Arithmetic intensity: flops per byte (SS2.6). Zero-byte ops return
+    /// infinity-ish large value guarded to f64.
+    pub fn ops_per_byte(&self) -> f64 {
+        let b = self.bytes();
+        if b == 0 {
+            return 0.0;
+        }
+        self.flops() as f64 / b as f64
+    }
+
+    /// Total flops across `count` invocations.
+    pub fn total_flops(&self) -> u64 {
+        self.flops() * self.count
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes() * self.count
+    }
+
+    /// Convenience constructor for EW ops at a given precision.
+    #[allow(clippy::too_many_arguments)]
+    pub fn elementwise(
+        name: impl Into<String>,
+        layer: LayerClass,
+        category: OpCategory,
+        pass: Pass,
+        elems: u64,
+        flops_per_elem: u64,
+        reads: u64,
+        writes: u64,
+        count: u64,
+        prec: Precision,
+    ) -> Op {
+        Op {
+            name: name.into(),
+            layer,
+            category,
+            pass,
+            kind: OpKind::Elementwise {
+                elems,
+                flops_per_elem,
+                tensors_read: reads,
+                tensors_written: writes,
+            },
+            count,
+            elem_bytes: prec.act_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gemm::{GemmDims, GemmKind};
+
+    fn ew_op() -> Op {
+        Op::elementwise(
+            "t", LayerClass::Transformer, OpCategory::Gelu, Pass::Forward,
+            1024, 8, 1, 1, 2, Precision::Fp32,
+        )
+    }
+
+    #[test]
+    fn elementwise_flops_and_bytes() {
+        let op = ew_op();
+        assert_eq!(op.flops(), 1024 * 8);
+        assert_eq!(op.bytes(), 1024 * 2 * 4);
+        assert_eq!(op.total_flops(), 2 * 1024 * 8);
+    }
+
+    #[test]
+    fn ew_intensity_is_low_and_gemm_high() {
+        let ew = ew_op();
+        let g = Op {
+            name: "g".into(),
+            layer: LayerClass::Transformer,
+            category: OpCategory::FcGemm,
+            pass: Pass::Forward,
+            kind: OpKind::Gemm(GemmDims::new(GemmKind::Fc1, 4096, 4096, 1024, 1)),
+            count: 1,
+            elem_bytes: 4,
+        };
+        assert!(ew.ops_per_byte() < 4.0);
+        assert!(g.ops_per_byte() > 100.0);
+    }
+
+    #[test]
+    fn transfer_has_no_flops() {
+        let t = Op {
+            name: "x".into(),
+            layer: LayerClass::Communication,
+            category: OpCategory::AllReduce,
+            pass: Pass::Comm,
+            kind: OpKind::Transfer { bytes: 1 << 20 },
+            count: 1,
+            elem_bytes: 4,
+        };
+        assert_eq!(t.flops(), 0);
+        assert_eq!(t.bytes(), 1 << 20);
+    }
+}

@@ -1,0 +1,131 @@
+//! Output classification layer ops: the Masked-LM head (dense + GeLU +
+//! LN + vocab projection over masked positions) and the NSP head
+//! (pooler + binary classifier). A small but non-zero slice of Fig. 4.
+
+use crate::config::RunConfig;
+use crate::model::gemm::{GemmDims, GemmKind};
+use crate::model::op::{LayerClass, Op, OpCategory, OpKind, Pass};
+
+/// Fraction of tokens that are masked for the MLM task (BERT uses 15%).
+const MLM_MASK_FRAC: f64 = 0.15;
+
+pub fn output_ops(run: &RunConfig) -> Vec<Op> {
+    let cfg = &run.model;
+    let prec = run.precision;
+    let d = cfg.d_model;
+    // The MLM head only projects the masked positions.
+    let masked = ((cfg.tokens() as f64) * MLM_MASK_FRAC).ceil() as u64;
+    let mut ops = Vec::new();
+
+    for (pass, scale) in [(Pass::Forward, 1u64), (Pass::Backward, 2u64)] {
+        let suffix = if pass == Pass::Forward { "fwd" } else { "bwd" };
+        // Dense transform d -> d on masked tokens.
+        ops.push(Op {
+            name: format!("mlm transform {suffix}"),
+            layer: LayerClass::OutputLayer,
+            category: OpCategory::OutputLayer,
+            pass,
+            kind: OpKind::Gemm(GemmDims::new(GemmKind::LinearTransform, d, masked, d, 1)),
+            count: scale,
+            elem_bytes: prec.act_bytes(),
+        });
+        // Vocabulary projection d -> V (the big output GEMM).
+        ops.push(Op {
+            name: format!("mlm vocab projection {suffix}"),
+            layer: LayerClass::OutputLayer,
+            category: OpCategory::OutputLayer,
+            pass,
+            kind: OpKind::Gemm(GemmDims::new(GemmKind::VocabProj, cfg.vocab, masked, d, 1)),
+            count: scale,
+            elem_bytes: prec.act_bytes(),
+        });
+        // NSP pooler + classifier (per-sample, tiny).
+        ops.push(Op {
+            name: format!("nsp pooler {suffix}"),
+            layer: LayerClass::OutputLayer,
+            category: OpCategory::OutputLayer,
+            pass,
+            kind: OpKind::Gemm(GemmDims::new(GemmKind::LinearTransform, d, cfg.batch, d, 1)),
+            count: scale,
+            elem_bytes: prec.act_bytes(),
+        });
+    }
+
+    // Softmax + cross-entropy over the vocab for masked tokens.
+    ops.push(Op::elementwise(
+        "mlm softmax+xent",
+        LayerClass::OutputLayer,
+        OpCategory::OutputLayer,
+        Pass::Forward,
+        masked * cfg.vocab,
+        6,
+        1,
+        1,
+        1,
+        prec,
+    ));
+    ops
+}
+
+/// SS6: fine-tuning output layers (e.g. SQuAD span prediction) are far
+/// simpler than the pre-training heads — a single d_model -> 2 projection
+/// over all tokens, no vocab GEMM.
+pub fn squad_output_ops(run: &RunConfig) -> Vec<Op> {
+    let cfg = &run.model;
+    let prec = run.precision;
+    let d = cfg.d_model;
+    [(Pass::Forward, 1u64), (Pass::Backward, 2u64)]
+        .into_iter()
+        .map(|(pass, scale)| Op {
+            name: format!("squad span head {:?}", pass),
+            layer: LayerClass::OutputLayer,
+            category: OpCategory::OutputLayer,
+            pass,
+            kind: OpKind::Gemm(GemmDims::new(GemmKind::LinearTransform, 2,
+                                             cfg.tokens(), d, 1)),
+            count: scale,
+            elem_bytes: prec.act_bytes(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision};
+
+    #[test]
+    fn output_layer_is_small_but_nonzero() {
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Fp32);
+        let out: u64 = output_ops(&run).iter().map(|o| o.total_flops()).sum();
+        let layers: u64 = crate::model::transformer::layer_ops(&run)
+            .iter().map(|o| o.total_flops()).sum::<u64>() * 24;
+        let frac = out as f64 / layers as f64;
+        assert!(frac > 0.001 && frac < 0.10, "{frac}");
+    }
+
+    #[test]
+    fn squad_head_is_much_simpler_than_pretrain_head() {
+        // SS6: "the output layer of specific tasks ... is simpler than
+        // tasks BERT is pre-trained for, requiring fewer GEMMs".
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Fp32);
+        let squad: u64 = squad_output_ops(&run).iter().map(|o| o.total_flops()).sum();
+        let pretrain: u64 = output_ops(&run).iter().map(|o| o.total_flops()).sum();
+        assert!((squad as f64) < 0.01 * pretrain as f64,
+                "squad {squad} pretrain {pretrain}");
+    }
+
+    #[test]
+    fn output_scales_with_tokens_not_layers() {
+        let base = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                  Precision::Fp32);
+        let deeper = RunConfig::new(ModelConfig::bert_large().with_layers(48),
+                                    Phase::Phase1, Precision::Fp32);
+        let f = |r: &RunConfig| -> u64 {
+            output_ops(r).iter().map(|o| o.total_flops()).sum()
+        };
+        assert_eq!(f(&base), f(&deeper));
+    }
+}

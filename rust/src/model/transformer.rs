@@ -1,0 +1,217 @@
+//! Op inventory of one transformer encoder layer (fwd + bwd).
+//!
+//! Mirrors Fig. 2(b-d) and SS3.2: linear transforms, attention-head
+//! B-GEMMs with the scale+mask+softmax+dropout chain, the FC pair with
+//! GeLU in between, and the two DR+Res+LN chains.
+
+use crate::config::RunConfig;
+use crate::model::gemm::{table3, GemmKind};
+use crate::model::op::{LayerClass, Op, OpCategory, OpKind, Pass};
+
+/// Flops-per-element estimates for the EW chains (matches the arithmetic
+/// in the L1 kernels; exact constants matter only relative to bytes).
+const GELU_FLOPS: u64 = 10; // mul, erf poly (~6), add, mul
+const SOFTMAX_FLOPS: u64 = 8; // scale, add mask, max, sub, exp, sum, div
+const DRLN_FLOPS: u64 = 9; // dropout mul, res add, mean, var, rsqrt-apply, affine
+const LN_BWD_FLOPS: u64 = 12;
+
+/// All ops of a single transformer layer under `cfg` (count = 1; the
+/// iteration graph multiplies by layer count).
+pub fn layer_ops(run: &RunConfig) -> Vec<Op> {
+    let cfg = &run.model;
+    let prec = run.precision;
+    let nb = cfg.tokens();
+    let d = cfg.d_model;
+    let dff = cfg.d_ff;
+    let n = cfg.seq_len;
+    let bh = cfg.batch * cfg.n_heads;
+    let score_elems = bh * n * n;
+    let mut ops = Vec::new();
+
+    let t3 = table3(cfg);
+    let gemm_cat = |kind: GemmKind| match kind {
+        GemmKind::LinearTransform | GemmKind::QkvFused => OpCategory::LinearGemm,
+        GemmKind::AttnScore | GemmKind::AttnOutput => OpCategory::AttnBGemm,
+        _ => OpCategory::FcGemm,
+    };
+
+    // --- GEMMs from Table 3 -------------------------------------------
+    for row in &t3 {
+        // Linear transforms appear 4x per layer (Wq, Wk, Wv, Wo).
+        let reps = match row.kind {
+            GemmKind::LinearTransform => 4,
+            _ => 1,
+        };
+        for pass in [Pass::Forward, Pass::Backward] {
+            for g in row.for_pass(pass) {
+                let suffix = if pass == Pass::Forward { "fwd" } else { "bwd" };
+                ops.push(Op {
+                    name: format!("{} {}", g.label(), suffix),
+                    layer: LayerClass::Transformer,
+                    category: gemm_cat(row.kind),
+                    pass,
+                    kind: OpKind::Gemm(g),
+                    count: reps,
+                    elem_bytes: prec.act_bytes(),
+                });
+            }
+        }
+    }
+
+    // --- Attention-head EW chain: scale+mask+softmax+dropout -----------
+    // Forward: read scores + mask, write probs (the paper fuses these).
+    ops.push(Op::elementwise(
+        "attn scale+mask+softmax+dropout fwd",
+        LayerClass::Transformer,
+        OpCategory::AttnEw,
+        Pass::Forward,
+        score_elems,
+        SOFTMAX_FLOPS,
+        2,
+        1,
+        1,
+        prec,
+    ));
+    // Backward over the quadratic tensor is bandwidth-bound (SS3.2.3):
+    // reads probs + dy, writes dscores.
+    ops.push(Op::elementwise(
+        "attn softmax+dropout bwd",
+        LayerClass::Transformer,
+        OpCategory::AttnEw,
+        Pass::Backward,
+        score_elems,
+        SOFTMAX_FLOPS,
+        2,
+        1,
+        1,
+        prec,
+    ));
+
+    // --- GeLU between FC-1 and FC-2 -------------------------------------
+    ops.push(Op::elementwise(
+        "gelu fwd", LayerClass::Transformer, OpCategory::Gelu, Pass::Forward,
+        nb * dff, GELU_FLOPS, 1, 1, 1, prec,
+    ));
+    ops.push(Op::elementwise(
+        "gelu bwd", LayerClass::Transformer, OpCategory::Gelu, Pass::Backward,
+        nb * dff, GELU_FLOPS + 4, 2, 1, 1, prec,
+    ));
+
+    // --- DR + Res + LN after attention and after FC ---------------------
+    for site in ["attn", "fc"] {
+        ops.push(Op::elementwise(
+            format!("drln {site} fwd"),
+            LayerClass::Transformer,
+            OpCategory::DrResLn,
+            Pass::Forward,
+            nb * d,
+            DRLN_FLOPS,
+            3, // x, residual, dropout mask
+            1,
+            1,
+            prec,
+        ));
+        ops.push(Op::elementwise(
+            format!("drln {site} bwd"),
+            LayerClass::Transformer,
+            OpCategory::DrResLn,
+            Pass::Backward,
+            nb * d,
+            LN_BWD_FLOPS,
+            3,
+            2, // dx and d-residual
+            1,
+            prec,
+        ));
+    }
+
+    ops
+}
+
+/// Per-layer trainable parameter element count (weights the LAMB model).
+pub fn layer_param_count(cfg: &crate::config::ModelConfig) -> u64 {
+    let d = cfg.d_model;
+    4 * (d * d + d) + 2 * (2 * d) + d * cfg.d_ff + cfg.d_ff + cfg.d_ff * d + d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+
+    fn run() -> RunConfig {
+        RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
+    }
+
+    #[test]
+    fn layer_has_all_op_classes() {
+        let ops = layer_ops(&run());
+        for cat in [
+            OpCategory::LinearGemm,
+            OpCategory::AttnBGemm,
+            OpCategory::FcGemm,
+            OpCategory::AttnEw,
+            OpCategory::Gelu,
+            OpCategory::DrResLn,
+        ] {
+            assert!(ops.iter().any(|o| o.category == cat), "{cat:?} missing");
+        }
+    }
+
+    #[test]
+    fn fwd_bwd_flop_ratio_is_about_two() {
+        // SS6: backprop has ~2x the operations of a forward pass.
+        let ops = layer_ops(&run());
+        let fwd: u64 = ops.iter().filter(|o| o.pass == Pass::Forward)
+            .map(|o| o.total_flops()).sum();
+        let bwd: u64 = ops.iter().filter(|o| o.pass == Pass::Backward)
+            .map(|o| o.total_flops()).sum();
+        let ratio = bwd as f64 / fwd as f64;
+        assert!(ratio > 1.6 && ratio < 2.4, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fc_gemms_dominate_layer_flops() {
+        // The FC pair is 4x the attention projections (SS3.2.1).
+        let ops = layer_ops(&run());
+        let fc: u64 = ops.iter().filter(|o| o.category == OpCategory::FcGemm)
+            .map(|o| o.total_flops()).sum();
+        let linear: u64 = ops.iter().filter(|o| o.category == OpCategory::LinearGemm)
+            .map(|o| o.total_flops()).sum();
+        let ratio = fc as f64 / linear as f64;
+        assert!(ratio > 1.8 && ratio < 2.2, "fc/linear {ratio}");
+    }
+
+    #[test]
+    fn attention_ew_scales_quadratically_with_seq() {
+        let r1 = run();
+        let mut r2 = run();
+        r2.model.seq_len = 256;
+        let ew = |r: &RunConfig| -> u64 {
+            layer_ops(r).iter().filter(|o| o.category == OpCategory::AttnEw)
+                .map(|o| o.total_bytes()).sum()
+        };
+        assert_eq!(ew(&r2), 4 * ew(&r1));
+    }
+
+    #[test]
+    fn mixed_precision_halves_activation_bytes() {
+        let f32r = run();
+        let mpr = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Mixed);
+        let bytes = |r: &RunConfig| -> u64 {
+            layer_ops(r).iter().map(|o| o.total_bytes()).sum()
+        };
+        assert_eq!(bytes(&f32r), 2 * bytes(&mpr));
+    }
+
+    #[test]
+    fn layer_param_count_consistent_with_model_config() {
+        let cfg = ModelConfig::bert_large();
+        let per_layer = layer_param_count(&cfg);
+        // 24 layers account for the vast majority of BERT Large.
+        let total = cfg.param_count();
+        let frac = (cfg.n_layers * per_layer) as f64 / total as f64;
+        assert!(frac > 0.85 && frac < 1.0, "{frac}");
+    }
+}

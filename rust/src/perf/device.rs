@@ -1,0 +1,211 @@
+//! Accelerator device specifications for the roofline model.
+//!
+//! The MI100 numbers come from the CDNA whitepaper the paper cites [9]:
+//! 23.1 TFLOP/s FP32 vector, 46.1 TFLOP/s FP32 matrix, 184.6 TFLOP/s
+//! FP16 matrix, 1.23 TB/s HBM2. Other presets allow SS6-style
+//! extrapolation ("compare compute and memory bandwidth ratios").
+
+use crate::config::Precision;
+
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Peak vector FP32 throughput (FLOP/s) for non-GEMM ops.
+    pub fp32_vector_flops: f64,
+    /// Peak matrix-engine FP32 throughput for GEMMs.
+    pub fp32_matrix_flops: f64,
+    /// Peak matrix-engine FP16/BF16 throughput for GEMMs.
+    pub fp16_matrix_flops: f64,
+    /// HBM bandwidth in bytes/s.
+    pub mem_bw: f64,
+    /// Fixed kernel-launch / dispatch overhead per kernel (seconds).
+    pub launch_overhead: f64,
+    /// Last-level cache / scratchpad capacity in bytes (fusion benefit
+    /// ceiling in SS5.2).
+    pub llc_bytes: u64,
+    /// Achievable fraction of peak memory bandwidth for large streaming
+    /// reads (GEMM operand traffic).
+    pub bw_efficiency: f64,
+    /// Achieved fraction of peak bandwidth for the EW/reduction kernels —
+    /// the paper observes these are memory *latency* bound (SS3.2.3), far
+    /// below streaming bandwidth. Calibrated so the modeled non-GEMM
+    /// share reproduces the paper's 30-40% (FP32).
+    pub ew_bw_efficiency: f64,
+    /// Achieved fraction of peak bandwidth for the *optimizer* EW kernels
+    /// — LAMB streams multi-MB contiguous parameter tensors and reaches
+    /// much closer to streaming bandwidth than the small activation EW
+    /// kernels (it is Fig. 8's highest-bandwidth bar).
+    pub opt_bw_efficiency: f64,
+    /// Achieved fraction of the FP32 GEMM peak at BERT's GEMM sizes.
+    pub matrix_eff_fp32: f64,
+    /// Achieved fraction of the FP16 matrix-engine peak — BERT-size GEMMs
+    /// reach ~1/3 of MFMA peak (calibrated to the paper's ~2-3x MP GEMM
+    /// speedup and the 57%->40% GEMM-share drop).
+    pub matrix_eff_fp16: f64,
+}
+
+impl DeviceSpec {
+    /// AMD Instinct MI100 (the paper's testbed). FP32 GEMMs in the
+    /// paper's PyTorch/rocBLAS stack run on the vector units (23.1
+    /// TFLOP/s), not the FP32 matrix path; FP16 GEMMs use the Matrix
+    /// Core Engines.
+    pub fn mi100() -> Self {
+        DeviceSpec {
+            name: "MI100".into(),
+            fp32_vector_flops: 23.1e12,
+            fp32_matrix_flops: 23.1e12,
+            fp16_matrix_flops: 184.6e12,
+            mem_bw: 1.23e12,
+            launch_overhead: 4.0e-6,
+            llc_bytes: 8 * 1024 * 1024,
+            bw_efficiency: 0.80,
+            ew_bw_efficiency: 0.12,
+            opt_bw_efficiency: 0.22,
+            matrix_eff_fp32: 0.75,
+            matrix_eff_fp16: 0.35,
+        }
+    }
+
+    /// NVIDIA V100 (for SS6 cross-accelerator extrapolation).
+    pub fn v100() -> Self {
+        DeviceSpec {
+            name: "V100".into(),
+            fp32_vector_flops: 15.7e12,
+            fp32_matrix_flops: 15.7e12,
+            fp16_matrix_flops: 125.0e12,
+            mem_bw: 0.9e12,
+            launch_overhead: 4.0e-6,
+            llc_bytes: 6 * 1024 * 1024,
+            bw_efficiency: 0.80,
+            ew_bw_efficiency: 0.12,
+            opt_bw_efficiency: 0.22,
+            matrix_eff_fp32: 0.75,
+            matrix_eff_fp16: 0.35,
+        }
+    }
+
+    /// NVIDIA A100-40GB.
+    pub fn a100() -> Self {
+        DeviceSpec {
+            name: "A100".into(),
+            fp32_vector_flops: 19.5e12,
+            fp32_matrix_flops: 19.5e12,
+            fp16_matrix_flops: 312.0e12,
+            mem_bw: 1.555e12,
+            launch_overhead: 4.0e-6,
+            llc_bytes: 40 * 1024 * 1024,
+            bw_efficiency: 0.85,
+            ew_bw_efficiency: 0.15,
+            opt_bw_efficiency: 0.25,
+            matrix_eff_fp32: 0.75,
+            matrix_eff_fp16: 0.40,
+        }
+    }
+
+    /// A TPU-v3-like core (MXU-heavy, for the hardware-adaptation story).
+    pub fn tpu_v3_core() -> Self {
+        DeviceSpec {
+            name: "TPUv3-core".into(),
+            fp32_vector_flops: 3.0e12,
+            fp32_matrix_flops: 61.0e12, // bf16 MXU with f32 accumulate
+            fp16_matrix_flops: 61.0e12,
+            mem_bw: 0.45e12,
+            launch_overhead: 1.0e-6,
+            llc_bytes: 16 * 1024 * 1024, // VMEM
+            bw_efficiency: 0.85,
+            ew_bw_efficiency: 0.35,
+            opt_bw_efficiency: 0.50,
+            matrix_eff_fp32: 0.80,
+            matrix_eff_fp16: 0.80,
+        }
+    }
+
+    /// The single-core CPU PJRT host the measured path runs on; used to
+    /// sanity-map measured wall clock onto the model.
+    pub fn cpu_host() -> Self {
+        DeviceSpec {
+            name: "CPU-host".into(),
+            fp32_vector_flops: 8.0e9,
+            fp32_matrix_flops: 5.0e10,
+            fp16_matrix_flops: 5.0e10,
+            mem_bw: 2.0e10,
+            launch_overhead: 20.0e-6,
+            llc_bytes: 32 * 1024 * 1024,
+            bw_efficiency: 0.60,
+            ew_bw_efficiency: 0.50,
+            opt_bw_efficiency: 0.55,
+            matrix_eff_fp32: 0.60,
+            matrix_eff_fp16: 0.60,
+        }
+    }
+
+    /// *Achieved* matrix throughput for a precision: hardware peak times
+    /// the calibrated large-GEMM efficiency (DESIGN.md SS7 Calibration).
+    pub fn matrix_flops(&self, prec: Precision) -> f64 {
+        match prec {
+            Precision::Fp32 => self.fp32_matrix_flops * self.matrix_eff_fp32,
+            Precision::Mixed => self.fp16_matrix_flops * self.matrix_eff_fp16,
+        }
+    }
+
+    /// Vector peak (non-GEMM ops gain little arithmetic speed from FP16;
+    /// the paper's 1.5-1.9x MP speedup of memory-bound ops comes from
+    /// halved *traffic*, which the byte model already captures).
+    pub fn vector_flops(&self, _prec: Precision) -> f64 {
+        self.fp32_vector_flops
+    }
+
+    /// Effective streaming bandwidth for GEMM operand traffic.
+    pub fn effective_bw(&self) -> f64 {
+        self.mem_bw * self.bw_efficiency
+    }
+
+    /// Effective bandwidth for EW/reduction kernels (latency bound —
+    /// SS3.2.3).
+    pub fn ew_bw(&self) -> f64 {
+        self.mem_bw * self.ew_bw_efficiency
+    }
+
+    /// Effective bandwidth for optimizer kernels (large contiguous
+    /// parameter streams).
+    pub fn opt_bw(&self) -> f64 {
+        self.mem_bw * self.opt_bw_efficiency
+    }
+
+    /// Device ridge point (flops/byte) for the matrix engine: below this
+    /// arithmetic intensity an op is memory bound (SS2.6).
+    pub fn ridge_point(&self, prec: Precision) -> f64 {
+        self.matrix_flops(prec) / self.effective_bw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mi100_ridge_point_is_tens_of_flops_per_byte() {
+        let d = DeviceSpec::mi100();
+        let r = d.ridge_point(Precision::Fp32);
+        assert!(r > 10.0 && r < 100.0, "{r}");
+    }
+
+    #[test]
+    fn fp16_achieved_matrix_is_2_to_4x_fp32_on_mi100() {
+        // The paper's MP GEMMs speed up ~2-3x, not the theoretical 8x.
+        let d = DeviceSpec::mi100();
+        let r = d.matrix_flops(Precision::Mixed) / d.matrix_flops(Precision::Fp32);
+        assert!(r > 2.0 && r < 5.0, "{r}");
+    }
+
+    #[test]
+    fn presets_are_distinct() {
+        let names: Vec<String> = [
+            DeviceSpec::mi100(), DeviceSpec::v100(), DeviceSpec::a100(),
+            DeviceSpec::tpu_v3_core(), DeviceSpec::cpu_host(),
+        ].iter().map(|d| d.name.clone()).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+}

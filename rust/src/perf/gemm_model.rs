@@ -1,0 +1,129 @@
+//! GEMM efficiency model: why "not all GEMMs are equal" (takeaway 7).
+//!
+//! Achievable matrix-engine utilization for a GEMM is limited by
+//! (a) tile quantization — M/N/K rounded up to the engine's native tile,
+//! (b) parallelism — enough independent tiles to fill the device's CUs,
+//! (c) skinniness — short K dims amortize operand loads poorly.
+//! The small/skinny attention B-GEMMs lose on all three, which together
+//! with their low ops/byte makes them memory-bound in Fig. 7/8.
+
+use crate::config::Precision;
+use crate::model::gemm::GemmDims;
+use crate::perf::device::DeviceSpec;
+
+/// Native matrix-engine tile (MI100 MFMA / TPU MXU scale).
+pub const TILE_M: u64 = 64;
+pub const TILE_N: u64 = 64;
+pub const TILE_K: u64 = 64;
+
+/// Number of parallel tile workers needed to saturate the device
+/// (~CU count * waves).
+pub const SATURATION_TILES: u64 = 480;
+
+fn round_up(x: u64, m: u64) -> u64 {
+    x.div_ceil(m) * m
+}
+
+/// Fraction of peak matrix throughput this GEMM can achieve.
+pub fn gemm_efficiency(g: &GemmDims) -> f64 {
+    // (a) tile quantization waste.
+    let quant = (g.m * g.n * g.k) as f64
+        / (round_up(g.m, TILE_M) * round_up(g.n, TILE_N) * round_up(g.k, TILE_K)) as f64;
+    // (b) occupancy: independent output tiles across the whole batch.
+    let tiles = g.batch * round_up(g.m, TILE_M) / TILE_M * round_up(g.n, TILE_N) / TILE_N;
+    let occupancy = (tiles as f64 / SATURATION_TILES as f64).min(1.0);
+    // Small GEMMs can still pipeline a bit: floor occupancy at 5%.
+    let occupancy = occupancy.max(0.05);
+    // (c) K-amortization: short K re-loads operands too often.
+    let k_amort = (g.k as f64 / (g.k as f64 + TILE_K as f64)).min(1.0);
+    quant * occupancy * (0.5 + 0.5 * k_amort)
+}
+
+/// Achieved fraction of streaming bandwidth for a GEMM's operand
+/// traffic: tiny tiles (the attention B-GEMMs' 64-wide head dim) issue
+/// short strided bursts and reach only part of HBM bandwidth.
+pub fn gemm_mem_efficiency(g: &GemmDims) -> f64 {
+    let min_dim = g.m.min(g.n).min(g.k) as f64;
+    (min_dim / 128.0).min(1.0).max(0.25)
+}
+
+/// Roofline time for a GEMM on `dev`: max of compute at modeled
+/// efficiency and memory streaming of unique bytes.
+pub fn gemm_time(g: &GemmDims, dev: &DeviceSpec, prec: Precision) -> f64 {
+    let eff = gemm_efficiency(g);
+    let compute = g.flops() as f64 / (dev.matrix_flops(prec) * eff);
+    let memory = g.bytes(prec.act_bytes()) as f64
+        / (dev.effective_bw() * gemm_mem_efficiency(g));
+    compute.max(memory) + dev.launch_overhead
+}
+
+/// Is this GEMM memory-bound on `dev`? (Fig. 8's B-GEMM bars.)
+pub fn is_memory_bound(g: &GemmDims, dev: &DeviceSpec, prec: Precision) -> bool {
+    let eff = gemm_efficiency(g);
+    let compute = g.flops() as f64 / (dev.matrix_flops(prec) * eff);
+    let memory = g.bytes(prec.act_bytes()) as f64
+        / (dev.effective_bw() * gemm_mem_efficiency(g));
+    memory > compute
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::gemm::{table3, GemmKind};
+
+    #[test]
+    fn fc_gemm_is_efficient_attention_bgemm_is_not() {
+        let t = table3(&ModelConfig::bert_large());
+        let fc = gemm_efficiency(&t[3].fwd);
+        let score = gemm_efficiency(&t[1].fwd);
+        assert!(fc > 0.7, "fc {fc}");
+        assert!(score < fc, "score {score} fc {fc}");
+        // And the B-GEMM is memory bound regardless (the real limiter).
+        assert!(is_memory_bound(&t[1].fwd, &DeviceSpec::mi100(), Precision::Fp32));
+    }
+
+    #[test]
+    fn attention_bgemms_memory_bound_on_mi100_fp32() {
+        // Takeaway 7 / Fig. 8.
+        let dev = DeviceSpec::mi100();
+        let t = table3(&ModelConfig::bert_large());
+        assert!(is_memory_bound(&t[1].fwd, &dev, Precision::Fp32));
+        assert!(!is_memory_bound(&t[3].fwd, &dev, Precision::Fp32));
+    }
+
+    #[test]
+    fn fused_qkv_beats_three_separate_linears_at_small_tokens() {
+        // Fig. 15's mechanism: bigger M dimension -> better occupancy.
+        let d = 1024;
+        let nb = 512; // small token count
+        let single = GemmDims::new(GemmKind::LinearTransform, d, nb, d, 1);
+        let fused = GemmDims::new(GemmKind::QkvFused, 3 * d, nb, d, 1);
+        let dev = DeviceSpec::mi100();
+        let t_single = 3.0 * gemm_time(&single, &dev, Precision::Fp32);
+        let t_fused = gemm_time(&fused, &dev, Precision::Fp32);
+        assert!(t_fused < t_single, "{t_fused} !< {t_single}");
+    }
+
+    #[test]
+    fn efficiency_in_unit_interval() {
+        for (m, n, k, b) in [(1, 1, 1, 1), (128, 128, 64, 512),
+                             (4096, 4096, 1024, 1), (63, 65, 127, 3)] {
+            let g = GemmDims::new(GemmKind::Fc1, m, n, k, b);
+            let e = gemm_efficiency(&g);
+            assert!(e > 0.0 && e <= 1.0, "{e}");
+        }
+    }
+
+    #[test]
+    fn mp_speeds_up_compute_bound_gemms_about_2x() {
+        // SS3.2.1: fwd/bwd GEMMs speed up ~2x under MP (4x arithmetic
+        // peak but halved bytes keep some memory pressure).
+        let t = table3(&ModelConfig::bert_large());
+        let dev = DeviceSpec::mi100();
+        let f32t = gemm_time(&t[3].fwd, &dev, Precision::Fp32);
+        let mpt = gemm_time(&t[3].fwd, &dev, Precision::Mixed);
+        let speedup = f32t / mpt;
+        assert!(speedup > 1.5 && speedup < 4.5, "{speedup}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Arithmetic-intensity / bandwidth-demand analysis (SS2.6, Fig. 7, Fig. 8).
+
+use crate::config::{Precision, RunConfig};
+use crate::model::gemm::table3;
+use crate::model::op::{Op, OpKind, Pass};
+use crate::model::IterationGraph;
+use crate::perf::device::DeviceSpec;
+use crate::perf::{estimate_op, gemm_model};
+
+/// One Fig. 7 / Fig. 8 bar.
+#[derive(Debug, Clone)]
+pub struct IntensityRow {
+    pub label: String,
+    pub ops_per_byte: f64,
+    /// Demand bandwidth = bytes / roofline-time, normalized by the caller.
+    pub bandwidth: f64,
+    pub memory_bound: bool,
+}
+
+/// Fig. 7: arithmetic intensity of every transformer GEMM (fwd + bwd).
+pub fn gemm_intensities(run: &RunConfig) -> Vec<IntensityRow> {
+    let eb = run.precision.act_bytes();
+    let dev = DeviceSpec::mi100();
+    let mut rows = Vec::new();
+    for row in table3(&run.model) {
+        for (pass, label) in [(Pass::Forward, "fwd"), (Pass::Backward, "bwd")] {
+            for g in row.for_pass(pass) {
+                let t = gemm_model::gemm_time(&g, &dev, run.precision);
+                rows.push(IntensityRow {
+                    label: format!("{} {}", g.label(), label),
+                    ops_per_byte: g.ops_per_byte(eb),
+                    bandwidth: g.bytes(eb) as f64 / t,
+                    memory_bound: gemm_model::is_memory_bound(&g, &dev, run.precision),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Fig. 8: intensity + bandwidth demand of every op category in the
+/// iteration, normalized to the maximum achieved bandwidth (the paper
+/// normalizes to the EW-multiply kernel).
+pub fn op_intensities(run: &RunConfig) -> Vec<IntensityRow> {
+    let g = IterationGraph::build(run);
+    let dev = DeviceSpec::mi100();
+    let mut by_cat: std::collections::BTreeMap<String, (u64, u64, f64, bool)> =
+        Default::default();
+    for op in &g.ops {
+        let t = estimate_op(op, &dev, run.precision);
+        let e = by_cat
+            .entry(format!("{:?}", op.category))
+            .or_insert((0, 0, 0.0, false));
+        e.0 += op.total_flops();
+        e.1 += op.total_bytes();
+        e.2 += t.seconds * op.count as f64;
+        e.3 |= t.memory_bound;
+    }
+    let mut rows: Vec<IntensityRow> = by_cat
+        .into_iter()
+        .map(|(label, (fl, by, secs, mb))| IntensityRow {
+            label,
+            ops_per_byte: if by > 0 { fl as f64 / by as f64 } else { 0.0 },
+            bandwidth: if secs > 0.0 { by as f64 / secs } else { 0.0 },
+            memory_bound: mb,
+        })
+        .collect();
+    // Normalize to the max *elementwise* bandwidth, as the paper does
+    // (its reference is the EW multiplication kernel); GEMM bars may
+    // exceed 1.0 just like Fig. 8's compute-bound bars sit off-scale.
+    let max_bw = rows
+        .iter()
+        .filter(|r| !r.label.contains("Gemm"))
+        .map(|r| r.bandwidth)
+        .fold(0.0, f64::max);
+    if max_bw > 0.0 {
+        for r in &mut rows {
+            r.bandwidth /= max_bw;
+        }
+    }
+    rows
+}
+
+/// Classify one op against the device ridge point.
+pub fn op_is_memory_bound(op: &Op, dev: &DeviceSpec, prec: Precision) -> bool {
+    match &op.kind {
+        OpKind::Gemm(g) => gemm_model::is_memory_bound(g, dev, prec),
+        _ => estimate_op(op, dev, prec).memory_bound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase};
+
+    fn run() -> RunConfig {
+        RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
+    }
+
+    #[test]
+    fn fig7_fc_gemms_have_highest_intensity() {
+        let rows = gemm_intensities(&run());
+        let fc_max = rows.iter().filter(|r| r.label.starts_with("FC"))
+            .map(|r| r.ops_per_byte).fold(0.0, f64::max);
+        let bgemm_max = rows.iter().filter(|r| r.label.starts_with("Attn"))
+            .map(|r| r.ops_per_byte).fold(0.0, f64::max);
+        assert!(fc_max > 3.0 * bgemm_max, "fc {fc_max} bgemm {bgemm_max}");
+    }
+
+    #[test]
+    fn fig8_lamb_has_lowest_intensity_and_high_bandwidth() {
+        let rows = op_intensities(&run());
+        let lamb = rows.iter().find(|r| r.label == "LambStage1").unwrap();
+        let fc = rows.iter().find(|r| r.label == "FcGemm").unwrap();
+        assert!(lamb.ops_per_byte < 3.0);
+        assert!(fc.ops_per_byte > 50.0);
+        assert!(lamb.memory_bound);
+        // LAMB's demand bandwidth is near the top of the EW class (it's
+        // pure streaming) — the paper's Fig. 8 shape.
+        assert!(lamb.bandwidth > 0.9, "{}", lamb.bandwidth);
+    }
+
+    #[test]
+    fn ew_bandwidth_normalized_to_unit_max() {
+        let rows = op_intensities(&run());
+        let max = rows.iter().filter(|r| !r.label.contains("Gemm"))
+            .map(|r| r.bandwidth).fold(0.0, f64::max);
+        assert!((max - 1.0).abs() < 1e-9);
+    }
+}

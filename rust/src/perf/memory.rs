@@ -1,0 +1,122 @@
+//! Device memory-capacity model (SS5.2 "larger memory capacity").
+//!
+//! Per-device training footprint = weights + gradients + optimizer state
+//! (FP32 master copies) + activations retained for backprop. The paper's
+//! argument: more HBM lets a device hold a larger mini-batch (larger,
+//! more efficient ops, fewer iterations) or a bigger model shard (less
+//! model parallelism and its serialized communication).
+
+use crate::config::{Precision, RunConfig};
+
+/// Bytes of model state resident per device (replicated data parallel).
+pub fn state_bytes(run: &RunConfig) -> u64 {
+    let p = run.model.param_count();
+    let wb = run.precision.act_bytes(); // working copy of weights
+    // grads (working precision) + FP32 master weights + m + v.
+    let master = if run.precision == Precision::Mixed { 4 * p } else { 0 };
+    p * wb + p * wb + master + 2 * 4 * p
+}
+
+/// Bytes of activations retained for backprop at mini-batch B.
+pub fn activation_bytes(run: &RunConfig) -> u64 {
+    let cfg = &run.model;
+    let eb = run.precision.act_bytes();
+    // Per layer: embeddings in (nB x d), q/k/v (3 nB x d), attention
+    // probs (B h n^2), context (nB x d), FC mid (nB x d_ff), FC out,
+    // 2x LN inputs — the standard no-remat retention set.
+    let nbd = cfg.tokens() * cfg.d_model;
+    let per_layer = 7 * nbd + cfg.batch * cfg.n_heads * cfg.seq_len * cfg.seq_len
+        + cfg.tokens() * cfg.d_ff;
+    cfg.n_layers * per_layer * eb + nbd * eb
+}
+
+/// Total footprint.
+pub fn footprint_bytes(run: &RunConfig) -> u64 {
+    state_bytes(run) + activation_bytes(run)
+}
+
+/// Largest mini-batch that fits in `hbm_bytes` (0 if the model itself
+/// does not fit — the paper's "model parallelism becomes mandatory").
+pub fn max_batch(run: &RunConfig, hbm_bytes: u64) -> u64 {
+    let state = state_bytes(run);
+    if state >= hbm_bytes {
+        return 0;
+    }
+    let mut lo = 0u64;
+    let mut hi = 65536u64;
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        let mut r = *run;
+        r.model.batch = mid;
+        if state + activation_bytes(&r) <= hbm_bytes {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+
+    fn run(b: u64, p: Precision) -> RunConfig {
+        RunConfig::new(ModelConfig::bert_large().with_batch(b), Phase::Phase1, p)
+    }
+
+    #[test]
+    fn bert_large_state_is_about_5_gb_fp32() {
+        // 336M params x (4 w + 4 g + 8 m/v) = ~5.4 GB.
+        let s = state_bytes(&run(32, Precision::Fp32)) as f64 / 1e9;
+        assert!(s > 4.5 && s < 6.5, "{s}");
+    }
+
+    #[test]
+    fn mixed_precision_state_includes_fp32_master() {
+        // MP: 2w + 2g + 4 master + 8 m/v = 16 B/param, = FP32's 16 B/param.
+        let f = state_bytes(&run(32, Precision::Fp32));
+        let m = state_bytes(&run(32, Precision::Mixed));
+        assert_eq!(f, m);
+    }
+
+    #[test]
+    fn activations_scale_linearly_with_batch() {
+        let a8 = activation_bytes(&run(8, Precision::Fp32));
+        let a32 = activation_bytes(&run(32, Precision::Fp32));
+        assert_eq!(4 * a8, a32);
+    }
+
+    #[test]
+    fn b32_fp32_fits_32gb_mi100() {
+        // The paper trains Ph1 B=32 on a 32 GB MI100.
+        let f = footprint_bytes(&run(32, Precision::Fp32));
+        assert!(f < 32_000_000_000, "{f}");
+    }
+
+    #[test]
+    fn bigger_hbm_admits_bigger_batch() {
+        let r = run(32, Precision::Fp32);
+        let b32 = max_batch(&r, 32_000_000_000);
+        let b64 = max_batch(&r, 64_000_000_000);
+        assert!(b32 >= 32, "{b32}");
+        assert!(b64 > b32);
+    }
+
+    #[test]
+    fn huge_model_forces_model_parallelism() {
+        // A 10x-width BERT's optimizer state alone exceeds 32 GB.
+        let r = RunConfig::new(ModelConfig::bert_large().with_width(8192),
+                               Phase::Phase1, Precision::Fp32);
+        assert_eq!(max_batch(&r, 32_000_000_000), 0);
+    }
+
+    #[test]
+    fn mixed_precision_roughly_doubles_max_batch() {
+        let f = max_batch(&run(32, Precision::Fp32), 32_000_000_000);
+        let m = max_batch(&run(32, Precision::Mixed), 32_000_000_000);
+        let ratio = m as f64 / f as f64;
+        assert!(ratio > 1.6 && ratio < 2.4, "{ratio}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Roofline performance model: converts the op graph's exact FLOP/byte
+//! counts into device-time estimates, reproducing the paper's MI100-scale
+//! runtime breakdowns without the MI100 (DESIGN.md SS3 substitution).
+
+pub mod device;
+pub mod gemm_model;
+pub mod intensity;
+pub mod memory;
+pub mod roofline;
+pub mod whatif;
+
+pub use device::DeviceSpec;
+pub use roofline::{estimate_graph, estimate_op, OpTime};

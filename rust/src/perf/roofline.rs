@@ -1,0 +1,190 @@
+//! Roofline timing of ops and whole iteration graphs.
+
+use crate::config::Precision;
+use crate::model::op::{Op, OpKind};
+use crate::model::IterationGraph;
+use crate::perf::device::DeviceSpec;
+use crate::perf::gemm_model;
+
+/// Estimated execution time of one op, with the binding resource.
+#[derive(Debug, Clone)]
+pub struct OpTime {
+    pub name: String,
+    pub seconds: f64,
+    pub memory_bound: bool,
+}
+
+/// Time for a single invocation of `op` on `dev`.
+pub fn estimate_op(op: &Op, dev: &DeviceSpec, prec: Precision) -> OpTime {
+    let (seconds, memory_bound) = match &op.kind {
+        OpKind::Gemm(g) => {
+            let t = gemm_model::gemm_time(g, dev, prec);
+            (t, gemm_model::is_memory_bound(g, dev, prec))
+        }
+        OpKind::Elementwise { .. } | OpKind::Reduction { .. } | OpKind::Gather { .. } => {
+            let compute = op.flops() as f64 / dev.vector_flops(prec);
+            // EW/reduction kernels are latency bound (SS3.2.3) and see
+            // ew_bw(); optimizer kernels stream large contiguous tensors
+            // and reach opt_bw() (Fig. 8's top bandwidth bars).
+            let bw = if op.layer == crate::model::op::LayerClass::Optimizer {
+                dev.opt_bw()
+            } else {
+                dev.ew_bw()
+            };
+            let memory = op.bytes() as f64 / bw;
+            (compute.max(memory) + dev.launch_overhead, memory >= compute)
+        }
+        OpKind::Transfer { bytes } => {
+            // Transfers are costed by the dist module's link model; here
+            // we only account a PCIe-4.0-x16-like default for stray uses.
+            ((*bytes as f64) / 32.0e9, true)
+        }
+    };
+    OpTime { name: op.name.clone(), seconds, memory_bound }
+}
+
+/// Total time for all invocations of `op`.
+pub fn estimate_op_total(op: &Op, dev: &DeviceSpec, prec: Precision) -> f64 {
+    estimate_op(op, dev, prec).seconds * op.count as f64
+}
+
+/// Per-op timings for a whole iteration graph (serial schedule — the
+/// paper's single-stream GPU execution).
+pub fn estimate_graph(g: &IterationGraph, dev: &DeviceSpec, prec: Precision) -> Vec<(Op, f64)> {
+    g.ops
+        .iter()
+        .map(|op| (op.clone(), estimate_op_total(op, dev, prec)))
+        .collect()
+}
+
+/// Total iteration seconds.
+pub fn iteration_seconds(g: &IterationGraph, dev: &DeviceSpec, prec: Precision) -> f64 {
+    g.ops.iter().map(|op| estimate_op_total(op, dev, prec)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+    use crate::model::op::LayerClass;
+
+    fn breakdown(run: &RunConfig) -> (f64, f64, f64, f64, f64) {
+        let g = IterationGraph::build(run);
+        let dev = DeviceSpec::mi100();
+        let times = estimate_graph(&g, &dev, run.precision);
+        let total: f64 = times.iter().map(|(_, t)| t).sum();
+        let frac = |layer: LayerClass| -> f64 {
+            times.iter().filter(|(o, _)| o.layer == layer).map(|(_, t)| t).sum::<f64>() / total
+        };
+        (
+            total,
+            frac(LayerClass::Transformer),
+            frac(LayerClass::Optimizer),
+            frac(LayerClass::OutputLayer),
+            frac(LayerClass::Embedding),
+        )
+    }
+
+    #[test]
+    fn fig4_shape_ph1_b32_fp32() {
+        // Transformer dominates; LAMB 2nd (7-20%); output small;
+        // embedding negligible.
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Fp32);
+        let (_, t, lamb, out, emb) = breakdown(&run);
+        assert!(t > 0.6, "transformer {t}");
+        assert!(lamb > 0.05 && lamb < 0.25, "lamb {lamb}");
+        assert!(out < 0.15, "output {out}");
+        assert!(emb < 0.02, "embedding {emb}");
+    }
+
+    #[test]
+    fn lamb_fraction_grows_at_smaller_batch() {
+        // Takeaway 2/11.
+        let b32 = RunConfig::new(ModelConfig::bert_large().with_batch(32),
+                                 Phase::Phase1, Precision::Fp32);
+        let b4 = RunConfig::new(ModelConfig::bert_large().with_batch(4),
+                                Phase::Phase1, Precision::Fp32);
+        let (_, _, lamb32, _, _) = breakdown(&b32);
+        let (_, _, lamb4, _, _) = breakdown(&b4);
+        assert!(lamb4 > 2.0 * lamb32, "b4 {lamb4} b32 {lamb32}");
+    }
+
+    #[test]
+    fn lamb_fraction_grows_under_mixed_precision() {
+        // Takeaway 3.
+        let f = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                               Precision::Fp32);
+        let m = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                               Precision::Mixed);
+        let (tf, _, lf, _, _) = breakdown(&f);
+        let (tm, _, lm, _, _) = breakdown(&m);
+        assert!(lm > lf, "mp {lm} fp32 {lf}");
+        // And MP is meaningfully faster end to end.
+        assert!(tm < 0.75 * tf, "mp {tm} fp32 {tf}");
+    }
+
+    #[test]
+    fn memory_bound_ops_are_30_to_40_pct_fp32() {
+        // Takeaway 9: memory-bound ops make up 30-40% of FP32 runtime.
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Fp32);
+        let g = IterationGraph::build(&run);
+        let dev = DeviceSpec::mi100();
+        let mut mem = 0.0;
+        let mut total = 0.0;
+        for op in &g.ops {
+            let t = estimate_op(&op, &dev, run.precision);
+            let tt = t.seconds * op.count as f64;
+            total += tt;
+            if t.memory_bound {
+                mem += tt;
+            }
+        }
+        let frac = mem / total;
+        assert!(frac > 0.25 && frac < 0.50, "{frac}");
+    }
+
+    #[test]
+    fn gemm_time_fraction_matches_paper_fp32() {
+        // SS3.2.2: ~60% of FP32 iteration time is GEMMs (we accept a
+        // generous band given the substitute device model).
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Fp32);
+        let g = IterationGraph::build(&run);
+        let dev = DeviceSpec::mi100();
+        let times = estimate_graph(&g, &dev, run.precision);
+        let total: f64 = times.iter().map(|(_, t)| t).sum();
+        let gemm: f64 = times.iter().filter(|(o, _)| o.category.is_gemm())
+            .map(|(_, t)| t).sum();
+        let frac = gemm / total;
+        assert!(frac > 0.45 && frac < 0.75, "{frac}");
+    }
+
+    #[test]
+    fn gemm_fraction_drops_under_mp() {
+        // Takeaway 5.
+        let frac = |prec| {
+            let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, prec);
+            let g = IterationGraph::build(&run);
+            let dev = DeviceSpec::mi100();
+            let times = estimate_graph(&g, &dev, run.precision);
+            let total: f64 = times.iter().map(|(_, t)| t).sum();
+            times.iter().filter(|(o, _)| o.category.is_gemm())
+                .map(|(_, t)| t).sum::<f64>() / total
+        };
+        assert!(frac(Precision::Mixed) < frac(Precision::Fp32) - 0.05);
+    }
+
+    #[test]
+    fn wider_model_raises_gemm_and_lamb_share() {
+        // Takeaway 13.
+        let base = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                  Precision::Fp32);
+        let wide = RunConfig::new(ModelConfig::bert_large().with_width(2048),
+                                  Phase::Phase1, Precision::Fp32);
+        let (_, _, lamb_b, _, _) = breakdown(&base);
+        let (_, _, lamb_w, _, _) = breakdown(&wide);
+        assert!(lamb_w > lamb_b, "wide {lamb_w} base {lamb_b}");
+    }
+}

@@ -1,0 +1,124 @@
+//! Profiler: aggregates per-op times (modeled or measured) into the
+//! paper's breakdowns and renders them as the figures' text form.
+
+pub mod report;
+pub mod trace;
+
+use std::collections::BTreeMap;
+
+use crate::config::{Precision, RunConfig};
+use crate::model::op::{LayerClass, OpCategory};
+use crate::model::IterationGraph;
+use crate::perf::device::DeviceSpec;
+use crate::perf::roofline::estimate_op_total;
+
+/// One timed entry (an op aggregate).
+#[derive(Debug, Clone)]
+pub struct TimedOp {
+    pub name: String,
+    pub layer: LayerClass,
+    pub category: OpCategory,
+    pub seconds: f64,
+    pub flops: u64,
+    pub bytes: u64,
+    pub launches: u64,
+}
+
+/// A full iteration timeline with aggregation helpers.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub label: String,
+    pub entries: Vec<TimedOp>,
+}
+
+impl Timeline {
+    /// Model-estimated timeline on a device (the paper-scale path).
+    pub fn modeled(run: &RunConfig, dev: &DeviceSpec) -> Timeline {
+        let g = IterationGraph::build(run);
+        Self::from_graph(run.label(), &g, dev, run.precision)
+    }
+
+    pub fn from_graph(label: String, g: &IterationGraph, dev: &DeviceSpec,
+                      prec: Precision) -> Timeline {
+        let entries = g
+            .ops
+            .iter()
+            .map(|op| TimedOp {
+                name: op.name.clone(),
+                layer: op.layer,
+                category: op.category,
+                seconds: estimate_op_total(op, dev, prec),
+                flops: op.total_flops(),
+                bytes: op.total_bytes(),
+                launches: op.count,
+            })
+            .collect();
+        Timeline { label, entries }
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.entries.iter().map(|e| e.seconds).sum()
+    }
+
+    /// Fig. 4 aggregation: seconds by layer class.
+    pub fn by_layer(&self) -> BTreeMap<String, f64> {
+        let mut m = BTreeMap::new();
+        for e in &self.entries {
+            *m.entry(e.layer.label().to_string()).or_insert(0.0) += e.seconds;
+        }
+        m
+    }
+
+    /// Fig. 5 aggregation: seconds by fine category.
+    pub fn by_category(&self) -> BTreeMap<String, f64> {
+        let mut m = BTreeMap::new();
+        for e in &self.entries {
+            *m.entry(e.category.label().to_string()).or_insert(0.0) += e.seconds;
+        }
+        m
+    }
+
+    /// Fractional (0..1) version of `by_layer`.
+    pub fn layer_fractions(&self) -> BTreeMap<String, f64> {
+        let total = self.total_seconds();
+        self.by_layer().into_iter().map(|(k, v)| (k, v / total)).collect()
+    }
+
+    pub fn category_fractions(&self) -> BTreeMap<String, f64> {
+        let total = self.total_seconds();
+        self.by_category().into_iter().map(|(k, v)| (k, v / total)).collect()
+    }
+
+    /// Total kernel launches (Fig. 13 axis).
+    pub fn launches(&self) -> u64 {
+        self.entries.iter().map(|e| e.launches).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase};
+
+    #[test]
+    fn modeled_timeline_fractions_sum_to_one() {
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Fp32);
+        let t = Timeline::modeled(&run, &DeviceSpec::mi100());
+        let sum: f64 = t.layer_fractions().values().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        let sum: f64 = t.category_fractions().values().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeline_has_all_layers() {
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Fp32);
+        let t = Timeline::modeled(&run, &DeviceSpec::mi100());
+        let by = t.by_layer();
+        for k in ["Transformer", "LAMB", "Output", "Embedding"] {
+            assert!(by.contains_key(k), "{k}");
+        }
+    }
+}

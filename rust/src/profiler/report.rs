@@ -1,0 +1,96 @@
+//! Text renderers: each paper figure as an aligned terminal table (and
+//! CSV via `trace`). These are what the benches and the CLI print.
+
+use std::fmt::Write as _;
+
+use crate::profiler::Timeline;
+
+/// Render a percentage-stacked bar table (Fig. 4 / 9 / 10 style): one
+/// row per configuration, one column per layer class.
+pub fn stacked_table(title: &str, timelines: &[Timeline]) -> String {
+    let mut cols: Vec<String> = Vec::new();
+    for t in timelines {
+        for k in t.by_layer().keys() {
+            if !cols.contains(k) {
+                cols.push(k.clone());
+            }
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "## {title}");
+    let _ = write!(out, "{:<18}", "config");
+    for c in &cols {
+        let _ = write!(out, "{:>14}", c);
+    }
+    let _ = writeln!(out, "{:>12}", "total(ms)");
+    for t in timelines {
+        let fr = t.layer_fractions();
+        let _ = write!(out, "{:<18}", t.label);
+        for c in &cols {
+            let v = fr.get(c).copied().unwrap_or(0.0);
+            let _ = write!(out, "{:>13.1}%", 100.0 * v);
+        }
+        let _ = writeln!(out, "{:>12.3}", t.total_seconds() * 1e3);
+    }
+    out
+}
+
+/// Render the fine-category split (Fig. 5 style).
+pub fn category_table(title: &str, timelines: &[Timeline]) -> String {
+    let mut cats: Vec<String> = Vec::new();
+    for t in timelines {
+        for k in t.by_category().keys() {
+            if !cats.contains(k) {
+                cats.push(k.clone());
+            }
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "## {title}");
+    let _ = write!(out, "{:<22}", "category");
+    for t in timelines {
+        let _ = write!(out, "{:>16}", t.label);
+    }
+    let _ = writeln!(out);
+    for c in &cats {
+        let _ = write!(out, "{:<22}", c);
+        for t in timelines {
+            let v = t.category_fractions().get(c).copied().unwrap_or(0.0);
+            let _ = write!(out, "{:>15.1}%", 100.0 * v);
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Generic two-column numeric table (Fig. 7/8/15 series).
+pub fn series_table(title: &str, header: (&str, &str), rows: &[(String, f64)]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "## {title}");
+    let _ = writeln!(out, "{:<44}{:>14}", header.0, header.1);
+    for (label, v) in rows {
+        let _ = writeln!(out, "{:<44}{:>14.3}", label, v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+    use crate::perf::device::DeviceSpec;
+
+    #[test]
+    fn tables_render_without_panic() {
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Fp32);
+        let t = Timeline::modeled(&run, &DeviceSpec::mi100());
+        let s = stacked_table("fig4", &[t.clone()]);
+        assert!(s.contains("Transformer"));
+        let s = category_table("fig5", &[t]);
+        assert!(s.contains("FC-GEMM"));
+        let s = series_table("fig7", ("gemm", "ops/byte"),
+                             &[("x".into(), 1.0)]);
+        assert!(s.contains("ops/byte"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Trace export: CSV and JSON dumps of timelines for external plotting.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::profiler::Timeline;
+use crate::util::Json;
+
+/// Write one CSV row per op aggregate.
+pub fn write_csv(t: &Timeline, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "name,layer,category,seconds,flops,bytes,launches")?;
+    for e in &t.entries {
+        writeln!(
+            f,
+            "\"{}\",{},{},{:.9},{},{},{}",
+            e.name,
+            e.layer.label(),
+            e.category.label(),
+            e.seconds,
+            e.flops,
+            e.bytes,
+            e.launches
+        )?;
+    }
+    Ok(())
+}
+
+/// Convert a timeline to a JSON value.
+pub fn to_json(t: &Timeline) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(t.label.clone())),
+        (
+            "entries",
+            Json::arr(
+                t.entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("name", Json::str(e.name.clone())),
+                            ("layer", Json::str(e.layer.label())),
+                            ("category", Json::str(e.category.label())),
+                            ("seconds", Json::num(e.seconds)),
+                            ("flops", Json::num(e.flops as f64)),
+                            ("bytes", Json::num(e.bytes as f64)),
+                            ("launches", Json::num(e.launches as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write the whole timeline as JSON.
+pub fn write_json(t: &Timeline, path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(t).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+    use crate::perf::device::DeviceSpec;
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                 Precision::Fp32);
+        let t = Timeline::modeled(&run, &DeviceSpec::mi100());
+        let dir = std::env::temp_dir();
+        let csv = dir.join("bertprof_test_trace.csv");
+        let json = dir.join("bertprof_test_trace.json");
+        write_csv(&t, &csv).unwrap();
+        write_json(&t, &json).unwrap();
+        let s = std::fs::read_to_string(&csv).unwrap();
+        assert!(s.lines().count() > 10);
+        let j = Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert!(j.get("entries").unwrap().as_arr().unwrap().len() > 10);
+        let _ = std::fs::remove_file(csv);
+        let _ = std::fs::remove_file(json);
+    }
+}

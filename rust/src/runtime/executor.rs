@@ -1,0 +1,197 @@
+//! The PJRT runtime: loads AOT HLO-text artifacts, compiles them once,
+//! executes and times them. This is the measured half of the framework —
+//! the rust binary is self-contained after `make artifacts`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::runtime::literal;
+use crate::runtime::manifest::Manifest;
+use crate::util::Rng;
+
+/// Timing statistics from repeated executions of one artifact.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub reps: u32,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl Timing {
+    pub fn seconds(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// PJRT CPU runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact executable.
+    pub fn compile(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.get(name)?.clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Synthesize the artifact's inputs with a seeded RNG.
+    pub fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Literal>> {
+        let spec = self.manifest.get(name)?;
+        let mut rng = Rng::seed(seed);
+        spec.inputs
+            .iter()
+            .map(|s| literal::synthesize(s, &mut rng))
+            .collect()
+    }
+
+    /// Execute an artifact once; returns the flattened output tuple.
+    pub fn execute(&mut self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.compile(name)?;
+        let result = exe.execute::<Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // All artifacts are lowered with return_tuple=True.
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with borrowed inputs — avoids cloning large state tensors
+    /// on the training hot path (SSPerf: saved ~9% per train step).
+    pub fn execute_refs(&mut self, name: &str, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let exe = self.compile(name)?;
+        let result = exe.execute::<&Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with synthesized inputs.
+    pub fn execute_synth(&mut self, name: &str, seed: u64) -> Result<Vec<Literal>> {
+        let inputs = self.synth_inputs(name, seed)?;
+        self.execute(name, &inputs)
+    }
+
+    /// Time an artifact: warmup once, then `reps` timed executions on the
+    /// same inputs (inputs stay host-side; PJRT copies per call — the
+    /// same for every artifact, so relative shares are preserved).
+    pub fn time_artifact(&mut self, name: &str, reps: u32) -> Result<Timing> {
+        let inputs = self.synth_inputs(name, 0xC0FFEE)?;
+        self.compile(name)?;
+        // Warmup (also validates executability).
+        {
+            let exe = &self.cache[name];
+            let r = exe.execute::<Literal>(&inputs)?;
+            let _ = r[0][0].to_literal_sync()?;
+        }
+        let mut samples = Vec::with_capacity(reps as usize);
+        for _ in 0..reps {
+            let exe = &self.cache[name];
+            let t0 = Instant::now();
+            let r = exe.execute::<Literal>(&inputs)?;
+            // Synchronize: materialize the first output.
+            let _ = r[0][0].to_literal_sync()?;
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / reps.max(1);
+        Ok(Timing {
+            name: name.to_string(),
+            reps,
+            min: samples[0],
+            median: samples[samples.len() / 2],
+            mean,
+        })
+    }
+
+    /// Time a manifest *sequence* (e.g. the unfused LayerNorm chain):
+    /// each item executes as its own "kernel launch", end to end.
+    pub fn time_sequence(&mut self, seq_name: &str, reps: u32) -> Result<Timing> {
+        let names = self
+            .manifest
+            .sequences
+            .get(seq_name)
+            .with_context(|| format!("sequence '{seq_name}' not in manifest"))?
+            .clone();
+        // Pre-synthesize inputs and warm the cache.
+        let mut all_inputs = Vec::new();
+        for n in &names {
+            let inputs = self.synth_inputs(n, 0xBEEF)?;
+            self.compile(n)?;
+            all_inputs.push((n.clone(), inputs));
+        }
+        // Warmup pass.
+        for (n, inputs) in &all_inputs {
+            let exe = &self.cache[n.as_str()];
+            let r = exe.execute::<Literal>(inputs)?;
+            let _ = r[0][0].to_literal_sync()?;
+        }
+        let mut samples = Vec::with_capacity(reps as usize);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            for (n, inputs) in &all_inputs {
+                let exe = &self.cache[n.as_str()];
+                let r = exe.execute::<Literal>(inputs)?;
+                let _ = r[0][0].to_literal_sync()?;
+            }
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / reps.max(1);
+        Ok(Timing {
+            name: seq_name.to_string(),
+            reps,
+            min: samples[0],
+            median: samples[samples.len() / 2],
+            mean,
+        })
+    }
+
+    /// Number of kernel launches in a sequence.
+    pub fn sequence_len(&self, seq_name: &str) -> usize {
+        self.manifest
+            .sequences
+            .get(seq_name)
+            .map(|v| v.len())
+            .unwrap_or(0)
+    }
+}

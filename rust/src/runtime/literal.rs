@@ -1,0 +1,117 @@
+//! Input synthesis: build `xla::Literal`s from manifest tensor specs
+//! with the deterministic in-tree PRNG.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::manifest::{DType, Synth, TensorSpec};
+use crate::util::Rng;
+
+/// Synthesize one input literal per the spec.
+pub fn synthesize(spec: &TensorSpec, rng: &mut Rng) -> Result<Literal> {
+    let n = spec.elements();
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    match spec.dtype {
+        DType::I32 => {
+            let (lo, hi) = match spec.synth {
+                Synth::IntRange { lo, hi } => (lo, hi),
+                Synth::Zeros => (0, 0),
+                _ => (0, 1),
+            };
+            let v: Vec<i32> = (0..n).map(|_| rng.int_range(lo, hi) as i32).collect();
+            Ok(Literal::vec1(&v).reshape(&dims)?)
+        }
+        DType::F32 | DType::Bf16 => {
+            let v: Vec<f32> = match spec.synth {
+                Synth::Normal => (0..n).map(|_| rng.normal_f32()).collect(),
+                Synth::Uniform01 => (0..n).map(|_| rng.uniform_f32()).collect(),
+                Synth::Mask01 => (0..n).map(|_| rng.mask(0.9)).collect(),
+                Synth::Positive => {
+                    (0..n).map(|_| rng.normal_f32().abs() + 0.1).collect()
+                }
+                Synth::Zeros => vec![0.0; n],
+                Synth::Scalar1 => vec![1.0; n],
+                Synth::IntRange { lo, hi } => {
+                    (0..n).map(|_| rng.int_range(lo, hi) as f32).collect()
+                }
+            };
+            Ok(Literal::vec1(&v).reshape(&dims)?)
+        }
+    }
+}
+
+/// Synthesize, scaling values by `scale` (parameter init needs ~N(0,
+/// 0.02) rather than N(0, 1)).
+pub fn synthesize_scaled(spec: &TensorSpec, rng: &mut Rng, scale: f32) -> Result<Literal> {
+    if spec.dtype == DType::I32 {
+        return synthesize(spec, rng);
+    }
+    let n = spec.elements();
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let v: Vec<f32> = match spec.synth {
+        Synth::Zeros => vec![0.0; n],
+        Synth::Scalar1 => vec![1.0; n],
+        _ => (0..n).map(|_| rng.normal_f32() * scale).collect(),
+    };
+    Ok(Literal::vec1(&v).reshape(&dims)?)
+}
+
+/// Read back a scalar f32 from a literal (loss values etc.).
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: &[usize], dtype: DType, synth: Synth) -> TensorSpec {
+        TensorSpec { shape: shape.to_vec(), dtype, synth }
+    }
+
+    #[test]
+    fn synthesizes_shapes_and_kinds() {
+        let mut rng = Rng::seed(1);
+        let l = synthesize(&spec(&[4, 8], DType::F32, Synth::Normal), &mut rng).unwrap();
+        assert_eq!(l.element_count(), 32);
+        let v = l.to_vec::<f32>().unwrap();
+        assert!(v.iter().any(|&x| x != 0.0));
+
+        let l = synthesize(&spec(&[16], DType::F32, Synth::Zeros), &mut rng).unwrap();
+        assert!(l.to_vec::<f32>().unwrap().iter().all(|&x| x == 0.0));
+
+        let l = synthesize(&spec(&[100], DType::F32, Synth::Mask01), &mut rng).unwrap();
+        assert!(l.to_vec::<f32>().unwrap().iter().all(|&x| x == 0.0 || x == 1.0));
+
+        let l = synthesize(&spec(&[64], DType::F32, Synth::Positive), &mut rng).unwrap();
+        assert!(l.to_vec::<f32>().unwrap().iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn int_range_respects_bounds() {
+        let mut rng = Rng::seed(2);
+        let l = synthesize(
+            &spec(&[256], DType::I32, Synth::IntRange { lo: 5, hi: 9 }),
+            &mut rng,
+        )
+        .unwrap();
+        let v = l.to_vec::<i32>().unwrap();
+        assert!(v.iter().all(|&x| (5..=9).contains(&x)));
+    }
+
+    #[test]
+    fn scalar_shape_works() {
+        let mut rng = Rng::seed(3);
+        let l = synthesize(&spec(&[], DType::F32, Synth::Zeros), &mut rng).unwrap();
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(scalar_f32(&l).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = spec(&[32], DType::F32, Synth::Normal);
+        let a = synthesize(&s, &mut Rng::seed(7)).unwrap().to_vec::<f32>().unwrap();
+        let b = synthesize(&s, &mut Rng::seed(7)).unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,258 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust measured path (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Element type of an artifact input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    Bf16,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "bf16" => DType::Bf16,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+}
+
+/// How the runtime synthesizes an input tensor (mirrors aot.TensorSpec).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Synth {
+    Normal,
+    Uniform01,
+    Mask01,
+    Positive,
+    Zeros,
+    Scalar1,
+    IntRange { lo: i64, hi: i64 },
+}
+
+/// One artifact input.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub synth: Synth,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("input missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().map(|v| v as usize).ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?;
+        let synth = match j.get("kind").and_then(Json::as_str).unwrap_or("normal") {
+            "normal" => Synth::Normal,
+            "uniform01" => Synth::Uniform01,
+            "mask01" => Synth::Mask01,
+            "positive" => Synth::Positive,
+            "zeros" => Synth::Zeros,
+            "scalar1" => Synth::Scalar1,
+            "int_range" => Synth::IntRange {
+                lo: j.get("lo").and_then(Json::as_i64).unwrap_or(0),
+                hi: j.get("hi").and_then(Json::as_i64).unwrap_or(0),
+            },
+            other => bail!("unknown synth kind {other}"),
+        };
+        Ok(TensorSpec { shape, dtype, synth })
+    }
+}
+
+/// One AOT-compiled artifact ("kernel" on the measured path).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub category: String,
+    pub impl_: String,
+    pub phase: String,
+    pub op: String,
+    pub inputs: Vec<TensorSpec>,
+    /// (m, n, k, batch) when the artifact is a GEMM.
+    pub gemm: Option<[u64; 4]>,
+    pub flops: u64,
+    pub bytes: u64,
+    /// Number of leading inputs that are parameter tensors (e2e artifacts).
+    pub n_param_tensors: Option<usize>,
+}
+
+impl ArtifactSpec {
+    fn parse(j: &Json) -> Result<ArtifactSpec> {
+        let s = |k: &str| -> String {
+            j.get(k).and_then(Json::as_str).unwrap_or_default().to_string()
+        };
+        let inputs = j
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact missing inputs"))?
+            .iter()
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let gemm = j.get("gemm").and_then(|g| {
+            let a = g.as_arr()?;
+            if a.len() == 4 {
+                Some([
+                    a[0].as_u64().unwrap_or(0),
+                    a[1].as_u64().unwrap_or(0),
+                    a[2].as_u64().unwrap_or(0),
+                    a[3].as_u64().unwrap_or(1),
+                ])
+            } else {
+                None
+            }
+        });
+        Ok(ArtifactSpec {
+            name: s("name"),
+            file: s("file"),
+            category: s("category"),
+            impl_: s("impl"),
+            phase: s("phase"),
+            op: s("op"),
+            inputs,
+            gemm,
+            flops: j.get("flops").and_then(Json::as_u64).unwrap_or(0),
+            bytes: j.get("bytes").and_then(Json::as_u64).unwrap_or(0),
+            n_param_tensors: j
+                .get("meta")
+                .and_then(|m| m.get("n_param_tensors"))
+                .and_then(Json::as_u64)
+                .map(|v| v as usize),
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub sequences: BTreeMap<String, Vec<String>>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let spec = ArtifactSpec::parse(a)?;
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        let mut sequences = BTreeMap::new();
+        if let Some(seqs) = j.get("sequences").and_then(Json::as_obj) {
+            for (k, v) in seqs {
+                let items = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("bad sequence {k}"))?
+                    .iter()
+                    .map(|s| s.as_str().unwrap_or_default().to_string())
+                    .collect::<Vec<_>>();
+                sequences.insert(k.clone(), items);
+            }
+        }
+        Ok(Manifest { artifacts, sequences })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Artifacts in a category, optionally filtered by impl.
+    pub fn in_category<'a>(&'a self, cat: &'a str, impl_: Option<&'a str>)
+        -> impl Iterator<Item = &'a ArtifactSpec> {
+        self.artifacts.values().filter(move |a| {
+            a.category == cat && impl_.map(|i| a.impl_ == i).unwrap_or(true)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "g1", "file": "g1.hlo.txt", "category": "gemm_fc",
+         "impl": "jnp", "phase": "fwd", "op": "fc",
+         "inputs": [{"shape": [4, 8], "dtype": "f32", "kind": "normal"},
+                    {"shape": [8, 2], "dtype": "f32", "kind": "positive"}],
+         "gemm": [2, 4, 8, 1], "flops": 128, "bytes": 160},
+        {"name": "emb", "file": "emb.hlo.txt", "category": "embedding",
+         "impl": "jnp", "phase": "fwd", "op": "embedding",
+         "inputs": [{"shape": [16], "dtype": "i32", "kind": "int_range",
+                     "lo": 0, "hi": 9}],
+         "gemm": null, "flops": 0, "bytes": 64,
+         "meta": {"n_param_tensors": 1}}
+      ],
+      "sequences": {"s": ["g1", "emb"]}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let g = m.get("g1").unwrap();
+        assert_eq!(g.gemm, Some([2, 4, 8, 1]));
+        assert_eq!(g.inputs[1].synth, Synth::Positive);
+        let e = m.get("emb").unwrap();
+        assert_eq!(e.inputs[0].dtype, DType::I32);
+        assert_eq!(e.inputs[0].synth, Synth::IntRange { lo: 0, hi: 9 });
+        assert_eq!(e.n_param_tensors, Some(1));
+        assert_eq!(m.sequences["s"], vec!["g1", "emb"]);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn category_filter() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.in_category("gemm_fc", Some("jnp")).count(), 1);
+        assert_eq!(m.in_category("gemm_fc", Some("pallas")).count(), 0);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if p.join("manifest.json").exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.artifacts.len() >= 50);
+            assert!(m.get("tiny_train_step").is_ok());
+        }
+    }
+}

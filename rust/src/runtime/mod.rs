@@ -1,0 +1,8 @@
+//! PJRT runtime: loads AOT HLO artifacts and executes them (stub — see
+//! executor/manifest/literal modules, filled in next).
+pub mod executor;
+pub mod literal;
+pub mod manifest;
+
+pub use executor::Runtime;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

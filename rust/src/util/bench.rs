@@ -1,0 +1,101 @@
+//! Criterion-style micro-bench harness for the `cargo bench` targets
+//! (criterion itself is unavailable offline).
+//!
+//! Usage in a bench (`harness = false`):
+//! ```no_run
+//! use bertprof::util::bench::Bench;
+//! let mut b = Bench::new("fig04");
+//! b.run("graph build", || { /* work */ });
+//! b.finish();
+//! ```
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub iters: u32,
+}
+
+pub struct Bench {
+    group: String,
+    results: Vec<BenchResult>,
+    /// Target measurement time per case.
+    pub budget: Duration,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        Bench {
+            group: group.to_string(),
+            results: Vec::new(),
+            budget: Duration::from_millis(600),
+        }
+    }
+
+    /// Time `f`, auto-calibrating iteration count to the budget.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = (self.budget.as_nanos() / once.as_nanos()).clamp(3, 10_000) as u32;
+
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / iters;
+        let median = samples[samples.len() / 2];
+        let min = samples[0];
+        println!(
+            "{}/{:<44} iters {:>6}  min {:>12?}  median {:>12?}  mean {:>12?}",
+            self.group, name, iters, min, median, mean
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            mean,
+            median,
+            min,
+            iters,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print a trailing summary (and keep the process exit code 0 so
+    /// `cargo bench` chains).
+    pub fn finish(&self) {
+        println!(
+            "{}: {} case(s) benchmarked",
+            self.group,
+            self.results.len()
+        );
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept behind one name for the benches).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new("test");
+        b.budget = Duration::from_millis(20);
+        let r = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.median && r.median <= r.mean * 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree substrates for the offline environment (no serde/clap/
+//! criterion/proptest/rand available — see Cargo.toml note).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

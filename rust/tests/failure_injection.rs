@@ -1,0 +1,100 @@
+//! Failure-injection tests: the runtime and manifest layers must fail
+//! loudly and legibly — never panic, never execute garbage.
+
+use std::path::PathBuf;
+
+use bertprof::runtime::{Manifest, Runtime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn missing_artifacts_dir_is_a_clean_error() {
+    let err = match Runtime::load(&PathBuf::from("/nonexistent/place")) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn malformed_manifest_is_rejected() {
+    for bad in [
+        "",
+        "{",
+        "[]",
+        r#"{"artifacts": "not-a-list"}"#,
+        r#"{"artifacts": [{"name": "x"}]}"#, // missing inputs
+        r#"{"artifacts": [{"name": "x", "inputs": [{"shape": "oops"}]}]}"#,
+    ] {
+        assert!(Manifest::parse(bad).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn unknown_synth_kind_is_rejected() {
+    let bad = r#"{"artifacts": [{"name": "x", "file": "x", "category": "c",
+        "impl": "jnp", "phase": "fwd", "op": "o",
+        "inputs": [{"shape": [2], "dtype": "f32", "kind": "martian"}]}]}"#;
+    assert!(Manifest::parse(bad).is_err());
+}
+
+#[test]
+fn unknown_dtype_is_rejected() {
+    let bad = r#"{"artifacts": [{"name": "x", "file": "x", "category": "c",
+        "impl": "jnp", "phase": "fwd", "op": "o",
+        "inputs": [{"shape": [2], "dtype": "f64", "kind": "normal"}]}]}"#;
+    assert!(Manifest::parse(bad).is_err());
+}
+
+#[test]
+fn unknown_artifact_name_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let err = match rt.execute_synth("no_such_artifact", 0) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("not in manifest"));
+}
+
+#[test]
+fn wrong_input_count_is_an_error_not_ub() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    // ew_add wants 2 inputs; give it 1.
+    let inputs = rt.synth_inputs("ew_scale", 0).unwrap();
+    assert!(rt.execute("ew_add", &inputs).is_err());
+}
+
+#[test]
+fn corrupt_hlo_file_is_a_parse_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Copy the manifest + a corrupted HLO into a temp dir.
+    let tmp = std::env::temp_dir().join("bertprof_corrupt_test");
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::copy(dir.join("manifest.json"), tmp.join("manifest.json")).unwrap();
+    std::fs::write(tmp.join("ew_add.hlo.txt"), "this is not HLO").unwrap();
+    let mut rt = Runtime::load(&tmp).unwrap();
+    let err = match rt.compile("ew_add") {
+        Err(e) => e,
+        Ok(_) => panic!("corrupt HLO must not compile"),
+    };
+    assert!(format!("{err:#}").to_lowercase().contains("hlo"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn missing_sequence_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let err = match rt.time_sequence("no_such_sequence", 1) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("not in manifest"));
+}

@@ -1,0 +1,205 @@
+//! Property-based tests (randomized with the in-tree PRNG — proptest is
+//! unavailable offline): invariants of the op-graph, roofline, GEMM,
+//! distributed, and JSON substrates over hundreds of random
+//! configurations.
+
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::dist::allreduce::{ring_allreduce_time, ring_allreduce_volume};
+use bertprof::dist::LinkSpec;
+use bertprof::model::gemm::{table3, GemmDims, GemmKind};
+use bertprof::model::IterationGraph;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::perf::gemm_model::{gemm_efficiency, gemm_time};
+use bertprof::perf::roofline::iteration_seconds;
+use bertprof::util::{Json, Rng};
+
+/// Random-but-valid model config.
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let heads = [4u64, 8, 16][rng.int_range(0, 2) as usize];
+    let d_model = heads * 64 * rng.int_range(1, 3) as u64;
+    ModelConfig {
+        batch: rng.int_range(1, 64) as u64,
+        seq_len: [32u64, 64, 128, 256, 512][rng.int_range(0, 4) as usize],
+        d_model,
+        n_heads: heads,
+        d_ff: 4 * d_model,
+        n_layers: rng.int_range(1, 48) as u64,
+        vocab: rng.int_range(1000, 50000) as u64,
+        max_seq_len: 512,
+        type_vocab: 2,
+    }
+}
+
+#[test]
+fn prop_graph_flops_scale_linearly_with_layer_count() {
+    let mut rng = Rng::seed(11);
+    for _ in 0..50 {
+        let cfg = random_config(&mut rng);
+        let r1 = RunConfig::new(cfg.with_layers(8), Phase::Phase1, Precision::Fp32);
+        let r2 = RunConfig::new(cfg.with_layers(16), Phase::Phase1, Precision::Fp32);
+        let f = |r: &RunConfig| {
+            IterationGraph::build(r)
+                .ops_in_layer(bertprof::model::op::LayerClass::Transformer)
+                .map(|o| o.total_flops())
+                .sum::<u64>()
+        };
+        assert_eq!(2 * f(&r1), f(&r2), "{cfg:?}");
+    }
+}
+
+#[test]
+fn prop_precision_never_changes_flops_only_bytes() {
+    let mut rng = Rng::seed(12);
+    for _ in 0..50 {
+        let cfg = random_config(&mut rng);
+        let a = IterationGraph::build(&RunConfig::new(cfg, Phase::Phase1, Precision::Fp32));
+        let b = IterationGraph::build(&RunConfig::new(cfg, Phase::Phase1, Precision::Mixed));
+        assert_eq!(a.total_flops(), b.total_flops());
+        assert!(a.total_bytes() > b.total_bytes());
+    }
+}
+
+#[test]
+fn prop_roofline_time_monotone_in_bandwidth_and_compute() {
+    let mut rng = Rng::seed(13);
+    for _ in 0..30 {
+        let cfg = random_config(&mut rng);
+        let run = RunConfig::new(cfg, Phase::Phase1, Precision::Fp32);
+        let g = IterationGraph::build(&run);
+        let base = DeviceSpec::mi100();
+        let mut fast_mem = base.clone();
+        fast_mem.mem_bw *= 2.0;
+        let mut fast_compute = base.clone();
+        fast_compute.fp32_matrix_flops *= 2.0;
+        fast_compute.fp32_vector_flops *= 2.0;
+        let t0 = iteration_seconds(&g, &base, run.precision);
+        assert!(iteration_seconds(&g, &fast_mem, run.precision) <= t0 + 1e-12);
+        assert!(iteration_seconds(&g, &fast_compute, run.precision) <= t0 + 1e-12);
+    }
+}
+
+#[test]
+fn prop_gemm_efficiency_in_unit_interval_and_monotone_in_size() {
+    let mut rng = Rng::seed(14);
+    for _ in 0..200 {
+        let m = rng.int_range(1, 8192) as u64;
+        let n = rng.int_range(1, 8192) as u64;
+        let k = rng.int_range(1, 8192) as u64;
+        let b = rng.int_range(1, 64) as u64;
+        let g = GemmDims::new(GemmKind::Fc1, m, n, k, b);
+        let e = gemm_efficiency(&g);
+        assert!(e > 0.0 && e <= 1.0, "{g:?} -> {e}");
+        // Doubling every dim never reduces efficiency.
+        let g2 = GemmDims::new(GemmKind::Fc1, 2 * m, 2 * n, 2 * k, b);
+        assert!(gemm_efficiency(&g2) >= e - 1e-9, "{g:?}");
+    }
+}
+
+#[test]
+fn prop_gemm_time_positive_and_superlinear_total() {
+    let dev = DeviceSpec::mi100();
+    let mut rng = Rng::seed(15);
+    for _ in 0..100 {
+        let m = rng.int_range(16, 4096) as u64;
+        let n = rng.int_range(16, 4096) as u64;
+        let k = rng.int_range(16, 4096) as u64;
+        let g = GemmDims::new(GemmKind::Fc1, m, n, k, 1);
+        let t = gemm_time(&g, &dev, Precision::Fp32);
+        assert!(t > 0.0 && t.is_finite());
+        // 8x the flops never runs faster.
+        let g8 = GemmDims::new(GemmKind::Fc1, 2 * m, 2 * n, 2 * k, 1);
+        assert!(gemm_time(&g8, &dev, Precision::Fp32) >= t);
+    }
+}
+
+#[test]
+fn prop_table3_dims_always_token_or_width_multiples() {
+    // Takeaway 6 generalized: every GEMM dim is one of n, n*B, d, d/h,
+    // or d_ff for ANY hyperparameters.
+    let mut rng = Rng::seed(16);
+    for _ in 0..50 {
+        let cfg = random_config(&mut rng);
+        let allowed = [cfg.seq_len, cfg.tokens(), cfg.d_model, cfg.d_head(), cfg.d_ff];
+        for row in table3(&cfg) {
+            for g in [row.fwd, row.bwd_dgrad, row.bwd_wgrad] {
+                for dim in [g.m, g.n, g.k] {
+                    assert!(allowed.contains(&dim), "{dim} not in {allowed:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_allreduce_volume_bounded_by_2x_payload() {
+    let mut rng = Rng::seed(17);
+    for _ in 0..200 {
+        let bytes = rng.int_range(1, 1 << 33) as u64;
+        let devices = rng.int_range(1, 512) as u64;
+        let v = ring_allreduce_volume(bytes, devices);
+        assert!(v <= 2 * bytes, "{v} > 2*{bytes}");
+        let t = ring_allreduce_time(bytes, devices, &LinkSpec::pcie4x16());
+        assert!(t >= 0.0 && t.is_finite());
+        // More devices never shrinks the time (same payload).
+        if devices >= 2 {
+            let t2 = ring_allreduce_time(bytes, devices * 2, &LinkSpec::pcie4x16());
+            assert!(t2 >= t - 1e-12);
+        }
+    }
+}
+
+#[test]
+fn prop_lamb_bytes_invariant_under_batch_and_seq() {
+    let mut rng = Rng::seed(18);
+    for _ in 0..50 {
+        let cfg = random_config(&mut rng);
+        let mut cfg2 = cfg;
+        cfg2.batch = cfg.batch * 2;
+        cfg2.seq_len = cfg.seq_len / 2 + 1;
+        let f = |c: ModelConfig| -> u64 {
+            bertprof::model::lamb::lamb_ops(
+                &RunConfig::new(c, Phase::Phase1, Precision::Fp32))
+                .iter().map(|o| o.total_bytes()).sum()
+        };
+        assert_eq!(f(cfg), f(cfg2));
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::seed(19);
+    fn random_json(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.int_range(0, 3) } else { rng.int_range(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.int_range(-1_000_000, 1_000_000) as f64) / 8.0),
+            3 => Json::Str(format!("s{}-\"quoted\"\n{}", rng.next_u64(),
+                                    rng.int_range(0, 9))),
+            4 => Json::Arr((0..rng.int_range(0, 4))
+                .map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::obj(
+                vec![("a", random_json(rng, depth - 1)),
+                     ("b", random_json(rng, depth - 1))]),
+        }
+    }
+    for _ in 0..300 {
+        let j = random_json(&mut rng, 3);
+        let txt = j.to_string();
+        let back = Json::parse(&txt).unwrap_or_else(|e| panic!("{txt}: {e}"));
+        assert_eq!(back, j, "{txt}");
+    }
+}
+
+#[test]
+fn prop_timeline_fractions_always_sum_to_one() {
+    let mut rng = Rng::seed(20);
+    for _ in 0..30 {
+        let cfg = random_config(&mut rng);
+        for prec in [Precision::Fp32, Precision::Mixed] {
+            let run = RunConfig::new(cfg, Phase::Phase1, prec);
+            let t = bertprof::profiler::Timeline::modeled(&run, &DeviceSpec::mi100());
+            let s: f64 = t.layer_fractions().values().sum();
+            assert!((s - 1.0).abs() < 1e-9, "{cfg:?}");
+        }
+    }
+}

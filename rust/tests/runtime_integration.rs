@@ -1,0 +1,155 @@
+//! Integration tests over the PJRT runtime: load real artifacts, execute
+//! them, check numerics against closed forms, thread train-step state.
+//!
+//! These need `make artifacts` to have run; they skip (pass trivially)
+//! when the artifacts directory is absent so `cargo test` works in a
+//! fresh checkout.
+
+use std::path::PathBuf;
+
+use bertprof::coordinator::{MeasureRunner, Trainer};
+use bertprof::runtime::Runtime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(p) => p,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn gemm_artifact_matches_flops_shape() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let out = rt.execute_synth("gemm_fc1_fwd", 7).unwrap();
+    assert_eq!(out.len(), 1);
+    // (512, 256) @ (256, 1024) -> (512, 1024)
+    assert_eq!(out[0].element_count(), 512 * 1024);
+}
+
+#[test]
+fn ew_add_artifact_is_exact() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let inputs = rt.synth_inputs("ew_add", 3).unwrap();
+    let a = inputs[0].to_vec::<f32>().unwrap();
+    let b = inputs[1].to_vec::<f32>().unwrap();
+    let out = rt.execute("ew_add", &inputs).unwrap();
+    let got = out[0].to_vec::<f32>().unwrap();
+    for i in 0..a.len() {
+        assert!((got[i] - (a[i] + b[i])).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn softmax_artifact_rows_sum_to_one() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let out = rt.execute_synth("softmax_chain", 11).unwrap();
+    let v = out[0].to_vec::<f32>().unwrap();
+    // (16, 128, 128): check each row sums to 1.
+    for row in v.chunks(128) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "{s}");
+    }
+}
+
+#[test]
+fn pallas_and_jnp_artifacts_agree() {
+    // The L1 Pallas kernels lowered into HLO produce the same numbers as
+    // the XLA-fused jnp variants — the L1<->L2 composition proof on the
+    // rust side.
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    for (jnp, pallas) in [
+        ("gelu_fwd", "gelu_fwd_pallas"),
+        ("softmax_chain", "softmax_chain_pallas"),
+        ("drln_fwd", "drln_fwd_pallas"),
+        ("layernorm_fused", "layernorm_fused_pallas"),
+    ] {
+        // Identical seeds -> identical inputs.
+        let inputs = rt.synth_inputs(jnp, 99).unwrap();
+        let a = rt.execute(jnp, &inputs).unwrap()[0].to_vec::<f32>().unwrap();
+        let b = rt.execute(pallas, &inputs).unwrap()[0].to_vec::<f32>().unwrap();
+        assert_eq!(a.len(), b.len(), "{jnp}");
+        for i in 0..a.len() {
+            assert!((a[i] - b[i]).abs() < 1e-3 + 1e-3 * a[i].abs(),
+                    "{jnp}[{i}]: {} vs {}", a[i], b[i]);
+        }
+    }
+}
+
+#[test]
+fn lamb_artifact_zero_gradient_weight_decay_only() {
+    // Closed form: g=0, m=0, v=0 => u = wd * w (see kernel tests).
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let spec = rt.manifest().get("lamb_stage1").unwrap().clone();
+    let mut inputs = Vec::new();
+    for (i, ts) in spec.inputs.iter().enumerate() {
+        let n: usize = ts.elements();
+        let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
+        let v = match i {
+            3 => vec![1.0f32; n],       // w = 1
+            4 => vec![1.0f32; n],       // global norm = 1
+            _ => vec![0.0f32; n],       // g = m = v = 0
+        };
+        inputs.push(xla::Literal::vec1(&v).reshape(&dims).unwrap());
+    }
+    let out = rt.execute("lamb_stage1", &inputs).unwrap();
+    let u = out[0].to_vec::<f32>().unwrap();
+    for x in &u {
+        assert!((x - 0.01).abs() < 1e-6, "{x}"); // weight_decay = 0.01
+    }
+}
+
+#[test]
+fn measured_breakdown_has_sane_shape() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut mr = MeasureRunner::new(&mut rt, 3);
+    let t = mr
+        .breakdown(&bertprof::config::ModelConfig::bert_measure(), "itest")
+        .unwrap();
+    let fr = t.layer_fractions();
+    // Transformer dominates even at the reduced config.
+    assert!(fr["Transformer"] > 0.4, "{:?}", fr);
+    assert!(fr["LAMB"] > 0.005, "{:?}", fr);
+    assert!(t.total_seconds() > 0.0);
+}
+
+#[test]
+fn fusion_sequences_fused_is_faster() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut mr = MeasureRunner::new(&mut rt, 5);
+    for (unf, fus) in [("layernorm_unfused", "layernorm_fused"),
+                       ("drln_unfused", "drln_fused")] {
+        let (k, t) = mr.fusion_ratio(unf, fus).unwrap();
+        assert!(k < 0.5, "{unf}: kernel ratio {k}");
+        assert!(t < 1.0, "{unf}: time ratio {t}");
+    }
+}
+
+#[test]
+fn trainer_threads_state_and_loss_finite() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut trainer = Trainer::new(&mut rt, 7).unwrap();
+    let l1 = trainer.step().unwrap();
+    let l2 = trainer.step().unwrap();
+    assert!(l1.is_finite() && l2.is_finite());
+    assert_eq!(trainer.current_step().unwrap(), 2.0);
+    // Untrained loss ~= ln(vocab) + ln(2).
+    assert!(l1 > 5.0 && l1 < 12.0, "{l1}");
+}

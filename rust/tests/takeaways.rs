@@ -1,0 +1,239 @@
+//! Table 1 — every paper takeaway as an executable assertion over the
+//! analytical stack. One test per takeaway (T1..T15); each comment
+//! quotes the claim being checked.
+
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::dist::{DataParallelModel, LinkSpec, ModelParallelModel};
+use bertprof::model::gemm::table3;
+use bertprof::model::lamb;
+use bertprof::model::op::{LayerClass, OpCategory};
+use bertprof::model::IterationGraph;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::perf::roofline::{estimate_graph, estimate_op};
+
+fn run(b: u64, prec: Precision) -> RunConfig {
+    RunConfig::new(ModelConfig::bert_large().with_batch(b), Phase::Phase1, prec)
+}
+
+fn layer_fraction(r: &RunConfig, layer: LayerClass) -> f64 {
+    let g = IterationGraph::build(r);
+    let dev = DeviceSpec::mi100();
+    let times = estimate_graph(&g, &dev, r.precision);
+    let total: f64 = times.iter().map(|(_, t)| t).sum();
+    times.iter().filter(|(o, _)| o.layer == layer).map(|(_, t)| t).sum::<f64>() / total
+}
+
+fn category_fraction(r: &RunConfig, pred: impl Fn(OpCategory) -> bool) -> f64 {
+    let g = IterationGraph::build(r);
+    let dev = DeviceSpec::mi100();
+    let times = estimate_graph(&g, &dev, r.precision);
+    let total: f64 = times.iter().map(|(_, t)| t).sum();
+    times.iter().filter(|(o, _)| pred(o.category)).map(|(_, t)| t).sum::<f64>() / total
+}
+
+#[test]
+fn t01_transformer_layers_dominate_everything_else_negligible() {
+    // "Transformer layers dominate training time; output & embedding
+    // layers have negligible contribution."
+    let r = run(32, Precision::Fp32);
+    assert!(layer_fraction(&r, LayerClass::Transformer) > 0.6);
+    assert!(layer_fraction(&r, LayerClass::OutputLayer) < 0.05);
+    assert!(layer_fraction(&r, LayerClass::Embedding) < 0.01);
+}
+
+#[test]
+fn t02_lamb_second_highest_and_grows_with_fewer_tokens() {
+    let lamb32 = layer_fraction(&run(32, Precision::Fp32), LayerClass::Optimizer);
+    let lamb4 = layer_fraction(&run(4, Precision::Fp32), LayerClass::Optimizer);
+    // Second-highest contributor at B=32 (7-20% per SS3.2.3).
+    assert!(lamb32 > 0.07 && lamb32 < 0.20, "{lamb32}");
+    assert!(lamb32 > layer_fraction(&run(32, Precision::Fp32), LayerClass::OutputLayer));
+    // Grows as token count shrinks.
+    assert!(lamb4 > 1.5 * lamb32);
+}
+
+#[test]
+fn t03_lamb_more_important_under_mixed_precision() {
+    let f = layer_fraction(&run(32, Precision::Fp32), LayerClass::Optimizer);
+    let m = layer_fraction(&run(32, Precision::Mixed), LayerClass::Optimizer);
+    assert!(m > f, "mp {m} fp32 {f}");
+    // Absolute LAMB bytes identical (FP32 master copies).
+    let bytes = |p| -> u64 {
+        lamb::lamb_ops(&run(32, p)).iter().map(|o| o.total_bytes()).sum()
+    };
+    assert_eq!(bytes(Precision::Fp32), bytes(Precision::Mixed));
+}
+
+#[test]
+fn t04_linear_and_fc_gemms_dominate_transformer_time() {
+    // "~57% of iteration runtime in FP32, ~40% in MP" for linear + FC.
+    let frac32 = category_fraction(&run(32, Precision::Fp32), |c| {
+        matches!(c, OpCategory::LinearGemm | OpCategory::FcGemm)
+    });
+    let frac_mp = category_fraction(&run(32, Precision::Mixed), |c| {
+        matches!(c, OpCategory::LinearGemm | OpCategory::FcGemm)
+    });
+    assert!(frac32 > 0.45 && frac32 < 0.72, "{frac32}");
+    assert!(frac_mp > 0.28 && frac_mp < 0.55, "{frac_mp}");
+    assert!(frac_mp < frac32);
+}
+
+#[test]
+fn t05_non_gemm_ops_grow_in_importance_at_reduced_precision() {
+    let non_gemm = |p| category_fraction(&run(32, p), |c| !c.is_gemm());
+    assert!(non_gemm(Precision::Mixed) > non_gemm(Precision::Fp32) + 0.05);
+}
+
+#[test]
+fn t06_no_matrix_vector_ops_at_batch_one() {
+    for row in table3(&ModelConfig::bert_large().with_batch(1)) {
+        for g in [row.fwd, row.bwd_dgrad, row.bwd_wgrad] {
+            assert!(g.m > 1 && g.n > 1 && g.k > 1, "{g:?}");
+        }
+    }
+}
+
+#[test]
+fn t07_not_all_gemms_equal_attention_bgemms_memory_bound() {
+    let dev = DeviceSpec::mi100();
+    let t3 = table3(&ModelConfig::bert_large());
+    let eb = 4;
+    // FC GEMM ops/byte >> attention B-GEMM ops/byte.
+    assert!(t3[3].fwd.ops_per_byte(eb) > 5.0 * t3[1].fwd.ops_per_byte(eb));
+    assert!(bertprof::perf::gemm_model::is_memory_bound(&t3[1].fwd, &dev, Precision::Fp32));
+    assert!(!bertprof::perf::gemm_model::is_memory_bound(&t3[3].fwd, &dev, Precision::Fp32));
+}
+
+#[test]
+fn t08_lamb_reads_4x_model_size() {
+    let m = lamb::lamb_read_multiple(&run(32, Precision::Fp32));
+    assert!(m > 3.9 && m < 4.1, "{m}");
+}
+
+#[test]
+fn t09_memory_bound_ops_are_30_to_40_pct_of_fp32_runtime() {
+    let r = run(32, Precision::Fp32);
+    let g = IterationGraph::build(&r);
+    let dev = DeviceSpec::mi100();
+    let mut mem = 0.0;
+    let mut total = 0.0;
+    for op in &g.ops {
+        let t = estimate_op(op, &dev, r.precision);
+        total += t.seconds * op.count as f64;
+        if t.memory_bound {
+            mem += t.seconds * op.count as f64;
+        }
+    }
+    let frac = mem / total;
+    assert!(frac > 0.25 && frac < 0.50, "{frac}");
+}
+
+#[test]
+fn t10_memory_bound_share_grows_to_half_under_mp() {
+    let frac = |p: Precision| {
+        let r = run(32, p);
+        let g = IterationGraph::build(&r);
+        let dev = DeviceSpec::mi100();
+        let mut mem = 0.0;
+        let mut total = 0.0;
+        for op in &g.ops {
+            let t = estimate_op(op, &dev, r.precision);
+            total += t.seconds * op.count as f64;
+            if t.memory_bound {
+                mem += t.seconds * op.count as f64;
+            }
+        }
+        mem / total
+    };
+    assert!(frac(Precision::Mixed) > frac(Precision::Fp32) + 0.08);
+    assert!(frac(Precision::Mixed) > 0.40, "{}", frac(Precision::Mixed));
+}
+
+#[test]
+fn t11_fewer_tokens_raise_memory_intensive_share() {
+    let ew = |b| category_fraction(&run(b, Precision::Fp32), |c| {
+        matches!(c, OpCategory::LambStage1 | OpCategory::LambStage2
+                 | OpCategory::LambNorm | OpCategory::DrResLn | OpCategory::Gelu)
+    });
+    assert!(ew(4) > ew(32));
+    // Sequence-length shrink has the same effect.
+    let mut short = run(32, Precision::Fp32);
+    short.model.seq_len = 64;
+    let ew_short = category_fraction(&short, |c| {
+        matches!(c, OpCategory::LambStage1 | OpCategory::LambStage2
+                 | OpCategory::LambNorm | OpCategory::DrResLn | OpCategory::Gelu)
+    });
+    assert!(ew_short > ew(32));
+}
+
+#[test]
+fn t12_transformer_and_lamb_scale_linearly_with_layer_count() {
+    let time = |n: u64, layer: LayerClass| -> f64 {
+        let r = RunConfig::new(ModelConfig::bert_large().with_layers(n),
+                               Phase::Phase1, Precision::Fp32);
+        let g = IterationGraph::build(&r);
+        let dev = DeviceSpec::mi100();
+        estimate_graph(&g, &dev, r.precision)
+            .iter()
+            .filter(|(o, _)| o.layer == layer)
+            .map(|(_, t)| t)
+            .sum()
+    };
+    for layer in [LayerClass::Transformer, LayerClass::Optimizer] {
+        let r = time(48, layer) / time(24, layer);
+        assert!(r > 1.85 && r < 2.15, "{layer:?} {r}");
+    }
+    // Their combined fraction grows slightly (embedding/output constant).
+    let lf = |n: u64| {
+        let r = RunConfig::new(ModelConfig::bert_large().with_layers(n),
+                               Phase::Phase1, Precision::Fp32);
+        layer_fraction(&r, LayerClass::Transformer)
+            + layer_fraction(&r, LayerClass::Optimizer)
+    };
+    assert!(lf(48) >= lf(24));
+}
+
+#[test]
+fn t13_wider_models_raise_gemm_and_lamb_proportion() {
+    let base = run(32, Precision::Fp32);
+    let wide = RunConfig::new(ModelConfig::bert_large().with_width(2048),
+                              Phase::Phase1, Precision::Fp32);
+    let gemm = |r: &RunConfig| category_fraction(r, |c| {
+        matches!(c, OpCategory::LinearGemm | OpCategory::FcGemm)
+    });
+    assert!(gemm(&wide) > gemm(&base) - 0.02); // GEMMs hold/grow
+    assert!(layer_fraction(&wide, LayerClass::Optimizer)
+            > layer_fraction(&base, LayerClass::Optimizer));
+}
+
+#[test]
+fn t14_data_parallel_breakdown_matches_single_device() {
+    let dev = DeviceSpec::mi100();
+    let r = run(16, Precision::Fp32);
+    let dp = DataParallelModel::new(64, LinkSpec::pcie4x16(), true).breakdown(&r, &dev);
+    let single = DataParallelModel::new(1, LinkSpec::pcie4x16(), true).breakdown(&r, &dev);
+    // Comm mostly hidden; compute mix unchanged.
+    assert!(dp.comm_fraction() < 0.08, "{}", dp.comm_fraction());
+    let mix = |b: &bertprof::dist::DistBreakdown| b.lamb / (b.total() - b.comm_exposed);
+    assert!((mix(&dp) - mix(&single)).abs() < 0.01);
+}
+
+#[test]
+fn t15_model_parallel_shrinks_lamb_but_grows_serialized_comm() {
+    let dev = DeviceSpec::mi100();
+    let link = LinkSpec::pcie4x16();
+    let single = ModelParallelModel::new(1, link.clone())
+        .breakdown(&run(16, Precision::Fp32), &dev);
+    let m2 = ModelParallelModel::new(2, link.clone())
+        .breakdown(&run(16, Precision::Fp32), &dev);
+    let m8 = ModelParallelModel::new(8, link.clone())
+        .breakdown(&run(64, Precision::Fp32), &dev);
+    assert!(m2.lamb_fraction() < single.lamb_fraction());
+    assert!(m8.lamb_fraction() < m2.lamb_fraction());
+    assert!(m8.comm_fraction() > m2.comm_fraction());
+    // Comm volume grows with model parallelism (larger batch).
+    let mp2 = ModelParallelModel::new(2, link.clone());
+    let mp8 = ModelParallelModel::new(8, link);
+    assert!(mp8.comm_volume(&run(64, Precision::Fp32))
+            > mp2.comm_volume(&run(16, Precision::Fp32)));
+}
