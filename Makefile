@@ -1,0 +1,24 @@
+# bertprof build drivers. `make artifacts` is the only step that needs
+# python (JAX); everything else is cargo.
+
+.PHONY: build test bench doc artifacts clean-artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+doc:
+	cargo doc --no-deps
+
+# Lower every HLO artifact + manifest.json (DESIGN.md SS2). Run from
+# python/ so aot.py's relative imports and default --out resolve.
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+clean-artifacts:
+	rm -rf artifacts

@@ -1,0 +1,106 @@
+//! Ring-collective cost models (the communication terms of Fig. 12).
+//!
+//! The bandwidth-optimal ring AllReduce over `D` devices runs a
+//! reduce-scatter phase then an all-gather phase, `D-1` steps each; every
+//! device sends `payload/D` bytes per step, so the per-device wire volume
+//! is `2*(D-1)/D * payload` and the time is
+//!
+//! ```text
+//! T_ring(b, D) = 2*(D-1)*alpha + (2*(D-1)/D) * b / beta
+//! ```
+//!
+//! with `alpha` the link latency and `beta` the link bandwidth. The
+//! SS5.2 in-network what-if (`perf::whatif::innetwork_allreduce_time`)
+//! compares against exactly this model.
+
+use crate::dist::interconnect::LinkSpec;
+
+/// Number of ring steps (message rounds) for a `devices`-wide AllReduce:
+/// `2*(D-1)` (reduce-scatter + all-gather), 0 for a single device.
+pub fn ring_allreduce_steps(devices: u64) -> u64 {
+    if devices <= 1 {
+        0
+    } else {
+        2 * (devices - 1)
+    }
+}
+
+/// Bytes each device puts on the wire for a ring AllReduce of `bytes`:
+/// `2*(D-1)/D * bytes` — always below `2*bytes`, approaching it as `D`
+/// grows. Zero for a single device (no communication).
+pub fn ring_allreduce_volume(bytes: u64, devices: u64) -> u64 {
+    if devices <= 1 {
+        0
+    } else {
+        2 * bytes * (devices - 1) / devices
+    }
+}
+
+/// Seconds for a ring AllReduce of `bytes` across `devices` over `link`:
+/// the `2*(D-1)` latency steps plus the `2*(D-1)/D` payload traversals.
+/// Monotone non-decreasing in `devices` for a fixed payload.
+pub fn ring_allreduce_time(bytes: u64, devices: u64, link: &LinkSpec) -> f64 {
+    if devices <= 1 {
+        return 0.0;
+    }
+    let d = devices as f64;
+    2.0 * (d - 1.0) * link.latency + (2.0 * (d - 1.0) / d) * bytes as f64 / link.bandwidth
+}
+
+/// Seconds for the reduce-scatter half alone (`(D-1)` steps, `(D-1)/D`
+/// payload traversals) — ZeRO's gradient-reduction phase.
+pub fn reduce_scatter_time(bytes: u64, devices: u64, link: &LinkSpec) -> f64 {
+    if devices <= 1 {
+        return 0.0;
+    }
+    let d = devices as f64;
+    (d - 1.0) * link.latency + ((d - 1.0) / d) * bytes as f64 / link.bandwidth
+}
+
+/// Seconds for the all-gather half alone (same cost shape as
+/// reduce-scatter) — ZeRO's parameter-broadcast phase.
+pub fn all_gather_time(bytes: u64, devices: u64, link: &LinkSpec) -> f64 {
+    reduce_scatter_time(bytes, devices, link)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_device_is_free() {
+        let link = LinkSpec::pcie4x16();
+        assert_eq!(ring_allreduce_steps(1), 0);
+        assert_eq!(ring_allreduce_volume(1 << 30, 1), 0);
+        assert_eq!(ring_allreduce_time(1 << 30, 1, &link), 0.0);
+        assert_eq!(reduce_scatter_time(1 << 30, 1, &link), 0.0);
+    }
+
+    #[test]
+    fn volume_approaches_2x_payload() {
+        let b = 1u64 << 30;
+        let v2 = ring_allreduce_volume(b, 2);
+        let v64 = ring_allreduce_volume(b, 64);
+        assert_eq!(v2, b); // 2*(1/2)*b
+        assert!(v64 > v2 && v64 < 2 * b);
+    }
+
+    #[test]
+    fn halves_sum_to_the_whole() {
+        let link = LinkSpec::pcie4x16();
+        for d in [2u64, 8, 64, 500] {
+            let b = 123_456_789u64;
+            let whole = ring_allreduce_time(b, d, &link);
+            let halves = reduce_scatter_time(b, d, &link) + all_gather_time(b, d, &link);
+            assert!((whole - halves).abs() < 1e-9 * whole.max(1e-12), "{whole} {halves}");
+        }
+    }
+
+    #[test]
+    fn faster_link_is_faster() {
+        let b = 1u64 << 30;
+        let t_pcie = ring_allreduce_time(b, 8, &LinkSpec::pcie4x16());
+        let t_nvl = ring_allreduce_time(b, 8, &LinkSpec::nvlink3());
+        assert!(t_nvl < t_pcie);
+    }
+}

@@ -1,0 +1,171 @@
+//! Data-parallel training model (Fig. 12's `DP` bars, paper SS5.3.1).
+//!
+//! Every device holds a full replica and computes the iteration on its
+//! local mini-batch; the only communication is the per-iteration ring
+//! AllReduce of the gradients (one model-size payload at the working
+//! gradient precision). The paper's two variants:
+//!
+//! * **with overlap** — per-layer gradient buckets AllReduce as backprop
+//!   produces them, so only `max(T_ring - T_backward, T_tail)` is
+//!   exposed, where `T_tail` is the AllReduce of the *last* bucket
+//!   (embedding + heads, whose gradients finish with backprop and have
+//!   nothing left to hide under);
+//! * **without overlap** — the full `T_ring` serializes after backprop.
+//!
+//! The compute side is the unmodified single-device roofline profile, so
+//! takeaway 14 (DP's compute mix matches single-device) holds by
+//! construction.
+
+use crate::config::RunConfig;
+use crate::dist::allreduce::{ring_allreduce_time, ring_allreduce_volume};
+use crate::dist::interconnect::LinkSpec;
+use crate::dist::{compute_profile, tail_gradient_bytes, DistBreakdown};
+use crate::perf::device::DeviceSpec;
+
+/// Data-parallel configuration: `devices` replicas over `link`, with or
+/// without AllReduce/backprop overlap.
+#[derive(Debug, Clone)]
+pub struct DataParallelModel {
+    /// Number of replicas (`D` in the ring formulas).
+    pub devices: u64,
+    /// The inter-device link the gradient ring runs over.
+    pub link: LinkSpec,
+    /// Whether per-layer gradient AllReduces overlap with backprop.
+    pub overlap: bool,
+}
+
+impl DataParallelModel {
+    /// A `devices`-way replica group over `link`.
+    pub fn new(devices: u64, link: LinkSpec, overlap: bool) -> DataParallelModel {
+        DataParallelModel { devices, link, overlap }
+    }
+
+    /// Gradient payload per iteration: one model-size tensor at the
+    /// working gradient precision (FP16 gradients under mixed precision;
+    /// the FP32 master update stays device-local).
+    pub fn gradient_bytes(&self, run: &RunConfig) -> u64 {
+        run.model.param_count() * run.precision.act_bytes()
+    }
+
+    /// Per-device wire volume of the gradient ring AllReduce
+    /// (`2*(D-1)/D` model sizes).
+    pub fn comm_volume(&self, run: &RunConfig) -> u64 {
+        ring_allreduce_volume(self.gradient_bytes(run), self.devices)
+    }
+
+    /// Total (overlap-ignorant) AllReduce seconds per iteration.
+    pub fn comm_seconds(&self, run: &RunConfig) -> f64 {
+        ring_allreduce_time(self.gradient_bytes(run), self.devices, &self.link)
+    }
+
+    /// The Fig. 12 per-device breakdown for this configuration.
+    pub fn breakdown(&self, run: &RunConfig, dev: &DeviceSpec) -> DistBreakdown {
+        let p = compute_profile(run, dev, 1);
+        let total_ar = self.comm_seconds(run);
+        let exposed = if self.devices <= 1 {
+            0.0
+        } else if self.overlap {
+            // The final bucket (embedding + head gradients) completes
+            // with backprop; its AllReduce can never hide.
+            let tail =
+                ring_allreduce_time(tail_gradient_bytes(run), self.devices, &self.link);
+            (total_ar - p.backward).max(tail)
+        } else {
+            total_ar
+        };
+        let label = if self.devices <= 1 {
+            "DP-1".to_string()
+        } else {
+            format!(
+                "DP-{}{}",
+                self.devices,
+                if self.overlap { " +overlap" } else { " serial" }
+            )
+        };
+        DistBreakdown {
+            label,
+            transformer: p.transformer,
+            lamb: p.lamb,
+            output: p.output,
+            embedding: p.embedding,
+            comm_exposed: exposed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision};
+
+    fn run16() -> RunConfig {
+        RunConfig::new(
+            ModelConfig::bert_large().with_batch(16),
+            Phase::Phase1,
+            Precision::Fp32,
+        )
+    }
+
+    #[test]
+    fn single_device_has_no_comm() {
+        let bd = DataParallelModel::new(1, LinkSpec::pcie4x16(), true)
+            .breakdown(&run16(), &DeviceSpec::mi100());
+        assert_eq!(bd.comm_exposed, 0.0);
+        assert_eq!(bd.label, "DP-1");
+        assert!(bd.total() > 0.0);
+    }
+
+    #[test]
+    fn overlap_hides_most_of_the_ring() {
+        let dev = DeviceSpec::mi100();
+        let ov = DataParallelModel::new(64, LinkSpec::pcie4x16(), true)
+            .breakdown(&run16(), &dev);
+        let sr = DataParallelModel::new(64, LinkSpec::pcie4x16(), false)
+            .breakdown(&run16(), &dev);
+        assert!(ov.comm_exposed < sr.comm_exposed);
+        assert!(ov.comm_fraction() < 0.08, "{}", ov.comm_fraction());
+        // Serial DP-64 over PCIe exposes a visible Fig. 12-sized slice.
+        assert!(
+            sr.comm_fraction() > 0.05 && sr.comm_fraction() < 0.35,
+            "{}",
+            sr.comm_fraction()
+        );
+    }
+
+    #[test]
+    fn exposed_comm_never_exceeds_the_full_ring() {
+        let dev = DeviceSpec::mi100();
+        for d in [2u64, 8, 64, 256] {
+            let m = DataParallelModel::new(d, LinkSpec::pcie4x16(), true);
+            let bd = m.breakdown(&run16(), &dev);
+            assert!(bd.comm_exposed <= m.comm_seconds(&run16()) + 1e-12);
+            assert!(bd.comm_exposed >= 0.0);
+        }
+    }
+
+    #[test]
+    fn comm_volume_grows_with_devices_and_payload() {
+        let m8 = DataParallelModel::new(8, LinkSpec::pcie4x16(), true);
+        let m64 = DataParallelModel::new(64, LinkSpec::pcie4x16(), true);
+        assert!(m64.comm_volume(&run16()) > m8.comm_volume(&run16()));
+        // Mixed precision halves the gradient payload.
+        let mp = RunConfig::new(
+            ModelConfig::bert_large().with_batch(16),
+            Phase::Phase1,
+            Precision::Mixed,
+        );
+        assert_eq!(m64.gradient_bytes(&run16()), 2 * m64.gradient_bytes(&mp));
+    }
+
+    #[test]
+    fn compute_mix_is_device_count_invariant() {
+        // Takeaway 14 restated: DP only adds comm, never changes compute.
+        let dev = DeviceSpec::mi100();
+        let b1 = DataParallelModel::new(1, LinkSpec::pcie4x16(), true)
+            .breakdown(&run16(), &dev);
+        let b64 = DataParallelModel::new(64, LinkSpec::pcie4x16(), false)
+            .breakdown(&run16(), &dev);
+        assert!((b1.transformer - b64.transformer).abs() < 1e-12);
+        assert!((b1.lamb - b64.lamb).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,141 @@
+//! Hybrid (model x data) parallel training model (Fig. 12's 128-GPU
+//! bar, paper SS5.3.3; Megatron-LM's deployment shape).
+//!
+//! Devices arrange as `dp_devices` replica groups of `mp_ways` tensor-
+//! parallel devices. Inside a group the [`ModelParallelModel`] cost
+//! applies over the fast intra-group link; across groups each device
+//! ring-AllReduces its *own shard* of the gradients (`params / mp_ways`
+//! payload) over the slower inter-group link, overlapping with its
+//! (sharded) backprop like plain data parallel.
+
+use crate::config::RunConfig;
+use crate::dist::allreduce::ring_allreduce_time;
+use crate::dist::interconnect::LinkSpec;
+use crate::dist::model_parallel::ModelParallelModel;
+use crate::dist::{compute_profile, tail_gradient_bytes, DistBreakdown};
+use crate::perf::device::DeviceSpec;
+
+/// Hybrid configuration: `dp_devices` data-parallel groups, each
+/// `mp_ways` model-parallel devices wide.
+#[derive(Debug, Clone)]
+pub struct HybridModel {
+    /// Number of data-parallel replica groups.
+    pub dp_devices: u64,
+    /// Tensor-parallel width of each group.
+    pub mp_ways: u64,
+    /// Inter-group link (gradient AllReduce).
+    pub dp_link: LinkSpec,
+    /// Intra-group link (activation AllReduce).
+    pub mp_link: LinkSpec,
+}
+
+impl HybridModel {
+    /// A `dp_devices x mp_ways` hybrid over the two links.
+    pub fn new(
+        dp_devices: u64,
+        mp_ways: u64,
+        dp_link: LinkSpec,
+        mp_link: LinkSpec,
+    ) -> HybridModel {
+        HybridModel { dp_devices, mp_ways, dp_link, mp_link }
+    }
+
+    /// Megatron-LM's 128-GPU BERT shape: 8-way tensor parallel inside a
+    /// node over xGMI-class bridges, 16-way data parallel across nodes
+    /// over PCIe 4.0-class fabric.
+    pub fn megatron_128() -> HybridModel {
+        HybridModel::new(16, 8, LinkSpec::pcie4x16(), LinkSpec::xgmi())
+    }
+
+    /// Total device count (`dp_devices * mp_ways`).
+    pub fn devices(&self) -> u64 {
+        self.dp_devices * self.mp_ways
+    }
+
+    /// The Fig. 12 per-device breakdown: model-parallel compute + comm
+    /// inside the group, plus the exposed part of the sharded-gradient
+    /// AllReduce across groups.
+    pub fn breakdown(&self, run: &RunConfig, dev: &DeviceSpec) -> DistBreakdown {
+        let mp_ways = self.mp_ways.max(1);
+        let p = compute_profile(run, dev, mp_ways);
+        let mp = ModelParallelModel::new(mp_ways, self.mp_link.clone());
+        let mut bd = mp.breakdown_from_profile(run, &p);
+
+        // Data-parallel gradient AllReduce of this device's weight
+        // shard — every parameter group (layers and vocab-parallel
+        // embedding/heads alike) is 1/mp_ways here, matching the
+        // compute/optimizer sharding above. Overlap-accounted like
+        // DataParallelModel, with the tail bucket sharded the same way.
+        let shard_grad_bytes =
+            (run.model.param_count() / mp_ways) * run.precision.act_bytes();
+        let ar = ring_allreduce_time(shard_grad_bytes, self.dp_devices, &self.dp_link);
+        let dp_exposed = if self.dp_devices <= 1 {
+            0.0
+        } else {
+            let backward_shard = p.backward / mp_ways as f64;
+            let tail = ring_allreduce_time(
+                tail_gradient_bytes(run) / mp_ways,
+                self.dp_devices,
+                &self.dp_link,
+            );
+            (ar - backward_shard).max(tail)
+        };
+        bd.comm_exposed += dp_exposed;
+        bd.label = format!("Hybrid-{} ({}x{})", self.devices(), self.dp_devices, mp_ways);
+        bd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision};
+    use crate::dist::DataParallelModel;
+
+    fn run16() -> RunConfig {
+        RunConfig::new(
+            ModelConfig::bert_large().with_batch(16),
+            Phase::Phase1,
+            Precision::Fp32,
+        )
+    }
+
+    #[test]
+    fn megatron_128_shape() {
+        let h = HybridModel::megatron_128();
+        assert_eq!(h.devices(), 128);
+        let bd = h.breakdown(&run16(), &DeviceSpec::mi100());
+        assert_eq!(bd.label, "Hybrid-128 (16x8)");
+        assert!(bd.total() > 0.0 && bd.total().is_finite());
+    }
+
+    #[test]
+    fn hybrid_iterates_faster_than_one_device() {
+        // 8-way compute sharding must beat a single replica even after
+        // paying both communication terms.
+        let dev = DeviceSpec::mi100();
+        let single = DataParallelModel::new(1, LinkSpec::pcie4x16(), true)
+            .breakdown(&run16(), &dev);
+        let hybrid = HybridModel::megatron_128().breakdown(&run16(), &dev);
+        assert!(hybrid.total() < single.total(), "{} !< {}", hybrid.total(), single.total());
+    }
+
+    #[test]
+    fn hybrid_comm_exceeds_its_mp_group_alone() {
+        let dev = DeviceSpec::mi100();
+        let h = HybridModel::megatron_128();
+        let mp_only = ModelParallelModel::new(8, LinkSpec::xgmi()).breakdown(&run16(), &dev);
+        let hybrid = h.breakdown(&run16(), &dev);
+        assert!(hybrid.comm_exposed > mp_only.comm_exposed);
+        assert!((hybrid.transformer - mp_only.transformer).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dp_group_of_one_adds_no_dp_comm() {
+        let dev = DeviceSpec::mi100();
+        let h = HybridModel::new(1, 8, LinkSpec::pcie4x16(), LinkSpec::xgmi());
+        let mp_only = ModelParallelModel::new(8, LinkSpec::xgmi()).breakdown(&run16(), &dev);
+        let bd = h.breakdown(&run16(), &dev);
+        assert!((bd.comm_exposed - mp_only.comm_exposed).abs() < 1e-12);
+    }
+}

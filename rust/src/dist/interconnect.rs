@@ -1,0 +1,103 @@
+//! Inter-device link models (the Fig. 12 interconnect axis).
+//!
+//! A link is the (latency, per-direction bandwidth) pair of one device's
+//! egress in the ring topology the collectives run over. Presets cover
+//! the paper's PCIe 4.0 testbed fabric plus the faster links the SS5.2
+//! what-ifs compare against (xGMI bridges, NVLink3); `transfer_time`
+//! is the alpha-beta cost of one point-to-point message.
+
+/// One inter-device link: latency (seconds per message) and sustained
+/// per-direction bandwidth (bytes/second).
+#[derive(Debug, Clone)]
+pub struct LinkSpec {
+    /// Preset name (printed by the studies' link-sweep tables).
+    pub name: String,
+    /// Per-message latency in seconds (the alpha term).
+    pub latency: f64,
+    /// Sustained unidirectional bandwidth in bytes/second (the 1/beta
+    /// term).
+    pub bandwidth: f64,
+}
+
+impl LinkSpec {
+    /// Custom link.
+    pub fn new(name: &str, latency: f64, bandwidth: f64) -> LinkSpec {
+        LinkSpec { name: name.to_string(), latency, bandwidth }
+    }
+
+    /// PCIe 3.0 x16: ~16 GB/s effective per direction.
+    pub fn pcie3x16() -> LinkSpec {
+        LinkSpec::new("PCIe3x16", 5.0e-6, 16.0e9)
+    }
+
+    /// PCIe 4.0 x16 (the paper's testbed fabric): ~32 GB/s effective
+    /// per direction. Matches the stray-transfer default in
+    /// `perf::roofline`.
+    pub fn pcie4x16() -> LinkSpec {
+        LinkSpec::new("PCIe4x16", 5.0e-6, 32.0e9)
+    }
+
+    /// AMD xGMI / Infinity Fabric GPU bridge (MI100 hives): ~64 GB/s.
+    pub fn xgmi() -> LinkSpec {
+        LinkSpec::new("xGMI", 1.5e-6, 64.0e9)
+    }
+
+    /// NVIDIA NVLink3 (A100): ~300 GB/s aggregate per direction.
+    pub fn nvlink3() -> LinkSpec {
+        LinkSpec::new("NVLink3", 1.0e-6, 300.0e9)
+    }
+
+    /// InfiniBand HDR NIC (inter-node data parallel): ~25 GB/s.
+    pub fn infiniband_hdr() -> LinkSpec {
+        LinkSpec::new("IB-HDR", 2.0e-6, 25.0e9)
+    }
+
+    /// Alpha-beta time of one point-to-point transfer of `bytes`:
+    /// `latency + bytes / bandwidth`.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_ordered_by_bandwidth() {
+        let pcie3 = LinkSpec::pcie3x16();
+        let pcie4 = LinkSpec::pcie4x16();
+        let xgmi = LinkSpec::xgmi();
+        let nvl = LinkSpec::nvlink3();
+        assert!(pcie3.bandwidth < pcie4.bandwidth);
+        assert!(pcie4.bandwidth < xgmi.bandwidth);
+        assert!(xgmi.bandwidth < nvl.bandwidth);
+    }
+
+    #[test]
+    fn transfer_time_has_latency_floor() {
+        let l = LinkSpec::pcie4x16();
+        assert!(l.transfer_time(0) == l.latency);
+        let big = l.transfer_time(1 << 30);
+        assert!(big > (1u64 << 30) as f64 / l.bandwidth);
+        assert!(big < 2.0 * (1u64 << 30) as f64 / l.bandwidth);
+    }
+
+    #[test]
+    fn preset_names_are_distinct() {
+        let names: Vec<String> = [
+            LinkSpec::pcie3x16(),
+            LinkSpec::pcie4x16(),
+            LinkSpec::xgmi(),
+            LinkSpec::nvlink3(),
+            LinkSpec::infiniband_hdr(),
+        ]
+        .iter()
+        .map(|l| l.name.clone())
+        .collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+}

@@ -1,0 +1,192 @@
+//! Distributed-training analytical models (paper SS5.3, Fig. 12;
+//! DESIGN.md SS8).
+//!
+//! The paper scales BERT pre-training out three ways and asks what each
+//! does to the single-device breakdown:
+//!
+//! * **Data parallel** ([`DataParallelModel`]) — replicate the model,
+//!   AllReduce gradients every iteration. With software overlap the ring
+//!   AllReduce hides under backprop; without it the communication is
+//!   fully exposed (the two DP bars of Fig. 12).
+//! * **Model parallel** ([`ModelParallelModel`]) — Megatron-style tensor
+//!   parallelism: each layer's weights shard across devices, and the
+//!   activations are AllReduced *on the critical path* twice per layer
+//!   per pass. LAMB shrinks (sharded optimizer) but the serialized
+//!   communication grows with the parallelism degree.
+//! * **Hybrid** ([`HybridModel`]) — model parallel inside a group over a
+//!   fast link, data parallel across groups (Megatron's 128-GPU BERT
+//!   configuration is the [`HybridModel::megatron_128`] preset).
+//! * **ZeRO** ([`ZeroModel`]) — optimizer-state sharding: LAMB cost
+//!   divides by the device count while gradient reduce-scatter +
+//!   parameter all-gather replace the plain AllReduce.
+//!
+//! Every model composes the same per-op roofline times as the
+//! single-device path (`perf::roofline` over `model::IterationGraph`),
+//! so the distributed breakdowns stay consistent with Fig. 4 by
+//! construction; only the communication terms (from
+//! [`allreduce`] over an [`interconnect::LinkSpec`]) are new.
+
+pub mod allreduce;
+pub mod data_parallel;
+pub mod hybrid;
+pub mod interconnect;
+pub mod model_parallel;
+pub mod zero;
+
+pub use data_parallel::DataParallelModel;
+pub use hybrid::HybridModel;
+pub use interconnect::LinkSpec;
+pub use model_parallel::ModelParallelModel;
+pub use zero::ZeroModel;
+
+use crate::config::RunConfig;
+use crate::model::op::{LayerClass, Pass};
+use crate::model::transformer::non_layer_param_count;
+use crate::model::IterationGraph;
+use crate::perf::device::DeviceSpec;
+use crate::perf::roofline;
+
+/// Per-device iteration breakdown of one distributed configuration —
+/// one Fig. 12 bar. All fields are seconds of the critical path on one
+/// device; `comm_exposed` counts only communication that is *not*
+/// hidden under compute.
+#[derive(Debug, Clone)]
+pub struct DistBreakdown {
+    /// Row label in the paper's style (`DP-64 +overlap`, `MP-8`, ...).
+    pub label: String,
+    /// Transformer-layer compute (fwd + bwd) per device.
+    pub transformer: f64,
+    /// LAMB update time per device (shrinks under sharded optimizers).
+    pub lamb: f64,
+    /// Output (MLM/NSP head) compute per device.
+    pub output: f64,
+    /// Embedding-layer compute per device.
+    pub embedding: f64,
+    /// Exposed (non-overlapped) communication on the critical path.
+    pub comm_exposed: f64,
+}
+
+impl DistBreakdown {
+    /// Total per-device iteration seconds (the Fig. 12 bar height).
+    pub fn total(&self) -> f64 {
+        self.transformer + self.lamb + self.output + self.embedding + self.comm_exposed
+    }
+
+    /// Compute-only seconds (total minus exposed communication).
+    pub fn compute_seconds(&self) -> f64 {
+        self.total() - self.comm_exposed
+    }
+
+    /// LAMB's share of the iteration — the quantity the paper tracks as
+    /// device count grows (takeaways 14/15).
+    pub fn lamb_fraction(&self) -> f64 {
+        self.lamb / self.total()
+    }
+
+    /// Exposed communication's share of the iteration.
+    pub fn comm_fraction(&self) -> f64 {
+        self.comm_exposed / self.total()
+    }
+}
+
+/// Per-layer-class compute seconds of one device's iteration, plus the
+/// forward/backward split the overlap models need. Built from the same
+/// op graph + roofline estimate as the Fig. 4 path.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct ComputeProfile {
+    pub(crate) transformer: f64,
+    pub(crate) lamb: f64,
+    pub(crate) output: f64,
+    pub(crate) embedding: f64,
+    /// Forward-pass seconds (embedding + transformer + output fwd ops).
+    pub(crate) forward: f64,
+    /// Backward-pass seconds — the window a gradient AllReduce can
+    /// overlap with.
+    pub(crate) backward: f64,
+}
+
+/// Roofline-time the iteration graph with the optimizer sharded
+/// `opt_shards` ways (1 = replicated, as in plain data parallel).
+pub(crate) fn compute_profile(
+    run: &RunConfig,
+    dev: &DeviceSpec,
+    opt_shards: u64,
+) -> ComputeProfile {
+    let g = IterationGraph::build_sharded(run, opt_shards, 1);
+    let mut p = ComputeProfile::default();
+    for op in &g.ops {
+        let t = roofline::estimate_op_total(op, dev, run.precision);
+        match op.layer {
+            LayerClass::Transformer => p.transformer += t,
+            LayerClass::Optimizer => p.lamb += t,
+            LayerClass::OutputLayer => p.output += t,
+            LayerClass::Embedding => p.embedding += t,
+            LayerClass::Communication => {}
+        }
+        match op.pass {
+            Pass::Forward => p.forward += t,
+            Pass::Backward => p.backward += t,
+            Pass::Update | Pass::Comm => {}
+        }
+    }
+    p
+}
+
+/// Gradient bytes of the *last* backprop bucket — the embedding + head
+/// parameters, whose gradients are produced at the very end of backprop
+/// and whose AllReduce therefore has no compute left to hide under.
+/// Shared by the data-parallel and hybrid overlap models; callers apply
+/// their own sharding (the hybrid divides by its tensor-parallel width,
+/// matching its vocab-parallel embedding).
+pub(crate) fn tail_gradient_bytes(run: &RunConfig) -> u64 {
+    non_layer_param_count(&run.model) * run.precision.act_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision};
+
+    fn run() -> RunConfig {
+        RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
+    }
+
+    #[test]
+    fn profile_matches_iteration_seconds() {
+        let dev = DeviceSpec::mi100();
+        let p = compute_profile(&run(), &dev, 1);
+        let g = IterationGraph::build(&run());
+        let total = roofline::iteration_seconds(&g, &dev, Precision::Fp32);
+        let sum = p.transformer + p.lamb + p.output + p.embedding;
+        assert!((sum - total).abs() < 1e-9 * total, "{sum} vs {total}");
+        // fwd + bwd covers everything except the update pass.
+        assert!((p.forward + p.backward) < sum);
+        assert!(p.backward > p.forward, "bwd {} fwd {}", p.backward, p.forward);
+    }
+
+    #[test]
+    fn sharding_shrinks_only_lamb() {
+        let dev = DeviceSpec::mi100();
+        let p1 = compute_profile(&run(), &dev, 1);
+        let p8 = compute_profile(&run(), &dev, 8);
+        assert!(p8.lamb < 0.5 * p1.lamb, "{} vs {}", p8.lamb, p1.lamb);
+        assert!((p8.transformer - p1.transformer).abs() < 1e-12);
+        assert!((p8.output - p1.output).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_accessors_are_consistent() {
+        let bd = DistBreakdown {
+            label: "x".into(),
+            transformer: 0.6,
+            lamb: 0.2,
+            output: 0.05,
+            embedding: 0.05,
+            comm_exposed: 0.1,
+        };
+        assert!((bd.total() - 1.0).abs() < 1e-12);
+        assert!((bd.lamb_fraction() - 0.2).abs() < 1e-12);
+        assert!((bd.comm_fraction() - 0.1).abs() < 1e-12);
+        assert!((bd.compute_seconds() - 0.9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,150 @@
+//! Model-parallel (tensor-parallel) training model (Fig. 12's `MP`
+//! bars, paper SS5.3.2; Megatron-LM's intra-layer scheme).
+//!
+//! Each transformer layer's weight matrices split column-/row-wise
+//! across `ways` devices — and the embedding + output heads shard too
+//! (Megatron's vocab-parallel embedding) — so compute divides by
+//! `ways` and the optimizer shards with the weights (LAMB divides too —
+//! takeaway 15). The price is activation AllReduces **on the critical
+//! path**:
+//! Megatron needs one per layer per pass direction for each of the two
+//! blocks (attention and MLP), i.e. `4 * n_layers` AllReduces of the
+//! `(n*B, d_model)` hidden state per iteration, none of which can hide
+//! under compute — the serialized-communication term that grows with
+//! both `ways` and the per-device batch.
+
+use crate::config::RunConfig;
+use crate::dist::allreduce::{ring_allreduce_time, ring_allreduce_volume};
+use crate::dist::interconnect::LinkSpec;
+use crate::dist::{compute_profile, ComputeProfile, DistBreakdown};
+use crate::perf::device::DeviceSpec;
+
+/// Megatron-style tensor parallelism across `ways` devices over `link`.
+#[derive(Debug, Clone)]
+pub struct ModelParallelModel {
+    /// Parallelism degree (devices a single layer spans).
+    pub ways: u64,
+    /// The link the activation AllReduces run over.
+    pub link: LinkSpec,
+}
+
+impl ModelParallelModel {
+    /// A `ways`-way tensor-parallel group over `link`.
+    pub fn new(ways: u64, link: LinkSpec) -> ModelParallelModel {
+        ModelParallelModel { ways, link }
+    }
+
+    /// Payload of one activation AllReduce: the `(n*B, d_model)` hidden
+    /// state at working precision.
+    pub fn activation_bytes(&self, run: &RunConfig) -> u64 {
+        run.model.tokens() * run.model.d_model * run.precision.act_bytes()
+    }
+
+    /// AllReduces per iteration: 2 per layer forward (after the
+    /// attention block and after the MLP block) + 2 per layer backward.
+    pub fn allreduce_count(&self, run: &RunConfig) -> u64 {
+        4 * run.model.n_layers
+    }
+
+    /// Per-device wire volume of all activation AllReduces per iteration.
+    pub fn comm_volume(&self, run: &RunConfig) -> u64 {
+        self.allreduce_count(run) * ring_allreduce_volume(self.activation_bytes(run), self.ways)
+    }
+
+    /// Serialized communication seconds per iteration (all exposed).
+    pub fn comm_seconds(&self, run: &RunConfig) -> f64 {
+        self.allreduce_count(run) as f64
+            * ring_allreduce_time(self.activation_bytes(run), self.ways, &self.link)
+    }
+
+    /// The Fig. 12 per-device breakdown: compute divides by `ways`
+    /// (layers, vocab-parallel embedding + heads, and the sharded
+    /// optimizer), and every AllReduce lands on the critical path.
+    pub fn breakdown(&self, run: &RunConfig, dev: &DeviceSpec) -> DistBreakdown {
+        let p = compute_profile(run, dev, self.ways.max(1));
+        self.breakdown_from_profile(run, &p)
+    }
+
+    /// `breakdown` over an already-computed profile (the hybrid model
+    /// shares one profile between its MP and DP halves).
+    pub(crate) fn breakdown_from_profile(
+        &self,
+        run: &RunConfig,
+        p: &ComputeProfile,
+    ) -> DistBreakdown {
+        let ways = self.ways.max(1);
+        DistBreakdown {
+            label: format!("MP-{ways}"),
+            transformer: p.transformer / ways as f64,
+            lamb: p.lamb,
+            output: p.output / ways as f64,
+            embedding: p.embedding / ways as f64,
+            comm_exposed: self.comm_seconds(run),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision};
+
+    fn run(b: u64) -> RunConfig {
+        RunConfig::new(
+            ModelConfig::bert_large().with_batch(b),
+            Phase::Phase1,
+            Precision::Fp32,
+        )
+    }
+
+    #[test]
+    fn one_way_matches_single_device() {
+        let dev = DeviceSpec::mi100();
+        let bd = ModelParallelModel::new(1, LinkSpec::pcie4x16()).breakdown(&run(16), &dev);
+        assert_eq!(bd.comm_exposed, 0.0);
+        assert_eq!(bd.label, "MP-1");
+    }
+
+    #[test]
+    fn lamb_fraction_shrinks_with_parallelism() {
+        // Takeaway 15's first half.
+        let dev = DeviceSpec::mi100();
+        let link = LinkSpec::pcie4x16();
+        let f1 = ModelParallelModel::new(1, link.clone())
+            .breakdown(&run(16), &dev)
+            .lamb_fraction();
+        let f2 = ModelParallelModel::new(2, link.clone())
+            .breakdown(&run(16), &dev)
+            .lamb_fraction();
+        let f8 = ModelParallelModel::new(8, link).breakdown(&run(64), &dev).lamb_fraction();
+        assert!(f2 < f1, "{f2} !< {f1}");
+        assert!(f8 < f2, "{f8} !< {f2}");
+    }
+
+    #[test]
+    fn serialized_comm_grows_with_ways_and_batch() {
+        // Takeaway 15's second half.
+        let dev = DeviceSpec::mi100();
+        let link = LinkSpec::pcie4x16();
+        let c2 = ModelParallelModel::new(2, link.clone())
+            .breakdown(&run(16), &dev)
+            .comm_fraction();
+        let c8 = ModelParallelModel::new(8, link.clone())
+            .breakdown(&run(64), &dev)
+            .comm_fraction();
+        assert!(c8 > c2, "{c8} !> {c2}");
+        let v2 = ModelParallelModel::new(2, link.clone()).comm_volume(&run(16));
+        let v8 = ModelParallelModel::new(8, link).comm_volume(&run(64));
+        assert!(v8 > v2);
+    }
+
+    #[test]
+    fn faster_link_shrinks_only_comm() {
+        let dev = DeviceSpec::mi100();
+        let slow = ModelParallelModel::new(8, LinkSpec::pcie4x16()).breakdown(&run(64), &dev);
+        let fast = ModelParallelModel::new(8, LinkSpec::nvlink3()).breakdown(&run(64), &dev);
+        assert!(fast.comm_exposed < slow.comm_exposed);
+        assert!((fast.transformer - slow.transformer).abs() < 1e-12);
+        assert!(fast.total() < slow.total());
+    }
+}

@@ -29,9 +29,7 @@ pub fn lamb_ops(run: &RunConfig) -> Vec<Op> {
 pub fn lamb_ops_sharded(run: &RunConfig, shards: u64) -> Vec<Op> {
     let cfg = &run.model;
     let per_layer = crate::model::transformer::layer_param_count(cfg) / shards;
-    let other = (cfg.param_count()
-        - cfg.n_layers * crate::model::transformer::layer_param_count(cfg))
-        / shards;
+    let other = crate::model::transformer::non_layer_param_count(cfg) / shards;
     let opt_bytes = run.precision.opt_bytes();
     let mut ops = Vec::new();
 

@@ -134,6 +134,14 @@ pub fn layer_param_count(cfg: &crate::config::ModelConfig) -> u64 {
     4 * (d * d + d) + 2 * (2 * d) + d * cfg.d_ff + cfg.d_ff + cfg.d_ff * d + d
 }
 
+/// Parameter elements *outside* the transformer stack (embeddings +
+/// MLM/NSP heads) — the complement of `n_layers * layer_param_count`.
+/// Their gradients form the final backprop bucket, which the `dist`
+/// overlap models treat as the non-hideable tail.
+pub fn non_layer_param_count(cfg: &crate::config::ModelConfig) -> u64 {
+    cfg.param_count() - cfg.n_layers * layer_param_count(cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

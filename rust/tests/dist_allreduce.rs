@@ -1,0 +1,152 @@
+//! Property tests for the ring-collective models (randomized with the
+//! in-tree PRNG, like `properties.rs`): the `2*(D-1)/D` ring factor is
+//! exact for volumes and a lower bound for times, both halves compose to
+//! the whole, and the distributed breakdowns stay well-formed across
+//! random configurations. Complements the bounds already asserted in
+//! `properties.rs::prop_allreduce_volume_bounded_by_2x_payload`.
+
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::dist::allreduce::{
+    all_gather_time, reduce_scatter_time, ring_allreduce_steps, ring_allreduce_time,
+    ring_allreduce_volume,
+};
+use bertprof::dist::{
+    DataParallelModel, HybridModel, LinkSpec, ModelParallelModel, ZeroModel,
+};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::util::Rng;
+
+#[test]
+fn prop_volume_monotone_in_payload() {
+    let mut rng = Rng::seed(41);
+    for _ in 0..300 {
+        let a = rng.int_range(0, 1 << 32) as u64;
+        let b = a + rng.int_range(0, 1 << 24) as u64;
+        let d = rng.int_range(1, 512) as u64;
+        assert!(
+            ring_allreduce_volume(a, d) <= ring_allreduce_volume(b, d),
+            "payload {a}->{b} devices {d}"
+        );
+    }
+}
+
+#[test]
+fn volume_matches_hand_computed_points() {
+    // Independent oracle: ring volumes worked out by hand.
+    let gib = 1u64 << 30;
+    assert_eq!(ring_allreduce_volume(gib, 2), gib); // 2*(1/2)*b
+    assert_eq!(ring_allreduce_volume(gib, 4), 3 * gib / 2); // 2*(3/4)*b
+    assert_eq!(ring_allreduce_volume(1000, 10), 1800); // 2*(9/10)*1000
+    assert_eq!(ring_allreduce_volume(7, 7), 12); // floor(2*6*7/7)
+    assert_eq!(ring_allreduce_steps(8), 14); // (D-1) RS + (D-1) AG
+}
+
+#[test]
+fn prop_volume_equals_per_step_chunk_sum() {
+    // Independent oracle: the ring runs 2*(D-1) steps each sending one
+    // ~1/D chunk, so the volume must sit within one chunk-rounding of
+    // 2*(D-1)*floor(b/D).
+    let mut rng = Rng::seed(42);
+    for _ in 0..300 {
+        let bytes = rng.int_range(1, 1 << 32) as u64;
+        let d = rng.int_range(2, 512) as u64;
+        let v = ring_allreduce_volume(bytes, d);
+        let chunked = 2 * (d - 1) * (bytes / d);
+        assert!(
+            v >= chunked && v <= chunked + 2 * (d - 1),
+            "b={bytes} D={d}: {v} vs {chunked}"
+        );
+    }
+}
+
+#[test]
+fn prop_time_lower_bounded_by_ring_bandwidth_term() {
+    // T(b, D) >= (2*(D-1)/D) * b / bandwidth — latency only adds; and
+    // doubling the device count never shrinks the time (the 2(N-1)/N
+    // factor and the step count both grow).
+    let link = LinkSpec::pcie4x16();
+    let mut rng = Rng::seed(43);
+    for _ in 0..300 {
+        let bytes = rng.int_range(1, 1 << 32) as u64;
+        let n = rng.int_range(2, 256) as u64;
+        let t = ring_allreduce_time(bytes, n, &link);
+        let d = n as f64;
+        let bw_floor = (2.0 * (d - 1.0) / d) * bytes as f64 / link.bandwidth;
+        assert!(t >= bw_floor, "{t} < {bw_floor}");
+        let t2 = ring_allreduce_time(bytes, 2 * n, &link);
+        assert!(t2 >= t - 1e-12, "D={n}: {t2} < {t}");
+        // The factor saturates: time at 2N never exceeds the latency
+        // steps plus the full 2x-payload traversal.
+        let ceil = 2.0 * (2.0 * d - 1.0) * link.latency
+            + 2.0 * bytes as f64 / link.bandwidth;
+        assert!(t2 <= ceil, "{t2} > {ceil}");
+    }
+}
+
+#[test]
+fn prop_reduce_scatter_plus_all_gather_is_the_allreduce() {
+    let link = LinkSpec::xgmi();
+    let mut rng = Rng::seed(44);
+    for _ in 0..300 {
+        let bytes = rng.int_range(1, 1 << 32) as u64;
+        let d = rng.int_range(1, 512) as u64;
+        let whole = ring_allreduce_time(bytes, d, &link);
+        let halves = reduce_scatter_time(bytes, d, &link) + all_gather_time(bytes, d, &link);
+        assert!(
+            (whole - halves).abs() <= 1e-9 * whole.max(1e-12),
+            "D={d}: {whole} vs {halves}"
+        );
+    }
+}
+
+#[test]
+fn prop_breakdowns_are_well_formed_for_random_configs() {
+    let dev = DeviceSpec::mi100();
+    let link = LinkSpec::pcie4x16();
+    let mut rng = Rng::seed(45);
+    for _ in 0..20 {
+        let b = [4u64, 8, 16, 32][rng.int_range(0, 3) as usize];
+        let run = RunConfig::new(
+            ModelConfig::bert_large().with_batch(b),
+            Phase::Phase1,
+            if rng.uniform() < 0.5 { Precision::Fp32 } else { Precision::Mixed },
+        );
+        let d = [2u64, 4, 8, 64, 256][rng.int_range(0, 4) as usize];
+        let rows = [
+            DataParallelModel::new(d, link.clone(), true).breakdown(&run, &dev),
+            DataParallelModel::new(d, link.clone(), false).breakdown(&run, &dev),
+            ModelParallelModel::new(d.min(16), link.clone()).breakdown(&run, &dev),
+            HybridModel::megatron_128().breakdown(&run, &dev),
+            ZeroModel::new(d, link.clone()).breakdown(&run, &dev),
+        ];
+        for bd in rows {
+            assert!(bd.total() > 0.0 && bd.total().is_finite(), "{}", bd.label);
+            assert!(bd.comm_exposed >= 0.0, "{}", bd.label);
+            let share_sum = bd.lamb_fraction()
+                + bd.comm_fraction()
+                + (bd.transformer + bd.output + bd.embedding) / bd.total();
+            assert!((share_sum - 1.0).abs() < 1e-9, "{}: {share_sum}", bd.label);
+        }
+    }
+}
+
+#[test]
+fn prop_overlap_never_beats_free_and_never_loses_to_serial() {
+    let dev = DeviceSpec::mi100();
+    let link = LinkSpec::pcie4x16();
+    let mut rng = Rng::seed(46);
+    for _ in 0..20 {
+        let b = [4u64, 16, 32][rng.int_range(0, 2) as usize];
+        let run = RunConfig::new(
+            ModelConfig::bert_large().with_batch(b),
+            Phase::Phase1,
+            Precision::Fp32,
+        );
+        let d = rng.int_range(2, 512) as u64;
+        let base = DataParallelModel::new(1, link.clone(), true).breakdown(&run, &dev);
+        let ov = DataParallelModel::new(d, link.clone(), true).breakdown(&run, &dev);
+        let sr = DataParallelModel::new(d, link.clone(), false).breakdown(&run, &dev);
+        assert!(ov.total() >= base.total() - 1e-12, "D={d}");
+        assert!(ov.total() <= sr.total() + 1e-12, "D={d}");
+    }
+}

@@ -1,0 +1,208 @@
+//! In-tree stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access (see the Cargo.toml note
+//! in `util/mod.rs`), so this vendored shim provides the exact subset of
+//! the anyhow API the crate uses: `Error` with a context chain, the
+//! `Result` alias, the `Context` extension trait for `Result`/`Option`,
+//! and the `anyhow!` / `bail!` macros.
+//!
+//! Display behaves like anyhow's: `{}` prints the outermost message,
+//! `{:#}` prints the whole chain joined by `": "` (the format the
+//! failure-injection tests assert on).
+
+use std::fmt;
+
+/// An error with an ordered chain of context messages. `chain[0]` is the
+/// outermost (most recently attached) context; the last entry is the
+/// root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like anyhow, `Error` deliberately does NOT implement std::error::Error;
+// that is what makes this blanket conversion coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with `Error` as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/definitely/missing")
+            .context("reading the missing file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chain_renders_in_alternate_display() {
+        let err = io_fail().unwrap_err();
+        let plain = format!("{err}");
+        let full = format!("{err:#}");
+        assert_eq!(plain, "reading the missing file");
+        assert!(full.starts_with("reading the missing file: "), "{full}");
+        assert!(full.len() > plain.len());
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("x was {x}");
+            }
+            Err(anyhow!("got {} instead", x))
+        }
+        assert_eq!(format!("{}", f(0).unwrap_err()), "x was 0");
+        assert_eq!(format!("{}", f(3).unwrap_err()), "got 3 instead");
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x > 1, "x too small: {x}");
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "x too small: 0");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let err = none.context("missing value").unwrap_err();
+        assert_eq!(format!("{err:#}"), "missing value");
+        assert_eq!(Some(5u32).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let err = io_fail().unwrap_err();
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+}
