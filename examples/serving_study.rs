@@ -1,0 +1,92 @@
+//! Serving study (DESIGN.md SSServe): how dynamic batching, precision,
+//! offered load, and the device preset trade latency against throughput
+//! for forward-only BERT-Large — the FTRANS/Ganesh-style grid the
+//! training-side figures never cover.
+use bertprof::config::{ModelConfig, Precision};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::serve::{run_sweep, LatencyModel, SweepConfig};
+
+fn main() {
+    // --- 1. The latency/throughput frontier vs offered load -------------
+    println!("## Load curve (MI100, Mixed, B8/10ms, SLO 100 ms)");
+    println!(
+        "{:<8}{:>9}{:>9}{:>9}{:>9}{:>7}",
+        "load", "thr/s", "p50(ms)", "p99(ms)", "good/s", "SLO%"
+    );
+    for load in [0.3, 0.5, 0.7, 0.9, 1.1] {
+        let mut cfg = SweepConfig::bert_large_default();
+        cfg.requests = 4_000;
+        cfg.precisions = vec![Precision::Mixed];
+        cfg.max_batches = vec![8];
+        cfg.load = load;
+        let reports = run_sweep(&cfg, 2);
+        let r = &reports[0];
+        println!(
+            "{:<8.1}{:>9.1}{:>9.1}{:>9.1}{:>9.1}{:>6.1}%",
+            load,
+            r.throughput,
+            r.p50 * 1e3,
+            r.p99 * 1e3,
+            r.goodput,
+            r.slo_attainment * 100.0
+        );
+    }
+
+    // --- 2. The full policy x precision grid on one device --------------
+    println!("\n## Policy x precision grid (MI100, load 65%, SLO 100 ms)");
+    let mut cfg = SweepConfig::bert_large_default();
+    cfg.requests = 4_000;
+    println!(
+        "{:<22}{:>9}{:>7}{:>9}{:>9}{:>7}",
+        "config", "thr/s", "bsz", "p50(ms)", "p99(ms)", "SLO%"
+    );
+    for r in run_sweep(&cfg, 4) {
+        println!(
+            "{:<22}{:>9.1}{:>7.2}{:>9.1}{:>9.1}{:>6.1}%",
+            r.label,
+            r.throughput,
+            r.mean_batch,
+            r.p50 * 1e3,
+            r.p99 * 1e3,
+            r.slo_attainment * 100.0
+        );
+    }
+
+    // --- 3. Cross-device extrapolation (SS6's comparison, serving form) -
+    println!("\n## Device sweep (Mixed, B32/10ms, load 65%)");
+    let mut cfg = SweepConfig::bert_large_default();
+    cfg.requests = 4_000;
+    cfg.devices = vec![DeviceSpec::mi100(), DeviceSpec::v100(), DeviceSpec::a100()];
+    cfg.precisions = vec![Precision::Mixed];
+    cfg.max_batches = vec![32];
+    println!("{:<22}{:>9}{:>9}{:>9}", "config", "thr/s", "p50(ms)", "p99(ms)");
+    for r in run_sweep(&cfg, 3) {
+        println!(
+            "{:<22}{:>9.1}{:>9.1}{:>9.1}",
+            r.label,
+            r.throughput,
+            r.p50 * 1e3,
+            r.p99 * 1e3
+        );
+    }
+
+    // --- 4. Why batching pays: the per-request cost curve ----------------
+    println!("\n## Batch amortization (MI100, FP32 vs Mixed, n=128)");
+    println!("{:<8}{:>14}{:>14}{:>12}{:>12}", "batch", "fp32 lat(ms)", "mp lat(ms)",
+             "fp32 req/s", "mp req/s");
+    let model = ModelConfig::bert_large();
+    let mut f32m = LatencyModel::new(model, Precision::Fp32, DeviceSpec::mi100());
+    let mut mpm = LatencyModel::new(model, Precision::Mixed, DeviceSpec::mi100());
+    for batch in [1u64, 2, 4, 8, 16, 32, 64] {
+        println!(
+            "{:<8}{:>14.2}{:>14.2}{:>12.0}{:>12.0}",
+            batch,
+            f32m.batch_seconds(batch, 128) * 1e3,
+            mpm.batch_seconds(batch, 128) * 1e3,
+            f32m.saturation_rate(batch, 128),
+            mpm.saturation_rate(batch, 128)
+        );
+    }
+    println!("\n(the serving face of takeaways 3 and 6: mixed precision and bigger");
+    println!(" token counts buy throughput; the SLO decides how much you can take.)");
+}

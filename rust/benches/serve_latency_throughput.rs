@@ -1,0 +1,59 @@
+//! SSServe — serving latency/throughput study: dynamic batching vs
+//! no-batching, FP32 vs Mixed, on the MI100 preset, plus timings of the
+//! latency-model and simulator hot paths.
+use bertprof::config::{ModelConfig, Precision};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::serve::{
+    run_sweep, BatchPolicy, LatencyModel, Simulator, SweepConfig, Workload,
+};
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut cfg = SweepConfig::bert_large_default();
+    cfg.requests = 4_000;
+    println!(
+        "## SSServe — dynamic batching (modeled, {} req/scenario, load {:.0}%, SLO {:.0} ms)",
+        cfg.requests,
+        cfg.load * 100.0,
+        cfg.slo * 1e3
+    );
+    println!(
+        "{:<22}{:>9}{:>7}{:>7}{:>9}{:>9}{:>7}",
+        "config", "thr/s", "util", "bsz", "p50(ms)", "p99(ms)", "SLO%"
+    );
+    for r in run_sweep(&cfg, 4) {
+        println!(
+            "{:<22}{:>9.1}{:>7.2}{:>7.2}{:>9.1}{:>9.1}{:>6.1}%",
+            r.label,
+            r.throughput,
+            r.utilization,
+            r.mean_batch,
+            r.p50 * 1e3,
+            r.p99 * 1e3,
+            r.slo_attainment * 100.0
+        );
+    }
+
+    let mut b = Bench::new("serve");
+    let model = ModelConfig::bert_large();
+    b.run("latency model, cold shape grid (B1..32, n128)", || {
+        let mut lm = LatencyModel::new(model, Precision::Fp32, DeviceSpec::mi100());
+        for batch in 1..=32 {
+            black_box(lm.batch_seconds(batch, 128));
+        }
+    });
+    let mut warm = LatencyModel::new(model, Precision::Fp32, DeviceSpec::mi100());
+    warm.batch_seconds(8, 128);
+    b.run("latency model, warm lookup", || {
+        black_box(warm.batch_seconds(8, 128));
+    });
+    let mut lm = LatencyModel::new(model, Precision::Mixed, DeviceSpec::mi100());
+    let rate = 0.65 * lm.saturation_rate(8, 128);
+    let trace = Workload::poisson(rate, 4_000, 42).generate();
+    b.run("simulate 4k requests (B8/10ms)", || {
+        black_box(
+            Simulator::new(BatchPolicy::new(8, 0.010), 0.100).run("bench", &trace, &mut lm),
+        );
+    });
+    b.finish();
+}

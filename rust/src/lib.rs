@@ -7,8 +7,10 @@
 //! * **L3 (this crate)** — the characterization framework: an exact
 //!   operation-level model of a BERT training iteration, a roofline
 //!   device model, distributed-training analytical models, fusion
-//!   studies, and a PJRT runtime that executes AOT-compiled HLO
-//!   artifacts to *measure* the same breakdowns the model predicts.
+//!   studies, an inference-serving subsystem (forward-only graphs +
+//!   dynamic-batching latency simulation), and a PJRT runtime that
+//!   executes AOT-compiled HLO artifacts to *measure* the same
+//!   breakdowns the model predicts.
 //! * **L2 (python/compile/model.py)** — BERT fwd/bwd + LAMB in JAX,
 //!   lowered once to HLO text artifacts.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the paper's
@@ -24,4 +26,5 @@ pub mod model;
 pub mod perf;
 pub mod profiler;
 pub mod runtime;
+pub mod serve;
 pub mod util;

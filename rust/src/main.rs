@@ -10,6 +10,7 @@
 //! bertprof fusion [--kernels|--gemms] [--measured]         Fig. 13 / Fig. 15
 //! bertprof gemm-table                                      Table 3
 //! bertprof train --steps N                                 end-to-end tiny-BERT
+//! bertprof serve --requests N                              SSServe serving study
 //! bertprof devices                                         roofline device presets
 //! ```
 
@@ -71,6 +72,13 @@ impl Args {
             .unwrap_or(default)
     }
 
+    fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opts
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
     fn artifacts_dir(&self) -> PathBuf {
         self.opts
             .get("artifacts")
@@ -90,6 +98,7 @@ fn main() -> Result<()> {
         "fusion" => cmd_fusion(&args, &dev),
         "gemm-table" => cmd_gemm_table(),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "whatif" => cmd_whatif(&args, &dev),
         "memory" => cmd_memory(&args, &dev),
         "export" => cmd_export(&args, &dev),
@@ -112,6 +121,9 @@ bertprof — BERT training characterization (paper reproduction)
   fusion --kernels [--measured] | --gemms         Fig. 13 / Fig. 15
   gemm-table                                      Table 3
   train --steps N [--log-every K]                 tiny-BERT end-to-end
+  serve [--requests N] [--seed S] [--device D]    SSServe dynamic-batching study
+        [--slo-ms X] [--max-wait-ms X] [--load F]
+        [--max-batch B] [--seq-max N] [--out F]
   whatif                                          SS5.2 hardware what-ifs
   memory [--hbm GB]                               SS5.2 capacity model
   export --out trace.csv [--json]                 dump op-level trace
@@ -356,6 +368,73 @@ fn cmd_train(args: &Args) -> Result<()> {
         dt.as_secs_f64() * 1e3 / steps as f64,
         trainer.trailing_mean(10)
     );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use bertprof::serve::{run_sweep, write_sweep, SweepConfig};
+    let mut cfg = SweepConfig::bert_large_default();
+    cfg.requests = args.opt_u64("requests", 10_000);
+    cfg.seed = args.opt_u64("seed", 42);
+    cfg.slo = args.opt_f64("slo-ms", 100.0) / 1e3;
+    cfg.max_wait = args.opt_f64("max-wait-ms", 10.0) / 1e3;
+    cfg.load = args.opt_f64("load", 0.65);
+    if !(cfg.load.is_finite() && cfg.load > 0.0) {
+        bail!("--load must be a positive finite saturation fraction, got {}", cfg.load);
+    }
+    if let Some(d) = args.opts.get("device") {
+        cfg.devices = vec![match d.as_str() {
+            "mi100" => DeviceSpec::mi100(),
+            "v100" => DeviceSpec::v100(),
+            "a100" => DeviceSpec::a100(),
+            "tpu" => DeviceSpec::tpu_v3_core(),
+            "cpu" => DeviceSpec::cpu_host(),
+            other => bail!("unknown device preset '{other}' (mi100|v100|a100|tpu|cpu)"),
+        }];
+    }
+    if args.opts.contains_key("max-batch") {
+        cfg.max_batches = vec![args.opt_u64("max-batch", 8)];
+    }
+    if args.opts.contains_key("seq-max") {
+        cfg.seq_maxes = vec![args.opt_u64("seq-max", 128)];
+    }
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let reports = run_sweep(&cfg, threads);
+
+    println!(
+        "## SSServe — dynamic-batching serving study ({} req/scenario, \
+         load {:.0}% of saturation, SLO {:.0} ms, seed {})",
+        cfg.requests,
+        cfg.load * 100.0,
+        cfg.slo * 1e3,
+        cfg.seed
+    );
+    println!(
+        "{:<22}{:>9}{:>9}{:>7}{:>7}{:>9}{:>9}{:>9}{:>7}{:>10}",
+        "config", "rate/s", "thr/s", "util", "bsz", "p50(ms)", "p95(ms)", "p99(ms)", "SLO%", "goodput/s"
+    );
+    for r in &reports {
+        println!(
+            "{:<22}{:>9.1}{:>9.1}{:>7.2}{:>7.2}{:>9.1}{:>9.1}{:>9.1}{:>6.1}%{:>10.1}",
+            r.label,
+            r.arrival_rate,
+            r.throughput,
+            r.utilization,
+            r.mean_batch,
+            r.p50 * 1e3,
+            r.p95 * 1e3,
+            r.p99 * 1e3,
+            r.slo_attainment * 100.0,
+            r.goodput
+        );
+    }
+    let out = args
+        .opts
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "serve_sweep.json".to_string());
+    write_sweep(std::path::Path::new(&out), &cfg, &reports)?;
+    println!("wrote {} scenario(s) to {out}", reports.len());
     Ok(())
 }
 

@@ -1,0 +1,241 @@
+//! Forward-only iteration graphs at arbitrary batch / sequence length,
+//! and the memoized roofline latency model the dynamic-batching
+//! simulator queries (DESIGN.md SSServe).
+//!
+//! Training configurations pin the sequence length to the pre-training
+//! phase (`RunConfig::new` routes through `with_phase`, paper SS2.1); a
+//! serving request arrives with its *own* length, so [`inference_run`]
+//! builds a `RunConfig` at any `(batch, seq_len)` point directly. The
+//! graphs are the training graph's forward slice (paper SS6: inference
+//! drops backprop and the LAMB update), optionally with the simpler
+//! fine-tuned task head the paper notes serving uses instead of the
+//! MLM/NSP pre-training heads.
+
+use std::collections::HashMap;
+
+use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+use crate::model::op::{LayerClass, Pass};
+use crate::model::{output, IterationGraph};
+use crate::perf::device::DeviceSpec;
+use crate::perf::roofline;
+
+/// Which output head the served model carries (paper SS6: "the output
+/// layer of specific tasks ... is simpler than tasks BERT is pre-trained
+/// for, requiring fewer GEMMs").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeHead {
+    /// The pre-training MLM + NSP heads — the exact forward slice of the
+    /// training graph (what `breakdown --inference` shows).
+    Pretrain,
+    /// A SQuAD-style span head: one `d_model -> 2` projection, no vocab
+    /// GEMM — the realistic serving configuration.
+    Squad,
+}
+
+impl ServeHead {
+    /// Short label for tables and artifacts.
+    pub fn label(self) -> &'static str {
+        match self {
+            ServeHead::Pretrain => "pretrain-head",
+            ServeHead::Squad => "squad-head",
+        }
+    }
+}
+
+/// A `RunConfig` at an arbitrary `(batch, seq_len)` serving point.
+/// `seq_len` is clamped to `[1, max_seq_len]` (the position-embedding
+/// table bounds every request the model can accept).
+pub fn inference_run(
+    model: ModelConfig,
+    batch: u64,
+    seq_len: u64,
+    precision: Precision,
+) -> RunConfig {
+    let mut m = model.with_batch(batch.max(1));
+    // Bypass `with_phase`, which would pin seq_len to 128/512.
+    m.seq_len = seq_len.clamp(1, m.max_seq_len);
+    RunConfig { model: m, precision, phase: Phase::Phase1 }
+}
+
+/// The forward-only op graph for one serving batch: embedding fwd, the
+/// transformer stack fwd, and the selected head fwd — no backprop, no
+/// optimizer (paper SS6). Both heads share `build_inference`'s forward
+/// slice; `Squad` only swaps the output-layer ops for the span head.
+pub fn forward_graph(run: &RunConfig, head: ServeHead) -> IterationGraph {
+    let mut g = IterationGraph::build_inference(run);
+    if head == ServeHead::Squad {
+        g.ops.retain(|o| o.layer != LayerClass::OutputLayer);
+        g.ops.extend(
+            output::squad_output_ops(run)
+                .into_iter()
+                .filter(|o| o.pass == Pass::Forward),
+        );
+    }
+    g
+}
+
+/// Memoized roofline latency of forward batches on one device.
+///
+/// The simulator asks for thousands of batch latencies per run; padding
+/// sequence lengths up to a bucket multiple (as a real serving stack
+/// pads to its compiled shape set) collapses them onto a small grid of
+/// `(batch, padded_seq)` keys, each costed once via
+/// `perf::roofline::iteration_seconds` over the forward graph.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// Served model hyperparameters (Table 2).
+    pub model: ModelConfig,
+    /// Numeric precision of the forward pass.
+    pub precision: Precision,
+    /// Roofline device preset the batches run on.
+    pub device: DeviceSpec,
+    /// Output head variant.
+    pub head: ServeHead,
+    /// Sequence-length padding granularity (compiled-shape bucket).
+    pub seq_bucket: u64,
+    cache: HashMap<(u64, u64), f64>,
+}
+
+impl LatencyModel {
+    /// A latency model with the default 32-token shape bucket and the
+    /// SQuAD serving head.
+    pub fn new(model: ModelConfig, precision: Precision, device: DeviceSpec) -> LatencyModel {
+        LatencyModel {
+            model,
+            precision,
+            device,
+            head: ServeHead::Squad,
+            seq_bucket: 32,
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Override the padding bucket (1 = exact per-length shapes).
+    pub fn with_seq_bucket(mut self, bucket: u64) -> LatencyModel {
+        self.seq_bucket = bucket.max(1);
+        self
+    }
+
+    /// Override the output head.
+    pub fn with_head(mut self, head: ServeHead) -> LatencyModel {
+        self.head = head;
+        self
+    }
+
+    /// The padded (compiled) sequence length a request of `seq_len`
+    /// tokens executes at: rounded up to the bucket, capped at
+    /// `max_seq_len`.
+    pub fn padded_seq(&self, seq_len: u64) -> u64 {
+        let padded = seq_len.max(1).div_ceil(self.seq_bucket) * self.seq_bucket;
+        padded.min(self.model.max_seq_len)
+    }
+
+    /// Roofline seconds for one forward batch of `batch` requests padded
+    /// to `seq_len` tokens (memoized per `(batch, padded_seq)`).
+    pub fn batch_seconds(&mut self, batch: u64, seq_len: u64) -> f64 {
+        let key = (batch.max(1), self.padded_seq(seq_len));
+        if let Some(&t) = self.cache.get(&key) {
+            return t;
+        }
+        let run = inference_run(self.model, key.0, key.1, self.precision);
+        let g = forward_graph(&run, self.head);
+        let t = roofline::iteration_seconds(&g, &self.device, self.precision);
+        self.cache.insert(key, t);
+        t
+    }
+
+    /// Peak sustainable request rate at a fixed batch shape:
+    /// `batch / batch_seconds` — the capacity the sweep driver scales
+    /// offered load against.
+    pub fn saturation_rate(&mut self, batch: u64, seq_len: u64) -> f64 {
+        batch.max(1) as f64 / self.batch_seconds(batch, seq_len)
+    }
+
+    /// Number of distinct `(batch, padded_seq)` shapes costed so far.
+    pub fn cached_points(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mi100_fp32() -> LatencyModel {
+        LatencyModel::new(ModelConfig::bert_large(), Precision::Fp32, DeviceSpec::mi100())
+    }
+
+    #[test]
+    fn inference_run_takes_arbitrary_seq_lens() {
+        let r = inference_run(ModelConfig::bert_large(), 4, 96, Precision::Fp32);
+        assert_eq!(r.model.seq_len, 96);
+        assert_eq!(r.model.batch, 4);
+        // Clamped to the position table.
+        let r = inference_run(ModelConfig::bert_large(), 4, 10_000, Precision::Fp32);
+        assert_eq!(r.model.seq_len, 512);
+        let r = inference_run(ModelConfig::bert_large(), 0, 0, Precision::Fp32);
+        assert_eq!((r.model.batch, r.model.seq_len), (1, 1));
+    }
+
+    #[test]
+    fn squad_head_graph_is_lighter_than_pretrain() {
+        let run = inference_run(ModelConfig::bert_large(), 8, 128, Precision::Fp32);
+        let squad = forward_graph(&run, ServeHead::Squad);
+        let pre = forward_graph(&run, ServeHead::Pretrain);
+        assert!(squad.total_flops() < pre.total_flops());
+        assert!(squad.ops.iter().all(|o| o.pass == Pass::Forward));
+    }
+
+    #[test]
+    fn padding_rounds_up_to_bucket_and_caps() {
+        let lm = mi100_fp32();
+        assert_eq!(lm.padded_seq(1), 32);
+        assert_eq!(lm.padded_seq(32), 32);
+        assert_eq!(lm.padded_seq(33), 64);
+        assert_eq!(lm.padded_seq(4096), 512);
+    }
+
+    #[test]
+    fn latency_is_monotone_in_batch_and_seq() {
+        let mut lm = mi100_fp32();
+        let t1 = lm.batch_seconds(1, 128);
+        let t8 = lm.batch_seconds(8, 128);
+        let t32 = lm.batch_seconds(32, 128);
+        assert!(t1 <= t8 && t8 <= t32, "{t1} {t8} {t32}");
+        let s128 = lm.batch_seconds(8, 128);
+        let s384 = lm.batch_seconds(8, 384);
+        assert!(s128 < s384, "{s128} !< {s384}");
+    }
+
+    #[test]
+    fn batching_amortizes_per_request_cost() {
+        // The serving analogue of takeaway 6: bigger batches raise
+        // occupancy and amortize launches, so per-request capacity grows.
+        let mut lm = mi100_fp32();
+        let r1 = lm.saturation_rate(1, 128);
+        let r32 = lm.saturation_rate(32, 128);
+        assert!(r32 > 2.0 * r1, "B32 {r32} req/s !>> B1 {r1} req/s");
+    }
+
+    #[test]
+    fn mixed_precision_serves_faster() {
+        // Ganesh et al.'s serving grid: precision is a first-order axis.
+        let mut f32m = mi100_fp32();
+        let mut mpm = LatencyModel::new(
+            ModelConfig::bert_large(),
+            Precision::Mixed,
+            DeviceSpec::mi100(),
+        );
+        assert!(mpm.batch_seconds(8, 128) < f32m.batch_seconds(8, 128));
+    }
+
+    #[test]
+    fn cache_collapses_onto_the_shape_grid() {
+        let mut lm = mi100_fp32();
+        for s in 1..=64 {
+            lm.batch_seconds(4, s);
+        }
+        // 64 raw lengths -> 2 padded shapes (32 and 64).
+        assert_eq!(lm.cached_points(), 2);
+    }
+}

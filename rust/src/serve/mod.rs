@@ -1,0 +1,39 @@
+//! Inference-serving models: forward-only graphs, a dynamic-batching
+//! latency simulator, and the serving-grid sweep (DESIGN.md SSServe).
+//!
+//! The paper characterizes *training* iterations, but its op-inventory +
+//! roofline machinery prices a forward-only pass just as exactly (paper
+//! SS6), and that is the pass a production deployment serves. This
+//! module turns the crate's analytic core into a serving study in the
+//! FTRANS (Li et al., FPGA 2020) / Ganesh et al. mold:
+//!
+//! * [`graph`] — [`inference_run`] builds configurations at arbitrary
+//!   `(batch, seq_len)` points (requests carry their own lengths;
+//!   training configs pin theirs to the phase), [`forward_graph`] emits
+//!   the backprop-free op graph with either the pre-training or a
+//!   fine-tuned task head, and [`LatencyModel`] memoizes roofline batch
+//!   latencies over a padded compiled-shape grid.
+//! * [`sim`] — a deterministic event-driven dynamic-batching server:
+//!   seeded Poisson arrivals ([`Workload`]), a FIFO queue, a timeout +
+//!   max-batch launch policy ([`BatchPolicy`]), and a [`SimReport`] with
+//!   p50/p95/p99 latency, throughput, utilization, and goodput under an
+//!   SLO. The time-averaged occupancy it reports satisfies Little's law
+//!   (`rust/tests/serve_sim.rs` asserts `L = λ·W`).
+//! * [`sweep`] — the {batch × seq-len × precision × device} grid run in
+//!   parallel over `std::thread::scope`, each point at an offered load
+//!   proportional to its own modeled saturation, emitting a
+//!   deterministic JSON artifact via `util::json`.
+//!
+//! Entry points: `bertprof serve` (CLI), the
+//! `serve_latency_throughput` bench, and `examples/serving_study.rs`.
+//! Everything composes the same `model::op` inventory and
+//! `perf::roofline` costing as the training-side studies, so serving
+//! numbers stay consistent with Fig. 4 by construction.
+
+pub mod graph;
+pub mod sim;
+pub mod sweep;
+
+pub use graph::{forward_graph, inference_run, LatencyModel, ServeHead};
+pub use sim::{BatchPolicy, Completion, Request, SimOutcome, SimReport, Simulator, Workload};
+pub use sweep::{run_scenario, run_sweep, sweep_json, write_sweep, Scenario, SweepConfig};

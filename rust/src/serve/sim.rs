@@ -1,0 +1,418 @@
+//! Deterministic dynamic-batching latency simulator (DESIGN.md SSServe).
+//!
+//! A single-device serving loop in the FTRANS / inference-server mold:
+//! requests arrive as a Poisson process (seeded `util::rng`, so every
+//! run is exactly reproducible), wait in a FIFO queue, and are launched
+//! as padded batches under a timeout + max-batch policy. Per-batch
+//! service time comes from the same roofline model as every other study
+//! in the crate ([`super::LatencyModel`]), so serving latencies stay
+//! consistent with the Fig. 4 training breakdowns by construction.
+//!
+//! The simulator is event-driven over the request list — no wall clock,
+//! no threads — and reports the serving metrics the ROADMAP's
+//! heavy-traffic north star asks about: p50/p95/p99 latency, throughput,
+//! goodput under an SLO, utilization, and the time-averaged number of
+//! requests in the system (which must satisfy Little's law `L = λ·W`;
+//! `rust/tests/serve_sim.rs` asserts it).
+
+use crate::serve::graph::LatencyModel;
+use crate::util::Rng;
+
+/// One inference request: arrival time (seconds from t=0) and its own
+/// sequence length (variable per request — the serving axis training
+/// graphs don't have).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Dense id in arrival order.
+    pub id: u64,
+    /// Arrival time in seconds since the start of the trace.
+    pub arrival: f64,
+    /// Unpadded token count of this request.
+    pub seq_len: u64,
+}
+
+/// A reproducible open-loop arrival process: Poisson arrivals at `rate`
+/// requests/second with sequence lengths uniform in
+/// `[seq_min, seq_max]`, all drawn from one seeded [`Rng`].
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Mean arrival rate (requests per second).
+    pub rate: f64,
+    /// Number of requests in the trace.
+    pub requests: u64,
+    /// Minimum request sequence length (inclusive).
+    pub seq_min: u64,
+    /// Maximum request sequence length (inclusive).
+    pub seq_max: u64,
+    /// RNG seed — same seed, same trace, bit-for-bit.
+    pub seed: u64,
+}
+
+impl Workload {
+    /// Poisson arrivals at `rate` req/s with the default 16–128 token
+    /// length mix (the paper's Phase-1 n=128 as the upper bound).
+    pub fn poisson(rate: f64, requests: u64, seed: u64) -> Workload {
+        Workload { rate, requests, seq_min: 16, seq_max: 128, seed }
+    }
+
+    /// Override the request-length range.
+    pub fn with_seq_range(mut self, seq_min: u64, seq_max: u64) -> Workload {
+        self.seq_min = seq_min.max(1);
+        self.seq_max = seq_max.max(self.seq_min);
+        self
+    }
+
+    /// Materialize the trace (sorted by arrival by construction).
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::seed(self.seed);
+        let mut t = 0.0;
+        (0..self.requests)
+            .map(|id| {
+                // Exponential inter-arrival: -ln(1-U)/rate, U in [0,1).
+                let u = rng.uniform();
+                t += -(1.0 - u).ln() / self.rate;
+                let seq_len = rng.int_range(self.seq_min as i64, self.seq_max as i64) as u64;
+                Request { id, arrival: t, seq_len }
+            })
+            .collect()
+    }
+}
+
+/// Batch-formation policy: launch when `max_batch` requests are queued
+/// or when the oldest queued request has waited `max_wait` seconds,
+/// whichever comes first (the standard dynamic-batching contract).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest batch one launch may carry.
+    pub max_batch: u64,
+    /// Longest the head-of-line request may wait for co-batching
+    /// (seconds). Zero = launch as soon as the device frees.
+    pub max_wait: f64,
+}
+
+impl BatchPolicy {
+    /// A policy launching at `max_batch` queued requests or after the
+    /// head-of-line request waited `max_wait` seconds.
+    pub fn new(max_batch: u64, max_wait: f64) -> BatchPolicy {
+        BatchPolicy { max_batch: max_batch.max(1), max_wait: max_wait.max(0.0) }
+    }
+
+    /// Every request rides alone — the latency-optimal, throughput-worst
+    /// corner of the policy space.
+    pub fn no_batching() -> BatchPolicy {
+        BatchPolicy { max_batch: 1, max_wait: 0.0 }
+    }
+
+    /// Short policy label for tables (`B8/10ms`).
+    pub fn label(&self) -> String {
+        format!("B{}/{:.0}ms", self.max_batch, self.max_wait * 1e3)
+    }
+}
+
+/// One served request's lifecycle, kept for external analysis (the
+/// Little's-law property test integrates these).
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// Request id (arrival order).
+    pub id: u64,
+    /// Arrival time (copied from the request).
+    pub arrival: f64,
+    /// Completion time (batch launch + batch service).
+    pub done: f64,
+    /// Size of the batch this request rode in.
+    pub batch_size: u64,
+    /// Padded sequence length the batch executed at.
+    pub padded_seq: u64,
+}
+
+/// Aggregate serving metrics of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Scenario label.
+    pub label: String,
+    /// Requests served.
+    pub requests: u64,
+    /// Batches launched.
+    pub batches: u64,
+    /// Mean formed batch size (requests / batches).
+    pub mean_batch: f64,
+    /// Seconds from t=0 to the last completion.
+    pub makespan: f64,
+    /// Served requests per second over the makespan.
+    pub throughput: f64,
+    /// Device busy fraction of the makespan.
+    pub utilization: f64,
+    /// Mean end-to-end latency (queue wait + service), seconds.
+    pub mean_latency: f64,
+    /// Median latency, seconds.
+    pub p50: f64,
+    /// 95th-percentile latency, seconds.
+    pub p95: f64,
+    /// 99th-percentile latency, seconds.
+    pub p99: f64,
+    /// Worst observed latency, seconds.
+    pub max_latency: f64,
+    /// The latency SLO the run was scored against, seconds.
+    pub slo: f64,
+    /// Fraction of requests finishing within the SLO.
+    pub slo_attainment: f64,
+    /// SLO-meeting requests per second (attainment × throughput).
+    pub goodput: f64,
+    /// Time-averaged number of requests in the system (Little's `L`).
+    pub mean_in_system: f64,
+    /// Observed arrival rate over the makespan window (Little's `λ`).
+    pub arrival_rate: f64,
+}
+
+impl SimReport {
+    /// All-zero report for an empty trace.
+    pub fn empty(label: &str) -> SimReport {
+        SimReport {
+            label: label.to_string(),
+            requests: 0,
+            batches: 0,
+            mean_batch: 0.0,
+            makespan: 0.0,
+            throughput: 0.0,
+            utilization: 0.0,
+            mean_latency: 0.0,
+            p50: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+            max_latency: 0.0,
+            slo: 0.0,
+            slo_attainment: 0.0,
+            goodput: 0.0,
+            mean_in_system: 0.0,
+            arrival_rate: 0.0,
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (`q` in (0,1]).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// The simulation result: the aggregate report plus every request's
+/// lifecycle record.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Aggregate metrics.
+    pub report: SimReport,
+    /// Per-request lifecycle records, in batch-launch order.
+    pub completions: Vec<Completion>,
+}
+
+/// The dynamic-batching server: one device, FIFO queue, one policy,
+/// scored against one latency SLO.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    /// Batch-formation policy.
+    pub policy: BatchPolicy,
+    /// End-to-end latency SLO in seconds.
+    pub slo: f64,
+}
+
+impl Simulator {
+    /// A server under `policy`, scored against `slo`.
+    pub fn new(policy: BatchPolicy, slo: f64) -> Simulator {
+        Simulator { policy, slo }
+    }
+
+    /// Run the trace to completion. `requests` must be sorted by arrival
+    /// (as [`Workload::generate`] produces); `latency` prices each
+    /// launched batch. Fully deterministic: same trace + policy + model,
+    /// same report, bit-for-bit.
+    pub fn run(
+        &self,
+        label: &str,
+        requests: &[Request],
+        latency: &mut LatencyModel,
+    ) -> SimOutcome {
+        let n = requests.len();
+        if n == 0 {
+            return SimOutcome { report: SimReport::empty(label), completions: Vec::new() };
+        }
+        let max_batch = self.policy.max_batch.max(1) as usize;
+        let mut completions = Vec::with_capacity(n);
+        let mut t_free = 0.0_f64; // when the device next idles
+        let mut busy = 0.0_f64;
+        let mut batches = 0_u64;
+        let mut i = 0_usize;
+        while i < n {
+            let head_arrival = requests[i].arrival;
+            // The head-of-line request launches by `deadline`: its
+            // arrival plus the co-batching timeout, but never before the
+            // device frees (a busy device extends the collection window,
+            // which is where batches actually fill under load).
+            let deadline = (head_arrival + self.policy.max_wait).max(t_free);
+            let fill = i + max_batch - 1;
+            let (launch, end) = if fill < n && requests[fill].arrival <= deadline {
+                // The batch fills before the deadline: go at the later
+                // of device-free and the filling request's arrival.
+                (t_free.max(requests[fill].arrival), fill + 1)
+            } else {
+                // Timeout launch: take whatever has arrived by then.
+                let launch = deadline.max(head_arrival);
+                let mut end = i;
+                while end < n && requests[end].arrival <= launch && end - i < max_batch {
+                    end += 1;
+                }
+                (launch, end)
+            };
+            let batch = &requests[i..end];
+            let batch_size = batch.len() as u64;
+            let seq = batch.iter().map(|r| r.seq_len).max().unwrap_or(1);
+            let padded_seq = latency.padded_seq(seq);
+            let service = latency.batch_seconds(batch_size, seq);
+            let done = launch + service;
+            busy += service;
+            batches += 1;
+            for r in batch {
+                completions.push(Completion {
+                    id: r.id,
+                    arrival: r.arrival,
+                    done,
+                    batch_size,
+                    padded_seq,
+                });
+            }
+            t_free = done;
+            i = end;
+        }
+
+        let makespan = t_free;
+        let mut sorted: Vec<f64> = completions.iter().map(|c| c.done - c.arrival).collect();
+        let total_wait: f64 = sorted.iter().sum();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let within = sorted.iter().filter(|&&l| l <= self.slo).count();
+        let report = SimReport {
+            label: label.to_string(),
+            requests: n as u64,
+            batches,
+            mean_batch: n as f64 / batches as f64,
+            makespan,
+            throughput: n as f64 / makespan,
+            utilization: busy / makespan,
+            mean_latency: total_wait / n as f64,
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
+            max_latency: *sorted.last().expect("non-empty"),
+            slo: self.slo,
+            slo_attainment: within as f64 / n as f64,
+            goodput: within as f64 / makespan,
+            // ∫N(t)dt over [0, makespan] equals the summed per-request
+            // time-in-system; dividing by the window gives Little's L.
+            mean_in_system: total_wait / makespan,
+            arrival_rate: n as f64 / makespan,
+        };
+        SimOutcome { report, completions }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Precision};
+    use crate::perf::device::DeviceSpec;
+
+    fn lm() -> LatencyModel {
+        LatencyModel::new(ModelConfig::bert_large(), Precision::Mixed, DeviceSpec::mi100())
+    }
+
+    fn trace(rate: f64, n: u64, seed: u64) -> Vec<Request> {
+        Workload::poisson(rate, n, seed).generate()
+    }
+
+    #[test]
+    fn workload_is_sorted_and_seeded() {
+        let a = trace(100.0, 500, 9);
+        let b = trace(100.0, 500, 9);
+        let c = trace(100.0, 500, 10);
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.arrival == y.arrival && x.seq_len == y.seq_len));
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival));
+        assert!(a.iter().all(|r| (16..=128).contains(&r.seq_len)));
+    }
+
+    #[test]
+    fn every_request_completes_after_it_arrives() {
+        let mut m = lm();
+        let rate = 0.5 * m.saturation_rate(8, 128);
+        let out = Simulator::new(BatchPolicy::new(8, 0.010), 0.1).run(
+            "t",
+            &trace(rate, 800, 3),
+            &mut m,
+        );
+        assert_eq!(out.completions.len(), 800);
+        assert!(out.completions.iter().all(|c| c.done > c.arrival));
+        assert!(out
+            .completions
+            .iter()
+            .all(|c| c.batch_size >= 1 && c.batch_size <= 8));
+    }
+
+    #[test]
+    fn no_batching_launches_one_request_per_batch() {
+        let mut m = lm();
+        let rate = 0.3 * m.saturation_rate(1, 128);
+        let r = Simulator::new(BatchPolicy::no_batching(), 0.1)
+            .run("solo", &trace(rate, 400, 4), &mut m)
+            .report;
+        assert_eq!(r.batches, r.requests);
+        assert!((r.mean_batch - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_invariants_hold() {
+        let mut m = lm();
+        let rate = 0.7 * m.saturation_rate(16, 128);
+        let r = Simulator::new(BatchPolicy::new(16, 0.005), 0.05)
+            .run("inv", &trace(rate, 1500, 11), &mut m)
+            .report;
+        assert!(r.p50 <= r.p95 && r.p95 <= r.p99 && r.p99 <= r.max_latency);
+        assert!(r.mean_latency > 0.0 && r.mean_latency <= r.max_latency);
+        assert!(r.goodput <= r.throughput + 1e-12);
+        assert!((0.0..=1.0).contains(&r.slo_attainment));
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0 + 1e-12);
+        assert!(r.mean_batch >= 1.0 && r.mean_batch <= 16.0);
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_report() {
+        let mut m = lm();
+        let out = Simulator::new(BatchPolicy::new(8, 0.01), 0.1).run("e", &[], &mut m);
+        assert_eq!(out.report.requests, 0);
+        assert!(out.completions.is_empty());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.50), 2.0);
+        assert_eq!(percentile(&xs, 0.95), 4.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn timeout_zero_still_batches_a_backlog() {
+        // max_wait=0 must not forbid batching: while the device is busy
+        // a backlog forms, and the next launch takes up to max_batch.
+        let mut m = lm();
+        let rate = 3.0 * m.saturation_rate(1, 128); // overload
+        let r = Simulator::new(BatchPolicy::new(8, 0.0), 0.1)
+            .run("z", &trace(rate, 600, 6), &mut m)
+            .report;
+        assert!(r.mean_batch > 1.5, "{}", r.mean_batch);
+    }
+}
