@@ -1,0 +1,123 @@
+//! Compression study (DESIGN.md SSCompress): what INT8 quantization and
+//! structured pruning buy a BERT-Large serving deployment — the
+//! Ganesh et al. / FTRANS question asked of the paper's roofline model.
+//!
+//! Artifact-free (CI runs this end-to-end): prints the variant ladder,
+//! the batch-latency curves, and a reduced SLO sweep with the
+//! per-device winner.
+use bertprof::compress::{
+    default_variants, run_sweep, slo_winners, CompressSweepConfig, CompressedLatencyModel,
+    PruneSpec,
+};
+use bertprof::config::ModelConfig;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::serve::BatchCost;
+
+fn main() {
+    let model = ModelConfig::bert_large();
+
+    // --- 1. The variant ladder: what each axis removes ------------------
+    println!("## Variant ladder (BERT-Large)");
+    println!(
+        "{:<14}{:>7}{:>10}{:>9}{:>9}{:>10}{:>9}",
+        "variant", "prec", "prune", "params", "kept", "Wt(MB)", "fwd-GF"
+    );
+    for v in default_variants(&model) {
+        let flops = {
+            let run = bertprof::serve::inference_run(model, 1, 128, v.precision.exec_precision());
+            let g = bertprof::serve::forward_graph(&run, bertprof::serve::ServeHead::Squad);
+            v.prune.apply(&run.model, &g).total_flops() as f64 / 1e9
+        };
+        println!(
+            "{:<14}{:>7}{:>10}{:>8.0}M{:>8.0}%{:>10.0}{:>9.1}",
+            v.name,
+            v.precision.label(),
+            v.prune.label(&model),
+            v.prune.param_count(&model) as f64 / 1e6,
+            v.prune.param_fraction(&model) * 100.0,
+            v.weight_bytes(&model) as f64 / 1e6,
+            flops
+        );
+    }
+
+    // --- 2. Batch-latency curves across the ladder (MI100) --------------
+    println!("\n## Batch latency, ms (MI100, n=128)");
+    let variants = default_variants(&model);
+    print!("{:<8}", "batch");
+    for v in &variants {
+        print!("{:>13}", v.name);
+    }
+    println!();
+    for batch in [1u64, 8, 32] {
+        print!("{:<8}", batch);
+        for v in &variants {
+            let mut lm = CompressedLatencyModel::new(model, v, DeviceSpec::mi100());
+            print!("{:>13.2}", lm.batch_seconds(batch, 128) * 1e3);
+        }
+        println!();
+    }
+
+    // --- 3. The SLO what-if: which variant first serves under 100 ms ----
+    let mut cfg = CompressSweepConfig::bert_large_default();
+    cfg.requests = 1_500;
+    println!(
+        "\n## SLO sweep ({} req/scenario, load {:.0}%, SLO {:.0} ms)",
+        cfg.requests,
+        cfg.load * 100.0,
+        cfg.slo * 1e3
+    );
+    println!(
+        "{:<26}{:>9}{:>9}{:>9}{:>9}{:>7}",
+        "config", "thr/s", "p50(ms)", "p99(ms)", "good/s", "SLO%"
+    );
+    let reports = run_sweep(&cfg, 4);
+    for r in &reports {
+        println!(
+            "{:<26}{:>9.1}{:>9.1}{:>9.1}{:>9.1}{:>6.1}%",
+            r.label,
+            r.throughput,
+            r.p50 * 1e3,
+            r.p99 * 1e3,
+            r.goodput,
+            r.slo_attainment * 100.0
+        );
+    }
+    println!("\n## First variant meeting the SLO (p99), per device");
+    for w in slo_winners(&cfg, &reports) {
+        match (&w.variant, w.max_batch, w.p99) {
+            (Some(v), Some(b), Some(p)) => {
+                println!("  {:<8} {v} at B{b} (p99 {:.1} ms)", w.device, p * 1e3)
+            }
+            _ => println!("  {:<8} no variant qualifies", w.device),
+        }
+    }
+
+    // --- 4. Pruning alone: the structured axes at FP16 ------------------
+    println!("\n## Structured-pruning axes at FP16, B32 n128 (MI100)");
+    let dense = PruneSpec::dense(&model);
+    for (name, spec) in [
+        ("dense", dense),
+        ("heads/2", dense.keep_heads(model.n_heads / 2)),
+        ("ffn/2", dense.keep_ff(model.d_ff / 2)),
+        ("layers/2", dense.keep_layers(model.n_layers / 2)),
+        ("all three", dense
+            .keep_heads(model.n_heads / 2)
+            .keep_ff(model.d_ff / 2)
+            .keep_layers(model.n_layers / 2)),
+    ] {
+        let v = bertprof::compress::CompressVariant::new(
+            name,
+            spec,
+            bertprof::compress::CompressPrecision::Mixed,
+        );
+        let mut lm = CompressedLatencyModel::new(model, &v, DeviceSpec::mi100());
+        println!(
+            "  {:<11} {:>6.1} ms/batch  {:>5.0}% params kept",
+            name,
+            lm.batch_seconds(32, 128) * 1e3,
+            spec.param_fraction(&model) * 100.0
+        );
+    }
+    println!("\n(the compression face of the paper's SS5: quantization and pruning");
+    println!(" move work off the compute roofline — the SLO decides when it's enough.)");
+}

@@ -4,7 +4,7 @@
 //! training-side figures never cover.
 use bertprof::config::{ModelConfig, Precision};
 use bertprof::perf::device::DeviceSpec;
-use bertprof::serve::{run_sweep, LatencyModel, SweepConfig};
+use bertprof::serve::{run_sweep, BatchCost, LatencyModel, SweepConfig};
 
 fn main() {
     // --- 1. The latency/throughput frontier vs offered load -------------

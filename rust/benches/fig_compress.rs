@@ -1,0 +1,49 @@
+//! SSCompress — the compression what-if grid: quantized/pruned BERT
+//! variants against the 100 ms serving SLO. Prints a reduced grid and
+//! benchmarks the compressed-latency pipeline (prune transform + quant
+//! costing + simulation).
+use bertprof::compress::{
+    default_variants, run_scenario, CompressSweepConfig, CompressedLatencyModel,
+};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::serve::BatchCost;
+use bertprof::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut cfg = CompressSweepConfig::bert_large_default();
+    cfg.devices = vec![DeviceSpec::mi100()];
+    cfg.requests = 1_000;
+    println!(
+        "## SSCompress — SLO what-if (reduced grid, {} req/scenario, SLO {:.0} ms)",
+        cfg.requests,
+        cfg.slo * 1e3
+    );
+    println!(
+        "{:<26}{:>9}{:>9}{:>9}{:>7}",
+        "config", "thr/s", "p50(ms)", "p99(ms)", "SLO%"
+    );
+    let scenarios = cfg.scenarios();
+    for s in &scenarios {
+        let r = run_scenario(&cfg, s);
+        println!(
+            "{:<26}{:>9.1}{:>9.1}{:>9.1}{:>6.1}%",
+            r.label,
+            r.throughput,
+            r.p50 * 1e3,
+            r.p99 * 1e3,
+            r.slo_attainment * 100.0
+        );
+    }
+
+    let mut b = Bench::new("fig_compress");
+    let variants = default_variants(&cfg.model);
+    let pruned = variants.last().expect("pruned-w8a8").clone();
+    b.run("prune+quant batch cost (cold cache)", || {
+        let mut lm = CompressedLatencyModel::new(cfg.model, &pruned, DeviceSpec::mi100());
+        black_box(lm.batch_seconds(32, 128));
+    });
+    b.run("one scenario end-to-end (1k requests)", || {
+        black_box(run_scenario(&cfg, &scenarios[scenarios.len() - 1]));
+    });
+    b.finish();
+}

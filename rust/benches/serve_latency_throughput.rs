@@ -4,7 +4,7 @@
 use bertprof::config::{ModelConfig, Precision};
 use bertprof::perf::device::DeviceSpec;
 use bertprof::serve::{
-    run_sweep, BatchPolicy, LatencyModel, Simulator, SweepConfig, Workload,
+    run_sweep, BatchCost, BatchPolicy, LatencyModel, Simulator, SweepConfig, Workload,
 };
 use bertprof::util::bench::{black_box, Bench};
 

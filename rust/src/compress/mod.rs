@@ -1,0 +1,40 @@
+//! Compression what-if studies: INT8 quantization, structured pruning,
+//! and the {variant × device × batch} SLO sweep (DESIGN.md SSCompress).
+//!
+//! The paper's SS5 accelerator takeaways assume the dense FP32/Mixed
+//! BERT workload, but the compression literature it sits next to —
+//! Ganesh et al.'s case study and FTRANS's fixed-point FPGA serving —
+//! shows that *quantized and pruned* variants are what deployments
+//! actually serve, and that compression shifts ops between the
+//! compute-bound and memory-bound regimes the roofline model
+//! characterizes. This module makes those variants first-class:
+//!
+//! * [`quant`] — `config::Precision::Int8` end-to-end: INT8 matrix
+//!   throughput/efficiency per device, one-byte forward traffic, the
+//!   weight-only ("W8") vs weight+activation ("W8A8") modes, and the
+//!   dequant-overhead tax on memory-bound EW ops.
+//! * [`prune`] — exact structured-pruning rewrites of
+//!   `model::IterationGraph`: attention-head removal, FFN-width shrink,
+//!   and layer drop, monotone in FLOPs/bytes per op and consistent with
+//!   rebuilding the graph at the smaller config where that is
+//!   expressible (`rust/tests/compress_props.rs`).
+//! * [`sweep`] — the what-if grid through `serve::sim`'s
+//!   dynamic-batching simulator via the shared `serve::BatchCost`
+//!   interface, reporting *which variant first meets the latency SLO on
+//!   each device* and emitting a seed-deterministic JSON artifact.
+//!
+//! Entry points: `bertprof compress` (CLI), the `fig_compress` bench,
+//! and `examples/compression_study.rs`. Everything composes the same op
+//! inventory and roofline costing as the training-side studies, so the
+//! compressed numbers stay consistent with Fig. 4 by construction.
+
+pub mod prune;
+pub mod quant;
+pub mod sweep;
+
+pub use prune::PruneSpec;
+pub use quant::{CompressPrecision, QuantConfig, QuantMode};
+pub use sweep::{
+    compress_json, default_variants, run_scenario, run_sweep, slo_winners, write_compress,
+    CompressScenario, CompressSweepConfig, CompressVariant, CompressedLatencyModel, SloWinner,
+};

@@ -1,0 +1,452 @@
+//! Structured pruning transforms over [`IterationGraph`] (DESIGN.md
+//! SSCompress).
+//!
+//! Three structured axes from the BERT-compression literature (Ganesh
+//! et al.'s case study; Michel et al.'s head pruning; DistilBERT-style
+//! depth reduction), each expressed as an exact rewrite of the op
+//! inventory rather than a scalar discount:
+//!
+//! * **attention-head removal** — keep `heads` of `n_heads`: the
+//!   attention B-GEMM batch and the softmax-chain element count scale by
+//!   `heads/n_heads`, and the Wq/Wk/Wv/Wo projections shrink to the kept
+//!   attention width `a = heads * d_head`. The dense inventory
+//!   aggregates all four projections into one op (count 4); under head
+//!   pruning Q/K/V and Wo stop sharing a shape (Q/K/V contract `d → a`,
+//!   Wo contracts `a → d`), so the transform *splits* that op into a
+//!   count-3 Q/K/V op and a count-1 Wo op with the correct transposed
+//!   dims — `gemm_efficiency` is not symmetric in M↔K, so the
+//!   orientation matters to the roofline even though FLOPs/bytes do
+//!   not change under the transposition;
+//! * **FFN-width shrink** — keep `d_ff` of the intermediate dimension:
+//!   FC-1/FC-2 GEMM dims and the GeLU element count scale down;
+//! * **layer drop** — keep `n_layers` encoder layers: per-layer op
+//!   counts scale down.
+//!
+//! The transform is monotone by construction — no op's FLOPs or bytes
+//! ever increase (`rust/tests/compress_props.rs` asserts it over random
+//! configurations) — and commutes with taking the forward slice, which
+//! is what keeps the serving-side compressed graphs consistent with the
+//! training-side ones (the cross-subsystem test).
+
+use crate::config::ModelConfig;
+use crate::model::gemm::{table3, GemmDims, GemmKind};
+use crate::model::op::{LayerClass, OpCategory, OpKind, Pass};
+use crate::model::transformer;
+use crate::model::IterationGraph;
+
+/// A structured-pruning specification: how much of each axis survives.
+/// Values are *kept* sizes (not fractions) against the dense
+/// [`ModelConfig`] the spec is built from, so a spec is meaningful only
+/// for graphs built at that config's `n_heads`/`d_ff`/`n_layers`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PruneSpec {
+    /// Attention heads kept per layer (1..=n_heads).
+    pub heads: u64,
+    /// FFN intermediate width kept (1..=d_ff).
+    pub d_ff: u64,
+    /// Encoder layers kept (1..=n_layers).
+    pub n_layers: u64,
+}
+
+impl PruneSpec {
+    /// The identity spec for `cfg` — nothing pruned.
+    pub fn dense(cfg: &ModelConfig) -> PruneSpec {
+        PruneSpec { heads: cfg.n_heads, d_ff: cfg.d_ff, n_layers: cfg.n_layers }
+    }
+
+    /// Keep `heads` attention heads (clamped to at least 1).
+    pub fn keep_heads(mut self, heads: u64) -> PruneSpec {
+        self.heads = heads.max(1);
+        self
+    }
+
+    /// Keep `d_ff` of the FFN intermediate width (clamped to at least 1).
+    pub fn keep_ff(mut self, d_ff: u64) -> PruneSpec {
+        self.d_ff = d_ff.max(1);
+        self
+    }
+
+    /// Keep `n_layers` encoder layers (clamped to at least 1).
+    pub fn keep_layers(mut self, n_layers: u64) -> PruneSpec {
+        self.n_layers = n_layers.max(1);
+        self
+    }
+
+    /// Does this spec leave `cfg` unchanged?
+    pub fn is_identity(&self, cfg: &ModelConfig) -> bool {
+        *self == PruneSpec::dense(cfg)
+    }
+
+    /// Table label: `dense` or `h8-ff2048-L24`.
+    pub fn label(&self, cfg: &ModelConfig) -> String {
+        if self.is_identity(cfg) {
+            "dense".to_string()
+        } else {
+            format!("h{}-ff{}-L{}", self.heads, self.d_ff, self.n_layers)
+        }
+    }
+
+    /// The spec with every axis clamped into `cfg`'s valid range (a spec
+    /// can never *grow* a model).
+    pub fn clamped(&self, cfg: &ModelConfig) -> PruneSpec {
+        PruneSpec {
+            heads: self.heads.clamp(1, cfg.n_heads),
+            d_ff: self.d_ff.clamp(1, cfg.d_ff),
+            n_layers: self.n_layers.clamp(1, cfg.n_layers),
+        }
+    }
+
+    /// The kept attention width `heads * d_head` — what the Wq/Wk/Wv
+    /// output (and Wo input) dimension shrinks to.
+    pub fn attn_width(&self, cfg: &ModelConfig) -> u64 {
+        self.heads.min(cfg.n_heads) * cfg.d_head()
+    }
+
+    /// Trainable parameters of one pruned encoder layer (the pruned
+    /// analogue of `transformer::layer_param_count`).
+    pub fn layer_param_count(&self, cfg: &ModelConfig) -> u64 {
+        let s = self.clamped(cfg);
+        let d = cfg.d_model;
+        let a = s.attn_width(cfg);
+        3 * (d * a + a)            // Wq, Wk, Wv: d -> a (+ biases)
+            + (a * d + d)          // Wo: a -> d (+ bias)
+            + 2 * (2 * d)          // two LayerNorms
+            + d * s.d_ff + s.d_ff  // FC-1
+            + s.d_ff * d + d // FC-2
+    }
+
+    /// Total trainable parameters of the pruned model (embeddings and
+    /// heads are untouched by these structured axes).
+    pub fn param_count(&self, cfg: &ModelConfig) -> u64 {
+        let s = self.clamped(cfg);
+        cfg.param_count() - cfg.n_layers * transformer::layer_param_count(cfg)
+            + s.n_layers * s.layer_param_count(cfg)
+    }
+
+    /// Kept-parameter fraction (1.0 for the identity spec).
+    pub fn param_fraction(&self, cfg: &ModelConfig) -> f64 {
+        self.param_count(cfg) as f64 / cfg.param_count() as f64
+    }
+
+    /// Apply the pruning transform to a graph built at `cfg` (any batch
+    /// or sequence length; `cfg` must be the graph's own model config so
+    /// the Table 3 shapes match). Returns a graph in op order with GEMM
+    /// dims, EW element counts, per-layer counts, and optimizer sizes
+    /// rewritten; ops the spec does not touch come back bit-identical.
+    /// Under head pruning the aggregated linear-projection op splits
+    /// into Q/K/V + Wo (see the module doc), so the output may carry
+    /// one extra op per projection position. Expects the standard
+    /// unsharded inventory — ops whose shapes match nothing in it are
+    /// left unchanged.
+    pub fn apply(&self, cfg: &ModelConfig, g: &IterationGraph) -> IterationGraph {
+        let s = self.clamped(cfg);
+        let rows = table3(cfg);
+        let per_layer_dense = transformer::layer_param_count(cfg);
+        let per_layer_pruned = s.layer_param_count(cfg);
+        let params_dense = cfg.param_count();
+        let params_pruned = s.param_count(cfg);
+        let map_param_elems = |e: u64| -> u64 {
+            if e == params_dense {
+                params_pruned
+            } else if e == per_layer_dense {
+                per_layer_pruned
+            } else if e == 2 * per_layer_dense {
+                2 * per_layer_pruned
+            } else {
+                e // embedding + heads groups: untouched by these axes
+            }
+        };
+        // Backward GEMMs come in (dgrad, wgrad) pairs per kind; when a
+        // configuration makes the two dense shapes coincide (e.g.
+        // BERT-Large's n*B == d_ff), order parity disambiguates them —
+        // `layer_ops` always emits dgrad before wgrad.
+        let mut bwd_seen: std::collections::HashMap<GemmKind, u64> =
+            std::collections::HashMap::new();
+        let mut out: Vec<crate::model::op::Op> = Vec::with_capacity(g.ops.len());
+        for src in &g.ops {
+            let mut op = src.clone();
+            match op.layer {
+                LayerClass::Transformer => {
+                    // Layer drop: per-layer counts are `reps * n_layers`.
+                    if op.count % cfg.n_layers == 0 {
+                        op.count = op.count / cfg.n_layers * s.n_layers;
+                    }
+                    if let OpKind::Gemm(dims) = &op.kind {
+                        let dims = *dims;
+                        let bwd_idx = if op.pass == Pass::Backward {
+                            let c = bwd_seen.entry(dims.kind).or_insert(0);
+                            let i = *c;
+                            *c += 1;
+                            i
+                        } else {
+                            0
+                        };
+                        match s.prune_gemm(&dims, op.pass, bwd_idx, cfg, &rows) {
+                            PrunedGemm::One(pruned) => {
+                                if pruned != dims {
+                                    op.name = gemm_name(&pruned, op.pass);
+                                    op.kind = OpKind::Gemm(pruned);
+                                }
+                            }
+                            PrunedGemm::SplitProjection { qkv, wo } if op.count % 4 == 0 => {
+                                // Q/K/V keep 3 of the 4 reps, Wo the 4th,
+                                // each at its own (transposed) orientation.
+                                let per_rep = op.count / 4;
+                                let mut wo_op = op.clone();
+                                op.name = gemm_name(&qkv, op.pass);
+                                op.kind = OpKind::Gemm(qkv);
+                                op.count = 3 * per_rep;
+                                wo_op.name = gemm_name(&wo, op.pass);
+                                wo_op.kind = OpKind::Gemm(wo);
+                                wo_op.count = per_rep;
+                                out.push(op);
+                                out.push(wo_op);
+                                continue;
+                            }
+                            PrunedGemm::SplitProjection { qkv, .. } => {
+                                // Non-standard rep count (not 4 per layer):
+                                // fall back to the Q/K/V orientation.
+                                op.name = gemm_name(&qkv, op.pass);
+                                op.kind = OpKind::Gemm(qkv);
+                            }
+                        }
+                    } else if let OpKind::Elementwise { elems, .. } = &mut op.kind {
+                        match op.category {
+                            OpCategory::AttnEw if *elems % cfg.n_heads == 0 => {
+                                *elems = *elems / cfg.n_heads * s.heads;
+                            }
+                            OpCategory::Gelu if *elems % cfg.d_ff == 0 => {
+                                *elems = *elems / cfg.d_ff * s.d_ff;
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                LayerClass::Optimizer => {
+                    // The per-layer LAMB kernel triplet runs once per
+                    // kept layer; its tensors shrink to the pruned
+                    // per-layer parameter count. Whole-model payloads
+                    // (global grad norm, grad accumulation) shrink to
+                    // the pruned total.
+                    let per_layer_group = op.count == cfg.n_layers
+                        && matches!(
+                            op.category,
+                            OpCategory::LambStage1
+                                | OpCategory::LambNorm
+                                | OpCategory::LambStage2
+                        );
+                    if per_layer_group {
+                        op.count = s.n_layers;
+                    }
+                    match &mut op.kind {
+                        OpKind::Elementwise { elems, .. } => {
+                            *elems = map_param_elems(*elems);
+                        }
+                        OpKind::Reduction { elems, .. } => {
+                            *elems = map_param_elems(*elems);
+                        }
+                        _ => {}
+                    }
+                }
+                _ => {}
+            }
+            out.push(op);
+        }
+        IterationGraph { ops: out }
+    }
+
+    /// Rewrite one Table 3 GEMM to its pruned shape. `dims` must match
+    /// the dense row for its kind (forward, dgrad, or wgrad position);
+    /// unmatched shapes come back unchanged. `bwd_idx` is how many
+    /// Backward GEMMs of this kind preceded this one — even = dgrad,
+    /// odd = wgrad — used only when the two dense shapes coincide.
+    fn prune_gemm(
+        &self,
+        dims: &GemmDims,
+        pass: Pass,
+        bwd_idx: u64,
+        cfg: &ModelConfig,
+        rows: &[crate::model::gemm::GemmTableRow],
+    ) -> PrunedGemm {
+        #[derive(Clone, Copy)]
+        enum Pos {
+            Fwd,
+            Dgrad,
+            Wgrad,
+        }
+        let row = match rows.iter().find(|r| r.kind == dims.kind) {
+            Some(r) => r,
+            None => return PrunedGemm::One(*dims),
+        };
+        let pos = match pass {
+            Pass::Forward if *dims == row.fwd => Pos::Fwd,
+            Pass::Backward
+                if row.bwd_dgrad == row.bwd_wgrad && *dims == row.bwd_dgrad =>
+            {
+                if bwd_idx % 2 == 0 {
+                    Pos::Dgrad
+                } else {
+                    Pos::Wgrad
+                }
+            }
+            Pass::Backward if *dims == row.bwd_dgrad => Pos::Dgrad,
+            Pass::Backward if *dims == row.bwd_wgrad => Pos::Wgrad,
+            _ => return PrunedGemm::One(*dims),
+        };
+        let a = self.attn_width(cfg);
+        let d = cfg.d_model;
+        let dff = self.d_ff.min(cfg.d_ff);
+        let nb = cfg.tokens();
+        let n = cfg.seq_len;
+        let dh = cfg.d_head();
+        let bh = cfg.batch * self.heads.min(cfg.n_heads);
+        use GemmKind::*;
+        // Pruned analogue of each Table 3 position.
+        match dims.kind {
+            LinearTransform => {
+                if self.heads.min(cfg.n_heads) >= cfg.n_heads {
+                    // No heads removed: all four projections keep their
+                    // shared dense shape.
+                    return PrunedGemm::One(*dims);
+                }
+                // Q/K/V contract d -> a; Wo contracts a -> d. The shapes
+                // are transposes of each other, which FLOPs/bytes cannot
+                // see but the M/K-asymmetric efficiency model can.
+                let (qkv, wo) = match pos {
+                    Pos::Fwd => (
+                        GemmDims::new(LinearTransform, a, nb, d, 1),
+                        GemmDims::new(LinearTransform, d, nb, a, 1),
+                    ),
+                    Pos::Dgrad => (
+                        GemmDims::new(LinearTransform, d, nb, a, 1),
+                        GemmDims::new(LinearTransform, a, nb, d, 1),
+                    ),
+                    Pos::Wgrad => (
+                        GemmDims::new(LinearTransform, a, d, nb, 1),
+                        GemmDims::new(LinearTransform, d, a, nb, 1),
+                    ),
+                };
+                PrunedGemm::SplitProjection { qkv, wo }
+            }
+            AttnScore => PrunedGemm::One(match pos {
+                Pos::Fwd => GemmDims::new(AttnScore, n, n, dh, bh),
+                Pos::Dgrad => GemmDims::new(AttnScore, n, dh, n, bh),
+                Pos::Wgrad => GemmDims::new(AttnScore, dh, n, n, bh),
+            }),
+            AttnOutput => PrunedGemm::One(match pos {
+                Pos::Fwd | Pos::Dgrad => GemmDims::new(AttnOutput, dh, n, n, bh),
+                Pos::Wgrad => GemmDims::new(AttnOutput, n, n, dh, bh),
+            }),
+            Fc1 => PrunedGemm::One(match pos {
+                Pos::Fwd => GemmDims::new(Fc1, dff, nb, d, 1),
+                Pos::Dgrad => GemmDims::new(Fc1, d, nb, dff, 1),
+                Pos::Wgrad => GemmDims::new(Fc1, d, dff, nb, 1),
+            }),
+            Fc2 => PrunedGemm::One(match pos {
+                Pos::Fwd => GemmDims::new(Fc2, d, nb, dff, 1),
+                Pos::Dgrad => GemmDims::new(Fc2, dff, nb, d, 1),
+                Pos::Wgrad => GemmDims::new(Fc2, dff, d, nb, 1),
+            }),
+            QkvFused | VocabProj => PrunedGemm::One(*dims),
+        }
+    }
+}
+
+/// Result of rewriting one GEMM: a single pruned shape, or the Q/K/V +
+/// Wo pair the aggregated projection op splits into under head pruning.
+enum PrunedGemm {
+    One(GemmDims),
+    SplitProjection { qkv: GemmDims, wo: GemmDims },
+}
+
+/// The inventory's GEMM naming scheme (`<label> fwd|bwd`).
+fn gemm_name(g: &GemmDims, pass: Pass) -> String {
+    format!("{} {}", g.label(), if pass == Pass::Forward { "fwd" } else { "bwd" })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+
+    fn run() -> RunConfig {
+        RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
+    }
+
+    #[test]
+    fn identity_spec_is_a_no_op() {
+        let r = run();
+        let g = IterationGraph::build(&r);
+        let spec = PruneSpec::dense(&r.model);
+        assert!(spec.is_identity(&r.model));
+        assert_eq!(spec.label(&r.model), "dense");
+        let pruned = spec.apply(&r.model, &g);
+        assert_eq!(g.ops, pruned.ops);
+        assert_eq!(spec.param_count(&r.model), r.model.param_count());
+    }
+
+    #[test]
+    fn ffn_and_layer_prune_equals_rebuilt_config_graph() {
+        // The expressible subset of the spec space must agree op-for-op
+        // with simply building the smaller model — the transform is the
+        // real graph, not an approximation of it.
+        let r = run();
+        let g = IterationGraph::build(&r);
+        let spec = PruneSpec::dense(&r.model).keep_ff(2048).keep_layers(12);
+        let pruned = spec.apply(&r.model, &g);
+        let mut small = r.model.with_layers(12);
+        small.d_ff = 2048;
+        let rebuilt = IterationGraph::build(&RunConfig::new(small, r.phase, r.precision));
+        assert_eq!(pruned.ops, rebuilt.ops);
+    }
+
+    #[test]
+    fn head_prune_scales_attention_only() {
+        let r = run();
+        let g = IterationGraph::build(&r);
+        let spec = PruneSpec::dense(&r.model).keep_heads(8);
+        let pruned = spec.apply(&r.model, &g);
+        let sum = |g: &IterationGraph, cat| -> u64 {
+            g.ops_in_category(cat).map(|o| o.total_flops()).sum()
+        };
+        use crate::model::op::OpCategory::*;
+        // B-GEMMs and the softmax chain halve with the head count.
+        assert_eq!(2 * sum(&pruned, AttnBGemm), sum(&g, AttnBGemm));
+        assert_eq!(2 * sum(&pruned, AttnEw), sum(&g, AttnEw));
+        // FC path untouched.
+        assert_eq!(sum(&pruned, FcGemm), sum(&g, FcGemm));
+        // Projection flops are linear in the kept attention width, so
+        // they halve exactly too (every position carries one `a` factor).
+        let lin_p = sum(&pruned, LinearGemm);
+        let lin_d = sum(&g, LinearGemm);
+        assert_eq!(2 * lin_p, lin_d, "{lin_p} vs {lin_d}");
+    }
+
+    #[test]
+    fn param_count_tracks_the_axes() {
+        let cfg = ModelConfig::bert_large();
+        let dense = PruneSpec::dense(&cfg);
+        assert_eq!(dense.param_count(&cfg), cfg.param_count());
+        let half_ff = dense.keep_ff(2048);
+        let half_layers = dense.keep_layers(12);
+        let half_heads = dense.keep_heads(8);
+        for s in [half_ff, half_layers, half_heads] {
+            assert!(s.param_count(&cfg) < cfg.param_count(), "{s:?}");
+            assert!(s.param_fraction(&cfg) > 0.3, "{s:?}");
+        }
+        // Specs can never grow the model.
+        let over = dense.keep_heads(99).keep_ff(1 << 40).keep_layers(999);
+        assert_eq!(over.param_count(&cfg), cfg.param_count());
+    }
+
+    #[test]
+    fn prune_commutes_with_forward_slice() {
+        let r = run();
+        let spec = PruneSpec::dense(&r.model).keep_heads(12).keep_ff(3072).keep_layers(18);
+        let g = IterationGraph::build(&r);
+        let a = spec.apply(&r.model, &g).forward_slice();
+        let b = spec.apply(&r.model, &g.forward_slice());
+        assert_eq!(a.ops, b.ops);
+        assert!(!a.ops.is_empty());
+    }
+}

@@ -1,0 +1,295 @@
+//! Quantized roofline costing (DESIGN.md SSCompress).
+//!
+//! Two INT8 deployment modes from the BERT-compression literature
+//! (Ganesh et al.; FTRANS serves fixed-point weights on-chip):
+//!
+//! * **weight-only** ([`QuantMode::WeightOnly`], "W8") — weights stored
+//!   INT8 and dequantized into the FP16 pipeline on load. GEMM *math*
+//!   stays on the half-precision engine; only the weight operand's
+//!   memory traffic shrinks, which is exactly what helps the
+//!   memory-bound GEMMs (small-batch serving) and does nothing for the
+//!   compute-bound ones.
+//! * **weight+activation** ([`QuantMode::WeightActivation`], "W8A8") —
+//!   every forward tensor streams one byte per element and GEMMs run on
+//!   the device's integer engine (`DeviceSpec::int8_matrix_flops`). The
+//!   memory-bound EW/reduction ops pay a dequant/requant overhead for
+//!   the scale handling at op boundaries — quantization shifts work
+//!   *toward* the memory-bound regime the paper's SS5 accelerator
+//!   takeaways single out.
+//!
+//! Pricing composes the same `perf::roofline` / `perf::gemm_model`
+//! machinery as every other study; graphs must be built at
+//! [`QuantConfig::exec_precision`] so the op-level `elem_bytes` agree
+//! with the mode.
+
+use crate::config::Precision;
+use crate::model::gemm::{GemmDims, GemmKind};
+use crate::model::op::{Op, OpKind, Pass};
+use crate::model::IterationGraph;
+use crate::perf::device::DeviceSpec;
+use crate::perf::{gemm_model, roofline};
+
+/// Default fractional overhead on memory-bound non-GEMM ops under
+/// weight+activation quantization (per-tensor scale reads plus the
+/// requant arithmetic at op boundaries).
+pub const DEQUANT_EW_OVERHEAD: f64 = 0.15;
+
+/// Which tensors quantize to INT8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    /// INT8 weights over the FP16 pipeline (dequantize on load).
+    WeightOnly,
+    /// INT8 weights and activations on the integer matrix engine.
+    WeightActivation,
+}
+
+/// A quantization configuration: the mode plus the EW dequant tax.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantConfig {
+    /// Which tensors quantize.
+    pub mode: QuantMode,
+    /// Fractional time overhead on memory-bound non-GEMM ops under
+    /// weight+activation quantization (ignored for weight-only, whose
+    /// activations never change format mid-graph).
+    pub dequant_overhead: f64,
+}
+
+impl QuantConfig {
+    /// Weight-only INT8 ("W8"): no activation requant, no EW overhead.
+    pub fn weight_only() -> QuantConfig {
+        QuantConfig { mode: QuantMode::WeightOnly, dequant_overhead: 0.0 }
+    }
+
+    /// Weight+activation INT8 ("W8A8") with the default dequant tax.
+    pub fn int8() -> QuantConfig {
+        QuantConfig {
+            mode: QuantMode::WeightActivation,
+            dequant_overhead: DEQUANT_EW_OVERHEAD,
+        }
+    }
+
+    /// The `Precision` the forward graph must be built at for this mode.
+    pub fn exec_precision(&self) -> Precision {
+        match self.mode {
+            QuantMode::WeightOnly => Precision::Mixed,
+            QuantMode::WeightActivation => Precision::Int8,
+        }
+    }
+
+    /// Short label ("W8" / "W8A8").
+    pub fn label(&self) -> &'static str {
+        match self.mode {
+            QuantMode::WeightOnly => "W8",
+            QuantMode::WeightActivation => "W8A8",
+        }
+    }
+}
+
+/// INT8-quantizable weight elements of a *forward* GEMM: the `M x K`
+/// operand of the weight-bearing kinds. Attention B-GEMMs multiply two
+/// activations and carry no weights.
+fn weight_elems(g: &GemmDims) -> u64 {
+    match g.kind {
+        GemmKind::LinearTransform
+        | GemmKind::QkvFused
+        | GemmKind::Fc1
+        | GemmKind::Fc2
+        | GemmKind::VocabProj => g.m * g.k,
+        GemmKind::AttnScore | GemmKind::AttnOutput => 0,
+    }
+}
+
+/// Seconds for one invocation of `op` (from a graph built at
+/// `q.exec_precision()`) on `dev` under quantization `q`.
+pub fn op_seconds(op: &Op, dev: &DeviceSpec, q: &QuantConfig) -> f64 {
+    let prec = q.exec_precision();
+    match &op.kind {
+        OpKind::Gemm(g) => {
+            if q.mode == QuantMode::WeightOnly && op.pass == Pass::Forward {
+                // The weight operand streams at 1 byte instead of the
+                // FP16 pipeline's 2; activations and output unchanged.
+                let act_bytes = prec.act_bytes();
+                let bytes = g.bytes(act_bytes) - weight_elems(g) * (act_bytes - 1);
+                gemm_model::gemm_time_with_bytes(g, dev, prec, bytes)
+            } else {
+                roofline::estimate_op(op, dev, prec).seconds
+            }
+        }
+        OpKind::Transfer { .. } => roofline::estimate_op(op, dev, prec).seconds,
+        _ => {
+            if q.mode == QuantMode::WeightActivation {
+                // Dequant/requant scale handling rides the memory term
+                // (extra scale-tensor traffic), never the launch
+                // overhead — so it taxes exactly the memory-bound EW ops
+                // and vanishes where compute dominates.
+                let (compute, memory) =
+                    roofline::ew_components(op, dev, prec).expect("EW-class op");
+                compute.max(memory * (1.0 + q.dequant_overhead)) + dev.launch_overhead
+            } else {
+                roofline::estimate_op(op, dev, prec).seconds
+            }
+        }
+    }
+}
+
+/// Total seconds of a graph built at `q.exec_precision()` under `q`.
+pub fn iteration_seconds(g: &IterationGraph, dev: &DeviceSpec, q: &QuantConfig) -> f64 {
+    g.ops
+        .iter()
+        .map(|op| op_seconds(op, dev, q) * op.count as f64)
+        .sum()
+}
+
+/// The full precision/quantization axis of a compression variant — the
+/// two dense precisions the paper profiles plus the two INT8 modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressPrecision {
+    /// Dense FP32 serving (the paper's baseline).
+    Fp32,
+    /// Dense mixed/FP16 serving (takeaway 3's serving face).
+    Mixed,
+    /// INT8 weights over the FP16 pipeline.
+    Int8Weight,
+    /// INT8 weights + activations on the integer engine.
+    Int8Full,
+}
+
+impl CompressPrecision {
+    /// The `Precision` graphs are built at for this point of the axis.
+    pub fn exec_precision(self) -> Precision {
+        match self {
+            CompressPrecision::Fp32 => Precision::Fp32,
+            CompressPrecision::Mixed => Precision::Mixed,
+            CompressPrecision::Int8Weight => Precision::Mixed,
+            CompressPrecision::Int8Full => Precision::Int8,
+        }
+    }
+
+    /// The quantization config, if this point quantizes anything.
+    pub fn quant(self) -> Option<QuantConfig> {
+        match self {
+            CompressPrecision::Fp32 | CompressPrecision::Mixed => None,
+            CompressPrecision::Int8Weight => Some(QuantConfig::weight_only()),
+            CompressPrecision::Int8Full => Some(QuantConfig::int8()),
+        }
+    }
+
+    /// Stored bytes per weight element — the serving-footprint axis.
+    /// Weight-only INT8 ties FP16 on *latency* at BERT serving shapes
+    /// (requests carry >=16 tokens, so forward GEMMs sit on the
+    /// occupancy/compute side of the roofline and weight streaming
+    /// hides) but quarters the FP32 footprint — FTRANS's motivation for
+    /// holding fixed-point weights on-chip.
+    pub fn weight_bytes_per_elem(self) -> u64 {
+        match self {
+            CompressPrecision::Fp32 => 4,
+            CompressPrecision::Mixed => 2,
+            CompressPrecision::Int8Weight | CompressPrecision::Int8Full => 1,
+        }
+    }
+
+    /// Axis label ("FP32" / "FP16" / "W8" / "W8A8").
+    pub fn label(self) -> &'static str {
+        match self {
+            CompressPrecision::Fp32 => "FP32",
+            CompressPrecision::Mixed => "FP16",
+            CompressPrecision::Int8Weight => "W8",
+            CompressPrecision::Int8Full => "W8A8",
+        }
+    }
+
+    /// All four points in dense→compressed order.
+    pub fn all() -> [CompressPrecision; 4] {
+        [
+            CompressPrecision::Fp32,
+            CompressPrecision::Mixed,
+            CompressPrecision::Int8Weight,
+            CompressPrecision::Int8Full,
+        ]
+    }
+}
+
+/// Total seconds of a graph built at `cp.exec_precision()` under the
+/// compression precision `cp` (plain roofline for the dense points).
+pub fn graph_seconds(g: &IterationGraph, dev: &DeviceSpec, cp: CompressPrecision) -> f64 {
+    match cp.quant() {
+        Some(q) => iteration_seconds(g, dev, &q),
+        None => roofline::iteration_seconds(g, dev, cp.exec_precision()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Precision};
+    use crate::serve::{forward_graph, inference_run, ServeHead};
+
+    fn fwd(prec: Precision) -> IterationGraph {
+        let run = inference_run(ModelConfig::bert_large(), 8, 128, prec);
+        forward_graph(&run, ServeHead::Squad)
+    }
+
+    fn seconds(cp: CompressPrecision, dev: &DeviceSpec) -> f64 {
+        graph_seconds(&fwd(cp.exec_precision()), dev, cp)
+    }
+
+    #[test]
+    fn quantization_ladder_is_monotone_on_mi100() {
+        // FP32 >= FP16 >= W8 >= W8A8: each rung removes traffic (and on
+        // the int8 engine, adds compute rate) without adding more than
+        // the modeled dequant tax on a strictly smaller byte base.
+        let dev = DeviceSpec::mi100();
+        let f32t = seconds(CompressPrecision::Fp32, &dev);
+        let f16t = seconds(CompressPrecision::Mixed, &dev);
+        let w8 = seconds(CompressPrecision::Int8Weight, &dev);
+        let w8a8 = seconds(CompressPrecision::Int8Full, &dev);
+        assert!(f16t < f32t, "{f16t} !< {f32t}");
+        assert!(w8 <= f16t, "{w8} !<= {f16t}");
+        assert!(w8a8 < w8, "{w8a8} !< {w8}");
+    }
+
+    #[test]
+    fn weight_only_is_a_capacity_play_at_bert_serving_shapes() {
+        // Served BERT batches carry >=16 tokens, so the forward GEMMs
+        // sit on the occupancy/compute side of the roofline and weight
+        // streaming hides: W8 never runs slower than FP16 and never
+        // faster than the genuinely-lighter pipeline would allow; its
+        // real win is the 4x weight-footprint cut.
+        let dev = DeviceSpec::mi100();
+        for batch in [1u64, 8, 32] {
+            let run = inference_run(ModelConfig::bert_large(), batch, 128, Precision::Mixed);
+            let g = forward_graph(&run, ServeHead::Squad);
+            let f16 = graph_seconds(&g, &dev, CompressPrecision::Mixed);
+            let w8 = graph_seconds(&g, &dev, CompressPrecision::Int8Weight);
+            assert!(w8 <= f16 + 1e-15, "B{batch}: {w8} !<= {f16}");
+            assert!(w8 > 0.8 * f16, "B{batch}: {w8} vs {f16}");
+        }
+        assert_eq!(CompressPrecision::Fp32.weight_bytes_per_elem(), 4);
+        assert_eq!(CompressPrecision::Int8Weight.weight_bytes_per_elem(), 1);
+        assert_eq!(CompressPrecision::Int8Full.weight_bytes_per_elem(), 1);
+    }
+
+    #[test]
+    fn dequant_overhead_taxes_only_memory_bound_ew() {
+        let dev = DeviceSpec::mi100();
+        let g = fwd(Precision::Int8);
+        let with = iteration_seconds(&g, &dev, &QuantConfig::int8());
+        let without = iteration_seconds(
+            &g,
+            &dev,
+            &QuantConfig { mode: QuantMode::WeightActivation, dequant_overhead: 0.0 },
+        );
+        assert!(with > without, "{with} !> {without}");
+        // The tax is bounded by the overhead fraction itself.
+        assert!(with < without * (1.0 + DEQUANT_EW_OVERHEAD), "{with} vs {without}");
+    }
+
+    #[test]
+    fn labels_and_exec_precisions_line_up() {
+        assert_eq!(CompressPrecision::Int8Full.exec_precision(), Precision::Int8);
+        assert_eq!(CompressPrecision::Int8Weight.exec_precision(), Precision::Mixed);
+        assert_eq!(QuantConfig::int8().label(), "W8A8");
+        assert_eq!(QuantConfig::weight_only().label(), "W8");
+        assert_eq!(CompressPrecision::all().len(), 4);
+    }
+}

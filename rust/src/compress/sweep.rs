@@ -1,0 +1,497 @@
+//! The compression what-if sweep: {compression-variant × device ×
+//! max-batch} through the dynamic-batching simulator, answering the
+//! deployment question Ganesh et al. pose — *which compressed variant
+//! first meets the latency SLO on each device?* (DESIGN.md SSCompress).
+//!
+//! Every grid point runs the same seeded Poisson trace through
+//! `serve::sim::Simulator` against a [`CompressedLatencyModel`] (the
+//! compressed implementor of `serve::BatchCost`), offered a fixed
+//! fraction of its own modeled saturation rate — equal-pressure
+//! comparison, exactly like the dense serving sweep. Results come back
+//! in grid order and serialize to a seed-deterministic JSON artifact.
+//!
+//! Entry points: `bertprof compress` (CLI), the `fig_compress` bench,
+//! and `examples/compression_study.rs`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::compress::prune::PruneSpec;
+use crate::compress::quant::{self, CompressPrecision};
+use crate::config::ModelConfig;
+use crate::perf::device::DeviceSpec;
+use crate::serve::graph::{forward_graph, inference_run, BatchCost, ServeHead};
+use crate::serve::sim::{BatchPolicy, SimReport, Simulator, Workload};
+use crate::serve::sweep::report_json;
+use crate::util::{buckets, Json};
+
+/// One compression configuration: a structured-pruning spec plus a
+/// point on the precision/quantization axis.
+#[derive(Debug, Clone)]
+pub struct CompressVariant {
+    /// Short stable name (`dense-fp32`, `pruned-w8a8`, ...).
+    pub name: String,
+    /// Structured pruning kept-sizes.
+    pub prune: PruneSpec,
+    /// Precision / quantization mode.
+    pub precision: CompressPrecision,
+}
+
+impl CompressVariant {
+    /// A named variant.
+    pub fn new(name: &str, prune: PruneSpec, precision: CompressPrecision) -> CompressVariant {
+        CompressVariant { name: name.to_string(), prune, precision }
+    }
+
+    /// An unpruned variant at `precision`, named `dense-<prec>`.
+    pub fn dense(cfg: &ModelConfig, precision: CompressPrecision) -> CompressVariant {
+        CompressVariant::new(
+            &format!("dense-{}", precision.label().to_lowercase()),
+            PruneSpec::dense(cfg),
+            precision,
+        )
+    }
+
+    /// Stored weight footprint in bytes (parameters at this variant's
+    /// weight width) — the capacity axis weight-only quantization wins.
+    pub fn weight_bytes(&self, cfg: &ModelConfig) -> u64 {
+        self.prune.param_count(cfg) * self.precision.weight_bytes_per_elem()
+    }
+
+    /// Variant metadata as a JSON object (artifact `variants` rows).
+    pub fn to_json(&self, cfg: &ModelConfig) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("precision", Json::str(self.precision.label())),
+            ("prune", Json::str(self.prune.label(cfg))),
+            ("heads", Json::num(self.prune.heads.min(cfg.n_heads) as f64)),
+            ("d_ff", Json::num(self.prune.d_ff.min(cfg.d_ff) as f64)),
+            ("n_layers", Json::num(self.prune.n_layers.min(cfg.n_layers) as f64)),
+            ("params", Json::num(self.prune.param_count(cfg) as f64)),
+            ("param_fraction", Json::num(self.prune.param_fraction(cfg))),
+            ("weight_mb", Json::num(self.weight_bytes(cfg) as f64 / 1e6)),
+        ])
+    }
+}
+
+/// The default dense→compressed ladder for the what-if study: the two
+/// dense precisions the paper profiles, the two INT8 modes, and a
+/// Ganesh-style structurally pruned model (half the heads, half the FFN
+/// width, depth kept) at FP16 and at full INT8.
+pub fn default_variants(cfg: &ModelConfig) -> Vec<CompressVariant> {
+    let dense = PruneSpec::dense(cfg);
+    let pruned = dense.keep_heads(cfg.n_heads / 2).keep_ff(cfg.d_ff / 2);
+    vec![
+        CompressVariant::dense(cfg, CompressPrecision::Fp32),
+        CompressVariant::dense(cfg, CompressPrecision::Mixed),
+        CompressVariant::dense(cfg, CompressPrecision::Int8Weight),
+        CompressVariant::dense(cfg, CompressPrecision::Int8Full),
+        CompressVariant::new("pruned-fp16", pruned, CompressPrecision::Mixed),
+        CompressVariant::new("pruned-w8a8", pruned, CompressPrecision::Int8Full),
+    ]
+}
+
+/// Memoized roofline latency of *compressed* forward batches on one
+/// device — the compressed counterpart of `serve::LatencyModel`, sharing
+/// its padded-shape grid (`util::buckets`) and pluggable into the
+/// simulator through `serve::BatchCost`.
+#[derive(Debug, Clone)]
+pub struct CompressedLatencyModel {
+    /// Dense served-model hyperparameters (the spec's baseline).
+    pub model: ModelConfig,
+    /// Structured pruning applied to every forward graph.
+    pub prune: PruneSpec,
+    /// Precision / quantization mode the batches are priced under.
+    pub precision: CompressPrecision,
+    /// Roofline device preset.
+    pub device: DeviceSpec,
+    /// Output head variant.
+    pub head: ServeHead,
+    /// Sequence-length padding granularity.
+    pub seq_bucket: u64,
+    cache: HashMap<(u64, u64), f64>,
+}
+
+impl CompressedLatencyModel {
+    /// A compressed latency model with the default 32-token bucket and
+    /// the SQuAD serving head.
+    pub fn new(
+        model: ModelConfig,
+        variant: &CompressVariant,
+        device: DeviceSpec,
+    ) -> CompressedLatencyModel {
+        CompressedLatencyModel {
+            model,
+            prune: variant.prune,
+            precision: variant.precision,
+            device,
+            head: ServeHead::Squad,
+            seq_bucket: 32,
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Override the padding bucket (1 = exact per-length shapes).
+    pub fn with_seq_bucket(mut self, bucket: u64) -> CompressedLatencyModel {
+        self.seq_bucket = bucket.max(1);
+        self
+    }
+
+    /// Number of distinct `(batch, padded_seq)` shapes costed so far.
+    pub fn cached_points(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+impl BatchCost for CompressedLatencyModel {
+    fn padded_seq(&self, seq_len: u64) -> u64 {
+        buckets::pad_to_bucket(seq_len, self.seq_bucket, self.model.max_seq_len)
+    }
+
+    fn batch_seconds(&mut self, batch: u64, seq_len: u64) -> f64 {
+        let key = (batch.max(1), self.padded_seq(seq_len));
+        if let Some(&t) = self.cache.get(&key) {
+            return t;
+        }
+        let run = inference_run(self.model, key.0, key.1, self.precision.exec_precision());
+        let g = forward_graph(&run, self.head);
+        let g = self.prune.apply(&run.model, &g);
+        let t = quant::graph_seconds(&g, &self.device, self.precision);
+        self.cache.insert(key, t);
+        t
+    }
+}
+
+/// The compression-sweep grid plus shared workload/scoring parameters.
+#[derive(Debug, Clone)]
+pub struct CompressSweepConfig {
+    /// Dense served-model hyperparameters (Table 2).
+    pub model: ModelConfig,
+    /// Device presets to sweep.
+    pub devices: Vec<DeviceSpec>,
+    /// Compression variants in dense→compressed order ("first meets the
+    /// SLO" reads this order).
+    pub variants: Vec<CompressVariant>,
+    /// Dynamic-batching `max_batch` points.
+    pub max_batches: Vec<u64>,
+    /// Maximum request sequence length (requests draw uniformly from
+    /// `[seq_max/8, seq_max]`, like the dense serving sweep).
+    pub seq_max: u64,
+    /// Requests per scenario trace.
+    pub requests: u64,
+    /// Workload RNG seed (same seed → identical artifact).
+    pub seed: u64,
+    /// End-to-end latency SLO in seconds (the 100 ms question).
+    pub slo: f64,
+    /// Co-batching timeout in seconds.
+    pub max_wait: f64,
+    /// Offered load as a fraction of each scenario's modeled saturation.
+    pub load: f64,
+}
+
+impl CompressSweepConfig {
+    /// The default study: BERT-Large on MI100 + V100, the six-variant
+    /// ladder, B8/B32 dynamic batching, n≤128 requests, 100 ms SLO.
+    pub fn bert_large_default() -> CompressSweepConfig {
+        let model = ModelConfig::bert_large();
+        CompressSweepConfig {
+            variants: default_variants(&model),
+            model,
+            devices: vec![DeviceSpec::mi100(), DeviceSpec::v100()],
+            max_batches: vec![8, 32],
+            seq_max: 128,
+            requests: 4_000,
+            seed: 42,
+            slo: 0.100,
+            max_wait: 0.010,
+            load: 0.65,
+        }
+    }
+
+    /// Materialize the grid in deterministic (device, variant,
+    /// max-batch) order, deriving each scenario's offered rate from its
+    /// own saturation point.
+    pub fn scenarios(&self) -> Vec<CompressScenario> {
+        let mut out = Vec::new();
+        for dev in &self.devices {
+            for variant in &self.variants {
+                let mut lm = CompressedLatencyModel::new(self.model, variant, dev.clone());
+                for &max_batch in &self.max_batches {
+                    let rate = self.load * lm.saturation_rate(max_batch, self.seq_max);
+                    out.push(CompressScenario {
+                        label: format!("{} {} B{}", dev.name, variant.name, max_batch),
+                        device: dev.clone(),
+                        variant: variant.clone(),
+                        policy: BatchPolicy::new(max_batch, self.max_wait),
+                        rate,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Grid cardinality.
+    pub fn scenario_count(&self) -> usize {
+        self.devices.len() * self.variants.len() * self.max_batches.len()
+    }
+}
+
+/// One fully-resolved compression grid point.
+#[derive(Debug, Clone)]
+pub struct CompressScenario {
+    /// Table label (`MI100 pruned-w8a8 B32`).
+    pub label: String,
+    /// Device preset.
+    pub device: DeviceSpec,
+    /// Compression variant.
+    pub variant: CompressVariant,
+    /// Batch-formation policy.
+    pub policy: BatchPolicy,
+    /// Offered arrival rate (requests/second).
+    pub rate: f64,
+}
+
+/// Simulate one scenario (deterministic given `cfg.seed`).
+pub fn run_scenario(cfg: &CompressSweepConfig, scenario: &CompressScenario) -> SimReport {
+    let mut lm =
+        CompressedLatencyModel::new(cfg.model, &scenario.variant, scenario.device.clone());
+    let trace = Workload::poisson(scenario.rate, cfg.requests, cfg.seed)
+        .with_seq_range((cfg.seq_max / 8).max(1), cfg.seq_max)
+        .generate();
+    Simulator::new(scenario.policy, cfg.slo)
+        .run(&scenario.label, &trace, &mut lm)
+        .report
+}
+
+/// Run the whole grid across up to `threads` workers; results in grid
+/// order regardless of scheduling.
+pub fn run_sweep(cfg: &CompressSweepConfig, threads: usize) -> Vec<SimReport> {
+    let scenarios = cfg.scenarios();
+    let n = scenarios.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.clamp(1, n);
+    let slots: Vec<Mutex<Option<SimReport>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for worker in 0..workers {
+            let scenarios = &scenarios;
+            let slots = &slots;
+            s.spawn(move || {
+                let mut i = worker;
+                while i < n {
+                    let report = run_scenario(cfg, &scenarios[i]);
+                    *slots[i].lock().expect("no panics hold this lock") = Some(report);
+                    i += workers;
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().expect("worker finished").expect("slot filled"))
+        .collect()
+}
+
+/// The per-device answer to the headline question: the first variant
+/// (in ladder order) with a grid point whose p99 meets the SLO.
+#[derive(Debug, Clone)]
+pub struct SloWinner {
+    /// Device name.
+    pub device: String,
+    /// Winning variant name, if any variant qualifies.
+    pub variant: Option<String>,
+    /// The qualifying `max_batch` point (first in grid order).
+    pub max_batch: Option<u64>,
+    /// That point's p99 latency in seconds.
+    pub p99: Option<f64>,
+}
+
+/// Compute the per-device SLO winners from grid-ordered `reports`.
+pub fn slo_winners(cfg: &CompressSweepConfig, reports: &[SimReport]) -> Vec<SloWinner> {
+    let scenarios = cfg.scenarios();
+    cfg.devices
+        .iter()
+        .map(|dev| {
+            let hit = scenarios
+                .iter()
+                .zip(reports)
+                .find(|(s, r)| s.device.name == dev.name && r.p99 <= cfg.slo);
+            SloWinner {
+                device: dev.name.clone(),
+                variant: hit.map(|(s, _)| s.variant.name.clone()),
+                max_batch: hit.map(|(s, _)| s.policy.max_batch),
+                p99: hit.map(|(_, r)| r.p99),
+            }
+        })
+        .collect()
+}
+
+/// The whole sweep as one JSON artifact (deterministic for a fixed
+/// seed: BTreeMap-ordered keys, grid-ordered scenarios, deterministic
+/// simulator underneath).
+pub fn compress_json(cfg: &CompressSweepConfig, reports: &[SimReport]) -> Json {
+    let winners = slo_winners(cfg, reports);
+    Json::obj(vec![
+        ("study", Json::str("compress_slo_whatif")),
+        (
+            "model",
+            Json::obj(vec![
+                ("d_model", Json::num(cfg.model.d_model as f64)),
+                ("n_layers", Json::num(cfg.model.n_layers as f64)),
+                ("n_heads", Json::num(cfg.model.n_heads as f64)),
+                ("d_ff", Json::num(cfg.model.d_ff as f64)),
+                ("vocab", Json::num(cfg.model.vocab as f64)),
+            ]),
+        ),
+        ("requests", Json::num(cfg.requests as f64)),
+        // As a string: u64 seeds above 2^53 don't survive an f64 number.
+        ("seed", Json::str(cfg.seed.to_string())),
+        ("slo_ms", Json::num(cfg.slo * 1e3)),
+        ("max_wait_ms", Json::num(cfg.max_wait * 1e3)),
+        ("load", Json::num(cfg.load)),
+        ("seq_max", Json::num(cfg.seq_max as f64)),
+        (
+            "variants",
+            Json::arr(cfg.variants.iter().map(|v| v.to_json(&cfg.model)).collect()),
+        ),
+        ("scenarios", Json::arr(reports.iter().map(report_json).collect())),
+        (
+            "slo_winners",
+            Json::arr(
+                winners
+                    .iter()
+                    .map(|w| {
+                        Json::obj(vec![
+                            ("device", Json::str(w.device.clone())),
+                            (
+                                "variant",
+                                w.variant.clone().map(Json::str).unwrap_or(Json::Null),
+                            ),
+                            (
+                                "max_batch",
+                                w.max_batch.map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
+                            ),
+                            (
+                                "p99_ms",
+                                w.p99.map(|p| Json::num(p * 1e3)).unwrap_or(Json::Null),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write the compression artifact to `path` (parents created).
+pub fn write_compress(
+    path: &Path,
+    cfg: &CompressSweepConfig,
+    reports: &[SimReport],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, compress_json(cfg, reports).to_string())
+        .with_context(|| format!("writing compress artifact {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CompressSweepConfig {
+        let mut cfg = CompressSweepConfig::bert_large_default();
+        cfg.devices = vec![DeviceSpec::mi100()];
+        cfg.requests = 400;
+        cfg.max_batches = vec![32];
+        cfg.variants = vec![
+            CompressVariant::dense(&cfg.model, CompressPrecision::Fp32),
+            CompressVariant::dense(&cfg.model, CompressPrecision::Mixed),
+            default_variants(&cfg.model).pop().expect("pruned-w8a8"),
+        ];
+        cfg
+    }
+
+    #[test]
+    fn grid_order_and_labels_are_deterministic() {
+        let cfg = small_cfg();
+        let s = cfg.scenarios();
+        assert_eq!(s.len(), cfg.scenario_count());
+        assert_eq!(s[0].label, "MI100 dense-fp32 B32");
+        assert_eq!(s[2].label, "MI100 pruned-w8a8 B32");
+        assert!(s.iter().all(|sc| sc.rate > 0.0));
+    }
+
+    #[test]
+    fn compressed_variants_serve_faster() {
+        let cfg = small_cfg();
+        let dev = DeviceSpec::mi100();
+        let secs = |v: &CompressVariant| {
+            CompressedLatencyModel::new(cfg.model, v, dev.clone()).batch_seconds(32, 128)
+        };
+        let dense32 = secs(&cfg.variants[0]);
+        let dense16 = secs(&cfg.variants[1]);
+        let pruned8 = secs(&cfg.variants[2]);
+        assert!(dense16 < dense32);
+        assert!(pruned8 < dense16);
+    }
+
+    #[test]
+    fn sweep_is_thread_count_invariant_and_seed_stable() {
+        let cfg = small_cfg();
+        let a = compress_json(&cfg, &run_sweep(&cfg, 4)).to_string();
+        let b = compress_json(&cfg, &run_sweep(&cfg, 1)).to_string();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(
+            parsed.get("scenarios").unwrap().as_arr().unwrap().len(),
+            cfg.scenario_count()
+        );
+        let mut reseeded = cfg.clone();
+        reseeded.seed = 7;
+        let c = compress_json(&reseeded, &run_sweep(&reseeded, 4)).to_string();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn acceptance_shape_a_compressed_variant_meets_the_slo_dense_fp32_does_not() {
+        // The ISSUE acceptance criterion at reduced request count: on
+        // MI100 at B32, dense FP32 busts the 100 ms SLO while the
+        // pruned+INT8 variant meets it.
+        let cfg = small_cfg();
+        let reports = run_sweep(&cfg, 4);
+        assert!(reports[0].p99 > cfg.slo, "dense FP32 p99 {}", reports[0].p99);
+        assert!(reports[2].p99 <= cfg.slo, "pruned-w8a8 p99 {}", reports[2].p99);
+        let winners = slo_winners(&cfg, &reports);
+        assert_eq!(winners.len(), 1);
+        let w = &winners[0];
+        assert_eq!(w.device, "MI100");
+        assert_ne!(w.variant.as_deref(), Some("dense-fp32"));
+        assert!(w.variant.is_some(), "no variant met the SLO");
+    }
+
+    #[test]
+    fn latency_model_caches_on_the_padded_grid() {
+        let cfg = small_cfg();
+        let mut lm = CompressedLatencyModel::new(
+            cfg.model,
+            &cfg.variants[2],
+            DeviceSpec::mi100(),
+        );
+        for s in 1..=64 {
+            lm.batch_seconds(4, s);
+        }
+        assert_eq!(lm.cached_points(), 2);
+        assert_eq!(BatchCost::padded_seq(&lm, 33), 64);
+    }
+}

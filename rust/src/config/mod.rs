@@ -2,11 +2,15 @@
 
 /// Numeric precision of the training run. Mixed precision (the paper's
 /// "FP16"/"MP") keeps GEMM + activation traffic in half precision while
-/// LAMB state and updates stay FP32 (takeaway 3).
+/// LAMB state and updates stay FP32 (takeaway 3). `Int8` is the
+/// weight+activation quantized deployment mode of the compression
+/// studies (Ganesh et al.; `compress` module) — one byte per element on
+/// the forward path, GEMMs on the device's INT8 engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     Fp32,
     Mixed,
+    Int8,
 }
 
 impl Precision {
@@ -15,10 +19,12 @@ impl Precision {
         match self {
             Precision::Fp32 => 4,
             Precision::Mixed => 2,
+            Precision::Int8 => 1,
         }
     }
 
-    /// Bytes per element for optimizer state — always FP32 master copies.
+    /// Bytes per element for optimizer state — always FP32 master copies
+    /// (INT8 is an inference mode; any fine-tuning state stays FP32).
     pub fn opt_bytes(self) -> u64 {
         4
     }
@@ -27,6 +33,7 @@ impl Precision {
         match self {
             Precision::Fp32 => "FP32",
             Precision::Mixed => "FP16",
+            Precision::Int8 => "INT8",
         }
     }
 }
@@ -203,10 +210,7 @@ impl RunConfig {
             Phase::Phase1 => "Ph1",
             Phase::Phase2 => "Ph2",
         };
-        let fp = match self.precision {
-            Precision::Fp32 => "FP32",
-            Precision::Mixed => "FP16",
-        };
+        let fp = self.precision.label();
         format!("{ph}-B{}-{fp}", self.model.batch)
     }
 
@@ -285,6 +289,9 @@ mod tests {
     fn precision_bytes() {
         assert_eq!(Precision::Fp32.act_bytes(), 4);
         assert_eq!(Precision::Mixed.act_bytes(), 2);
+        assert_eq!(Precision::Int8.act_bytes(), 1);
         assert_eq!(Precision::Mixed.opt_bytes(), 4);
+        assert_eq!(Precision::Int8.opt_bytes(), 4);
+        assert_eq!(Precision::Int8.label(), "INT8");
     }
 }

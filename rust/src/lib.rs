@@ -8,7 +8,9 @@
 //!   operation-level model of a BERT training iteration, a roofline
 //!   device model, distributed-training analytical models, fusion
 //!   studies, an inference-serving subsystem (forward-only graphs +
-//!   dynamic-batching latency simulation), and a PJRT runtime that
+//!   dynamic-batching latency simulation), a compression what-if
+//!   subsystem (INT8 quantization + structured pruning against a
+//!   latency SLO), and a PJRT runtime that
 //!   executes AOT-compiled HLO artifacts to *measure* the same
 //!   breakdowns the model predicts.
 //! * **L2 (python/compile/model.py)** — BERT fwd/bwd + LAMB in JAX,
@@ -18,6 +20,7 @@
 //!
 //! See DESIGN.md for the experiment index (every paper table/figure →
 //! module → bench target).
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod dist;

@@ -11,6 +11,7 @@
 //! bertprof gemm-table                                      Table 3
 //! bertprof train --steps N                                 end-to-end tiny-BERT
 //! bertprof serve --requests N                              SSServe serving study
+//! bertprof compress --requests N                           SSCompress SLO what-if
 //! bertprof devices                                         roofline device presets
 //! ```
 
@@ -99,6 +100,7 @@ fn main() -> Result<()> {
         "gemm-table" => cmd_gemm_table(),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "compress" => cmd_compress(&args),
         "whatif" => cmd_whatif(&args, &dev),
         "memory" => cmd_memory(&args, &dev),
         "export" => cmd_export(&args, &dev),
@@ -124,6 +126,9 @@ bertprof — BERT training characterization (paper reproduction)
   serve [--requests N] [--seed S] [--device D]    SSServe dynamic-batching study
         [--slo-ms X] [--max-wait-ms X] [--load F]
         [--max-batch B] [--seq-max N] [--out F]
+  compress [--requests N] [--seed S] [--device D] SSCompress: which quantized/
+        [--slo-ms X] [--max-wait-ms X] [--load F]   pruned variant first meets
+        [--max-batch B] [--seq-max N] [--out F]     the SLO on each device
   whatif                                          SS5.2 hardware what-ifs
   memory [--hbm GB]                               SS5.2 capacity model
   export --out trace.csv [--json]                 dump op-level trace
@@ -374,26 +379,17 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use bertprof::serve::{run_sweep, write_sweep, SweepConfig};
     let mut cfg = SweepConfig::bert_large_default();
-    cfg.requests = args.opt_u64("requests", 10_000);
-    cfg.seed = args.opt_u64("seed", 42);
-    cfg.slo = args.opt_f64("slo-ms", 100.0) / 1e3;
-    cfg.max_wait = args.opt_f64("max-wait-ms", 10.0) / 1e3;
-    cfg.load = args.opt_f64("load", 0.65);
-    if !(cfg.load.is_finite() && cfg.load > 0.0) {
-        bail!("--load must be a positive finite saturation fraction, got {}", cfg.load);
+    let o = parse_sweep_opts(args, 10_000, 8)?;
+    cfg.requests = o.requests;
+    cfg.seed = o.seed;
+    cfg.slo = o.slo;
+    cfg.max_wait = o.max_wait;
+    cfg.load = o.load;
+    if let Some(d) = o.device {
+        cfg.devices = vec![d];
     }
-    if let Some(d) = args.opts.get("device") {
-        cfg.devices = vec![match d.as_str() {
-            "mi100" => DeviceSpec::mi100(),
-            "v100" => DeviceSpec::v100(),
-            "a100" => DeviceSpec::a100(),
-            "tpu" => DeviceSpec::tpu_v3_core(),
-            "cpu" => DeviceSpec::cpu_host(),
-            other => bail!("unknown device preset '{other}' (mi100|v100|a100|tpu|cpu)"),
-        }];
-    }
-    if args.opts.contains_key("max-batch") {
-        cfg.max_batches = vec![args.opt_u64("max-batch", 8)];
+    if let Some(b) = o.max_batch {
+        cfg.max_batches = vec![b];
     }
     if args.opts.contains_key("seq-max") {
         cfg.seq_maxes = vec![args.opt_u64("seq-max", 128)];
@@ -438,6 +434,111 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn parse_device(name: &str) -> Result<DeviceSpec> {
+    Ok(match name {
+        "mi100" => DeviceSpec::mi100(),
+        "v100" => DeviceSpec::v100(),
+        "a100" => DeviceSpec::a100(),
+        "tpu" => DeviceSpec::tpu_v3_core(),
+        "cpu" => DeviceSpec::cpu_host(),
+        other => bail!("unknown device preset '{other}' (mi100|v100|a100|tpu|cpu)"),
+    })
+}
+
+/// Options shared by the `serve` and `compress` sweep subcommands.
+struct SweepOpts {
+    requests: u64,
+    seed: u64,
+    slo: f64,
+    max_wait: f64,
+    load: f64,
+    device: Option<DeviceSpec>,
+    max_batch: Option<u64>,
+}
+
+fn parse_sweep_opts(args: &Args, default_requests: u64, default_max_batch: u64) -> Result<SweepOpts> {
+    let load = args.opt_f64("load", 0.65);
+    if !(load.is_finite() && load > 0.0) {
+        bail!("--load must be a positive finite saturation fraction, got {load}");
+    }
+    Ok(SweepOpts {
+        requests: args.opt_u64("requests", default_requests),
+        seed: args.opt_u64("seed", 42),
+        slo: args.opt_f64("slo-ms", 100.0) / 1e3,
+        max_wait: args.opt_f64("max-wait-ms", 10.0) / 1e3,
+        load,
+        device: args.opts.get("device").map(|d| parse_device(d)).transpose()?,
+        max_batch: args
+            .opts
+            .contains_key("max-batch")
+            .then(|| args.opt_u64("max-batch", default_max_batch)),
+    })
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    use bertprof::compress::{run_sweep, slo_winners, write_compress, CompressSweepConfig};
+    let mut cfg = CompressSweepConfig::bert_large_default();
+    let o = parse_sweep_opts(args, 4_000, 32)?;
+    cfg.requests = o.requests;
+    cfg.seed = o.seed;
+    cfg.slo = o.slo;
+    cfg.max_wait = o.max_wait;
+    cfg.load = o.load;
+    if let Some(d) = o.device {
+        cfg.devices = vec![d];
+    }
+    if let Some(b) = o.max_batch {
+        cfg.max_batches = vec![b];
+    }
+    cfg.seq_max = args.opt_u64("seq-max", 128);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let reports = run_sweep(&cfg, threads);
+
+    println!(
+        "## SSCompress — quantization/pruning SLO what-if ({} req/scenario, \
+         load {:.0}% of saturation, SLO {:.0} ms, seed {})",
+        cfg.requests,
+        cfg.load * 100.0,
+        cfg.slo * 1e3,
+        cfg.seed
+    );
+    println!(
+        "{:<26}{:>8}{:>9}{:>9}{:>9}{:>9}{:>7}{:>10}",
+        "config", "Wt(MB)", "rate/s", "thr/s", "p50(ms)", "p99(ms)", "SLO%", "goodput/s"
+    );
+    let scenarios = cfg.scenarios();
+    for (s, r) in scenarios.iter().zip(&reports) {
+        println!(
+            "{:<26}{:>8.0}{:>9.1}{:>9.1}{:>9.1}{:>9.1}{:>6.1}%{:>10.1}",
+            r.label,
+            s.variant.weight_bytes(&cfg.model) as f64 / 1e6,
+            r.arrival_rate,
+            r.throughput,
+            r.p50 * 1e3,
+            r.p99 * 1e3,
+            r.slo_attainment * 100.0,
+            r.goodput
+        );
+    }
+    println!("\n## First variant meeting the {:.0} ms SLO (p99), per device", cfg.slo * 1e3);
+    for w in slo_winners(&cfg, &reports) {
+        match (&w.variant, w.max_batch, w.p99) {
+            (Some(v), Some(b), Some(p)) => {
+                println!("  {:<8} {v} at B{b} (p99 {:.1} ms)", w.device, p * 1e3)
+            }
+            _ => println!("  {:<8} no variant qualifies", w.device),
+        }
+    }
+    let out = args
+        .opts
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "compress_sweep.json".to_string());
+    write_compress(std::path::Path::new(&out), &cfg, &reports)?;
+    println!("wrote {} scenario(s) to {out}", reports.len());
+    Ok(())
+}
+
 fn cmd_whatif(_args: &Args, dev: &DeviceSpec) -> Result<()> {
     use bertprof::model::IterationGraph;
     use bertprof::perf::whatif;
@@ -457,6 +558,11 @@ fn cmd_whatif(_args: &Args, dev: &DeviceSpec) -> Result<()> {
         let t = whatif::iteration_seconds_with_nmc(&g, dev, run.precision, k);
         println!("  NMC {k}x: iteration {:.1} ms -> {:.1} ms ({:.2}x)",
                  base * 1e3, t * 1e3, base / t);
+    }
+
+    println!("\n## SSCompress — precision ladder (forward pass, modeled)");
+    for (label, secs) in whatif::precision_scaling(&run, dev) {
+        println!("  {label:<6} forward {:.2} ms", secs * 1e3);
     }
 
     println!("\n## SS5.2 — in-network AllReduce (vs ring, gradient payload)");
@@ -516,8 +622,8 @@ fn cmd_memory(args: &Args, _dev: &DeviceSpec) -> Result<()> {
 
 fn cmd_devices() -> Result<()> {
     println!(
-        "{:<12}{:>14}{:>14}{:>14}{:>12}{:>10}",
-        "device", "fp32 GEMM*", "fp16 GEMM*", "HBM GB/s", "ridge32", "LLC MiB"
+        "{:<12}{:>14}{:>14}{:>14}{:>14}{:>12}{:>10}",
+        "device", "fp32 GEMM*", "fp16 GEMM*", "int8 GEMM*", "HBM GB/s", "ridge32", "LLC MiB"
     );
     for d in [
         DeviceSpec::mi100(),
@@ -527,10 +633,11 @@ fn cmd_devices() -> Result<()> {
         DeviceSpec::cpu_host(),
     ] {
         println!(
-            "{:<12}{:>11.1} TF{:>11.1} TF{:>14.0}{:>12.1}{:>10}",
+            "{:<12}{:>11.1} TF{:>11.1} TF{:>11.1} TF{:>14.0}{:>12.1}{:>10}",
             d.name,
             d.matrix_flops(Precision::Fp32) / 1e12,
             d.matrix_flops(Precision::Mixed) / 1e12,
+            d.matrix_flops(Precision::Int8) / 1e12,
             d.mem_bw / 1e9,
             d.ridge_point(Precision::Fp32),
             d.llc_bytes / (1024 * 1024),

@@ -64,6 +64,20 @@ impl IterationGraph {
         IterationGraph { ops }
     }
 
+    /// The forward-pass ops of this graph, in graph order — the slice a
+    /// serving deployment executes. `serve::forward_graph` and the
+    /// compression consistency tests compare against this.
+    pub fn forward_slice(&self) -> IterationGraph {
+        IterationGraph {
+            ops: self
+                .ops
+                .iter()
+                .filter(|o| o.pass == Pass::Forward)
+                .cloned()
+                .collect(),
+        }
+    }
+
     /// Total flops of the iteration.
     pub fn total_flops(&self) -> u64 {
         self.ops.iter().map(|o| o.total_flops()).sum()
@@ -168,6 +182,15 @@ mod tests {
         // Training flops ~= 3x inference flops (fwd + 2x-cost bwd).
         let r = full.total_flops() as f64 / g.total_flops() as f64;
         assert!(r > 2.4 && r < 3.8, "{r}");
+    }
+
+    #[test]
+    fn forward_slice_equals_inference_graph_op_for_op() {
+        let full = IterationGraph::build(&run());
+        let slice = full.forward_slice();
+        let inference = IterationGraph::build_inference(&run());
+        assert_eq!(slice.ops, inference.ops);
+        assert!(slice.ops.iter().all(|o| o.pass == Pass::Forward));
     }
 
     #[test]

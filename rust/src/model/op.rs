@@ -117,7 +117,7 @@ pub enum OpKind {
 }
 
 /// One kernel launch.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Op {
     pub name: String,
     pub layer: LayerClass,

@@ -16,6 +16,11 @@ pub struct DeviceSpec {
     pub fp32_matrix_flops: f64,
     /// Peak matrix-engine FP16/BF16 throughput for GEMMs.
     pub fp16_matrix_flops: f64,
+    /// Peak INT8 matrix throughput (ops/s) for quantized GEMMs — the
+    /// MFMA/IMMA/DP4A integer path the compression studies run on.
+    /// Devices without an integer engine fall back to their half-
+    /// precision rate (quantization then only saves memory traffic).
+    pub int8_matrix_flops: f64,
     /// HBM bandwidth in bytes/s.
     pub mem_bw: f64,
     /// Fixed kernel-launch / dispatch overhead per kernel (seconds).
@@ -42,6 +47,10 @@ pub struct DeviceSpec {
     /// reach ~1/3 of MFMA peak (calibrated to the paper's ~2-3x MP GEMM
     /// speedup and the 57%->40% GEMM-share drop).
     pub matrix_eff_fp16: f64,
+    /// Achieved fraction of the INT8 matrix peak at BERT GEMM sizes —
+    /// integer GEMM kernels hit roughly the same utilization wall as the
+    /// FP16 path (the tile/occupancy limits are layout, not type).
+    pub matrix_eff_int8: f64,
 }
 
 impl DeviceSpec {
@@ -55,6 +64,7 @@ impl DeviceSpec {
             fp32_vector_flops: 23.1e12,
             fp32_matrix_flops: 23.1e12,
             fp16_matrix_flops: 184.6e12,
+            int8_matrix_flops: 184.6e12, // MFMA int8 matches the fp16 rate
             mem_bw: 1.23e12,
             launch_overhead: 4.0e-6,
             llc_bytes: 8 * 1024 * 1024,
@@ -63,6 +73,7 @@ impl DeviceSpec {
             opt_bw_efficiency: 0.22,
             matrix_eff_fp32: 0.75,
             matrix_eff_fp16: 0.35,
+            matrix_eff_int8: 0.35,
         }
     }
 
@@ -73,6 +84,7 @@ impl DeviceSpec {
             fp32_vector_flops: 15.7e12,
             fp32_matrix_flops: 15.7e12,
             fp16_matrix_flops: 125.0e12,
+            int8_matrix_flops: 62.8e12, // DP4A only — no tensor-core int8
             mem_bw: 0.9e12,
             launch_overhead: 4.0e-6,
             llc_bytes: 6 * 1024 * 1024,
@@ -81,6 +93,7 @@ impl DeviceSpec {
             opt_bw_efficiency: 0.22,
             matrix_eff_fp32: 0.75,
             matrix_eff_fp16: 0.35,
+            matrix_eff_int8: 0.35,
         }
     }
 
@@ -91,6 +104,7 @@ impl DeviceSpec {
             fp32_vector_flops: 19.5e12,
             fp32_matrix_flops: 19.5e12,
             fp16_matrix_flops: 312.0e12,
+            int8_matrix_flops: 624.0e12, // IMMA tensor cores: 2x the fp16 rate
             mem_bw: 1.555e12,
             launch_overhead: 4.0e-6,
             llc_bytes: 40 * 1024 * 1024,
@@ -99,6 +113,7 @@ impl DeviceSpec {
             opt_bw_efficiency: 0.25,
             matrix_eff_fp32: 0.75,
             matrix_eff_fp16: 0.40,
+            matrix_eff_int8: 0.40,
         }
     }
 
@@ -109,6 +124,7 @@ impl DeviceSpec {
             fp32_vector_flops: 3.0e12,
             fp32_matrix_flops: 61.0e12, // bf16 MXU with f32 accumulate
             fp16_matrix_flops: 61.0e12,
+            int8_matrix_flops: 61.0e12, // no integer MXU — int8 runs as bf16
             mem_bw: 0.45e12,
             launch_overhead: 1.0e-6,
             llc_bytes: 16 * 1024 * 1024, // VMEM
@@ -117,6 +133,7 @@ impl DeviceSpec {
             opt_bw_efficiency: 0.50,
             matrix_eff_fp32: 0.80,
             matrix_eff_fp16: 0.80,
+            matrix_eff_int8: 0.80,
         }
     }
 
@@ -128,6 +145,7 @@ impl DeviceSpec {
             fp32_vector_flops: 8.0e9,
             fp32_matrix_flops: 5.0e10,
             fp16_matrix_flops: 5.0e10,
+            int8_matrix_flops: 1.0e11, // VNNI-class: ~2x the fp vector rate
             mem_bw: 2.0e10,
             launch_overhead: 20.0e-6,
             llc_bytes: 32 * 1024 * 1024,
@@ -136,6 +154,7 @@ impl DeviceSpec {
             opt_bw_efficiency: 0.55,
             matrix_eff_fp32: 0.60,
             matrix_eff_fp16: 0.60,
+            matrix_eff_int8: 0.60,
         }
     }
 
@@ -145,6 +164,7 @@ impl DeviceSpec {
         match prec {
             Precision::Fp32 => self.fp32_matrix_flops * self.matrix_eff_fp32,
             Precision::Mixed => self.fp16_matrix_flops * self.matrix_eff_fp16,
+            Precision::Int8 => self.int8_matrix_flops * self.matrix_eff_int8,
         }
     }
 
@@ -196,6 +216,29 @@ mod tests {
         let d = DeviceSpec::mi100();
         let r = d.matrix_flops(Precision::Mixed) / d.matrix_flops(Precision::Fp32);
         assert!(r > 2.0 && r < 5.0, "{r}");
+    }
+
+    #[test]
+    fn int8_matrix_rate_at_least_matches_fp16_where_an_engine_exists() {
+        // MI100 MFMA int8 == its fp16 rate; A100 IMMA doubles it. V100
+        // (DP4A only) is deliberately *slower* than its tensor-core fp16.
+        for d in [DeviceSpec::mi100(), DeviceSpec::a100()] {
+            assert!(
+                d.matrix_flops(Precision::Int8) >= d.matrix_flops(Precision::Mixed),
+                "{}",
+                d.name
+            );
+        }
+        let v = DeviceSpec::v100();
+        assert!(v.matrix_flops(Precision::Int8) < v.matrix_flops(Precision::Mixed));
+    }
+
+    #[test]
+    fn int8_ridge_point_scales_with_the_integer_engine() {
+        // Bytes/flop accounting: the INT8 ridge sits at or above FP16's
+        // on devices whose integer engine matches or beats the fp16 rate.
+        let d = DeviceSpec::a100();
+        assert!(d.ridge_point(Precision::Int8) > d.ridge_point(Precision::Mixed));
     }
 
     #[test]

@@ -50,10 +50,16 @@ pub fn gemm_mem_efficiency(g: &GemmDims) -> f64 {
 /// Roofline time for a GEMM on `dev`: max of compute at modeled
 /// efficiency and memory streaming of unique bytes.
 pub fn gemm_time(g: &GemmDims, dev: &DeviceSpec, prec: Precision) -> f64 {
+    gemm_time_with_bytes(g, dev, prec, g.bytes(prec.act_bytes()))
+}
+
+/// `gemm_time` with an explicit operand-byte count — the quantized
+/// paths (`compress::quant`) stream some operands at widths other than
+/// `prec.act_bytes()` (e.g. INT8 weights feeding an FP16 pipeline).
+pub fn gemm_time_with_bytes(g: &GemmDims, dev: &DeviceSpec, prec: Precision, bytes: u64) -> f64 {
     let eff = gemm_efficiency(g);
     let compute = g.flops() as f64 / (dev.matrix_flops(prec) * eff);
-    let memory = g.bytes(prec.act_bytes()) as f64
-        / (dev.effective_bw() * gemm_mem_efficiency(g));
+    let memory = bytes as f64 / (dev.effective_bw() * gemm_mem_efficiency(g));
     compute.max(memory) + dev.launch_overhead
 }
 

@@ -122,6 +122,23 @@ mod tests {
     }
 
     #[test]
+    fn int8_doubles_gemm_intensity_over_mixed() {
+        // ops/byte scales inversely with element width, so the INT8 bars
+        // sit 2x the Mixed bars (and 4x FP32) for every GEMM.
+        let mixed = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                   Precision::Mixed);
+        let int8 = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1,
+                                  Precision::Int8);
+        let a = gemm_intensities(&mixed);
+        let b = gemm_intensities(&int8);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((y.ops_per_byte - 2.0 * x.ops_per_byte).abs() < 1e-9 * y.ops_per_byte,
+                    "{} {} vs {}", x.label, x.ops_per_byte, y.ops_per_byte);
+        }
+    }
+
+    #[test]
     fn ew_bandwidth_normalized_to_unit_max() {
         let rows = op_intensities(&run());
         let max = rows.iter().filter(|r| !r.label.contains("Gemm"))

@@ -22,16 +22,8 @@ pub fn estimate_op(op: &Op, dev: &DeviceSpec, prec: Precision) -> OpTime {
             (t, gemm_model::is_memory_bound(g, dev, prec))
         }
         OpKind::Elementwise { .. } | OpKind::Reduction { .. } | OpKind::Gather { .. } => {
-            let compute = op.flops() as f64 / dev.vector_flops(prec);
-            // EW/reduction kernels are latency bound (SS3.2.3) and see
-            // ew_bw(); optimizer kernels stream large contiguous tensors
-            // and reach opt_bw() (Fig. 8's top bandwidth bars).
-            let bw = if op.layer == crate::model::op::LayerClass::Optimizer {
-                dev.opt_bw()
-            } else {
-                dev.ew_bw()
-            };
-            let memory = op.bytes() as f64 / bw;
+            let (compute, memory) =
+                ew_components(op, dev, prec).expect("non-GEMM, non-transfer op");
             (compute.max(memory) + dev.launch_overhead, memory >= compute)
         }
         OpKind::Transfer { bytes } => {
@@ -41,6 +33,28 @@ pub fn estimate_op(op: &Op, dev: &DeviceSpec, prec: Precision) -> OpTime {
         }
     };
     OpTime { name: op.name.clone(), seconds, memory_bound }
+}
+
+/// The (compute, memory) roofline components of a non-GEMM op — `None`
+/// for GEMMs and transfers. EW/reduction kernels are latency bound
+/// (SS3.2.3) and see `ew_bw()`; optimizer kernels stream large
+/// contiguous tensors and reach `opt_bw()` (Fig. 8's top bandwidth
+/// bars). Exposed so re-accounting layers (`compress::quant`'s dequant
+/// traffic inflation) can rebuild the same terms instead of scaling the
+/// launch overhead along with them.
+pub fn ew_components(op: &Op, dev: &DeviceSpec, prec: Precision) -> Option<(f64, f64)> {
+    match &op.kind {
+        OpKind::Elementwise { .. } | OpKind::Reduction { .. } | OpKind::Gather { .. } => {
+            let compute = op.flops() as f64 / dev.vector_flops(prec);
+            let bw = if op.layer == crate::model::op::LayerClass::Optimizer {
+                dev.opt_bw()
+            } else {
+                dev.ew_bw()
+            };
+            Some((compute, op.bytes() as f64 / bw))
+        }
+        OpKind::Gemm(_) | OpKind::Transfer { .. } => None,
+    }
 }
 
 /// Total time for all invocations of `op`.
@@ -122,6 +136,25 @@ mod tests {
         assert!(lm > lf, "mp {lm} fp32 {lf}");
         // And MP is meaningfully faster end to end.
         assert!(tm < 0.75 * tf, "mp {tm} fp32 {tf}");
+    }
+
+    #[test]
+    fn int8_graph_is_fastest_and_moves_fewest_bytes() {
+        // Bytes/FLOP accounting for the INT8 ladder rung: a graph built
+        // at Int8 moves 1/4 the FP32 traffic and never runs slower than
+        // Mixed on a device whose integer engine matches its fp16 rate.
+        let dev = DeviceSpec::mi100();
+        let graph = |p| {
+            let r = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, p);
+            IterationGraph::build_inference(&r)
+        };
+        let g32 = graph(Precision::Fp32);
+        let g8 = graph(Precision::Int8);
+        assert_eq!(g32.total_flops(), g8.total_flops());
+        assert_eq!(g32.total_bytes(), 4 * g8.total_bytes());
+        let t16 = iteration_seconds(&graph(Precision::Mixed), &dev, Precision::Mixed);
+        let t8 = iteration_seconds(&g8, &dev, Precision::Int8);
+        assert!(t8 <= t16, "{t8} !<= {t16}");
     }
 
     #[test]

@@ -112,6 +112,22 @@ pub fn iteration_seconds_with_nmc(
         .sum()
 }
 
+/// SSCompress what-if: forward-pass (inference) seconds across the full
+/// precision ladder FP32 → Mixed → INT8. Each precision rebuilds the
+/// graph, so the bytes/FLOP accounting follows `Precision::act_bytes`
+/// end-to-end and GEMMs land on the matching matrix engine.
+pub fn precision_scaling(run: &RunConfig, dev: &DeviceSpec) -> Vec<(&'static str, f64)> {
+    [Precision::Fp32, Precision::Mixed, Precision::Int8]
+        .into_iter()
+        .map(|p| {
+            let mut r = *run;
+            r.precision = p;
+            let g = IterationGraph::build_inference(&r);
+            (p.label(), roofline::iteration_seconds(&g, dev, p))
+        })
+        .collect()
+}
+
 /// In-network AllReduce: the switch reduces in flight — each device sends
 /// its payload once and receives the result once.
 pub fn innetwork_allreduce_time(bytes: u64, _devices: u64, link: &LinkSpec) -> f64 {
@@ -161,6 +177,18 @@ mod tests {
         // a visible but bounded chunk.
         assert!(nmc < base, "{nmc} !< {base}");
         assert!(nmc > 0.6 * base, "{nmc} vs {base}");
+    }
+
+    #[test]
+    fn precision_ladder_is_monotone_on_devices_with_int8_engines() {
+        for dev in [DeviceSpec::mi100(), DeviceSpec::a100()] {
+            let rows = precision_scaling(&run(), &dev);
+            assert_eq!(rows.len(), 3);
+            assert_eq!(rows[0].0, "FP32");
+            assert_eq!(rows[2].0, "INT8");
+            assert!(rows[1].1 < rows[0].1, "{}: {:?}", dev.name, rows);
+            assert!(rows[2].1 <= rows[1].1, "{}: {:?}", dev.name, rows);
+        }
     }
 
     #[test]

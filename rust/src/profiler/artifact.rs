@@ -1,0 +1,146 @@
+//! Canonical JSON artifacts for the headline figures — the golden
+//! regression surface (`rust/tests/golden.rs`).
+//!
+//! Each function is a pure, deterministic function of the crate's
+//! models: no RNG, no wall clock, no environment. The golden harness
+//! snapshots these (plus the serve and compress sweep artifacts, which
+//! are seed-deterministic) under `rust/tests/golden/` and compares
+//! field-by-field with a relative tolerance, so any change to the op
+//! inventory, the device model, or the roofline costing shows up as a
+//! reviewed diff instead of silent drift.
+
+use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+use crate::dist::{DataParallelModel, HybridModel, LinkSpec, ModelParallelModel, ZeroModel};
+use crate::perf::device::DeviceSpec;
+use crate::profiler::Timeline;
+use crate::util::Json;
+
+/// One timeline as JSON: total plus the per-layer-class and
+/// per-category millisecond stacks (BTreeMap order — stable keys).
+pub fn timeline_json(t: &Timeline) -> Json {
+    let layers = t
+        .by_layer()
+        .into_iter()
+        .map(|(k, v)| (k, Json::num(v * 1e3)))
+        .collect();
+    let cats = t
+        .by_category()
+        .into_iter()
+        .map(|(k, v)| (k, Json::num(v * 1e3)))
+        .collect();
+    Json::obj(vec![
+        ("label", Json::str(t.label.clone())),
+        ("total_ms", Json::num(t.total_seconds() * 1e3)),
+        ("launches", Json::num(t.launches() as f64)),
+        ("layers_ms", Json::Obj(layers)),
+        ("categories_ms", Json::Obj(cats)),
+    ])
+}
+
+/// Fig. 4 — the five Phi-Bj-FPk runtime breakdowns on one device.
+pub fn fig04_json(dev: &DeviceSpec) -> Json {
+    let configs = RunConfig::figure4_set()
+        .iter()
+        .map(|r| timeline_json(&Timeline::modeled(r, dev)))
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("fig04_runtime_breakdown")),
+        ("device", Json::str(dev.name.clone())),
+        ("configs", Json::arr(configs)),
+    ])
+}
+
+/// Fig. 9 — the mini-batch sweep (B = 4, 8, 16, 32) on one device.
+pub fn fig09_json(dev: &DeviceSpec) -> Json {
+    let configs = [4u64, 8, 16, 32]
+        .iter()
+        .map(|&b| {
+            let r = RunConfig::new(
+                ModelConfig::bert_large().with_batch(b),
+                Phase::Phase1,
+                Precision::Fp32,
+            );
+            timeline_json(&Timeline::modeled(&r, dev))
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("fig09_batch_sweep")),
+        ("device", Json::str(dev.name.clone())),
+        ("configs", Json::arr(configs)),
+    ])
+}
+
+/// Fig. 12 — the seven distributed-training breakdowns over PCIe 4.0
+/// (the `bertprof dist` row set).
+pub fn fig12_json(dev: &DeviceSpec) -> Json {
+    let b16 = RunConfig::new(
+        ModelConfig::bert_large().with_batch(16),
+        Phase::Phase1,
+        Precision::Fp32,
+    );
+    let b64 = RunConfig::new(
+        ModelConfig::bert_large().with_batch(64),
+        Phase::Phase1,
+        Precision::Fp32,
+    );
+    let link = LinkSpec::pcie4x16();
+    let rows = vec![
+        DataParallelModel::new(1, link.clone(), true).breakdown(&b16, dev),
+        DataParallelModel::new(64, link.clone(), true).breakdown(&b16, dev),
+        DataParallelModel::new(64, link.clone(), false).breakdown(&b16, dev),
+        ModelParallelModel::new(2, link.clone()).breakdown(&b16, dev),
+        ModelParallelModel::new(8, link.clone()).breakdown(&b64, dev),
+        HybridModel::megatron_128().breakdown(&b16, dev),
+        ZeroModel::new(64, link.clone()).breakdown(&b16, dev),
+    ];
+    let configs = rows
+        .iter()
+        .map(|b| {
+            Json::obj(vec![
+                ("label", Json::str(b.label.clone())),
+                ("total_ms", Json::num(b.total() * 1e3)),
+                ("transformer_ms", Json::num(b.transformer * 1e3)),
+                ("lamb_ms", Json::num(b.lamb * 1e3)),
+                ("output_ms", Json::num(b.output * 1e3)),
+                ("embedding_ms", Json::num(b.embedding * 1e3)),
+                ("comm_exposed_ms", Json::num(b.comm_exposed * 1e3)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("fig12_distributed")),
+        ("device", Json::str(dev.name.clone())),
+        ("link", Json::str(link.name.clone())),
+        ("configs", Json::arr(configs)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_are_deterministic_and_well_formed() {
+        let dev = DeviceSpec::mi100();
+        for (j, n) in [(fig04_json(&dev), 5usize), (fig09_json(&dev), 4), (fig12_json(&dev), 7)] {
+            let txt = j.to_string();
+            let back = Json::parse(&txt).unwrap();
+            assert_eq!(back, j);
+            assert_eq!(back.get("configs").unwrap().as_arr().unwrap().len(), n);
+        }
+        // Pure functions: identical on re-evaluation.
+        assert_eq!(fig04_json(&dev).to_string(), fig04_json(&dev).to_string());
+    }
+
+    #[test]
+    fn fig04_rows_carry_the_layer_stack() {
+        let j = fig04_json(&DeviceSpec::mi100());
+        let first = j.get("configs").unwrap().idx(0).unwrap();
+        assert_eq!(first.get("label").unwrap().as_str().unwrap(), "Ph1-B32-FP32");
+        let layers = first.get("layers_ms").unwrap().as_obj().unwrap();
+        for k in ["Transformer", "LAMB", "Output", "Embedding"] {
+            assert!(layers.contains_key(k), "{k}");
+        }
+        assert!(first.get("total_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,6 +1,7 @@
 //! Profiler: aggregates per-op times (modeled or measured) into the
 //! paper's breakdowns and renders them as the figures' text form.
 
+pub mod artifact;
 pub mod report;
 pub mod trace;
 

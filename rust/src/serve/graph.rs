@@ -18,6 +18,29 @@ use crate::model::op::{LayerClass, Pass};
 use crate::model::{output, IterationGraph};
 use crate::perf::device::DeviceSpec;
 use crate::perf::roofline;
+use crate::util::buckets;
+
+/// What the dynamic-batching simulator needs from a latency model: a
+/// padded-shape policy and a (memoizing, hence `&mut`) batch cost.
+/// Implemented by [`LatencyModel`] for the dense served model and by
+/// `compress::CompressedLatencyModel` for quantized/pruned variants, so
+/// `serve::sim` prices every deployment mode through one interface.
+pub trait BatchCost {
+    /// The padded (compiled) sequence length a request of `seq_len`
+    /// tokens executes at.
+    fn padded_seq(&self, seq_len: u64) -> u64;
+
+    /// Roofline seconds for one forward batch of `batch` requests padded
+    /// to `seq_len` tokens.
+    fn batch_seconds(&mut self, batch: u64, seq_len: u64) -> f64;
+
+    /// Peak sustainable request rate at a fixed batch shape:
+    /// `batch / batch_seconds` — what sweep drivers scale offered load
+    /// against.
+    fn saturation_rate(&mut self, batch: u64, seq_len: u64) -> f64 {
+        batch.max(1) as f64 / self.batch_seconds(batch, seq_len)
+    }
+}
 
 /// Which output head the served model carries (paper SS6: "the output
 /// layer of specific tasks ... is simpler than tasks BERT is pre-trained
@@ -124,10 +147,9 @@ impl LatencyModel {
 
     /// The padded (compiled) sequence length a request of `seq_len`
     /// tokens executes at: rounded up to the bucket, capped at
-    /// `max_seq_len`.
+    /// `max_seq_len` (shared grid logic in `util::buckets`).
     pub fn padded_seq(&self, seq_len: u64) -> u64 {
-        let padded = seq_len.max(1).div_ceil(self.seq_bucket) * self.seq_bucket;
-        padded.min(self.model.max_seq_len)
+        buckets::pad_to_bucket(seq_len, self.seq_bucket, self.model.max_seq_len)
     }
 
     /// Roofline seconds for one forward batch of `batch` requests padded
@@ -144,16 +166,19 @@ impl LatencyModel {
         t
     }
 
-    /// Peak sustainable request rate at a fixed batch shape:
-    /// `batch / batch_seconds` — the capacity the sweep driver scales
-    /// offered load against.
-    pub fn saturation_rate(&mut self, batch: u64, seq_len: u64) -> f64 {
-        batch.max(1) as f64 / self.batch_seconds(batch, seq_len)
-    }
-
     /// Number of distinct `(batch, padded_seq)` shapes costed so far.
     pub fn cached_points(&self) -> usize {
         self.cache.len()
+    }
+}
+
+impl BatchCost for LatencyModel {
+    fn padded_seq(&self, seq_len: u64) -> u64 {
+        LatencyModel::padded_seq(self, seq_len)
+    }
+
+    fn batch_seconds(&mut self, batch: u64, seq_len: u64) -> f64 {
+        LatencyModel::batch_seconds(self, batch, seq_len)
     }
 }
 
@@ -193,6 +218,15 @@ mod tests {
         assert_eq!(lm.padded_seq(32), 32);
         assert_eq!(lm.padded_seq(33), 64);
         assert_eq!(lm.padded_seq(4096), 512);
+    }
+
+    #[test]
+    fn padding_agrees_with_the_shared_bucket_grid() {
+        let lm = mi100_fp32();
+        let grid = buckets::bucket_grid(lm.seq_bucket, lm.model.max_seq_len);
+        for s in [1u64, 31, 32, 33, 511, 512, 513, 4096] {
+            assert_eq!(buckets::lookup(&grid, s), Some(lm.padded_seq(s)));
+        }
     }
 
     #[test]

@@ -34,6 +34,6 @@ pub mod graph;
 pub mod sim;
 pub mod sweep;
 
-pub use graph::{forward_graph, inference_run, LatencyModel, ServeHead};
+pub use graph::{forward_graph, inference_run, BatchCost, LatencyModel, ServeHead};
 pub use sim::{BatchPolicy, Completion, Request, SimOutcome, SimReport, Simulator, Workload};
 pub use sweep::{run_scenario, run_sweep, sweep_json, write_sweep, Scenario, SweepConfig};

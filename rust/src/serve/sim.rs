@@ -15,7 +15,7 @@
 //! requests in the system (which must satisfy Little's law `L = λ·W`;
 //! `rust/tests/serve_sim.rs` asserts it).
 
-use crate::serve::graph::LatencyModel;
+use crate::serve::graph::BatchCost;
 use crate::util::Rng;
 
 /// One inference request: arrival time (seconds from t=0) and its own
@@ -226,13 +226,14 @@ impl Simulator {
 
     /// Run the trace to completion. `requests` must be sorted by arrival
     /// (as [`Workload::generate`] produces); `latency` prices each
-    /// launched batch. Fully deterministic: same trace + policy + model,
-    /// same report, bit-for-bit.
-    pub fn run(
+    /// launched batch — any [`BatchCost`] implementor, so dense and
+    /// compressed deployments share this loop. Fully deterministic: same
+    /// trace + policy + model, same report, bit-for-bit.
+    pub fn run<C: BatchCost>(
         &self,
         label: &str,
         requests: &[Request],
-        latency: &mut LatencyModel,
+        latency: &mut C,
     ) -> SimOutcome {
         let n = requests.len();
         if n == 0 {
@@ -321,6 +322,7 @@ mod tests {
     use super::*;
     use crate::config::{ModelConfig, Precision};
     use crate::perf::device::DeviceSpec;
+    use crate::serve::graph::LatencyModel;
 
     fn lm() -> LatencyModel {
         LatencyModel::new(ModelConfig::bert_large(), Precision::Mixed, DeviceSpec::mi100())

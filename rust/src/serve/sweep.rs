@@ -18,7 +18,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{ModelConfig, Precision};
 use crate::perf::device::DeviceSpec;
-use crate::serve::graph::LatencyModel;
+use crate::serve::graph::{BatchCost, LatencyModel};
 use crate::serve::sim::{BatchPolicy, SimReport, Simulator, Workload};
 use crate::util::Json;
 

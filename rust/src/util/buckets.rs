@@ -1,0 +1,94 @@
+//! Shared padded-shape bucket helpers.
+//!
+//! A serving stack compiles a small grid of shapes and pads every
+//! request up to the next one. Both roofline latency models
+//! (`serve::graph::LatencyModel` and `compress::sweep::
+//! CompressedLatencyModel`) memoize over that grid, and both previously
+//! needed their own rounding logic; this module is the single home for
+//! it. `pad_to_bucket` handles the regular multiple-of-`bucket` grid in
+//! O(1); `lookup` handles an arbitrary ascending grid by binary search
+//! (`partition_point`), replacing the linear scan such a grid would
+//! otherwise invite.
+
+/// Round `x` up to the next multiple of `bucket`, capping the result at
+/// `cap` (the largest compiled shape). `x = 0` is treated as 1 — every
+/// request occupies at least one slot — and `bucket`/`cap` are clamped
+/// to at least 1 so the helper is total.
+pub fn pad_to_bucket(x: u64, bucket: u64, cap: u64) -> u64 {
+    let b = bucket.max(1);
+    let padded = x.max(1).div_ceil(b) * b;
+    padded.min(cap.max(1))
+}
+
+/// The ascending grid `pad_to_bucket` selects from: every multiple of
+/// `bucket` up to `cap`, with `cap` itself appended when it is not a
+/// multiple (the cap shape is always compiled).
+pub fn bucket_grid(bucket: u64, cap: u64) -> Vec<u64> {
+    let b = bucket.max(1);
+    let cap = cap.max(1);
+    let mut grid: Vec<u64> = (1..=cap / b).map(|i| i * b).collect();
+    if grid.last() != Some(&cap) {
+        grid.push(cap);
+    }
+    grid
+}
+
+/// First bucket in an ascending `grid` that holds `x`; requests larger
+/// than every bucket cap at the last one. `None` on an empty grid.
+pub fn lookup(grid: &[u64], x: u64) -> Option<u64> {
+    if grid.is_empty() {
+        return None;
+    }
+    let i = grid.partition_point(|&b| b < x.max(1));
+    Some(grid[i.min(grid.len() - 1)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_buckets_round_and_cap() {
+        // The exact boundaries the latency models live on.
+        assert_eq!(pad_to_bucket(1, 32, 512), 32);
+        assert_eq!(pad_to_bucket(31, 32, 512), 32);
+        assert_eq!(pad_to_bucket(32, 32, 512), 32);
+        assert_eq!(pad_to_bucket(33, 32, 512), 64);
+        assert_eq!(pad_to_bucket(512, 32, 512), 512);
+        assert_eq!(pad_to_bucket(513, 32, 512), 512);
+        assert_eq!(pad_to_bucket(4096, 32, 512), 512);
+        // Degenerate inputs stay total.
+        assert_eq!(pad_to_bucket(0, 32, 512), 32);
+        assert_eq!(pad_to_bucket(7, 0, 512), 7);
+        assert_eq!(pad_to_bucket(7, 1, 0), 1);
+    }
+
+    #[test]
+    fn grid_matches_arithmetic_padding() {
+        for (bucket, cap) in [(32u64, 512u64), (32, 500), (1, 8), (100, 64)] {
+            let grid = bucket_grid(bucket, cap);
+            assert!(grid.windows(2).all(|w| w[0] < w[1]), "{grid:?}");
+            for x in [0u64, 1, bucket - 1, bucket, bucket + 1, cap, cap + 1, 10_000] {
+                assert_eq!(
+                    lookup(&grid, x),
+                    Some(pad_to_bucket(x, bucket, cap)),
+                    "bucket {bucket} cap {cap} x {x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grid_includes_an_off_multiple_cap() {
+        assert_eq!(bucket_grid(32, 80), vec![32, 64, 80]);
+        assert_eq!(bucket_grid(32, 64), vec![32, 64]);
+        assert_eq!(lookup(&bucket_grid(32, 80), 70), Some(80));
+    }
+
+    #[test]
+    fn lookup_handles_empty_and_singleton() {
+        assert_eq!(lookup(&[], 5), None);
+        assert_eq!(lookup(&[16], 1), Some(16));
+        assert_eq!(lookup(&[16], 99), Some(16));
+    }
+}

@@ -2,6 +2,7 @@
 //! criterion/proptest/rand available — see Cargo.toml note).
 
 pub mod bench;
+pub mod buckets;
 pub mod json;
 pub mod rng;
 

@@ -1,0 +1,253 @@
+//! Property tests for the compression subsystem (DESIGN.md SSCompress)
+//! plus the cross-subsystem serve/train consistency check:
+//!
+//! * structured pruning is monotone — it never increases the FLOPs or
+//!   bytes of any op, over hundreds of random configurations and specs;
+//! * the INT8 ladder orders GEMM times INT8 <= Mixed <= FP32 on devices
+//!   whose integer engine matches (or beats) their fp16 rate;
+//! * a pruned-then-rebuilt graph still satisfies the core graph
+//!   invariants `rust/tests/properties.rs` pins for dense graphs;
+//! * `serve`'s inference graph at a compressed config equals the
+//!   training graph's forward slice after the same prune transform,
+//!   op-for-op.
+
+use bertprof::compress::{CompressPrecision, PruneSpec};
+use bertprof::compress::{quant, CompressVariant, CompressedLatencyModel};
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::model::gemm::table3;
+use bertprof::model::op::LayerClass;
+use bertprof::model::IterationGraph;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::perf::gemm_model::{gemm_time, is_memory_bound};
+use bertprof::serve::{forward_graph, inference_run, BatchCost, ServeHead};
+use bertprof::util::Rng;
+
+/// Random-but-valid model config (the `properties.rs` generator).
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let heads = [4u64, 8, 16][rng.int_range(0, 2) as usize];
+    let d_model = heads * 64 * rng.int_range(1, 3) as u64;
+    ModelConfig {
+        batch: rng.int_range(1, 64) as u64,
+        seq_len: [32u64, 64, 128, 256, 512][rng.int_range(0, 4) as usize],
+        d_model,
+        n_heads: heads,
+        d_ff: 4 * d_model,
+        n_layers: rng.int_range(1, 48) as u64,
+        vocab: rng.int_range(1000, 50000) as u64,
+        max_seq_len: 512,
+        type_vocab: 2,
+    }
+}
+
+/// Random non-trivial prune spec for `cfg`.
+fn random_spec(rng: &mut Rng, cfg: &ModelConfig) -> PruneSpec {
+    PruneSpec::dense(cfg)
+        .keep_heads(rng.int_range(1, cfg.n_heads as i64) as u64)
+        .keep_ff(rng.int_range(1, cfg.d_ff as i64) as u64)
+        .keep_layers(rng.int_range(1, cfg.n_layers as i64) as u64)
+}
+
+#[test]
+fn prop_pruning_is_monotone_per_op() {
+    use bertprof::model::op::OpCategory;
+    use std::collections::HashMap;
+    let per_category = |g: &IterationGraph| -> HashMap<OpCategory, (u64, u64)> {
+        let mut m = HashMap::new();
+        for o in &g.ops {
+            let e = m.entry(o.category).or_insert((0u64, 0u64));
+            e.0 += o.total_flops();
+            e.1 += o.total_bytes();
+        }
+        m
+    };
+    let mut rng = Rng::seed(31);
+    for _ in 0..60 {
+        let cfg = random_config(&mut rng);
+        // RunConfig::new pins seq_len to the phase; the transform must
+        // see the graph's own (post-phase) config so Table 3 shapes match.
+        let run = RunConfig::new(cfg, Phase::Phase1, Precision::Fp32);
+        let g = IterationGraph::build(&run);
+        let spec = random_spec(&mut rng, &cfg);
+        let pruned = spec.apply(&run.model, &g);
+        // Head pruning splits the aggregated projection op into Q/K/V +
+        // Wo, so compare per-category (and, when no split happened,
+        // per-op) — pruning must never increase work anywhere.
+        let dense_cat = per_category(&g);
+        for (cat, (fl, by)) in per_category(&pruned) {
+            let (dfl, dby) = dense_cat[&cat];
+            assert!(fl <= dfl, "{spec:?} raised {cat:?} flops: {dfl} -> {fl}");
+            assert!(by <= dby, "{spec:?} raised {cat:?} bytes: {dby} -> {by}");
+        }
+        if g.ops.len() == pruned.ops.len() {
+            for (dense, small) in g.ops.iter().zip(&pruned.ops) {
+                assert!(
+                    small.total_flops() <= dense.total_flops()
+                        && small.total_bytes() <= dense.total_bytes(),
+                    "{spec:?} raised {}",
+                    dense.name
+                );
+            }
+        }
+        assert!(pruned.total_flops() <= g.total_flops());
+        assert!(pruned.total_bytes() <= g.total_bytes());
+        assert!(spec.param_count(&cfg) <= cfg.param_count());
+    }
+}
+
+#[test]
+fn prop_int8_ladder_orders_gemm_times() {
+    // INT8 <= Mixed <= FP32 for every Table 3 GEMM on devices whose
+    // integer engine matches/beats fp16 — strict where FP32 is
+    // compute-bound (the rate advantage must show).
+    let mut rng = Rng::seed(32);
+    for dev in [DeviceSpec::mi100(), DeviceSpec::a100()] {
+        for _ in 0..25 {
+            let cfg = random_config(&mut rng);
+            for row in table3(&cfg) {
+                for g in [row.fwd, row.bwd_dgrad, row.bwd_wgrad] {
+                    let t32 = gemm_time(&g, &dev, Precision::Fp32);
+                    let t16 = gemm_time(&g, &dev, Precision::Mixed);
+                    let t8 = gemm_time(&g, &dev, Precision::Int8);
+                    assert!(t16 <= t32 + 1e-15, "{:?} {} {t16} !<= {t32}", g, dev.name);
+                    assert!(t8 <= t16 + 1e-15, "{:?} {} {t8} !<= {t16}", g, dev.name);
+                    if !is_memory_bound(&g, &dev, Precision::Fp32) {
+                        assert!(t8 < t32, "{:?} {} {t8} !< {t32}", g, dev.name);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pruned_then_rebuilt_graph_keeps_dense_invariants() {
+    // The invariants `properties.rs` pins for dense graphs, re-asserted
+    // on pruned graphs: transformer flops linear in kept layers,
+    // precision changes bytes but never flops, and the graph stays
+    // non-degenerate.
+    let mut rng = Rng::seed(33);
+    for _ in 0..40 {
+        let cfg = random_config(&mut rng);
+        let spec = random_spec(&mut rng, &cfg);
+
+        // Linear in kept layers (hold the other axes fixed).
+        if cfg.n_layers >= 2 {
+            let l = (spec.n_layers / 2).max(1);
+            let run = RunConfig::new(cfg, Phase::Phase1, Precision::Fp32);
+            let g = IterationGraph::build(&run);
+            let tf = |s: PruneSpec| -> u64 {
+                s.apply(&run.model, &g)
+                    .ops_in_layer(LayerClass::Transformer)
+                    .map(|o| o.total_flops())
+                    .sum()
+            };
+            assert_eq!(2 * tf(spec.keep_layers(l)), tf(spec.keep_layers(2 * l)), "{cfg:?}");
+        }
+
+        // Precision never changes flops, only bytes.
+        let a = {
+            let run = RunConfig::new(cfg, Phase::Phase1, Precision::Fp32);
+            spec.apply(&run.model, &IterationGraph::build(&run))
+        };
+        let b = {
+            let run = RunConfig::new(cfg, Phase::Phase1, Precision::Mixed);
+            spec.apply(&run.model, &IterationGraph::build(&run))
+        };
+        assert_eq!(a.total_flops(), b.total_flops());
+        assert!(a.total_bytes() > b.total_bytes());
+
+        // Non-degenerate: every op class present, GEMMs still majority.
+        assert!(a.ops.len() > 20);
+        assert!(a.gemm_flop_fraction() > 0.5, "{}", a.gemm_flop_fraction());
+    }
+}
+
+#[test]
+fn prop_expressible_specs_equal_rebuilt_configs() {
+    // Randomized form of the strongest consistency check: for specs
+    // expressible as a ModelConfig (full heads), the graph transform is
+    // *identical* to building the smaller model.
+    let mut rng = Rng::seed(34);
+    for _ in 0..40 {
+        let cfg = random_config(&mut rng);
+        let spec = PruneSpec::dense(&cfg)
+            .keep_ff(rng.int_range(1, cfg.d_ff as i64) as u64)
+            .keep_layers(rng.int_range(1, cfg.n_layers as i64) as u64);
+        let run = RunConfig::new(cfg, Phase::Phase1, Precision::Fp32);
+        let pruned = spec.apply(&run.model, &IterationGraph::build(&run));
+        let mut small = run.model.with_layers(spec.n_layers);
+        small.d_ff = spec.d_ff;
+        let rebuilt = IterationGraph::build(&RunConfig::new(small, Phase::Phase1,
+                                                           Precision::Fp32));
+        assert_eq!(pruned.ops, rebuilt.ops, "{cfg:?} {spec:?}");
+    }
+}
+
+#[test]
+fn cross_subsystem_serve_graph_equals_pruned_training_forward_slice() {
+    // The serving path (inference_run -> forward_graph -> prune) and the
+    // training path (build -> prune -> forward slice) must agree
+    // op-for-op at every compressed config — the compressed what-ifs
+    // answer serving questions with training-consistent graphs.
+    let model = ModelConfig::bert_large();
+    let specs = [
+        PruneSpec::dense(&model),
+        PruneSpec::dense(&model).keep_heads(8),
+        PruneSpec::dense(&model).keep_heads(12).keep_ff(2048).keep_layers(12),
+    ];
+    for spec in specs {
+        for (batch, seq) in [(1u64, 64u64), (8, 96), (32, 384)] {
+            for prec in [Precision::Fp32, Precision::Mixed, Precision::Int8] {
+                let run = inference_run(model, batch, seq, prec);
+                let serve_side = spec.apply(&run.model, &forward_graph(&run, ServeHead::Pretrain));
+                let train_side = spec.apply(&run.model, &IterationGraph::build(&run))
+                    .forward_slice();
+                assert_eq!(
+                    serve_side.ops, train_side.ops,
+                    "{spec:?} B{batch} n{seq} {prec:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_compressed_latency_monotone_in_compression() {
+    // More compression never serves slower: at any (batch, seq) shape,
+    // the pruned+quantized ladder is ordered on MI100.
+    let model = ModelConfig::bert_large();
+    let dev = DeviceSpec::mi100();
+    let dense = PruneSpec::dense(&model);
+    let pruned = dense.keep_heads(8).keep_ff(2048);
+    let mut rng = Rng::seed(35);
+    for _ in 0..10 {
+        let batch = rng.int_range(1, 64) as u64;
+        let seq = rng.int_range(16, 512) as u64;
+        let secs = |name: &str, spec: PruneSpec, cp: CompressPrecision| {
+            let v = CompressVariant::new(name, spec, cp);
+            CompressedLatencyModel::new(model, &v, dev.clone()).batch_seconds(batch, seq)
+        };
+        let d32 = secs("d32", dense, CompressPrecision::Fp32);
+        let d16 = secs("d16", dense, CompressPrecision::Mixed);
+        let p16 = secs("p16", pruned, CompressPrecision::Mixed);
+        let p8 = secs("p8", pruned, CompressPrecision::Int8Full);
+        assert!(d16 <= d32, "B{batch} n{seq}: {d16} !<= {d32}");
+        assert!(p16 <= d16, "B{batch} n{seq}: {p16} !<= {d16}");
+        assert!(p8 <= p16, "B{batch} n{seq}: {p8} !<= {p16}");
+    }
+}
+
+#[test]
+fn quantized_graphs_price_every_op() {
+    // graph_seconds must be a strict sum over ops: removing any op
+    // reduces it (guards against silently dropping categories).
+    let run = inference_run(ModelConfig::bert_large(), 8, 128, Precision::Int8);
+    let g = forward_graph(&run, ServeHead::Squad);
+    let dev = DeviceSpec::mi100();
+    let full = quant::graph_seconds(&g, &dev, CompressPrecision::Int8Full);
+    let mut partial = g.clone();
+    let _ = partial.ops.pop();
+    let less = quant::graph_seconds(&partial, &dev, CompressPrecision::Int8Full);
+    assert!(less < full);
+    assert!(full.is_finite() && full > 0.0);
+}

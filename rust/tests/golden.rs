@@ -1,0 +1,195 @@
+//! Golden-artifact regression harness.
+//!
+//! Each test computes one of the crate's canonical JSON artifacts —
+//! the Fig. 4 / Fig. 9 / Fig. 12 figure artifacts
+//! (`profiler::artifact`), the serve sweep, and the compress sweep —
+//! and compares it field-by-field against the checked-in snapshot under
+//! `rust/tests/golden/`. Numbers compare with a relative tolerance
+//! (modeling changes move numbers by far more; float noise moves them
+//! by far less); strings, booleans, array lengths, and object key sets
+//! compare exactly. Every artifact is a pure function of the crate +
+//! its seed, so a mismatch means the model changed — regenerate with
+//!
+//! ```text
+//! UPDATE_GOLDEN=1 cargo test --test golden
+//! ```
+//!
+//! and review the snapshot diff like any other code change.
+
+use std::fs;
+use std::path::PathBuf;
+
+use bertprof::compress::{self, CompressPrecision, CompressSweepConfig, CompressVariant};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::profiler::artifact;
+use bertprof::serve::{self, SweepConfig};
+use bertprof::util::Json;
+
+/// Relative tolerance for numeric fields: wide enough to absorb
+/// benign float-accumulation differences, narrow enough that any real
+/// model change (which shifts latencies by percents) trips it.
+const REL_TOL: f64 = 1e-3;
+/// Absolute floor for values near zero.
+const ABS_TOL: f64 = 1e-9;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+fn update_mode() -> bool {
+    std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Recursive field-by-field comparison; appends every divergence to
+/// `errs` as a `path: detail` line.
+fn diff(path: &str, want: &Json, got: &Json, errs: &mut Vec<String>) {
+    match (want, got) {
+        (Json::Num(a), Json::Num(b)) => {
+            let tol = ABS_TOL + REL_TOL * a.abs().max(b.abs());
+            if (a - b).abs() > tol {
+                errs.push(format!("{path}: {a} != {b} (tol {tol:e})"));
+            }
+        }
+        (Json::Str(a), Json::Str(b)) => {
+            if a != b {
+                errs.push(format!("{path}: {a:?} != {b:?}"));
+            }
+        }
+        (Json::Bool(a), Json::Bool(b)) => {
+            if a != b {
+                errs.push(format!("{path}: {a} != {b}"));
+            }
+        }
+        (Json::Null, Json::Null) => {}
+        (Json::Arr(a), Json::Arr(b)) => {
+            if a.len() != b.len() {
+                errs.push(format!("{path}: array length {} != {}", a.len(), b.len()));
+                return;
+            }
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                diff(&format!("{path}[{i}]"), x, y, errs);
+            }
+        }
+        (Json::Obj(a), Json::Obj(b)) => {
+            for k in a.keys() {
+                if !b.contains_key(k) {
+                    errs.push(format!("{path}.{k}: missing from computed artifact"));
+                }
+            }
+            for k in b.keys() {
+                if !a.contains_key(k) {
+                    errs.push(format!("{path}.{k}: not in golden snapshot"));
+                }
+            }
+            for (k, x) in a {
+                if let Some(y) = b.get(k) {
+                    diff(&format!("{path}.{k}"), x, y, errs);
+                }
+            }
+        }
+        _ => errs.push(format!("{path}: type mismatch ({want:?} vs {got:?})")),
+    }
+}
+
+/// Compare `got` against the checked-in snapshot `<name>.json`, or
+/// rewrite the snapshot when `UPDATE_GOLDEN=1`.
+fn check(name: &str, got: Json) {
+    let file = golden_dir().join(format!("{name}.json"));
+    if update_mode() {
+        fs::create_dir_all(golden_dir()).expect("golden dir");
+        fs::write(&file, got.to_string()).expect("write snapshot");
+        eprintln!("golden: regenerated {}", file.display());
+        return;
+    }
+    let text = fs::read_to_string(&file).unwrap_or_else(|e| {
+        panic!(
+            "missing/unreadable golden snapshot {}: {e}\n\
+             regenerate with: UPDATE_GOLDEN=1 cargo test --test golden",
+            file.display()
+        )
+    });
+    let want = Json::parse(&text).expect("golden snapshot parses");
+    let mut errs = Vec::new();
+    diff(name, &want, &got, &mut errs);
+    assert!(
+        errs.is_empty(),
+        "golden mismatch for {name} — {} field(s) diverged:\n{}\n\
+         if the model change is intentional, regenerate with \
+         UPDATE_GOLDEN=1 cargo test --test golden and review the diff",
+        errs.len(),
+        errs.join("\n")
+    );
+}
+
+/// The reduced serve grid the snapshot pins: MI100, FP32 vs Mixed,
+/// B1/B8, 1000 requests — small enough to run in seconds, rich enough
+/// that graph, roofline, RNG, and simulator all feed the artifact.
+fn serve_golden_cfg() -> SweepConfig {
+    let mut cfg = SweepConfig::bert_large_default();
+    cfg.requests = 1_000;
+    cfg.max_batches = vec![1, 8];
+    cfg
+}
+
+/// The reduced compress grid: MI100 only, the dense FP32/FP16 anchors
+/// plus the headline pruned+INT8 variant, B32, 800 requests.
+fn compress_golden_cfg() -> CompressSweepConfig {
+    let mut cfg = CompressSweepConfig::bert_large_default();
+    cfg.devices = vec![DeviceSpec::mi100()];
+    cfg.requests = 800;
+    cfg.max_batches = vec![32];
+    cfg.variants = vec![
+        CompressVariant::dense(&cfg.model, CompressPrecision::Fp32),
+        CompressVariant::dense(&cfg.model, CompressPrecision::Mixed),
+        compress::default_variants(&cfg.model).pop().expect("pruned-w8a8"),
+    ];
+    cfg
+}
+
+#[test]
+fn golden_fig04_runtime_breakdown() {
+    check("fig04", artifact::fig04_json(&DeviceSpec::mi100()));
+}
+
+#[test]
+fn golden_fig09_batch_sweep() {
+    check("fig09", artifact::fig09_json(&DeviceSpec::mi100()));
+}
+
+#[test]
+fn golden_fig12_distributed() {
+    check("fig12", artifact::fig12_json(&DeviceSpec::mi100()));
+}
+
+#[test]
+fn golden_serve_sweep() {
+    let cfg = serve_golden_cfg();
+    let reports = serve::run_sweep(&cfg, 2);
+    check("serve_sweep", serve::sweep_json(&cfg, &reports));
+}
+
+#[test]
+fn golden_compress_sweep() {
+    let cfg = compress_golden_cfg();
+    let reports = compress::run_sweep(&cfg, 2);
+    check("compress_sweep", compress::compress_json(&cfg, &reports));
+}
+
+#[test]
+fn golden_artifacts_are_run_to_run_stable() {
+    // The "two consecutive runs" acceptance shape, in-process: every
+    // artifact is byte-identical when recomputed.
+    let dev = DeviceSpec::mi100();
+    assert_eq!(
+        artifact::fig04_json(&dev).to_string(),
+        artifact::fig04_json(&dev).to_string()
+    );
+    let cfg = serve_golden_cfg();
+    let a = serve::sweep_json(&cfg, &serve::run_sweep(&cfg, 1)).to_string();
+    let b = serve::sweep_json(&cfg, &serve::run_sweep(&cfg, 3)).to_string();
+    assert_eq!(a, b);
+    let ccfg = compress_golden_cfg();
+    let c = compress::compress_json(&ccfg, &compress::run_sweep(&ccfg, 1)).to_string();
+    let d = compress::compress_json(&ccfg, &compress::run_sweep(&ccfg, 3)).to_string();
+    assert_eq!(c, d);
+}

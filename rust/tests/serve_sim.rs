@@ -10,8 +10,8 @@ use bertprof::model::op::{LayerClass, Pass};
 use bertprof::model::IterationGraph;
 use bertprof::perf::device::DeviceSpec;
 use bertprof::serve::{
-    forward_graph, inference_run, run_sweep, sweep_json, BatchPolicy, LatencyModel, ServeHead,
-    SimOutcome, Simulator, SweepConfig, Workload,
+    forward_graph, inference_run, run_sweep, sweep_json, BatchCost, BatchPolicy, LatencyModel,
+    ServeHead, SimOutcome, Simulator, SweepConfig, Workload,
 };
 use bertprof::util::Rng;
 
