@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Tolerance-aware JSON artifact comparison.
+
+CI's scenario matrix runs `bertprof run <name> --out artifact.json` and
+diffs the result against the checked-in golden snapshot with this
+script — the same comparison contract as `rust/tests/golden.rs`
+(numbers at 1e-3 relative tolerance, everything else exact), usable
+from a shell step without a Rust test harness.
+
+Usage: compare_artifacts.py <got.json> <golden.json>
+Exit 0 when equivalent; 1 with a per-field report otherwise.
+"""
+
+import json
+import sys
+
+REL_TOL = 1e-3
+ABS_TOL = 1e-9
+
+
+def diff(path, want, got, errs):
+    # bool is an int subtype in Python: test it before numbers.
+    if isinstance(want, bool) or isinstance(got, bool):
+        if want is not got:
+            errs.append(f"{path}: {want} != {got}")
+    elif isinstance(want, (int, float)) and isinstance(got, (int, float)):
+        tol = ABS_TOL + REL_TOL * max(abs(want), abs(got))
+        if abs(want - got) > tol:
+            errs.append(f"{path}: {want} != {got} (tol {tol:g})")
+    elif isinstance(want, str) and isinstance(got, str):
+        if want != got:
+            errs.append(f"{path}: {want!r} != {got!r}")
+    elif want is None and got is None:
+        pass
+    elif isinstance(want, list) and isinstance(got, list):
+        if len(want) != len(got):
+            errs.append(f"{path}: array length {len(want)} != {len(got)}")
+            return
+        for i, (x, y) in enumerate(zip(want, got)):
+            diff(f"{path}[{i}]", x, y, errs)
+    elif isinstance(want, dict) and isinstance(got, dict):
+        for k in want:
+            if k not in got:
+                errs.append(f"{path}.{k}: missing from computed artifact")
+        for k in got:
+            if k not in want:
+                errs.append(f"{path}.{k}: not in golden snapshot")
+        for k in want:
+            if k in got:
+                diff(f"{path}.{k}", want[k], got[k], errs)
+    else:
+        errs.append(f"{path}: type mismatch ({want!r} vs {got!r})")
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    with open(sys.argv[1]) as f:
+        got = json.load(f)
+    with open(sys.argv[2]) as f:
+        want = json.load(f)
+    errs = []
+    diff("$", want, got, errs)
+    if errs:
+        print(f"{len(errs)} field(s) diverged between {sys.argv[1]} and {sys.argv[2]}:")
+        for e in errs[:80]:
+            print(f"  {e}")
+        sys.exit(1)
+    print(f"{sys.argv[1]} matches {sys.argv[2]} (rel tol {REL_TOL})")
+
+
+if __name__ == "__main__":
+    main()

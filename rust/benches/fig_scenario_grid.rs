@@ -1,0 +1,110 @@
+//! The scenario-grid bench: how much does the shared `perf::CostCache`
+//! buy on a realistic experiment grid?
+//!
+//! The grid is {batch x precision x device} of full BERT-Large
+//! iteration timelines — the shape of the registry's fig04/fig09-style
+//! scenarios. The uncached case re-prices every op per cell; the cached
+//! case shares one `CostCache` across the grid (exactly what the
+//! scenario engine and `serve::run_sweep` do), so the batch-independent
+//! LAMB ops and every repeated shape are priced once. The measured
+//! speedup and hit rate are recorded to `BENCH_scenario_grid.json` —
+//! the first `BENCH_*.json` data point — and the bench asserts the
+//! cached grid totals are bit-identical to the uncached ones.
+
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::perf::CostCache;
+use bertprof::profiler::Timeline;
+use bertprof::scenario::exec;
+use bertprof::util::bench::{black_box, Bench};
+use bertprof::util::Json;
+
+fn grid() -> Vec<(RunConfig, DeviceSpec)> {
+    let mut cells = Vec::new();
+    for dev in [DeviceSpec::mi100(), DeviceSpec::v100(), DeviceSpec::a100()] {
+        for prec in [Precision::Fp32, Precision::Mixed] {
+            for b in [1u64, 2, 4, 8, 16, 32] {
+                let run = RunConfig::new(
+                    ModelConfig::bert_large().with_batch(b),
+                    Phase::Phase1,
+                    prec,
+                );
+                cells.push((run, dev.clone()));
+            }
+        }
+    }
+    cells
+}
+
+fn main() {
+    let cells = grid();
+    println!(
+        "## fig_scenario_grid — {} grid cells (3 devices x 2 precisions x 6 batches)",
+        cells.len()
+    );
+
+    // Correctness first: the cache changes no modeled time.
+    let cost = CostCache::new();
+    for (run, dev) in &cells {
+        let plain = Timeline::modeled(run, dev).total_seconds();
+        let cached = Timeline::modeled_cached(run, dev, &cost).total_seconds();
+        assert_eq!(plain, cached, "cache must be pure memoization");
+    }
+    let warm_rate = cost.hit_rate();
+    println!(
+        "cost-cache: {} shapes, {:.1}% hit rate over one grid pass",
+        cost.len(),
+        warm_rate * 100.0
+    );
+
+    let mut b = Bench::new("fig_scenario_grid");
+    let uncached = b
+        .run("grid uncached (fresh roofline per cell)", || {
+            for (run, dev) in &cells {
+                black_box(Timeline::modeled(run, dev));
+            }
+        })
+        .median;
+    let cached = b
+        .run("grid cached (one CostCache across cells)", || {
+            let cost = CostCache::new();
+            for (run, dev) in &cells {
+                black_box(Timeline::modeled_cached(run, dev, &cost));
+            }
+        })
+        .median;
+    let warm = b
+        .run("grid warm-cached (grid-lifetime CostCache)", || {
+            for (run, dev) in &cells {
+                black_box(Timeline::modeled_cached(run, dev, &cost));
+            }
+        })
+        .median;
+    b.run("grid via exec::run_grid (parallel, shared cache)", || {
+        let cost = CostCache::new();
+        black_box(exec::run_grid(&cells, 8, |(run, dev)| {
+            Timeline::modeled_cached(run, dev, &cost).total_seconds()
+        }));
+    });
+    b.finish();
+
+    let speedup = uncached.as_secs_f64() / cached.as_secs_f64();
+    let warm_speedup = uncached.as_secs_f64() / warm.as_secs_f64();
+    println!(
+        "cached-vs-uncached speedup: {speedup:.2}x cold, {warm_speedup:.2}x warm"
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fig_scenario_grid")),
+        ("grid_cells", Json::num(cells.len() as f64)),
+        ("uncached_median_us", Json::num(uncached.as_secs_f64() * 1e6)),
+        ("cached_median_us", Json::num(cached.as_secs_f64() * 1e6)),
+        ("warm_cached_median_us", Json::num(warm.as_secs_f64() * 1e6)),
+        ("cached_speedup", Json::num(speedup)),
+        ("warm_cached_speedup", Json::num(warm_speedup)),
+        ("hit_rate", Json::num(warm_rate)),
+    ]);
+    let path = "BENCH_scenario_grid.json";
+    std::fs::write(path, out.to_string()).expect("write bench artifact");
+    println!("wrote {path}");
+}

@@ -1,0 +1,149 @@
+//! Command-line argument parsing for the `bertprof` binary.
+//!
+//! Lives in the library (not `main.rs`) so the parser is unit-testable
+//! (`rust/tests/cli_args.rs`) and so the scenario engine can translate
+//! legacy per-subcommand options into registry parameters with the same
+//! rules the binary uses.
+//!
+//! Grammar: `bertprof <cmd> [positional ...] [--flag] [--opt value]
+//! [--set k=v ...]`. An `--name` followed by a token that does not
+//! itself start with `--` is an option with that value (which is how
+//! negative numbers like `--load -0.5` parse as values); otherwise it
+//! is a boolean flag. `--set k=v` may repeat and accumulates in order
+//! into [`Args::sets`] — the scenario runner's parameter channel.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::perf::device::DeviceSpec;
+
+/// Parsed command line: the subcommand, bare positional words (the
+/// scenario name for `run`), boolean flags, `--k v` options, and the
+/// ordered `--set k=v` pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First token after the binary name (`help` when absent).
+    pub cmd: String,
+    /// Bare words and value-less `--flags`, in order.
+    pub flags: Vec<String>,
+    /// `--key value` options (last occurrence wins).
+    pub opts: HashMap<String, String>,
+    /// `--set key=value` pairs in command-line order.
+    pub sets: Vec<(String, String)>,
+}
+
+/// Parse the process arguments (everything after the binary name).
+pub fn parse_args() -> Result<Args> {
+    parse_from(std::env::args().skip(1))
+}
+
+/// Parse an explicit token stream — the unit-testable entry point.
+pub fn parse_from<I>(argv: I) -> Result<Args>
+where
+    I: IntoIterator<Item = String>,
+{
+    let mut argv = argv.into_iter();
+    let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = argv.collect();
+    let mut args = Args { cmd, ..Args::default() };
+    let mut i = 0;
+    while i < rest.len() {
+        let a = &rest[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                let value = rest[i + 1].clone();
+                if name == "set" {
+                    let Some((k, v)) = value.split_once('=') else {
+                        bail!("--set expects key=value, got '{value}'");
+                    };
+                    if k.is_empty() {
+                        bail!("--set expects key=value, got '{value}'");
+                    }
+                    args.sets.push((k.to_string(), v.to_string()));
+                } else {
+                    args.opts.insert(name.to_string(), value);
+                }
+                i += 2;
+            } else if name == "set" {
+                bail!("--set expects key=value");
+            } else {
+                args.flags.push(name.to_string());
+                i += 1;
+            }
+        } else {
+            args.flags.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    /// Is `name` present, either as a bare flag or as an option?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
+    }
+
+    /// First bare word after the subcommand (e.g. the scenario name in
+    /// `run <name> [--set k=v ...]`). Bare words and value-less flags
+    /// share [`Args::flags`] in order, so the convention is that the
+    /// positional comes before any flag — which `run`'s grammar
+    /// enforces naturally.
+    pub fn positional(&self) -> Option<&str> {
+        self.flags.first().map(String::as_str)
+    }
+
+    /// `--name v` as u64, or `default`.
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opts
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// `--name v` as f64, or `default`.
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opts
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// The artifact directory (`--artifacts DIR`, default `./artifacts`).
+    pub fn artifacts_dir(&self) -> PathBuf {
+        self.opts
+            .get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// The scenario parameter pairs this invocation carries: every
+    /// `--key value` option plus the ordered `--set k=v` pairs (later
+    /// `--set`s override earlier values and plain options, letting the
+    /// legacy spellings and the registry channel coexist).
+    pub fn param_pairs(&self) -> Vec<(String, String)> {
+        let mut pairs: Vec<(String, String)> = self
+            .opts
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        pairs.sort(); // HashMap order is unstable; params are by key anyway
+        pairs.extend(self.sets.iter().cloned());
+        pairs
+    }
+}
+
+/// The shared device-preset parser — every experiment honors the same
+/// `--device` / `--set device=` axis through this one function.
+pub fn parse_device(name: &str) -> Result<DeviceSpec> {
+    Ok(match name {
+        "mi100" => DeviceSpec::mi100(),
+        "v100" => DeviceSpec::v100(),
+        "a100" => DeviceSpec::a100(),
+        "tpu" => DeviceSpec::tpu_v3_core(),
+        "cpu" => DeviceSpec::cpu_host(),
+        other => bail!("unknown device preset '{other}' (mi100|v100|a100|tpu|cpu)"),
+    })
+}

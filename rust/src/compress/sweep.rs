@@ -7,15 +7,16 @@
 //! `serve::sim::Simulator` against a [`CompressedLatencyModel`] (the
 //! compressed implementor of `serve::BatchCost`), offered a fixed
 //! fraction of its own modeled saturation rate — equal-pressure
-//! comparison, exactly like the dense serving sweep. Results come back
-//! in grid order and serialize to a seed-deterministic JSON artifact.
+//! comparison, exactly like the dense serving sweep. The grid fans out
+//! over the shared executor (`scenario::exec::run_grid`); results come
+//! back in grid order and serialize to a seed-deterministic JSON
+//! artifact.
 //!
 //! Entry points: `bertprof compress` (CLI), the `fig_compress` bench,
 //! and `examples/compression_study.rs`.
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
@@ -23,6 +24,7 @@ use crate::compress::prune::PruneSpec;
 use crate::compress::quant::{self, CompressPrecision};
 use crate::config::ModelConfig;
 use crate::perf::device::DeviceSpec;
+use crate::scenario::exec;
 use crate::serve::graph::{forward_graph, inference_run, BatchCost, ServeHead};
 use crate::serve::sim::{BatchPolicy, SimReport, Simulator, Workload};
 use crate::serve::sweep::report_json;
@@ -267,34 +269,12 @@ pub fn run_scenario(cfg: &CompressSweepConfig, scenario: &CompressScenario) -> S
         .report
 }
 
-/// Run the whole grid across up to `threads` workers; results in grid
-/// order regardless of scheduling.
+/// Run the whole grid across up to `threads` workers on the shared
+/// executor (`scenario::exec::run_grid`); results in grid order
+/// regardless of scheduling.
 pub fn run_sweep(cfg: &CompressSweepConfig, threads: usize) -> Vec<SimReport> {
     let scenarios = cfg.scenarios();
-    let n = scenarios.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = threads.clamp(1, n);
-    let slots: Vec<Mutex<Option<SimReport>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for worker in 0..workers {
-            let scenarios = &scenarios;
-            let slots = &slots;
-            s.spawn(move || {
-                let mut i = worker;
-                while i < n {
-                    let report = run_scenario(cfg, &scenarios[i]);
-                    *slots[i].lock().expect("no panics hold this lock") = Some(report);
-                    i += workers;
-                }
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|m| m.into_inner().expect("worker finished").expect("slot filled"))
-        .collect()
+    exec::run_grid(&scenarios, threads, |s| run_scenario(cfg, s))
 }
 
 /// The per-device answer to the headline question: the first variant

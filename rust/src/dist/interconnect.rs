@@ -19,6 +19,13 @@ pub struct LinkSpec {
     pub bandwidth: f64,
 }
 
+/// Effective per-direction bandwidth of the PCIe 4.0 x16 testbed fabric
+/// (bytes/second). The single source of truth shared by the
+/// [`LinkSpec::pcie4x16`] preset and `perf::roofline`'s stray-transfer
+/// arm, so the dist module and the op-level transfer cost cannot drift
+/// apart.
+pub const PCIE4_X16_BANDWIDTH: f64 = 32.0e9;
+
 impl LinkSpec {
     /// Custom link.
     pub fn new(name: &str, latency: f64, bandwidth: f64) -> LinkSpec {
@@ -31,10 +38,10 @@ impl LinkSpec {
     }
 
     /// PCIe 4.0 x16 (the paper's testbed fabric): ~32 GB/s effective
-    /// per direction. Matches the stray-transfer default in
-    /// `perf::roofline`.
+    /// per direction ([`PCIE4_X16_BANDWIDTH`], also the stray-transfer
+    /// default in `perf::roofline`).
     pub fn pcie4x16() -> LinkSpec {
-        LinkSpec::new("PCIe4x16", 5.0e-6, 32.0e9)
+        LinkSpec::new("PCIe4x16", 5.0e-6, PCIE4_X16_BANDWIDTH)
     }
 
     /// AMD xGMI / Infinity Fabric GPU bridge (MI100 hives): ~64 GB/s.

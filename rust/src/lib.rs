@@ -19,7 +19,12 @@
 //!   memory-bound fused ops, lowered into the same HLO.
 //!
 //! See DESIGN.md for the experiment index (every paper table/figure →
-//! module → bench target).
+//! module → bench target). Every experiment is a named entry in the
+//! `scenario` registry (`bertprof list` / `bertprof run <name>`), all
+//! grids share one parallel executor (`scenario::exec`), and all
+//! roofline costing can memoize through `perf::CostCache`
+//! (DESIGN.md SSScenario).
+pub mod cli;
 pub mod compress;
 pub mod config;
 pub mod coordinator;
@@ -29,5 +34,6 @@ pub mod model;
 pub mod perf;
 pub mod profiler;
 pub mod runtime;
+pub mod scenario;
 pub mod serve;
 pub mod util;

@@ -1,112 +1,51 @@
 //! `bertprof` — CLI for the BERT-training characterization framework.
 //!
-//! Subcommands map 1:1 to the paper's experiments (DESIGN.md SS4):
+//! Every experiment is a named entry in the `scenario` registry
+//! (DESIGN.md SSScenario); the uniform surface is:
 //!
 //! ```text
-//! bertprof breakdown [--detail transformer] [--measured]   Fig. 4 / Fig. 5
-//! bertprof sweep --batch|--width|--depth                   Fig. 9 / Fig. 10
-//! bertprof intensity --gemms|--all                         Fig. 7 / Fig. 8
-//! bertprof dist                                            Fig. 12
-//! bertprof fusion [--kernels|--gemms] [--measured]         Fig. 13 / Fig. 15
-//! bertprof gemm-table                                      Table 3
-//! bertprof train --steps N                                 end-to-end tiny-BERT
-//! bertprof serve --requests N                              SSServe serving study
-//! bertprof compress --requests N                           SSCompress SLO what-if
-//! bertprof devices                                         roofline device presets
+//! bertprof list                                List every scenario
+//! bertprof run <name> [--set k=v ...] [--out F]  Run one scenario
 //! ```
-
-use std::path::PathBuf;
+//!
+//! The historical per-experiment subcommands (`breakdown`, `sweep`,
+//! `dist`, ...) remain as thin aliases over the same registry entries,
+//! so existing invocations keep working; only the runtime-backed paths
+//! (`train`, `export`, `--measured`) stay bespoke, since they drive the
+//! PJRT runtime rather than the analytic registry.
 
 use anyhow::{bail, Result};
 
+use bertprof::cli::{self, Args};
 use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
 use bertprof::coordinator::{MeasureRunner, Trainer};
-use bertprof::dist::{DataParallelModel, HybridModel, LinkSpec, ModelParallelModel, ZeroModel};
-use bertprof::fusion::kernel_fusion::FusionStudy;
-use bertprof::fusion::{gemm_fusion, qkv_fusion_speedup};
-use bertprof::model::gemm::table3;
 use bertprof::perf::device::DeviceSpec;
-use bertprof::perf::intensity;
 use bertprof::profiler::{report, Timeline};
 use bertprof::runtime::Runtime;
-
-struct Args {
-    cmd: String,
-    flags: Vec<String>,
-    opts: std::collections::HashMap<String, String>,
-}
-
-fn parse_args() -> Args {
-    let mut argv = std::env::args().skip(1);
-    let cmd = argv.next().unwrap_or_else(|| "help".to_string());
-    let mut flags = Vec::new();
-    let mut opts = std::collections::HashMap::new();
-    let rest: Vec<String> = argv.collect();
-    let mut i = 0;
-    while i < rest.len() {
-        let a = &rest[i];
-        if let Some(name) = a.strip_prefix("--") {
-            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
-                opts.insert(name.to_string(), rest[i + 1].clone());
-                i += 2;
-            } else {
-                flags.push(name.to_string());
-                i += 1;
-            }
-        } else {
-            flags.push(a.clone());
-            i += 1;
-        }
-    }
-    Args { cmd, flags, opts }
-}
-
-impl Args {
-    fn flag(&self, name: &str) -> bool {
-        self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
-    }
-
-    fn opt_u64(&self, name: &str, default: u64) -> u64 {
-        self.opts
-            .get(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
-    }
-
-    fn opt_f64(&self, name: &str, default: f64) -> f64 {
-        self.opts
-            .get(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
-    }
-
-    fn artifacts_dir(&self) -> PathBuf {
-        self.opts
-            .get("artifacts")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
-    }
-}
+use bertprof::scenario;
 
 fn main() -> Result<()> {
-    let args = parse_args();
-    let dev = DeviceSpec::mi100();
+    let args = cli::parse_args()?;
     match args.cmd.as_str() {
-        "breakdown" => cmd_breakdown(&args, &dev),
-        "sweep" => cmd_sweep(&args, &dev),
+        "list" => cmd_list(&args),
+        "run" => cmd_run(&args),
+        // ------------------------------------------------ legacy aliases --
+        "breakdown" => cmd_breakdown(&args),
+        "sweep" => cmd_sweep(&args),
         "intensity" => cmd_intensity(&args),
-        "dist" => cmd_dist(&args, &dev),
-        "fusion" => cmd_fusion(&args, &dev),
-        "gemm-table" => cmd_gemm_table(),
+        "dist" => alias(&args, "fig12"),
+        "fusion" => cmd_fusion(&args),
+        "gemm-table" => alias(&args, "table3"),
+        "serve" => alias(&args, "serve"),
+        "compress" => alias(&args, "compress"),
+        "whatif" => alias(&args, "whatif"),
+        "memory" => alias(&args, "memory"),
+        // --------------------------------------------- runtime-backed ----
         "train" => cmd_train(&args),
-        "serve" => cmd_serve(&args),
-        "compress" => cmd_compress(&args),
-        "whatif" => cmd_whatif(&args, &dev),
-        "memory" => cmd_memory(&args, &dev),
-        "export" => cmd_export(&args, &dev),
+        "export" => cmd_export(&args),
         "devices" => cmd_devices(),
         "help" | "--help" | "-h" => {
-            println!("{}", HELP);
+            println!("{HELP}");
             Ok(())
         }
         other => bail!("unknown subcommand '{other}' — see `bertprof help`"),
@@ -116,27 +55,113 @@ fn main() -> Result<()> {
 const HELP: &str = "\
 bertprof — BERT training characterization (paper reproduction)
 
+  list                                            every registered scenario
+  run <name> [--set k=v ...] [--out FILE]         run one scenario uniformly
+
+Legacy aliases (same registry entries):
   breakdown [--detail] [--measured] [--inference] Fig. 4 / Fig. 5 / SS6
-  sweep --batch | --width | --depth               Fig. 9 / Fig. 10
+  sweep --batch | --width | --depth               Fig. 9 / Fig. 10 / SS3.3.2
   intensity --gemms | --all                       Fig. 7 / Fig. 8
-  dist                                            Fig. 12
+  dist [--device D]                               Fig. 12
   fusion --kernels [--measured] | --gemms         Fig. 13 / Fig. 15
   gemm-table                                      Table 3
-  train --steps N [--log-every K]                 tiny-BERT end-to-end
-  serve [--requests N] [--seed S] [--device D]    SSServe dynamic-batching study
-        [--slo-ms X] [--max-wait-ms X] [--load F]
-        [--max-batch B] [--seq-max N] [--out F]
-  compress [--requests N] [--seed S] [--device D] SSCompress: which quantized/
-        [--slo-ms X] [--max-wait-ms X] [--load F]   pruned variant first meets
-        [--max-batch B] [--seq-max N] [--out F]     the SLO on each device
-  whatif                                          SS5.2 hardware what-ifs
+  serve [--requests N] [--device D] [--out F] ... SSServe dynamic-batching grid
+  compress [--requests N] [--device D] ...        SSCompress SLO what-if grid
+  whatif [--device D]                             SS5.2 hardware what-ifs
   memory [--hbm GB]                               SS5.2 capacity model
+
+Runtime-backed (PJRT artifacts, not the analytic registry):
+  train --steps N [--log-every K]                 tiny-BERT end-to-end
   export --out trace.csv [--json]                 dump op-level trace
-  devices                                         device presets
+  devices                                         roofline device presets
 
-Common options: --artifacts DIR (default ./artifacts)";
+Common options: --artifacts DIR (default ./artifacts); `run` validates
+--set keys against the scenario's declared parameters (`bertprof list`
+shows them).";
 
-fn cmd_breakdown(args: &Args, dev: &DeviceSpec) -> Result<()> {
+/// `bertprof list [--params]` — the registry as a table.
+fn cmd_list(args: &Args) -> Result<()> {
+    println!(
+        "{:<10}{:<12}{:<12}{}",
+        "name", "figure", "artifact", "what it shows"
+    );
+    for s in scenario::registry() {
+        println!(
+            "{:<10}{:<12}{:<12}{}",
+            s.name,
+            s.figure,
+            s.default_out.unwrap_or("--out only"),
+            s.title
+        );
+        if args.flag("params") {
+            for p in s.params {
+                println!("            --set {}={:<18} {}", p.key, p.default, p.help);
+            }
+        }
+    }
+    println!("\nrun one with: bertprof run <name> [--set k=v ...] [--out FILE]");
+    Ok(())
+}
+
+/// `bertprof run <name> [--set k=v ...]` — strict parameter validation.
+fn cmd_run(args: &Args) -> Result<()> {
+    let Some(name) = args.positional() else {
+        bail!("usage: bertprof run <scenario> [--set k=v ...] — see `bertprof list`");
+    };
+    // Strictness covers flag-shaped tokens too: `run serve --max-batch
+    // --out x` would otherwise parse `--max-batch` as a boolean flag
+    // and silently skip the declared-parameter check. (Bare words and
+    // stripped `--flags` share Args::flags, so the message stays
+    // prefix-agnostic.)
+    if let Some(stray) = args.flags.get(1) {
+        bail!(
+            "unexpected argument '{stray}' — `run` takes parameters as \
+             `--set k=v` or `--<param> <value>` (see `bertprof list --params`)"
+        );
+    }
+    execute(name, args, /* strict */ true)
+}
+
+/// A legacy subcommand as a registry alias: same scenario, permissive
+/// option handling (unknown options were always ignored).
+fn alias(args: &Args, name: &str) -> Result<()> {
+    execute(name, args, /* strict */ false)
+}
+
+/// Run a scenario and handle its output: print the report, write the
+/// artifact when `--out` is given or the scenario has a default
+/// artifact path (the sweep scenarios keep their historical JSONs).
+fn execute(name: &str, args: &Args, strict: bool) -> Result<()> {
+    let spec = scenario::find(name)?;
+    let params = scenario::resolve_params(&spec, &args.param_pairs(), strict)?;
+    let out = (spec.run)(&params)?;
+    print!("{}", out.text);
+    let path = args
+        .opts
+        .get("out")
+        .map(String::as_str)
+        .or(spec.default_out);
+    if let Some(path) = path {
+        let path = std::path::Path::new(path);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, out.artifact.to_string())?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// `breakdown`: fig04 (+fig05 with `--detail`); the `--measured` and
+/// `--inference` branches stay bespoke (runtime / non-registry paths).
+fn cmd_breakdown(args: &Args) -> Result<()> {
+    if (args.flag("measured") || args.flag("inference")) && args.opts.contains_key("out") {
+        // These branches emit no artifact; erroring beats silently
+        // ignoring the flag (the --detail branch bails the same way).
+        bail!("--out is not supported with --measured/--inference (no artifact is emitted)");
+    }
     if args.flag("measured") {
         let mut rt = Runtime::load(&args.artifacts_dir())?;
         println!("platform: {}", rt.platform());
@@ -149,154 +174,61 @@ fn cmd_breakdown(args: &Args, dev: &DeviceSpec) -> Result<()> {
     }
     if args.flag("inference") {
         // SS6 discussion: inference profile (no backprop, no LAMB).
+        let dev = cli::parse_device(args.opts.get("device").map(String::as_str).unwrap_or("mi100"))?;
         let run = RunConfig::new(ModelConfig::bert_large().with_batch(1),
                                  Phase::Phase1, Precision::Fp32);
         let g = bertprof::model::IterationGraph::build_inference(&run);
-        let t = Timeline::from_graph("inference B=1".into(), &g, dev, run.precision);
+        let t = Timeline::from_graph("inference B=1".into(), &g, &dev, run.precision);
         println!("{}", report::stacked_table("SS6 — inference breakdown", &[t.clone()]));
         println!("{}", report::category_table("SS6 — inference categories", &[t]));
         return Ok(());
     }
-    let timelines: Vec<Timeline> = RunConfig::figure4_set()
-        .iter()
-        .map(|r| Timeline::modeled(r, dev))
-        .collect();
-    println!(
-        "{}",
-        report::stacked_table("Fig. 4 — runtime breakdown (modeled, MI100)", &timelines)
-    );
+    if args.flag("detail") && args.opts.contains_key("out") {
+        // Two scenarios, one --out path: the second write would silently
+        // clobber the first. Route artifact emission through `run`.
+        bail!("--detail runs two scenarios; use `bertprof run fig04 --out F` \
+               and `bertprof run fig05 --out F2` for artifacts");
+    }
+    execute("fig04", args, false)?;
     if args.flag("detail") {
-        let f32r = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
-        let mpr = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Mixed);
-        let ts = vec![Timeline::modeled(&f32r, dev), Timeline::modeled(&mpr, dev)];
-        println!("{}", report::category_table("Fig. 5 — transformer detail", &ts));
+        execute("fig05", args, false)?;
     }
     Ok(())
 }
 
-fn cmd_sweep(args: &Args, dev: &DeviceSpec) -> Result<()> {
-    let large = ModelConfig::bert_large();
-    let timelines: Vec<Timeline> = if args.flag("width") {
-        [512u64, 768, 1024, 1536, 2048]
-            .iter()
-            .map(|&w| {
-                let r = RunConfig::new(large.with_width(w), Phase::Phase1, Precision::Fp32);
-                let mut t = Timeline::modeled(&r, dev);
-                t.label = format!("d_model={w}");
-                t
-            })
-            .collect()
+/// `sweep --batch|--width|--depth` → fig09 / fig10 / depth.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let name = if args.flag("width") {
+        "fig10"
     } else if args.flag("depth") {
-        [6u64, 12, 24, 48]
-            .iter()
-            .map(|&n| {
-                let r = RunConfig::new(large.with_layers(n), Phase::Phase1, Precision::Fp32);
-                let mut t = Timeline::modeled(&r, dev);
-                t.label = format!("N={n}");
-                t
-            })
-            .collect()
+        "depth"
     } else {
-        [4u64, 8, 16, 32]
-            .iter()
-            .map(|&b| {
-                let r = RunConfig::new(large.with_batch(b), Phase::Phase1, Precision::Fp32);
-                Timeline::modeled(&r, dev)
-            })
-            .collect()
+        "fig09"
     };
-    let title = if args.flag("width") {
-        "Fig. 10 — hidden-dim sweep"
-    } else if args.flag("depth") {
-        "Layer-count sweep (SS3.3.2)"
-    } else {
-        "Fig. 9 — mini-batch sweep"
-    };
-    println!("{}", report::stacked_table(title, &timelines));
-    Ok(())
+    execute(name, args, false)
 }
 
+/// `intensity --gemms|--all` → fig07 / fig08 (both when both asked).
 fn cmd_intensity(args: &Args) -> Result<()> {
-    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let both = args.flag("gemms") && args.flag("all");
+    if both && args.opts.contains_key("out") {
+        bail!("--gemms --all runs two scenarios; use `bertprof run fig07 --out F` \
+               and `bertprof run fig08 --out F2` for artifacts");
+    }
     if args.flag("gemms") || !args.flag("all") {
-        let rows: Vec<(String, f64)> = intensity::gemm_intensities(&run)
-            .into_iter()
-            .map(|r| (format!("{}{}", if r.memory_bound { "[MB] " } else { "     " }, r.label),
-                      r.ops_per_byte))
-            .collect();
-        println!(
-            "{}",
-            report::series_table("Fig. 7 — GEMM arithmetic intensity", ("GEMM", "ops/byte"), &rows)
-        );
+        execute("fig07", args, false)?;
     }
     if args.flag("all") {
-        let rows = intensity::op_intensities(&run);
-        let tbl: Vec<(String, f64)> = rows.iter()
-            .map(|r| (r.label.clone(), r.ops_per_byte)).collect();
-        println!(
-            "{}",
-            report::series_table("Fig. 8a — op arithmetic intensity", ("category", "ops/byte"), &tbl)
-        );
-        let tbl: Vec<(String, f64)> = rows.iter()
-            .map(|r| (r.label.clone(), r.bandwidth)).collect();
-        println!(
-            "{}",
-            report::series_table(
-                "Fig. 8b — bandwidth demand (normalized to max EW)",
-                ("category", "bw"),
-                &tbl
-            )
-        );
+        execute("fig08", args, false)?;
     }
     Ok(())
 }
 
-fn cmd_dist(_args: &Args, dev: &DeviceSpec) -> Result<()> {
-    let b16 = RunConfig::new(ModelConfig::bert_large().with_batch(16), Phase::Phase1,
-                             Precision::Fp32);
-    let b64 = RunConfig::new(ModelConfig::bert_large().with_batch(64), Phase::Phase1,
-                             Precision::Fp32);
-    let link = LinkSpec::pcie4x16();
-    let rows = vec![
-        DataParallelModel::new(1, link.clone(), true).breakdown(&b16, dev),
-        DataParallelModel::new(64, link.clone(), true).breakdown(&b16, dev),
-        DataParallelModel::new(64, link.clone(), false).breakdown(&b16, dev),
-        ModelParallelModel::new(2, link.clone()).breakdown(&b16, dev),
-        ModelParallelModel::new(8, link.clone()).breakdown(&b64, dev),
-        HybridModel::megatron_128().breakdown(&b16, dev),
-        ZeroModel::new(64, link.clone()).breakdown(&b16, dev),
-    ];
-    println!("## Fig. 12 — multi-device training (modeled, PCIe 4.0)");
-    println!(
-        "{:<26}{:>12}{:>12}{:>12}{:>12}{:>12}{:>12}",
-        "config", "total(ms)", "xformer%", "lamb%", "comm%", "output%", "emb%"
-    );
-    for b in rows {
-        println!(
-            "{:<26}{:>12.1}{:>11.1}%{:>11.1}%{:>11.1}%{:>11.1}%{:>11.1}%",
-            b.label,
-            b.total() * 1e3,
-            100.0 * b.transformer / b.total(),
-            100.0 * b.lamb_fraction(),
-            100.0 * b.comm_fraction(),
-            100.0 * b.output / b.total(),
-            100.0 * b.embedding / b.total(),
-        );
-    }
-    Ok(())
-}
-
-fn cmd_fusion(args: &Args, dev: &DeviceSpec) -> Result<()> {
-    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+/// `fusion --kernels [--measured] | --gemms` → fig13 / fig15; the
+/// measured branch drives the PJRT runtime and stays bespoke.
+fn cmd_fusion(args: &Args) -> Result<()> {
     if !args.flag("gemms") {
-        println!("## Fig. 13 — kernel fusion (modeled; ratios fused/unfused)");
-        println!("{:<14}{:>12}{:>12}{:>12}", "study", "kernels", "time", "traffic");
-        for s in [FusionStudy::layernorm(&run, dev), FusionStudy::adam(&run, dev)] {
-            println!(
-                "{:<14}{:>12.3}{:>12.3}{:>12.3}",
-                s.name, s.kernel_ratio, s.time_ratio, s.traffic_ratio
-            );
-        }
+        execute("fig13", args, false)?;
         if args.flag("measured") {
             let mut rt = Runtime::load(&args.artifacts_dir())?;
             let mut mr = MeasureRunner::new(&mut rt, 5);
@@ -314,46 +246,7 @@ fn cmd_fusion(args: &Args, dev: &DeviceSpec) -> Result<()> {
         }
     }
     if args.flag("gemms") {
-        println!("## Fig. 15 — QKV GEMM fusion speedup (modeled)");
-        println!("{:<22}{:>10}{:>10}{:>10}", "point", "fwd", "dgrad", "wgrad");
-        for r in gemm_fusion::figure15_sweep(dev, Precision::Fp32) {
-            println!(
-                "{:<22}{:>9.2}x{:>9.2}x{:>9.2}x",
-                r.label,
-                1.0 / r.fwd_ratio,
-                1.0 / r.bwd_dgrad_ratio,
-                1.0 / r.bwd_wgrad_ratio
-            );
-        }
-        let small = qkv_fusion_speedup(512, 512, dev, Precision::Fp32);
-        println!("(small model d=512, nB=512: fwd {:.2}x)", small.fwd_speedup());
-    }
-    Ok(())
-}
-
-fn cmd_gemm_table() -> Result<()> {
-    let cfg = ModelConfig::bert_large();
-    println!("## Table 3 — BERT GEMM dimensions (B={}, n={}, d={}, h={}, d_ff={})",
-             cfg.batch, cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.d_ff);
-    println!(
-        "{:<16}{:>24}{:>24}{:>24}",
-        "op", "FWD (MxNxK[,b])", "BWD dgrad", "BWD wgrad"
-    );
-    let fmt = |g: &bertprof::model::GemmDims| {
-        if g.batch > 1 {
-            format!("{}x{}x{},b{}", g.m, g.n, g.k, g.batch)
-        } else {
-            format!("{}x{}x{}", g.m, g.n, g.k)
-        }
-    };
-    for row in table3(&cfg) {
-        println!(
-            "{:<16}{:>24}{:>24}{:>24}",
-            row.kind.label(),
-            fmt(&row.fwd),
-            fmt(&row.bwd_dgrad),
-            fmt(&row.bwd_wgrad)
-        );
+        execute("fig15", args, false)?;
     }
     Ok(())
 }
@@ -376,208 +269,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    use bertprof::serve::{run_sweep, write_sweep, SweepConfig};
-    let mut cfg = SweepConfig::bert_large_default();
-    let o = parse_sweep_opts(args, 10_000, 8)?;
-    cfg.requests = o.requests;
-    cfg.seed = o.seed;
-    cfg.slo = o.slo;
-    cfg.max_wait = o.max_wait;
-    cfg.load = o.load;
-    if let Some(d) = o.device {
-        cfg.devices = vec![d];
-    }
-    if let Some(b) = o.max_batch {
-        cfg.max_batches = vec![b];
-    }
-    if args.opts.contains_key("seq-max") {
-        cfg.seq_maxes = vec![args.opt_u64("seq-max", 128)];
-    }
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let reports = run_sweep(&cfg, threads);
-
-    println!(
-        "## SSServe — dynamic-batching serving study ({} req/scenario, \
-         load {:.0}% of saturation, SLO {:.0} ms, seed {})",
-        cfg.requests,
-        cfg.load * 100.0,
-        cfg.slo * 1e3,
-        cfg.seed
-    );
-    println!(
-        "{:<22}{:>9}{:>9}{:>7}{:>7}{:>9}{:>9}{:>9}{:>7}{:>10}",
-        "config", "rate/s", "thr/s", "util", "bsz", "p50(ms)", "p95(ms)", "p99(ms)", "SLO%", "goodput/s"
-    );
-    for r in &reports {
-        println!(
-            "{:<22}{:>9.1}{:>9.1}{:>7.2}{:>7.2}{:>9.1}{:>9.1}{:>9.1}{:>6.1}%{:>10.1}",
-            r.label,
-            r.arrival_rate,
-            r.throughput,
-            r.utilization,
-            r.mean_batch,
-            r.p50 * 1e3,
-            r.p95 * 1e3,
-            r.p99 * 1e3,
-            r.slo_attainment * 100.0,
-            r.goodput
-        );
-    }
-    let out = args
-        .opts
-        .get("out")
-        .cloned()
-        .unwrap_or_else(|| "serve_sweep.json".to_string());
-    write_sweep(std::path::Path::new(&out), &cfg, &reports)?;
-    println!("wrote {} scenario(s) to {out}", reports.len());
-    Ok(())
-}
-
-fn parse_device(name: &str) -> Result<DeviceSpec> {
-    Ok(match name {
-        "mi100" => DeviceSpec::mi100(),
-        "v100" => DeviceSpec::v100(),
-        "a100" => DeviceSpec::a100(),
-        "tpu" => DeviceSpec::tpu_v3_core(),
-        "cpu" => DeviceSpec::cpu_host(),
-        other => bail!("unknown device preset '{other}' (mi100|v100|a100|tpu|cpu)"),
-    })
-}
-
-/// Options shared by the `serve` and `compress` sweep subcommands.
-struct SweepOpts {
-    requests: u64,
-    seed: u64,
-    slo: f64,
-    max_wait: f64,
-    load: f64,
-    device: Option<DeviceSpec>,
-    max_batch: Option<u64>,
-}
-
-fn parse_sweep_opts(args: &Args, default_requests: u64, default_max_batch: u64) -> Result<SweepOpts> {
-    let load = args.opt_f64("load", 0.65);
-    if !(load.is_finite() && load > 0.0) {
-        bail!("--load must be a positive finite saturation fraction, got {load}");
-    }
-    Ok(SweepOpts {
-        requests: args.opt_u64("requests", default_requests),
-        seed: args.opt_u64("seed", 42),
-        slo: args.opt_f64("slo-ms", 100.0) / 1e3,
-        max_wait: args.opt_f64("max-wait-ms", 10.0) / 1e3,
-        load,
-        device: args.opts.get("device").map(|d| parse_device(d)).transpose()?,
-        max_batch: args
-            .opts
-            .contains_key("max-batch")
-            .then(|| args.opt_u64("max-batch", default_max_batch)),
-    })
-}
-
-fn cmd_compress(args: &Args) -> Result<()> {
-    use bertprof::compress::{run_sweep, slo_winners, write_compress, CompressSweepConfig};
-    let mut cfg = CompressSweepConfig::bert_large_default();
-    let o = parse_sweep_opts(args, 4_000, 32)?;
-    cfg.requests = o.requests;
-    cfg.seed = o.seed;
-    cfg.slo = o.slo;
-    cfg.max_wait = o.max_wait;
-    cfg.load = o.load;
-    if let Some(d) = o.device {
-        cfg.devices = vec![d];
-    }
-    if let Some(b) = o.max_batch {
-        cfg.max_batches = vec![b];
-    }
-    cfg.seq_max = args.opt_u64("seq-max", 128);
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let reports = run_sweep(&cfg, threads);
-
-    println!(
-        "## SSCompress — quantization/pruning SLO what-if ({} req/scenario, \
-         load {:.0}% of saturation, SLO {:.0} ms, seed {})",
-        cfg.requests,
-        cfg.load * 100.0,
-        cfg.slo * 1e3,
-        cfg.seed
-    );
-    println!(
-        "{:<26}{:>8}{:>9}{:>9}{:>9}{:>9}{:>7}{:>10}",
-        "config", "Wt(MB)", "rate/s", "thr/s", "p50(ms)", "p99(ms)", "SLO%", "goodput/s"
-    );
-    let scenarios = cfg.scenarios();
-    for (s, r) in scenarios.iter().zip(&reports) {
-        println!(
-            "{:<26}{:>8.0}{:>9.1}{:>9.1}{:>9.1}{:>9.1}{:>6.1}%{:>10.1}",
-            r.label,
-            s.variant.weight_bytes(&cfg.model) as f64 / 1e6,
-            r.arrival_rate,
-            r.throughput,
-            r.p50 * 1e3,
-            r.p99 * 1e3,
-            r.slo_attainment * 100.0,
-            r.goodput
-        );
-    }
-    println!("\n## First variant meeting the {:.0} ms SLO (p99), per device", cfg.slo * 1e3);
-    for w in slo_winners(&cfg, &reports) {
-        match (&w.variant, w.max_batch, w.p99) {
-            (Some(v), Some(b), Some(p)) => {
-                println!("  {:<8} {v} at B{b} (p99 {:.1} ms)", w.device, p * 1e3)
-            }
-            _ => println!("  {:<8} no variant qualifies", w.device),
-        }
-    }
-    let out = args
-        .opts
-        .get("out")
-        .cloned()
-        .unwrap_or_else(|| "compress_sweep.json".to_string());
-    write_compress(std::path::Path::new(&out), &cfg, &reports)?;
-    println!("wrote {} scenario(s) to {out}", reports.len());
-    Ok(())
-}
-
-fn cmd_whatif(_args: &Args, dev: &DeviceSpec) -> Result<()> {
-    use bertprof::model::IterationGraph;
-    use bertprof::perf::whatif;
-    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
-    let g = IterationGraph::build(&run);
-
-    println!("## SS5.2 — larger on-chip (LLC) memory");
-    for (f, speedup) in whatif::llc_scaling(&run, dev, &[1, 2, 4, 8, 64]) {
-        println!("  LLC x{:<4} iteration speedup {:.3}x", f, speedup);
-    }
-    println!("  LAMB benefit from infinite LLC: {:.1}% (paper: ~none — no temporal locality)",
-             100.0 * whatif::lamb_llc_benefit(&run, dev));
-
-    println!("\n## SS5.2 — near-memory computing (memory-bound ops at k x HBM bw)");
-    let base = bertprof::perf::roofline::iteration_seconds(&g, dev, run.precision);
-    for k in [2.0, 4.0, 8.0] {
-        let t = whatif::iteration_seconds_with_nmc(&g, dev, run.precision, k);
-        println!("  NMC {k}x: iteration {:.1} ms -> {:.1} ms ({:.2}x)",
-                 base * 1e3, t * 1e3, base / t);
-    }
-
-    println!("\n## SSCompress — precision ladder (forward pass, modeled)");
-    for (label, secs) in whatif::precision_scaling(&run, dev) {
-        println!("  {label:<6} forward {:.2} ms", secs * 1e3);
-    }
-
-    println!("\n## SS5.2 — in-network AllReduce (vs ring, gradient payload)");
-    let bytes = run.model.param_count() * 4;
-    for d in [8u64, 64, 256] {
-        let s = whatif::innetwork_speedup(bytes, d, &LinkSpec::pcie4x16());
-        println!("  D={d:<4} in-network speedup {:.2}x", s);
-    }
-    Ok(())
-}
-
-fn cmd_export(args: &Args, dev: &DeviceSpec) -> Result<()> {
+fn cmd_export(args: &Args) -> Result<()> {
     use bertprof::profiler::trace;
+    let dev = cli::parse_device(args.opts.get("device").map(String::as_str).unwrap_or("mi100"))?;
     let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
-    let t = Timeline::modeled(&run, dev);
+    let t = Timeline::modeled(&run, &dev);
     let out = args.opts.get("out").cloned()
         .unwrap_or_else(|| "trace.csv".to_string());
     let path = std::path::Path::new(&out);
@@ -587,36 +283,6 @@ fn cmd_export(args: &Args, dev: &DeviceSpec) -> Result<()> {
         trace::write_csv(&t, path)?;
     }
     println!("wrote {} op aggregates to {out}", t.entries.len());
-    Ok(())
-}
-
-fn cmd_memory(args: &Args, _dev: &DeviceSpec) -> Result<()> {
-    use bertprof::perf::memory;
-    let hbm = args.opt_u64("hbm", 32) * 1_000_000_000;
-    println!("## SS5.2 — memory capacity model (HBM = {} GB)", hbm / 1_000_000_000);
-    println!("{:<22}{:>12}{:>14}{:>12}", "config", "state(GB)", "acts@B32(GB)", "max B");
-    for (label, prec) in [("BERT Large FP32", Precision::Fp32),
-                          ("BERT Large MP", Precision::Mixed)] {
-        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, prec);
-        println!("{:<22}{:>12.2}{:>14.2}{:>12}",
-                 label,
-                 memory::state_bytes(&run) as f64 / 1e9,
-                 memory::activation_bytes(&run) as f64 / 1e9,
-                 memory::max_batch(&run, hbm));
-    }
-    for w in [2048u64, 4096, 8192] {
-        let run = RunConfig::new(ModelConfig::bert_large().with_width(w),
-                                 Phase::Phase1, Precision::Fp32);
-        let mb = memory::max_batch(&run, hbm);
-        println!("{:<22}{:>12.2}{:>14.2}{:>12}",
-                 format!("width {w} FP32"),
-                 memory::state_bytes(&run) as f64 / 1e9,
-                 memory::activation_bytes(&run) as f64 / 1e9,
-                 mb);
-        if mb == 0 {
-            println!("{:<22}  -> model parallelism mandatory (SS5.2)", "");
-        }
-    }
     Ok(())
 }
 

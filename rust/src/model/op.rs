@@ -96,7 +96,11 @@ impl OpCategory {
 }
 
 /// The computational shape of the op, used by the roofline model.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Eq + Hash` because the shape (plus element width, device, and
+/// precision) is exactly what determines an op's roofline cost — it is
+/// the key `perf::CostCache` memoizes on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum OpKind {
     /// (possibly batched) GEMM with Table 3 dims.
     Gemm(super::gemm::GemmDims),

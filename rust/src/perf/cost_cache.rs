@@ -1,0 +1,256 @@
+//! Memoized roofline op costing shared across whole experiment grids.
+//!
+//! The big sweeps (the scenario registry's grids, `serve::sweep`, the
+//! figure artifacts) re-time the *same* op shapes thousands of times:
+//! every batch point of a sweep re-prices the batch-independent LAMB
+//! ops, and every serving scenario at the same (device, precision)
+//! re-prices the identical padded batch shapes. [`CostCache`] memoizes
+//! [`roofline::estimate_op`] on exactly the inputs that determine the
+//! cost — (op shape/kind, element width, optimizer-stream flag, device,
+//! precision) — so each distinct shape is priced once per grid.
+//!
+//! The cache is `Sync` (a `Mutex`-guarded map plus atomic hit/miss
+//! counters) so one instance can be shared across the parallel grid
+//! executor's workers (`scenario::exec`); because
+//! `roofline::estimate_op` is a pure function, a cached value is
+//! bit-identical to a recomputed one and the artifacts of a cached
+//! sweep are byte-identical to the uncached ones (asserted in
+//! `rust/tests/scenario.rs`; the `fig_scenario_grid` bench records the
+//! measured cached-vs-uncached grid speedup).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::Precision;
+use crate::model::op::{LayerClass, Op, OpKind};
+use crate::model::IterationGraph;
+use crate::perf::device::DeviceSpec;
+use crate::perf::roofline::{self, OpTime};
+
+/// Everything `roofline::estimate_op` reads from an op and its context:
+/// the shape, the element width, whether it streams at the optimizer
+/// bandwidth, the device fingerprint, and the precision. Two ops with
+/// equal keys have bit-identical costs.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CostKey {
+    kind: OpKind,
+    elem_bytes: u64,
+    optimizer: bool,
+    device: u64,
+    precision: Precision,
+}
+
+impl CostKey {
+    fn new(op: &Op, dev: &DeviceSpec, prec: Precision) -> CostKey {
+        CostKey {
+            kind: op.kind.clone(),
+            elem_bytes: op.elem_bytes,
+            optimizer: op.layer == LayerClass::Optimizer,
+            device: dev.cost_fingerprint(),
+            precision: prec,
+        }
+    }
+}
+
+/// Shared memo table over `roofline::estimate_op`, keyed by the op
+/// shape, element width, optimizer-stream flag, device fingerprint,
+/// and precision. Cheap to create; share one per grid (via `&` or
+/// `Arc`) to dedupe costing across grid cells and worker threads.
+#[derive(Debug, Default)]
+pub struct CostCache {
+    map: Mutex<HashMap<CostKey, (f64, bool)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CostCache {
+    /// An empty cache.
+    pub fn new() -> CostCache {
+        CostCache::default()
+    }
+
+    /// Memoized [`roofline::estimate_op`]: identical output (the cost of
+    /// a cache hit is one map lookup instead of the roofline
+    /// arithmetic), plus hit/miss accounting.
+    pub fn estimate_op(&self, op: &Op, dev: &DeviceSpec, prec: Precision) -> OpTime {
+        let key = CostKey::new(op, dev, prec);
+        if let Some(&(seconds, memory_bound)) =
+            self.map.lock().expect("no panics hold this lock").get(&key)
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return OpTime { name: op.name.clone(), seconds, memory_bound };
+        }
+        // Computed outside the lock: two racing workers may both price a
+        // fresh shape, but estimate_op is pure so both insert the same
+        // value and the artifact stays deterministic.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let t = roofline::estimate_op(op, dev, prec);
+        self.map
+            .lock()
+            .expect("no panics hold this lock")
+            .insert(key, (t.seconds, t.memory_bound));
+        t
+    }
+
+    /// Memoized [`roofline::estimate_op_total`].
+    pub fn estimate_op_total(&self, op: &Op, dev: &DeviceSpec, prec: Precision) -> f64 {
+        self.estimate_op(op, dev, prec).seconds * op.count as f64
+    }
+
+    /// Memoized [`roofline::iteration_seconds`] — same per-op order and
+    /// summation, so the total is bit-identical to the uncached path.
+    pub fn iteration_seconds(&self, g: &IterationGraph, dev: &DeviceSpec, prec: Precision) -> f64 {
+        g.ops
+            .iter()
+            .map(|op| self.estimate_op_total(op, dev, prec))
+            .sum()
+    }
+
+    /// Lookups served from the memo table.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to run the roofline arithmetic.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total lookups. Deterministic for a deterministic workload (every
+    /// `estimate_op` call bumps exactly one counter), unlike the
+    /// hit/miss *split*: two workers racing on a fresh key may both
+    /// count a miss.
+    pub fn lookups(&self) -> u64 {
+        self.hits() + self.misses()
+    }
+
+    /// Fraction of lookups served from the table (0 when never
+    /// queried). Under concurrency this can undercount hits by the
+    /// handful of racing first-touches; for a scheduling-independent
+    /// figure use [`CostCache::dedup_rate`].
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+
+    /// Fraction of lookups that did *not* introduce a new shape:
+    /// `1 - len/lookups`. Both terms are scheduling-independent, so
+    /// this is the rate reported in deterministic sweep output.
+    pub fn dedup_rate(&self) -> f64 {
+        let lookups = self.lookups();
+        if lookups == 0 {
+            0.0
+        } else {
+            1.0 - self.len() as f64 / lookups as f64
+        }
+    }
+
+    /// Distinct (shape, device, precision) points priced so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("no panics hold this lock").len()
+    }
+
+    /// True when nothing has been priced yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, RunConfig};
+
+    fn graph(prec: Precision) -> IterationGraph {
+        IterationGraph::build(&RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, prec))
+    }
+
+    #[test]
+    fn cached_costs_are_bit_identical_to_uncached() {
+        let cache = CostCache::new();
+        for prec in [Precision::Fp32, Precision::Mixed] {
+            let g = graph(prec);
+            for dev in [DeviceSpec::mi100(), DeviceSpec::v100()] {
+                for op in &g.ops {
+                    let plain = roofline::estimate_op(op, &dev, prec);
+                    let cached = cache.estimate_op(op, &dev, prec);
+                    assert_eq!(plain.seconds, cached.seconds, "{}", op.name);
+                    assert_eq!(plain.memory_bound, cached.memory_bound, "{}", op.name);
+                    // And again, now served from the table.
+                    let hot = cache.estimate_op(op, &dev, prec);
+                    assert_eq!(plain.seconds, hot.seconds, "{}", op.name);
+                }
+                assert_eq!(
+                    roofline::iteration_seconds(&g, &dev, prec),
+                    cache.iteration_seconds(&g, &dev, prec),
+                );
+            }
+        }
+        assert!(cache.hits() > 0 && cache.misses() > 0);
+    }
+
+    #[test]
+    fn repeated_shapes_hit_across_grid_cells() {
+        // The batch sweep's LAMB ops are batch-independent: pricing B=4
+        // after B=32 must hit for every optimizer op.
+        let cache = CostCache::new();
+        let dev = DeviceSpec::mi100();
+        let b32 = graph(Precision::Fp32);
+        cache.iteration_seconds(&b32, &dev, Precision::Fp32);
+        let misses_after_first = cache.misses();
+        let b4 = IterationGraph::build(&RunConfig::new(
+            ModelConfig::bert_large().with_batch(4),
+            Phase::Phase1,
+            Precision::Fp32,
+        ));
+        cache.iteration_seconds(&b4, &dev, Precision::Fp32);
+        assert!(cache.hits() > 0, "no cross-batch reuse");
+        // Re-pricing the first graph is a pure hit.
+        cache.iteration_seconds(&b32, &dev, Precision::Fp32);
+        assert!(cache.misses() < misses_after_first + b4.ops.len() as u64);
+        assert!(cache.hit_rate() > 0.0 && cache.hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn distinct_devices_and_precisions_do_not_collide() {
+        // A GEMM op: its cost reads the device matrix rate *and* the
+        // precision (non-GEMM ops only see precision through their baked
+        // elem_bytes, so they would legitimately tie across precisions).
+        let cache = CostCache::new();
+        let g = graph(Precision::Fp32);
+        let op = g
+            .ops
+            .iter()
+            .find(|o| matches!(o.kind, OpKind::Gemm(_)))
+            .expect("graph has GEMMs");
+        let a = cache.estimate_op(op, &DeviceSpec::mi100(), Precision::Fp32);
+        let b = cache.estimate_op(op, &DeviceSpec::v100(), Precision::Fp32);
+        let c = cache.estimate_op(op, &DeviceSpec::mi100(), Precision::Mixed);
+        assert_ne!(a.seconds, b.seconds);
+        assert_ne!(a.seconds, c.seconds);
+        assert_eq!(cache.hits(), 0);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn shared_across_threads_stays_consistent() {
+        let cache = CostCache::new();
+        let g = graph(Precision::Fp32);
+        let dev = DeviceSpec::mi100();
+        let serial = roofline::iteration_seconds(&g, &dev, Precision::Fp32);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    assert_eq!(cache.iteration_seconds(&g, &dev, Precision::Fp32), serial);
+                });
+            }
+        });
+        assert!(!cache.is_empty());
+    }
+}

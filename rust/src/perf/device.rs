@@ -197,6 +197,36 @@ impl DeviceSpec {
     pub fn ridge_point(&self, prec: Precision) -> f64 {
         self.matrix_flops(prec) / self.effective_bw()
     }
+
+    /// Fingerprint over every field the roofline model reads — the
+    /// device component of `perf::CostCache`'s memo key. Two specs with
+    /// equal fingerprints cost every op identically (the name alone
+    /// would collide for a preset tweaked in place, so the numeric
+    /// fields hash too). Stable only within one process, which is all a
+    /// in-memory memo key needs.
+    pub fn cost_fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.name.hash(&mut h);
+        for f in [
+            self.fp32_vector_flops,
+            self.fp32_matrix_flops,
+            self.fp16_matrix_flops,
+            self.int8_matrix_flops,
+            self.mem_bw,
+            self.launch_overhead,
+            self.bw_efficiency,
+            self.ew_bw_efficiency,
+            self.opt_bw_efficiency,
+            self.matrix_eff_fp32,
+            self.matrix_eff_fp16,
+            self.matrix_eff_int8,
+        ] {
+            f.to_bits().hash(&mut h);
+        }
+        self.llc_bytes.hash(&mut h);
+        h.finish()
+    }
 }
 
 #[cfg(test)]

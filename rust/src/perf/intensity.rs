@@ -17,20 +17,27 @@ pub struct IntensityRow {
     pub memory_bound: bool,
 }
 
-/// Fig. 7: arithmetic intensity of every transformer GEMM (fwd + bwd).
+/// Fig. 7: arithmetic intensity of every transformer GEMM (fwd + bwd)
+/// on the paper's MI100 testbed.
 pub fn gemm_intensities(run: &RunConfig) -> Vec<IntensityRow> {
+    gemm_intensities_on(run, &DeviceSpec::mi100())
+}
+
+/// [`gemm_intensities`] on an explicit device (the scenario registry's
+/// `--device` axis; the `memory_bound` flags and demand bandwidths are
+/// device-dependent even though ops/byte is not).
+pub fn gemm_intensities_on(run: &RunConfig, dev: &DeviceSpec) -> Vec<IntensityRow> {
     let eb = run.precision.act_bytes();
-    let dev = DeviceSpec::mi100();
     let mut rows = Vec::new();
     for row in table3(&run.model) {
         for (pass, label) in [(Pass::Forward, "fwd"), (Pass::Backward, "bwd")] {
             for g in row.for_pass(pass) {
-                let t = gemm_model::gemm_time(&g, &dev, run.precision);
+                let t = gemm_model::gemm_time(&g, dev, run.precision);
                 rows.push(IntensityRow {
                     label: format!("{} {}", g.label(), label),
                     ops_per_byte: g.ops_per_byte(eb),
                     bandwidth: g.bytes(eb) as f64 / t,
-                    memory_bound: gemm_model::is_memory_bound(&g, &dev, run.precision),
+                    memory_bound: gemm_model::is_memory_bound(&g, dev, run.precision),
                 });
             }
         }
@@ -40,14 +47,18 @@ pub fn gemm_intensities(run: &RunConfig) -> Vec<IntensityRow> {
 
 /// Fig. 8: intensity + bandwidth demand of every op category in the
 /// iteration, normalized to the maximum achieved bandwidth (the paper
-/// normalizes to the EW-multiply kernel).
+/// normalizes to the EW-multiply kernel), on the MI100 testbed.
 pub fn op_intensities(run: &RunConfig) -> Vec<IntensityRow> {
+    op_intensities_on(run, &DeviceSpec::mi100())
+}
+
+/// [`op_intensities`] on an explicit device.
+pub fn op_intensities_on(run: &RunConfig, dev: &DeviceSpec) -> Vec<IntensityRow> {
     let g = IterationGraph::build(run);
-    let dev = DeviceSpec::mi100();
     let mut by_cat: std::collections::BTreeMap<String, (u64, u64, f64, bool)> =
         Default::default();
     for op in &g.ops {
-        let t = estimate_op(op, &dev, run.precision);
+        let t = estimate_op(op, dev, run.precision);
         let e = by_cat
             .entry(format!("{:?}", op.category))
             .or_insert((0, 0, 0.0, false));

@@ -2,6 +2,7 @@
 //! counts into device-time estimates, reproducing the paper's MI100-scale
 //! runtime breakdowns without the MI100 (DESIGN.md SS3 substitution).
 
+pub mod cost_cache;
 pub mod device;
 pub mod gemm_model;
 pub mod intensity;
@@ -9,5 +10,6 @@ pub mod memory;
 pub mod roofline;
 pub mod whatif;
 
+pub use cost_cache::CostCache;
 pub use device::DeviceSpec;
 pub use roofline::{estimate_graph, estimate_op, OpTime};

@@ -28,8 +28,13 @@ pub fn estimate_op(op: &Op, dev: &DeviceSpec, prec: Precision) -> OpTime {
         }
         OpKind::Transfer { bytes } => {
             // Transfers are costed by the dist module's link model; here
-            // we only account a PCIe-4.0-x16-like default for stray uses.
-            ((*bytes as f64) / 32.0e9, true)
+            // we only account the same PCIe 4.0 x16 bandwidth the
+            // `LinkSpec::pcie4x16` testbed preset derives from, for
+            // stray uses outside a `dist` composition.
+            (
+                (*bytes as f64) / crate::dist::interconnect::PCIE4_X16_BANDWIDTH,
+                true,
+            )
         }
     };
     OpTime { name: op.name.clone(), seconds, memory_bound }
@@ -207,6 +212,26 @@ mod tests {
                 .map(|(_, t)| t).sum::<f64>() / total
         };
         assert!(frac(Precision::Mixed) < frac(Precision::Fp32) - 0.05);
+    }
+
+    #[test]
+    fn stray_transfer_cost_matches_the_pcie4_link_preset() {
+        // Satellite of ISSUE 4: the transfer arm and
+        // `dist::LinkSpec::pcie4x16()` share one named constant.
+        let op = Op {
+            name: "xfer".into(),
+            layer: LayerClass::Communication,
+            category: crate::model::op::OpCategory::AllReduce,
+            pass: crate::model::op::Pass::Comm,
+            kind: OpKind::Transfer { bytes: 1 << 30 },
+            count: 1,
+            elem_bytes: 4,
+        };
+        let dev = DeviceSpec::mi100();
+        let t = estimate_op(&op, &dev, Precision::Fp32);
+        let link = crate::dist::LinkSpec::pcie4x16();
+        assert_eq!(t.seconds, (1u64 << 30) as f64 / link.bandwidth);
+        assert!(t.memory_bound);
     }
 
     #[test]

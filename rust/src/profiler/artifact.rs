@@ -11,7 +11,12 @@
 
 use crate::config::{ModelConfig, Phase, Precision, RunConfig};
 use crate::dist::{DataParallelModel, HybridModel, LinkSpec, ModelParallelModel, ZeroModel};
+use crate::fusion::kernel_fusion::FusionStudy;
+use crate::fusion::{gemm_fusion, qkv_fusion_speedup};
+use crate::model::gemm::table3;
+use crate::model::IterationGraph;
 use crate::perf::device::DeviceSpec;
+use crate::perf::{intensity, memory, whatif};
 use crate::profiler::Timeline;
 use crate::util::Json;
 
@@ -50,9 +55,78 @@ pub fn fig04_json(dev: &DeviceSpec) -> Json {
     ])
 }
 
+/// Fig. 5 — the transformer-layer category detail, FP32 vs Mixed.
+pub fn fig05_json(dev: &DeviceSpec) -> Json {
+    let configs = [Precision::Fp32, Precision::Mixed]
+        .iter()
+        .map(|&p| {
+            let r = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, p);
+            timeline_json(&Timeline::modeled(&r, dev))
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("fig05_transformer_detail")),
+        ("device", Json::str(dev.name.clone())),
+        ("configs", Json::arr(configs)),
+    ])
+}
+
+/// Fig. 7 — arithmetic intensity (and demand bandwidth / boundedness)
+/// of every transformer GEMM, FP32. Golden-gated (`rust/tests/golden/
+/// fig07.json`) and mirrored in `python/mirror/golden_mirror.py`, so
+/// the scenario-registry path itself sits behind the regression net.
+pub fn fig07_json(dev: &DeviceSpec) -> Json {
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let rows = intensity::gemm_intensities_on(&run, dev)
+        .into_iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("label", Json::str(r.label)),
+                ("ops_per_byte", Json::num(r.ops_per_byte)),
+                ("demand_gbps", Json::num(r.bandwidth / 1e9)),
+                ("memory_bound", Json::Bool(r.memory_bound)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("fig07_gemm_intensity")),
+        ("device", Json::str(dev.name.clone())),
+        ("precision", Json::str("FP32")),
+        ("rows", Json::arr(rows)),
+    ])
+}
+
+/// Fig. 8 — per-category intensity and normalized bandwidth demand.
+pub fn fig08_json(dev: &DeviceSpec) -> Json {
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let rows = intensity::op_intensities_on(&run, dev)
+        .into_iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("label", Json::str(r.label)),
+                ("ops_per_byte", Json::num(r.ops_per_byte)),
+                ("bandwidth_rel", Json::num(r.bandwidth)),
+                ("memory_bound", Json::Bool(r.memory_bound)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("fig08_op_intensity")),
+        ("device", Json::str(dev.name.clone())),
+        ("precision", Json::str("FP32")),
+        ("rows", Json::arr(rows)),
+    ])
+}
+
 /// Fig. 9 — the mini-batch sweep (B = 4, 8, 16, 32) on one device.
 pub fn fig09_json(dev: &DeviceSpec) -> Json {
-    let configs = [4u64, 8, 16, 32]
+    fig09_json_for(dev, &[4, 8, 16, 32])
+}
+
+/// [`fig09_json`] at explicit batch points (the scenario registry's
+/// `batches` parameter; the default grid is the golden-gated one).
+pub fn fig09_json_for(dev: &DeviceSpec, batches: &[u64]) -> Json {
+    let configs = batches
         .iter()
         .map(|&b| {
             let r = RunConfig::new(
@@ -70,9 +144,232 @@ pub fn fig09_json(dev: &DeviceSpec) -> Json {
     ])
 }
 
-/// Fig. 12 — the seven distributed-training breakdowns over PCIe 4.0
-/// (the `bertprof dist` row set).
-pub fn fig12_json(dev: &DeviceSpec) -> Json {
+/// Fig. 10 — the hidden-dimension sweep at explicit widths.
+pub fn fig10_json(dev: &DeviceSpec, widths: &[u64]) -> Json {
+    let configs = widths
+        .iter()
+        .map(|&w| {
+            let r = RunConfig::new(
+                ModelConfig::bert_large().with_width(w),
+                Phase::Phase1,
+                Precision::Fp32,
+            );
+            let mut t = Timeline::modeled(&r, dev);
+            t.label = format!("d_model={w}");
+            timeline_json(&t)
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("fig10_width_sweep")),
+        ("device", Json::str(dev.name.clone())),
+        ("configs", Json::arr(configs)),
+    ])
+}
+
+/// The SS3.3.2 layer-count sweep at explicit depths.
+pub fn depth_json(dev: &DeviceSpec, depths: &[u64]) -> Json {
+    let configs = depths
+        .iter()
+        .map(|&n| {
+            let r = RunConfig::new(
+                ModelConfig::bert_large().with_layers(n),
+                Phase::Phase1,
+                Precision::Fp32,
+            );
+            let mut t = Timeline::modeled(&r, dev);
+            t.label = format!("N={n}");
+            timeline_json(&t)
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("depth_sweep")),
+        ("device", Json::str(dev.name.clone())),
+        ("configs", Json::arr(configs)),
+    ])
+}
+
+/// Fig. 13 — the kernel-fusion ratios (LayerNorm chain, Adam).
+pub fn fig13_json(dev: &DeviceSpec) -> Json {
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let rows = [FusionStudy::layernorm(&run, dev), FusionStudy::adam(&run, dev)]
+        .into_iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("study", Json::str(s.name)),
+                ("kernel_ratio", Json::num(s.kernel_ratio)),
+                ("time_ratio", Json::num(s.time_ratio)),
+                ("traffic_ratio", Json::num(s.traffic_ratio)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("fig13_kernel_fusion")),
+        ("device", Json::str(dev.name.clone())),
+        ("rows", Json::arr(rows)),
+    ])
+}
+
+/// Fig. 15 — the QKV GEMM fusion speedups across the sweep points.
+pub fn fig15_json(dev: &DeviceSpec) -> Json {
+    let rows = gemm_fusion::figure15_sweep(dev, Precision::Fp32)
+        .into_iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("point", Json::str(r.label)),
+                ("fwd_speedup", Json::num(1.0 / r.fwd_ratio)),
+                ("dgrad_speedup", Json::num(1.0 / r.bwd_dgrad_ratio)),
+                ("wgrad_speedup", Json::num(1.0 / r.bwd_wgrad_ratio)),
+            ])
+        })
+        .collect();
+    let small = qkv_fusion_speedup(512, 512, dev, Precision::Fp32);
+    Json::obj(vec![
+        ("figure", Json::str("fig15_gemm_fusion")),
+        ("device", Json::str(dev.name.clone())),
+        ("rows", Json::arr(rows)),
+        ("small_model_fwd_speedup", Json::num(small.fwd_speedup())),
+    ])
+}
+
+/// Table 3 — the BERT GEMM dimension table.
+pub fn table3_json() -> Json {
+    let cfg = ModelConfig::bert_large();
+    let gemm = |g: &crate::model::GemmDims| {
+        Json::obj(vec![
+            ("m", Json::num(g.m as f64)),
+            ("n", Json::num(g.n as f64)),
+            ("k", Json::num(g.k as f64)),
+            ("batch", Json::num(g.batch as f64)),
+        ])
+    };
+    let rows = table3(&cfg)
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("op", Json::str(row.kind.label())),
+                ("fwd", gemm(&row.fwd)),
+                ("bwd_dgrad", gemm(&row.bwd_dgrad)),
+                ("bwd_wgrad", gemm(&row.bwd_wgrad)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("table3_gemm_dims")),
+        (
+            "model",
+            Json::obj(vec![
+                ("batch", Json::num(cfg.batch as f64)),
+                ("seq_len", Json::num(cfg.seq_len as f64)),
+                ("d_model", Json::num(cfg.d_model as f64)),
+                ("n_heads", Json::num(cfg.n_heads as f64)),
+                ("d_ff", Json::num(cfg.d_ff as f64)),
+            ]),
+        ),
+        ("rows", Json::arr(rows)),
+    ])
+}
+
+/// SS5.2 — the memory-capacity model at a given HBM size.
+pub fn memory_json(hbm_bytes: u64) -> Json {
+    let mut rows = Vec::new();
+    let mut push = |label: String, run: &RunConfig| {
+        rows.push(Json::obj(vec![
+            ("label", Json::str(label)),
+            ("state_gb", Json::num(memory::state_bytes(run) as f64 / 1e9)),
+            (
+                "activations_gb",
+                Json::num(memory::activation_bytes(run) as f64 / 1e9),
+            ),
+            ("max_batch", Json::num(memory::max_batch(run, hbm_bytes) as f64)),
+        ]));
+    };
+    for (label, prec) in [("BERT Large FP32", Precision::Fp32), ("BERT Large MP", Precision::Mixed)]
+    {
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, prec);
+        push(label.to_string(), &run);
+    }
+    for w in [2048u64, 4096, 8192] {
+        let run = RunConfig::new(
+            ModelConfig::bert_large().with_width(w),
+            Phase::Phase1,
+            Precision::Fp32,
+        );
+        push(format!("width {w} FP32"), &run);
+    }
+    Json::obj(vec![
+        ("figure", Json::str("memory_capacity")),
+        ("hbm_gb", Json::num(hbm_bytes as f64 / 1e9)),
+        ("rows", Json::arr(rows)),
+    ])
+}
+
+/// SS5.2 — the hardware-mechanism what-ifs (LLC scaling, NMC, the
+/// precision ladder, in-network AllReduce) on one device.
+pub fn whatif_json(dev: &DeviceSpec) -> Json {
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let g = IterationGraph::build(&run);
+    let llc = whatif::llc_scaling(&run, dev, &[1, 2, 4, 8, 64])
+        .into_iter()
+        .map(|(f, s)| {
+            Json::obj(vec![
+                ("llc_factor", Json::num(f as f64)),
+                ("speedup", Json::num(s)),
+            ])
+        })
+        .collect();
+    let base = crate::perf::roofline::iteration_seconds(&g, dev, run.precision);
+    let nmc = [2.0, 4.0, 8.0]
+        .into_iter()
+        .map(|k| {
+            let t = whatif::iteration_seconds_with_nmc(&g, dev, run.precision, k);
+            Json::obj(vec![
+                ("bw_multiple", Json::num(k)),
+                ("iteration_ms", Json::num(t * 1e3)),
+                ("speedup", Json::num(base / t)),
+            ])
+        })
+        .collect();
+    let ladder = whatif::precision_scaling(&run, dev)
+        .into_iter()
+        .map(|(label, secs)| {
+            Json::obj(vec![
+                ("precision", Json::str(label)),
+                ("forward_ms", Json::num(secs * 1e3)),
+            ])
+        })
+        .collect();
+    let bytes = run.model.param_count() * 4;
+    let innetwork = [8u64, 64, 256]
+        .into_iter()
+        .map(|d| {
+            Json::obj(vec![
+                ("devices", Json::num(d as f64)),
+                (
+                    "speedup",
+                    Json::num(whatif::innetwork_speedup(bytes, d, &LinkSpec::pcie4x16())),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", Json::str("whatif_hardware_mechanisms")),
+        ("device", Json::str(dev.name.clone())),
+        ("iteration_ms", Json::num(base * 1e3)),
+        ("llc", Json::arr(llc)),
+        (
+            "lamb_llc_benefit",
+            Json::num(whatif::lamb_llc_benefit(&run, dev)),
+        ),
+        ("nmc", Json::arr(nmc)),
+        ("precision_ladder", Json::arr(ladder)),
+        ("innetwork_allreduce", Json::arr(innetwork)),
+    ])
+}
+
+/// The seven Fig. 12 distributed-training breakdowns over PCIe 4.0 —
+/// the one row set both the `fig12` scenario's table and
+/// [`fig12_json`]'s artifact render.
+pub fn fig12_rows(dev: &DeviceSpec) -> Vec<crate::dist::DistBreakdown> {
     let b16 = RunConfig::new(
         ModelConfig::bert_large().with_batch(16),
         Phase::Phase1,
@@ -84,15 +381,27 @@ pub fn fig12_json(dev: &DeviceSpec) -> Json {
         Precision::Fp32,
     );
     let link = LinkSpec::pcie4x16();
-    let rows = vec![
+    vec![
         DataParallelModel::new(1, link.clone(), true).breakdown(&b16, dev),
         DataParallelModel::new(64, link.clone(), true).breakdown(&b16, dev),
         DataParallelModel::new(64, link.clone(), false).breakdown(&b16, dev),
         ModelParallelModel::new(2, link.clone()).breakdown(&b16, dev),
         ModelParallelModel::new(8, link.clone()).breakdown(&b64, dev),
         HybridModel::megatron_128().breakdown(&b16, dev),
-        ZeroModel::new(64, link.clone()).breakdown(&b16, dev),
-    ];
+        ZeroModel::new(64, link).breakdown(&b16, dev),
+    ]
+}
+
+/// Fig. 12 — the seven distributed-training breakdowns over PCIe 4.0
+/// (the `bertprof dist` row set).
+pub fn fig12_json(dev: &DeviceSpec) -> Json {
+    fig12_json_from(dev, &fig12_rows(dev))
+}
+
+/// [`fig12_json`] over already-computed rows, so callers that also
+/// render the text table (the `fig12` scenario) model the grid once.
+pub fn fig12_json_from(dev: &DeviceSpec, rows: &[crate::dist::DistBreakdown]) -> Json {
+    let link = LinkSpec::pcie4x16();
     let configs = rows
         .iter()
         .map(|b| {
@@ -130,6 +439,43 @@ mod tests {
         }
         // Pure functions: identical on re-evaluation.
         assert_eq!(fig04_json(&dev).to_string(), fig04_json(&dev).to_string());
+    }
+
+    #[test]
+    fn scenario_artifacts_roundtrip() {
+        let dev = DeviceSpec::mi100();
+        for j in [
+            fig05_json(&dev),
+            fig07_json(&dev),
+            fig08_json(&dev),
+            fig10_json(&dev, &[512, 1024]),
+            depth_json(&dev, &[6, 24]),
+            fig13_json(&dev),
+            fig15_json(&dev),
+            table3_json(),
+            memory_json(32_000_000_000),
+            whatif_json(&dev),
+        ] {
+            let txt = j.to_string();
+            assert_eq!(Json::parse(&txt).unwrap(), j, "{txt}");
+            assert!(j.get("figure").is_some());
+        }
+    }
+
+    #[test]
+    fn fig07_has_15_rows_and_flags_the_bgemms() {
+        // 5 Table-3 rows x (1 fwd + 2 bwd) GEMMs; the attention B-GEMMs
+        // are the memory-bound ones on MI100 FP32 (takeaway 7).
+        let j = fig07_json(&DeviceSpec::mi100());
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 15);
+        let bound = |prefix: &str| {
+            rows.iter()
+                .filter(|r| r.get("label").unwrap().as_str().unwrap().starts_with(prefix))
+                .any(|r| matches!(r.get("memory_bound"), Some(Json::Bool(true))))
+        };
+        assert!(bound("Attn."));
+        assert!(!bound("FC-1"));
     }
 
     #[test]

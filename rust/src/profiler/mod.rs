@@ -12,6 +12,7 @@ use crate::model::op::{LayerClass, OpCategory};
 use crate::model::IterationGraph;
 use crate::perf::device::DeviceSpec;
 use crate::perf::roofline::estimate_op_total;
+use crate::perf::CostCache;
 
 /// One timed entry (an op aggregate).
 #[derive(Debug, Clone)]
@@ -39,6 +40,14 @@ impl Timeline {
         Self::from_graph(run.label(), &g, dev, run.precision)
     }
 
+    /// `modeled`, sharing a grid-wide `perf::CostCache` — identical
+    /// entries (pure memoization), used by grid drivers and the
+    /// `fig_scenario_grid` bench to stop re-pricing repeated shapes.
+    pub fn modeled_cached(run: &RunConfig, dev: &DeviceSpec, cost: &CostCache) -> Timeline {
+        let g = IterationGraph::build(run);
+        Self::from_graph_cached(run.label(), &g, dev, run.precision, cost)
+    }
+
     pub fn from_graph(label: String, g: &IterationGraph, dev: &DeviceSpec,
                       prec: Precision) -> Timeline {
         let entries = g
@@ -49,6 +58,25 @@ impl Timeline {
                 layer: op.layer,
                 category: op.category,
                 seconds: estimate_op_total(op, dev, prec),
+                flops: op.total_flops(),
+                bytes: op.total_bytes(),
+                launches: op.count,
+            })
+            .collect();
+        Timeline { label, entries }
+    }
+
+    /// `from_graph` with memoized op costing (bit-identical entries).
+    pub fn from_graph_cached(label: String, g: &IterationGraph, dev: &DeviceSpec,
+                             prec: Precision, cost: &CostCache) -> Timeline {
+        let entries = g
+            .ops
+            .iter()
+            .map(|op| TimedOp {
+                name: op.name.clone(),
+                layer: op.layer,
+                category: op.category,
+                seconds: cost.estimate_op_total(op, dev, prec),
                 flops: op.total_flops(),
                 bytes: op.total_bytes(),
                 launches: op.count,

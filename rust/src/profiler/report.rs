@@ -63,6 +63,38 @@ pub fn category_table(title: &str, timelines: &[Timeline]) -> String {
     out
 }
 
+/// Render a sweep-result table (the `serve` / `compress` registry
+/// scenarios): `cols` gives each column's header and width, `rows` the
+/// pre-formatted cells. The first column is left-aligned (the scenario
+/// label), the rest right-aligned — the one place both sweeps' table
+/// printing lives now that they return registry-shaped results.
+pub fn sweep_table(title: &str, cols: &[(&str, usize)], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    if !title.is_empty() {
+        let _ = writeln!(out, "## {title}");
+    }
+    for (i, (h, w)) in cols.iter().enumerate() {
+        if i == 0 {
+            let _ = write!(out, "{h:<w$}");
+        } else {
+            let _ = write!(out, "{h:>w$}");
+        }
+    }
+    let _ = writeln!(out);
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            let w = cols.get(i).map(|&(_, w)| w).unwrap_or(12);
+            if i == 0 {
+                let _ = write!(out, "{cell:<w$}");
+            } else {
+                let _ = write!(out, "{cell:>w$}");
+            }
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
 /// Generic two-column numeric table (Fig. 7/8/15 series).
 pub fn series_table(title: &str, header: (&str, &str), rows: &[(String, f64)]) -> String {
     let mut out = String::new();
@@ -92,5 +124,18 @@ mod tests {
         let s = series_table("fig7", ("gemm", "ops/byte"),
                              &[("x".into(), 1.0)]);
         assert!(s.contains("ops/byte"));
+    }
+
+    #[test]
+    fn sweep_table_aligns_label_left_and_values_right() {
+        let s = sweep_table(
+            "sweep",
+            &[("config", 10), ("thr/s", 8)],
+            &[vec!["a".to_string(), "1.5".to_string()]],
+        );
+        let mut lines = s.lines();
+        assert_eq!(lines.next(), Some("## sweep"));
+        assert_eq!(lines.next(), Some("config       thr/s"));
+        assert_eq!(lines.next(), Some("a              1.5"));
     }
 }

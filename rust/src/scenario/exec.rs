@@ -1,0 +1,104 @@
+//! The one parallel grid executor every sweep runs on.
+//!
+//! Before the scenario engine, `serve::sweep` and `compress::sweep`
+//! each hand-rolled their own `std::thread::scope` fan-out with a
+//! static stride schedule. This module is the single replacement: a
+//! work-stealing queue (one shared atomic cursor — an idle worker
+//! steals the next unclaimed grid cell, so a straggler cell never
+//! serializes the tail behind a fixed stride) writing results into
+//! index-addressed slots, so the output order is the *grid* order
+//! regardless of scheduling and a seeded sweep's artifact is
+//! byte-identical for any worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `run` over every item of `grid` across up to `threads` workers,
+/// returning results in grid order (not completion order).
+///
+/// `run` must be deterministic per item for the order guarantee to make
+/// the whole sweep deterministic; sharing state across cells (e.g. a
+/// `perf::CostCache`) is fine as long as that state never changes a
+/// result, only its cost.
+pub fn run_grid<T, R, F>(grid: &[T], threads: usize, run: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = grid.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.clamp(1, n);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let result = run(&grid[i]);
+                *slots[i].lock().expect("no panics hold this lock") = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("no panics hold this lock")
+                .expect("every slot filled")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_come_back_in_grid_order() {
+        let grid: Vec<u64> = (0..97).collect();
+        for threads in [1, 2, 8, 200] {
+            let out = run_grid(&grid, threads, |&x| x * x);
+            assert_eq!(out, grid.iter().map(|x| x * x).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let out: Vec<u64> = run_grid(&Vec::<u64>::new(), 8, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn every_cell_runs_exactly_once() {
+        let calls = AtomicU64::new(0);
+        let grid: Vec<usize> = (0..51).collect();
+        let out = run_grid(&grid, 7, |&i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 51);
+        assert_eq!(out.len(), 51);
+    }
+
+    #[test]
+    fn uneven_cells_rebalance_across_workers() {
+        // A work-stealing schedule finishes one slow cell on one worker
+        // while the others drain the fast cells; correctness here is
+        // that order and completeness survive wildly uneven costs.
+        let grid: Vec<u64> = (0..16).collect();
+        let out = run_grid(&grid, 4, |&x| {
+            if x == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            x + 1
+        });
+        assert_eq!(out, (1..=16).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,1096 @@
+//! The scenario engine: every DESIGN.md experiment as one named,
+//! parameterized entry in a single registry.
+//!
+//! Before this module the crate wired its experiments five different
+//! ways — `serve::sweep` and `compress::sweep` each ran their own
+//! thread fan-out, while the CLI's `sweep`/`dist`/`whatif` handlers
+//! were bespoke serial loops that could not emit artifacts or join new
+//! grids. The registry is the Megatron-LM-style fix: every experiment
+//! is one [`ScenarioSpec`] — a name, a typed parameter list, and a run
+//! function producing a [`ScenarioOutput`] (rendered text plus a
+//! `profiler::artifact`-shaped JSON value) — runnable uniformly via
+//! `bertprof run <name> [--set k=v ...]` and discoverable via
+//! `bertprof list`. The legacy subcommands are thin aliases over the
+//! same entries.
+//!
+//! Grids inside scenarios fan out over [`exec::run_grid`] (the one
+//! parallel executor); roofline-priced grids (the serve sweep and the
+//! fig09/fig10/depth timeline sweeps) additionally share one
+//! `perf::CostCache` per grid, while the compress grid's quantized
+//! costing keeps its own batch-level memo. A new experiment is a
+//! ~50-line registry entry that inherits parallelism, artifact
+//! emission, and (for roofline costing) the shared memoization for
+//! free.
+
+pub mod exec;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::parse_device;
+use crate::compress::{self, CompressSweepConfig};
+use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+use crate::model::gemm::table3;
+use crate::model::IterationGraph;
+use crate::perf::device::DeviceSpec;
+use crate::perf::{intensity, memory, roofline, whatif, CostCache};
+use crate::profiler::{artifact, report, Timeline};
+use crate::serve::{self, SweepConfig};
+use crate::util::Json;
+
+/// One declared scenario parameter: the `--set key=value` surface.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamSpec {
+    /// Parameter name (`device`, `requests`, ...).
+    pub key: &'static str,
+    /// Default value as text (empty = "use the scenario's default").
+    pub default: &'static str,
+    /// One-line help shown by `bertprof list --params`.
+    pub help: &'static str,
+}
+
+/// One registry entry: a named, parameterized experiment.
+#[derive(Clone)]
+pub struct ScenarioSpec {
+    /// Registry name (`fig04`, `serve`, ...): the `bertprof run` handle.
+    pub name: &'static str,
+    /// Paper artifact this reproduces (`Fig. 4`, `post-paper`, ...).
+    pub figure: &'static str,
+    /// One-line description for `bertprof list`.
+    pub title: &'static str,
+    /// Declared parameters (anything else in `--set` is an error).
+    pub params: &'static [ParamSpec],
+    /// Artifact path written even without `--out` (the sweep scenarios
+    /// keep their pre-registry default artifacts; figure scenarios
+    /// write only when asked).
+    pub default_out: Option<&'static str>,
+    /// The experiment body.
+    pub run: fn(&Params) -> Result<ScenarioOutput>,
+}
+
+/// What a scenario produces: the rendered report and the typed artifact.
+pub struct ScenarioOutput {
+    /// Human-readable tables (what the legacy subcommand printed).
+    pub text: String,
+    /// The `profiler::artifact`-shaped JSON value.
+    pub artifact: Json,
+}
+
+/// Resolved parameter values for one scenario invocation: the spec's
+/// defaults overlaid with the caller's `--set`/option pairs.
+#[derive(Debug, Clone)]
+pub struct Params {
+    scenario: &'static str,
+    values: BTreeMap<String, String>,
+}
+
+impl Params {
+    /// Raw text value of a declared parameter.
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("scenario '{}' did not declare param '{key}'", self.scenario))
+    }
+
+    /// Parse a declared parameter as u64.
+    pub fn get_u64(&self, key: &str) -> Result<u64> {
+        self.get(key)
+            .parse()
+            .with_context(|| format!("param '{key}' must be an integer, got '{}'", self.get(key)))
+    }
+
+    /// Parse a declared parameter as f64.
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .parse()
+            .with_context(|| format!("param '{key}' must be a number, got '{}'", self.get(key)))
+    }
+
+    /// Parse a declared parameter as a comma-separated u64 list.
+    pub fn get_u64_list(&self, key: &str) -> Result<Vec<u64>> {
+        let raw = self.get(key);
+        let list: Vec<u64> = raw
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim().parse().with_context(|| {
+                    format!("param '{key}' must be a comma-separated integer list, got '{raw}'")
+                })
+            })
+            .collect::<Result<_>>()?;
+        if list.is_empty() {
+            bail!("param '{key}' must name at least one value");
+        }
+        Ok(list)
+    }
+
+    /// The `device` parameter as a preset (shared `parse_device` — the
+    /// one `--device` axis every experiment honors).
+    pub fn device(&self) -> Result<DeviceSpec> {
+        parse_device(self.get("device"))
+    }
+
+    /// Worker count for grid scenarios: the `threads` parameter when
+    /// set (strictly parsed, like every other numeric parameter), else
+    /// the machine's available parallelism.
+    pub fn threads(&self) -> Result<usize> {
+        match self.values.get("threads").map(String::as_str) {
+            Some("") | None => Ok(std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)),
+            Some(v) => v
+                .parse::<usize>()
+                .map(|n| n.max(1))
+                .with_context(|| format!("param 'threads' must be an integer, got '{v}'")),
+        }
+    }
+}
+
+/// Merge `pairs` over `spec`'s defaults. `strict` rejects undeclared
+/// keys (the `bertprof run` path); the legacy aliases pass `false` so
+/// unrelated options keep being ignored as they always were. The
+/// runner-level keys (`out`, `artifacts`) are never scenario params.
+pub fn resolve_params(
+    spec: &ScenarioSpec,
+    pairs: &[(String, String)],
+    strict: bool,
+) -> Result<Params> {
+    let mut values: BTreeMap<String, String> = spec
+        .params
+        .iter()
+        .map(|p| (p.key.to_string(), p.default.to_string()))
+        .collect();
+    for (k, v) in pairs {
+        if matches!(k.as_str(), "out" | "artifacts") {
+            continue;
+        }
+        if values.contains_key(k) {
+            values.insert(k.clone(), v.clone());
+        } else if strict {
+            let valid: Vec<&str> = spec.params.iter().map(|p| p.key).collect();
+            bail!(
+                "unknown parameter '{k}' for scenario '{}' (valid: {})",
+                spec.name,
+                if valid.is_empty() { "none".to_string() } else { valid.join(", ") }
+            );
+        }
+    }
+    Ok(Params { scenario: spec.name, values })
+}
+
+const DEVICE_PARAM: ParamSpec = ParamSpec {
+    key: "device",
+    default: "mi100",
+    help: "device preset (mi100|v100|a100|tpu|cpu)",
+};
+
+const THREADS_PARAM: ParamSpec = ParamSpec {
+    key: "threads",
+    default: "",
+    help: "grid workers (default: all cores)",
+};
+
+/// Every DESIGN.md experiment, in the experiment-index order.
+pub fn registry() -> Vec<ScenarioSpec> {
+    vec![
+        ScenarioSpec {
+            name: "fig04",
+            figure: "Fig. 4",
+            title: "runtime breakdown across the five Phi-Bj-FPk configs",
+            params: &[DEVICE_PARAM],
+            default_out: None,
+            run: run_fig04,
+        },
+        ScenarioSpec {
+            name: "fig05",
+            figure: "Fig. 5",
+            title: "transformer-layer category detail, FP32 vs Mixed",
+            params: &[DEVICE_PARAM],
+            default_out: None,
+            run: run_fig05,
+        },
+        ScenarioSpec {
+            name: "fig07",
+            figure: "Fig. 7",
+            title: "GEMM arithmetic intensity (golden-gated artifact)",
+            params: &[DEVICE_PARAM],
+            default_out: None,
+            run: run_fig07,
+        },
+        ScenarioSpec {
+            name: "fig08",
+            figure: "Fig. 8",
+            title: "op-category intensity + bandwidth demand",
+            params: &[DEVICE_PARAM],
+            default_out: None,
+            run: run_fig08,
+        },
+        ScenarioSpec {
+            name: "fig09",
+            figure: "Fig. 9",
+            title: "mini-batch sweep",
+            params: &[
+                DEVICE_PARAM,
+                ParamSpec { key: "batches", default: "4,8,16,32", help: "batch points" },
+                THREADS_PARAM,
+            ],
+            default_out: None,
+            run: run_fig09,
+        },
+        ScenarioSpec {
+            name: "fig10",
+            figure: "Fig. 10",
+            title: "hidden-dimension sweep",
+            params: &[
+                DEVICE_PARAM,
+                ParamSpec {
+                    key: "widths",
+                    default: "512,768,1024,1536,2048",
+                    help: "d_model points",
+                },
+                THREADS_PARAM,
+            ],
+            default_out: None,
+            run: run_fig10,
+        },
+        ScenarioSpec {
+            name: "depth",
+            figure: "SS3.3.2",
+            title: "layer-count sweep",
+            params: &[
+                DEVICE_PARAM,
+                ParamSpec { key: "depths", default: "6,12,24,48", help: "layer counts" },
+                THREADS_PARAM,
+            ],
+            default_out: None,
+            run: run_depth,
+        },
+        ScenarioSpec {
+            name: "fig12",
+            figure: "Fig. 12",
+            title: "multi-device training (DP/MP/hybrid/ZeRO)",
+            params: &[DEVICE_PARAM],
+            default_out: None,
+            run: run_fig12,
+        },
+        ScenarioSpec {
+            name: "fig13",
+            figure: "Fig. 13",
+            title: "kernel fusion (LayerNorm chain, Adam)",
+            params: &[DEVICE_PARAM],
+            default_out: None,
+            run: run_fig13,
+        },
+        ScenarioSpec {
+            name: "fig15",
+            figure: "Fig. 15",
+            title: "QKV GEMM fusion speedups",
+            params: &[DEVICE_PARAM],
+            default_out: None,
+            run: run_fig15,
+        },
+        ScenarioSpec {
+            name: "table3",
+            figure: "Table 3",
+            title: "BERT GEMM dimensions",
+            params: &[],
+            default_out: None,
+            run: run_table3,
+        },
+        ScenarioSpec {
+            name: "memory",
+            figure: "SS5.2",
+            title: "memory-capacity model",
+            params: &[ParamSpec { key: "hbm", default: "32", help: "HBM capacity in GB" }],
+            default_out: None,
+            run: run_memory,
+        },
+        ScenarioSpec {
+            name: "whatif",
+            figure: "SS5.2",
+            title: "hardware-mechanism what-ifs (LLC/NMC/precision/in-network)",
+            params: &[DEVICE_PARAM],
+            default_out: None,
+            run: run_whatif,
+        },
+        ScenarioSpec {
+            name: "serve",
+            figure: "SSServe",
+            title: "dynamic-batching serving grid (simulator-backed)",
+            params: SWEEP_PARAMS_SERVE,
+            default_out: Some("serve_sweep.json"),
+            run: run_serve,
+        },
+        ScenarioSpec {
+            name: "compress",
+            figure: "SSCompress",
+            title: "quantization/pruning SLO what-if grid (simulator-backed)",
+            params: SWEEP_PARAMS_COMPRESS,
+            default_out: Some("compress_sweep.json"),
+            run: run_compress,
+        },
+    ]
+}
+
+/// Look up one scenario; the error names every registered scenario so a
+/// typo is self-correcting.
+pub fn find(name: &str) -> Result<ScenarioSpec> {
+    let all = registry();
+    match all.iter().find(|s| s.name == name) {
+        Some(s) => Ok(s.clone()),
+        None => {
+            let names: Vec<&str> = all.iter().map(|s| s.name).collect();
+            bail!(
+                "unknown scenario '{name}' — registered scenarios: {}",
+                names.join(", ")
+            )
+        }
+    }
+}
+
+/// Resolve + run one scenario by name (the `bertprof run` body, also
+/// the programmatic entry the tests drive).
+pub fn run_by_name(name: &str, pairs: &[(String, String)], strict: bool) -> Result<ScenarioOutput> {
+    let spec = find(name)?;
+    let params = resolve_params(&spec, pairs, strict)?;
+    (spec.run)(&params)
+}
+
+// ------------------------------------------------------ figure bodies --
+
+fn run_fig04(p: &Params) -> Result<ScenarioOutput> {
+    let dev = p.device()?;
+    let timelines: Vec<Timeline> = RunConfig::figure4_set()
+        .iter()
+        .map(|r| Timeline::modeled(r, &dev))
+        .collect();
+    Ok(ScenarioOutput {
+        text: report::stacked_table(
+            &format!("Fig. 4 — runtime breakdown (modeled, {})", dev.name),
+            &timelines,
+        ),
+        artifact: artifact::fig04_json(&dev),
+    })
+}
+
+fn run_fig05(p: &Params) -> Result<ScenarioOutput> {
+    let dev = p.device()?;
+    let ts: Vec<Timeline> = [Precision::Fp32, Precision::Mixed]
+        .iter()
+        .map(|&prec| {
+            let r = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, prec);
+            Timeline::modeled(&r, &dev)
+        })
+        .collect();
+    Ok(ScenarioOutput {
+        text: report::category_table("Fig. 5 — transformer detail", &ts),
+        artifact: artifact::fig05_json(&dev),
+    })
+}
+
+fn run_fig07(p: &Params) -> Result<ScenarioOutput> {
+    let dev = p.device()?;
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let rows: Vec<(String, f64)> = intensity::gemm_intensities_on(&run, &dev)
+        .into_iter()
+        .map(|r| {
+            (
+                format!("{}{}", if r.memory_bound { "[MB] " } else { "     " }, r.label),
+                r.ops_per_byte,
+            )
+        })
+        .collect();
+    Ok(ScenarioOutput {
+        text: report::series_table(
+            "Fig. 7 — GEMM arithmetic intensity",
+            ("GEMM", "ops/byte"),
+            &rows,
+        ),
+        artifact: artifact::fig07_json(&dev),
+    })
+}
+
+fn run_fig08(p: &Params) -> Result<ScenarioOutput> {
+    let dev = p.device()?;
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let rows = intensity::op_intensities_on(&run, &dev);
+    let mut text = report::series_table(
+        "Fig. 8a — op arithmetic intensity",
+        ("category", "ops/byte"),
+        &rows
+            .iter()
+            .map(|r| (r.label.clone(), r.ops_per_byte))
+            .collect::<Vec<_>>(),
+    );
+    text.push_str(&report::series_table(
+        "Fig. 8b — bandwidth demand (normalized to max EW)",
+        ("category", "bw"),
+        &rows
+            .iter()
+            .map(|r| (r.label.clone(), r.bandwidth))
+            .collect::<Vec<_>>(),
+    ));
+    Ok(ScenarioOutput { text, artifact: artifact::fig08_json(&dev) })
+}
+
+/// The shared body of the three timeline sweeps (fig09/fig10/depth):
+/// the points fan out over the grid executor with one `CostCache`, so
+/// batch-independent shapes (every LAMB op, repeated GEMMs) are
+/// roofline-priced once per sweep — pure memoization, values identical
+/// to the serial path.
+fn sweep_timelines(
+    p: &Params,
+    dev: &DeviceSpec,
+    points: &[u64],
+    make: impl Fn(u64) -> RunConfig + Sync,
+    relabel: impl Fn(u64) -> Option<String> + Sync,
+) -> Result<Vec<Timeline>> {
+    let cost = CostCache::new();
+    Ok(exec::run_grid(points, p.threads()?, |&x| {
+        let r = make(x);
+        let mut t = Timeline::modeled_cached(&r, dev, &cost);
+        if let Some(label) = relabel(x) {
+            t.label = label;
+        }
+        t
+    }))
+}
+
+fn run_fig09(p: &Params) -> Result<ScenarioOutput> {
+    let dev = p.device()?;
+    let batches = p.get_u64_list("batches")?;
+    let timelines = sweep_timelines(
+        p,
+        &dev,
+        &batches,
+        |b| {
+            RunConfig::new(
+                ModelConfig::bert_large().with_batch(b),
+                Phase::Phase1,
+                Precision::Fp32,
+            )
+        },
+        |_| None,
+    )?;
+    Ok(ScenarioOutput {
+        text: report::stacked_table("Fig. 9 — mini-batch sweep", &timelines),
+        artifact: artifact::fig09_json_for(&dev, &batches),
+    })
+}
+
+fn run_fig10(p: &Params) -> Result<ScenarioOutput> {
+    let dev = p.device()?;
+    let widths = p.get_u64_list("widths")?;
+    let timelines = sweep_timelines(
+        p,
+        &dev,
+        &widths,
+        |w| {
+            RunConfig::new(
+                ModelConfig::bert_large().with_width(w),
+                Phase::Phase1,
+                Precision::Fp32,
+            )
+        },
+        |w| Some(format!("d_model={w}")),
+    )?;
+    Ok(ScenarioOutput {
+        text: report::stacked_table("Fig. 10 — hidden-dim sweep", &timelines),
+        artifact: artifact::fig10_json(&dev, &widths),
+    })
+}
+
+fn run_depth(p: &Params) -> Result<ScenarioOutput> {
+    let dev = p.device()?;
+    let depths = p.get_u64_list("depths")?;
+    let timelines = sweep_timelines(
+        p,
+        &dev,
+        &depths,
+        |n| {
+            RunConfig::new(
+                ModelConfig::bert_large().with_layers(n),
+                Phase::Phase1,
+                Precision::Fp32,
+            )
+        },
+        |n| Some(format!("N={n}")),
+    )?;
+    Ok(ScenarioOutput {
+        text: report::stacked_table("Layer-count sweep (SS3.3.2)", &timelines),
+        artifact: artifact::depth_json(&dev, &depths),
+    })
+}
+
+fn run_fig12(p: &Params) -> Result<ScenarioOutput> {
+    let dev = p.device()?;
+    let rows = artifact::fig12_rows(&dev);
+    let mut text = format!(
+        "## Fig. 12 — multi-device training (modeled, PCIe 4.0, {})\n",
+        dev.name
+    );
+    text.push_str(&format!(
+        "{:<26}{:>12}{:>12}{:>12}{:>12}{:>12}{:>12}\n",
+        "config", "total(ms)", "xformer%", "lamb%", "comm%", "output%", "emb%"
+    ));
+    for b in &rows {
+        text.push_str(&format!(
+            "{:<26}{:>12.1}{:>11.1}%{:>11.1}%{:>11.1}%{:>11.1}%{:>11.1}%\n",
+            b.label,
+            b.total() * 1e3,
+            100.0 * b.transformer / b.total(),
+            100.0 * b.lamb_fraction(),
+            100.0 * b.comm_fraction(),
+            100.0 * b.output / b.total(),
+            100.0 * b.embedding / b.total(),
+        ));
+    }
+    Ok(ScenarioOutput { text, artifact: artifact::fig12_json_from(&dev, &rows) })
+}
+
+fn run_fig13(p: &Params) -> Result<ScenarioOutput> {
+    use crate::fusion::kernel_fusion::FusionStudy;
+    let dev = p.device()?;
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let mut text = String::from("## Fig. 13 — kernel fusion (modeled; ratios fused/unfused)\n");
+    text.push_str(&format!(
+        "{:<14}{:>12}{:>12}{:>12}\n",
+        "study", "kernels", "time", "traffic"
+    ));
+    for s in [FusionStudy::layernorm(&run, &dev), FusionStudy::adam(&run, &dev)] {
+        text.push_str(&format!(
+            "{:<14}{:>12.3}{:>12.3}{:>12.3}\n",
+            s.name, s.kernel_ratio, s.time_ratio, s.traffic_ratio
+        ));
+    }
+    Ok(ScenarioOutput { text, artifact: artifact::fig13_json(&dev) })
+}
+
+fn run_fig15(p: &Params) -> Result<ScenarioOutput> {
+    use crate::fusion::{gemm_fusion, qkv_fusion_speedup};
+    let dev = p.device()?;
+    let mut text = String::from("## Fig. 15 — QKV GEMM fusion speedup (modeled)\n");
+    text.push_str(&format!(
+        "{:<22}{:>10}{:>10}{:>10}\n",
+        "point", "fwd", "dgrad", "wgrad"
+    ));
+    for r in gemm_fusion::figure15_sweep(&dev, Precision::Fp32) {
+        text.push_str(&format!(
+            "{:<22}{:>9.2}x{:>9.2}x{:>9.2}x\n",
+            r.label,
+            1.0 / r.fwd_ratio,
+            1.0 / r.bwd_dgrad_ratio,
+            1.0 / r.bwd_wgrad_ratio
+        ));
+    }
+    let small = qkv_fusion_speedup(512, 512, &dev, Precision::Fp32);
+    text.push_str(&format!(
+        "(small model d=512, nB=512: fwd {:.2}x)\n",
+        small.fwd_speedup()
+    ));
+    Ok(ScenarioOutput { text, artifact: artifact::fig15_json(&dev) })
+}
+
+fn run_table3(_p: &Params) -> Result<ScenarioOutput> {
+    let cfg = ModelConfig::bert_large();
+    let mut text = format!(
+        "## Table 3 — BERT GEMM dimensions (B={}, n={}, d={}, h={}, d_ff={})\n",
+        cfg.batch, cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.d_ff
+    );
+    text.push_str(&format!(
+        "{:<16}{:>24}{:>24}{:>24}\n",
+        "op", "FWD (MxNxK[,b])", "BWD dgrad", "BWD wgrad"
+    ));
+    let fmt = |g: &crate::model::GemmDims| {
+        if g.batch > 1 {
+            format!("{}x{}x{},b{}", g.m, g.n, g.k, g.batch)
+        } else {
+            format!("{}x{}x{}", g.m, g.n, g.k)
+        }
+    };
+    for row in table3(&cfg) {
+        text.push_str(&format!(
+            "{:<16}{:>24}{:>24}{:>24}\n",
+            row.kind.label(),
+            fmt(&row.fwd),
+            fmt(&row.bwd_dgrad),
+            fmt(&row.bwd_wgrad)
+        ));
+    }
+    Ok(ScenarioOutput { text, artifact: artifact::table3_json() })
+}
+
+fn run_memory(p: &Params) -> Result<ScenarioOutput> {
+    let hbm = p.get_u64("hbm")? * 1_000_000_000;
+    let mut text = format!(
+        "## SS5.2 — memory capacity model (HBM = {} GB)\n",
+        hbm / 1_000_000_000
+    );
+    text.push_str(&format!(
+        "{:<22}{:>12}{:>14}{:>12}\n",
+        "config", "state(GB)", "acts@B32(GB)", "max B"
+    ));
+    for (label, prec) in [("BERT Large FP32", Precision::Fp32), ("BERT Large MP", Precision::Mixed)]
+    {
+        let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, prec);
+        text.push_str(&format!(
+            "{:<22}{:>12.2}{:>14.2}{:>12}\n",
+            label,
+            memory::state_bytes(&run) as f64 / 1e9,
+            memory::activation_bytes(&run) as f64 / 1e9,
+            memory::max_batch(&run, hbm)
+        ));
+    }
+    for w in [2048u64, 4096, 8192] {
+        let run = RunConfig::new(
+            ModelConfig::bert_large().with_width(w),
+            Phase::Phase1,
+            Precision::Fp32,
+        );
+        let mb = memory::max_batch(&run, hbm);
+        text.push_str(&format!(
+            "{:<22}{:>12.2}{:>14.2}{:>12}\n",
+            format!("width {w} FP32"),
+            memory::state_bytes(&run) as f64 / 1e9,
+            memory::activation_bytes(&run) as f64 / 1e9,
+            mb
+        ));
+        if mb == 0 {
+            text.push_str(&format!(
+                "{:<22}  -> model parallelism mandatory (SS5.2)\n",
+                ""
+            ));
+        }
+    }
+    Ok(ScenarioOutput { text, artifact: artifact::memory_json(hbm) })
+}
+
+fn run_whatif(p: &Params) -> Result<ScenarioOutput> {
+    use crate::dist::LinkSpec;
+    let dev = p.device()?;
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let g = IterationGraph::build(&run);
+    let mut text = format!("## SS5.2 — larger on-chip (LLC) memory ({})\n", dev.name);
+    for (f, speedup) in whatif::llc_scaling(&run, &dev, &[1, 2, 4, 8, 64]) {
+        text.push_str(&format!("  LLC x{f:<4} iteration speedup {speedup:.3}x\n"));
+    }
+    text.push_str(&format!(
+        "  LAMB benefit from infinite LLC: {:.1}% (paper: ~none — no temporal locality)\n",
+        100.0 * whatif::lamb_llc_benefit(&run, &dev)
+    ));
+
+    text.push_str("\n## SS5.2 — near-memory computing (memory-bound ops at k x HBM bw)\n");
+    let base = roofline::iteration_seconds(&g, &dev, run.precision);
+    for k in [2.0, 4.0, 8.0] {
+        let t = whatif::iteration_seconds_with_nmc(&g, &dev, run.precision, k);
+        text.push_str(&format!(
+            "  NMC {k}x: iteration {:.1} ms -> {:.1} ms ({:.2}x)\n",
+            base * 1e3,
+            t * 1e3,
+            base / t
+        ));
+    }
+
+    text.push_str("\n## SSCompress — precision ladder (forward pass, modeled)\n");
+    for (label, secs) in whatif::precision_scaling(&run, &dev) {
+        text.push_str(&format!("  {label:<6} forward {:.2} ms\n", secs * 1e3));
+    }
+
+    text.push_str("\n## SS5.2 — in-network AllReduce (vs ring, gradient payload)\n");
+    let bytes = run.model.param_count() * 4;
+    for d in [8u64, 64, 256] {
+        let s = whatif::innetwork_speedup(bytes, d, &LinkSpec::pcie4x16());
+        text.push_str(&format!("  D={d:<4} in-network speedup {s:.2}x\n"));
+    }
+    Ok(ScenarioOutput { text, artifact: artifact::whatif_json(&dev) })
+}
+
+// ------------------------------------------------------- sweep bodies --
+
+// Sweep parameters default to "" = "keep `bert_large_default()`'s
+// value", so the library config structs stay the single source of
+// truth and the CLI path can never drift from the defaults the golden
+// tests, benches, and examples use. The help strings quote the
+// current defaults for `bertprof list --params`.
+const SWEEP_PARAMS_SERVE: &[ParamSpec] = &[
+    ParamSpec { key: "requests", default: "", help: "requests per scenario trace (10000)" },
+    ParamSpec { key: "seed", default: "", help: "workload RNG seed (42)" },
+    ParamSpec { key: "slo-ms", default: "", help: "latency SLO in milliseconds (100)" },
+    ParamSpec { key: "max-wait-ms", default: "", help: "co-batching timeout in ms (10)" },
+    ParamSpec { key: "load", default: "", help: "offered fraction of saturation (0.65)" },
+    ParamSpec { key: "device", default: "", help: "single device preset (default grid: mi100)" },
+    ParamSpec { key: "max-batch", default: "", help: "single max-batch point" },
+    ParamSpec { key: "max-batches", default: "", help: "max-batch grid (1,8,32)" },
+    ParamSpec { key: "seq-max", default: "", help: "single seq-max point" },
+    ParamSpec { key: "seq-maxes", default: "", help: "seq-max grid (128)" },
+    THREADS_PARAM,
+];
+
+const SWEEP_PARAMS_COMPRESS: &[ParamSpec] = &[
+    ParamSpec { key: "requests", default: "", help: "requests per scenario trace (4000)" },
+    ParamSpec { key: "seed", default: "", help: "workload RNG seed (42)" },
+    ParamSpec { key: "slo-ms", default: "", help: "latency SLO in milliseconds (100)" },
+    ParamSpec { key: "max-wait-ms", default: "", help: "co-batching timeout in ms (10)" },
+    ParamSpec { key: "load", default: "", help: "offered fraction of saturation (0.65)" },
+    ParamSpec {
+        key: "device",
+        default: "",
+        help: "single device preset (default grid: mi100 + v100)",
+    },
+    ParamSpec { key: "max-batch", default: "", help: "single max-batch point" },
+    ParamSpec { key: "max-batches", default: "", help: "max-batch grid (8,32)" },
+    ParamSpec { key: "seq-max", default: "", help: "request seq-len upper bound (128)" },
+    THREADS_PARAM,
+];
+
+/// The load/SLO/seed fields both sweep scenarios share, parsed once.
+/// `None` = not set on the command line — keep the config default.
+struct SweepCommon {
+    requests: Option<u64>,
+    seed: Option<u64>,
+    slo: Option<f64>,
+    max_wait: Option<f64>,
+    load: Option<f64>,
+    device: Option<DeviceSpec>,
+    max_batches: Option<Vec<u64>>,
+}
+
+fn parse_sweep_common(p: &Params) -> Result<SweepCommon> {
+    let opt_u64 = |key: &str| -> Result<Option<u64>> {
+        match p.get(key) {
+            "" => Ok(None),
+            _ => p.get_u64(key).map(Some),
+        }
+    };
+    let opt_f64 = |key: &str| -> Result<Option<f64>> {
+        match p.get(key) {
+            "" => Ok(None),
+            _ => p.get_f64(key).map(Some),
+        }
+    };
+    let load = opt_f64("load")?;
+    if let Some(l) = load {
+        if !(l.is_finite() && l > 0.0) {
+            bail!("--load must be a positive finite saturation fraction, got {l}");
+        }
+    }
+    let device = match p.get("device") {
+        "" => None,
+        name => Some(parse_device(name)?),
+    };
+    let max_batches = match p.get("max-batch") {
+        "" => match p.get("max-batches") {
+            "" => None,
+            _ => Some(p.get_u64_list("max-batches")?),
+        },
+        _ => Some(vec![p.get_u64("max-batch")?]),
+    };
+    Ok(SweepCommon {
+        requests: opt_u64("requests")?,
+        seed: opt_u64("seed")?,
+        slo: opt_f64("slo-ms")?.map(|v| v / 1e3),
+        max_wait: opt_f64("max-wait-ms")?.map(|v| v / 1e3),
+        load,
+        device,
+        max_batches,
+    })
+}
+
+fn run_serve(p: &Params) -> Result<ScenarioOutput> {
+    let mut cfg = SweepConfig::bert_large_default();
+    let o = parse_sweep_common(p)?;
+    if let Some(v) = o.requests {
+        cfg.requests = v;
+    }
+    if let Some(v) = o.seed {
+        cfg.seed = v;
+    }
+    if let Some(v) = o.slo {
+        cfg.slo = v;
+    }
+    if let Some(v) = o.max_wait {
+        cfg.max_wait = v;
+    }
+    if let Some(v) = o.load {
+        cfg.load = v;
+    }
+    if let Some(d) = o.device {
+        cfg.devices = vec![d];
+    }
+    if let Some(b) = o.max_batches {
+        cfg.max_batches = b;
+    }
+    match (p.get("seq-max"), p.get("seq-maxes")) {
+        ("", "") => {}
+        ("", _) => cfg.seq_maxes = p.get_u64_list("seq-maxes")?,
+        _ => cfg.seq_maxes = vec![p.get_u64("seq-max")?],
+    }
+    let (reports, cost) = serve::run_sweep_cached(&cfg, p.threads()?);
+
+    let mut text = format!(
+        "## SSServe — dynamic-batching serving study ({} req/scenario, \
+         load {:.0}% of saturation, SLO {:.0} ms, seed {})\n",
+        cfg.requests,
+        cfg.load * 100.0,
+        cfg.slo * 1e3,
+        cfg.seed
+    );
+    let cols: &[(&str, usize)] = &[
+        ("config", 22),
+        ("rate/s", 9),
+        ("thr/s", 9),
+        ("util", 7),
+        ("bsz", 7),
+        ("p50(ms)", 9),
+        ("p95(ms)", 9),
+        ("p99(ms)", 9),
+        ("SLO%", 7),
+        ("goodput/s", 10),
+    ];
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                format!("{:.1}", r.arrival_rate),
+                format!("{:.1}", r.throughput),
+                format!("{:.2}", r.utilization),
+                format!("{:.2}", r.mean_batch),
+                format!("{:.1}", r.p50 * 1e3),
+                format!("{:.1}", r.p95 * 1e3),
+                format!("{:.1}", r.p99 * 1e3),
+                format!("{:.1}%", r.slo_attainment * 100.0),
+                format!("{:.1}", r.goodput),
+            ]
+        })
+        .collect();
+    text.push_str(&report::sweep_table("", cols, &rows));
+    // dedup_rate, not hit_rate: the hit/miss split races under
+    // concurrency, and this report is otherwise byte-deterministic.
+    text.push_str(&format!(
+        "cost-cache: {} op shapes priced across {} lookups \
+         ({:.1}% deduplicated)\n",
+        cost.len(),
+        cost.lookups(),
+        cost.dedup_rate() * 100.0
+    ));
+    Ok(ScenarioOutput { text, artifact: serve::sweep_json(&cfg, &reports) })
+}
+
+fn run_compress(p: &Params) -> Result<ScenarioOutput> {
+    let mut cfg = CompressSweepConfig::bert_large_default();
+    let o = parse_sweep_common(p)?;
+    if let Some(v) = o.requests {
+        cfg.requests = v;
+    }
+    if let Some(v) = o.seed {
+        cfg.seed = v;
+    }
+    if let Some(v) = o.slo {
+        cfg.slo = v;
+    }
+    if let Some(v) = o.max_wait {
+        cfg.max_wait = v;
+    }
+    if let Some(v) = o.load {
+        cfg.load = v;
+    }
+    if let Some(d) = o.device {
+        cfg.devices = vec![d];
+    }
+    if let Some(b) = o.max_batches {
+        cfg.max_batches = b;
+    }
+    if !p.get("seq-max").is_empty() {
+        cfg.seq_max = p.get_u64("seq-max")?;
+    }
+    let reports = compress::run_sweep(&cfg, p.threads()?);
+
+    let mut text = format!(
+        "## SSCompress — quantization/pruning SLO what-if ({} req/scenario, \
+         load {:.0}% of saturation, SLO {:.0} ms, seed {})\n",
+        cfg.requests,
+        cfg.load * 100.0,
+        cfg.slo * 1e3,
+        cfg.seed
+    );
+    let cols: &[(&str, usize)] = &[
+        ("config", 26),
+        ("Wt(MB)", 8),
+        ("rate/s", 9),
+        ("thr/s", 9),
+        ("p50(ms)", 9),
+        ("p99(ms)", 9),
+        ("SLO%", 7),
+        ("goodput/s", 10),
+    ];
+    let scenarios = cfg.scenarios();
+    let rows: Vec<Vec<String>> = scenarios
+        .iter()
+        .zip(&reports)
+        .map(|(s, r)| {
+            vec![
+                r.label.clone(),
+                format!("{:.0}", s.variant.weight_bytes(&cfg.model) as f64 / 1e6),
+                format!("{:.1}", r.arrival_rate),
+                format!("{:.1}", r.throughput),
+                format!("{:.1}", r.p50 * 1e3),
+                format!("{:.1}", r.p99 * 1e3),
+                format!("{:.1}%", r.slo_attainment * 100.0),
+                format!("{:.1}", r.goodput),
+            ]
+        })
+        .collect();
+    text.push_str(&report::sweep_table("", cols, &rows));
+    text.push_str(&format!(
+        "\n## First variant meeting the {:.0} ms SLO (p99), per device\n",
+        cfg.slo * 1e3
+    ));
+    for w in compress::slo_winners(&cfg, &reports) {
+        match (&w.variant, w.max_batch, w.p99) {
+            (Some(v), Some(b), Some(p99)) => text.push_str(&format!(
+                "  {:<8} {v} at B{b} (p99 {:.1} ms)\n",
+                w.device,
+                p99 * 1e3
+            )),
+            _ => text.push_str(&format!("  {:<8} no variant qualifies\n", w.device)),
+        }
+    }
+    Ok(ScenarioOutput { text, artifact: compress::compress_json(&cfg, &reports) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pairs(kv: &[(&str, &str)]) -> Vec<(String, String)> {
+        kv.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn registry_names_every_design_md_experiment() {
+        let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
+        for required in [
+            "fig04", "fig05", "fig07", "fig08", "fig09", "fig10", "fig12", "fig13", "fig15",
+            "table3", "memory", "whatif", "serve", "compress",
+        ] {
+            assert!(names.contains(&required), "{required} missing from registry");
+        }
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate scenario names");
+    }
+
+    #[test]
+    fn unknown_scenario_error_lists_the_registry() {
+        let err = find("fig99").unwrap_err().to_string();
+        assert!(err.contains("unknown scenario 'fig99'"), "{err}");
+        assert!(err.contains("fig04") && err.contains("compress"), "{err}");
+    }
+
+    #[test]
+    fn unknown_param_is_rejected_in_strict_mode_only() {
+        let spec = find("fig09").unwrap();
+        let p = pairs(&[("bogus", "1")]);
+        let err = resolve_params(&spec, &p, true).unwrap_err().to_string();
+        assert!(err.contains("unknown parameter 'bogus'"), "{err}");
+        assert!(err.contains("batches"), "{err}");
+        // Legacy aliases keep ignoring unrelated options.
+        assert!(resolve_params(&spec, &p, false).is_ok());
+    }
+
+    #[test]
+    fn figure_scenarios_run_and_match_their_artifact_fns() {
+        let dev = DeviceSpec::mi100();
+        let out = run_by_name("fig04", &[], true).unwrap();
+        assert!(out.text.contains("Fig. 4"));
+        assert_eq!(out.artifact.to_string(), artifact::fig04_json(&dev).to_string());
+        let out = run_by_name("fig07", &pairs(&[("device", "v100")]), true).unwrap();
+        assert_eq!(
+            out.artifact.to_string(),
+            artifact::fig07_json(&DeviceSpec::v100()).to_string()
+        );
+    }
+
+    #[test]
+    fn fig09_batches_param_drives_the_grid() {
+        let out = run_by_name("fig09", &pairs(&[("batches", "4,32")]), true).unwrap();
+        let configs = out.artifact.get("configs").unwrap().as_arr().unwrap();
+        assert_eq!(configs.len(), 2);
+        assert_eq!(
+            configs[0].get("label").unwrap().as_str().unwrap(),
+            "Ph1-B4-FP32"
+        );
+    }
+
+    #[test]
+    fn dist_and_whatif_honor_the_device_param() {
+        // The ISSUE satellite: cmd_dist/cmd_whatif used to hardcode
+        // MI100 and ignore --device entirely.
+        let mi = run_by_name("fig12", &[], true).unwrap();
+        let v = run_by_name("fig12", &pairs(&[("device", "v100")]), true).unwrap();
+        assert_eq!(mi.artifact.get("device").unwrap().as_str().unwrap(), "MI100");
+        assert_eq!(v.artifact.get("device").unwrap().as_str().unwrap(), "V100");
+        assert_ne!(mi.artifact.to_string(), v.artifact.to_string());
+        let w = run_by_name("whatif", &pairs(&[("device", "a100")]), true).unwrap();
+        assert_eq!(w.artifact.get("device").unwrap().as_str().unwrap(), "A100");
+        let bad = run_by_name("whatif", &pairs(&[("device", "mi50")]), true);
+        assert!(bad.unwrap_err().to_string().contains("unknown device preset"));
+    }
+
+    #[test]
+    fn sweep_scenarios_have_default_artifacts_and_the_figures_do_not() {
+        for s in registry() {
+            match s.name {
+                "serve" => assert_eq!(s.default_out, Some("serve_sweep.json")),
+                "compress" => assert_eq!(s.default_out, Some("compress_sweep.json")),
+                _ => assert_eq!(s.default_out, None, "{}", s.name),
+            }
+        }
+    }
+
+    #[test]
+    fn serve_scenario_matches_the_direct_sweep_artifact() {
+        // Reduced grid so the test stays fast; the full-default
+        // byte-identity is golden-gated and CI-diffed.
+        let p = pairs(&[
+            ("requests", "300"),
+            ("max-batches", "1,8"),
+            ("threads", "2"),
+        ]);
+        let out = run_by_name("serve", &p, true).unwrap();
+        let mut cfg = SweepConfig::bert_large_default();
+        cfg.requests = 300;
+        cfg.max_batches = vec![1, 8];
+        let direct = serve::sweep_json(&cfg, &serve::run_sweep(&cfg, 2));
+        assert_eq!(out.artifact.to_string(), direct.to_string());
+        assert!(out.text.contains("cost-cache"));
+        assert!(out.text.contains("p99(ms)"));
+    }
+
+    #[test]
+    fn compress_scenario_matches_the_direct_sweep_artifact() {
+        let p = pairs(&[
+            ("requests", "200"),
+            ("device", "mi100"),
+            ("max-batch", "32"),
+            ("threads", "2"),
+        ]);
+        let out = run_by_name("compress", &p, true).unwrap();
+        let mut cfg = CompressSweepConfig::bert_large_default();
+        cfg.requests = 200;
+        cfg.devices = vec![DeviceSpec::mi100()];
+        cfg.max_batches = vec![32];
+        let direct = compress::compress_json(&cfg, &compress::run_sweep(&cfg, 2));
+        assert_eq!(out.artifact.to_string(), direct.to_string());
+        assert!(out.text.contains("First variant meeting"));
+    }
+
+    #[test]
+    fn load_must_stay_positive() {
+        let err = run_by_name("serve", &pairs(&[("load", "-0.5")]), true).unwrap_err();
+        assert!(err.to_string().contains("--load must be"), "{err}");
+    }
+}

@@ -12,12 +12,13 @@
 //! MLM/NSP pre-training heads.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::config::{ModelConfig, Phase, Precision, RunConfig};
 use crate::model::op::{LayerClass, Pass};
 use crate::model::{output, IterationGraph};
 use crate::perf::device::DeviceSpec;
-use crate::perf::roofline;
+use crate::perf::CostCache;
 use crate::util::buckets;
 
 /// What the dynamic-batching simulator needs from a latency model: a
@@ -117,6 +118,10 @@ pub struct LatencyModel {
     /// Sequence-length padding granularity (compiled-shape bucket).
     pub seq_bucket: u64,
     cache: HashMap<(u64, u64), f64>,
+    /// Per-op roofline memo, sharable across a whole sweep grid (every
+    /// scenario at the same (device, precision) prices identical padded
+    /// shapes; a shared cache collapses them to one costing each).
+    cost: Arc<CostCache>,
 }
 
 impl LatencyModel {
@@ -130,7 +135,15 @@ impl LatencyModel {
             head: ServeHead::Squad,
             seq_bucket: 32,
             cache: HashMap::new(),
+            cost: Arc::new(CostCache::new()),
         }
+    }
+
+    /// Share a grid-wide [`CostCache`] (pure memoization: batch
+    /// latencies are bit-identical with or without sharing).
+    pub fn with_cost_cache(mut self, cost: Arc<CostCache>) -> LatencyModel {
+        self.cost = cost;
+        self
     }
 
     /// Override the padding bucket (1 = exact per-length shapes).
@@ -161,7 +174,9 @@ impl LatencyModel {
         }
         let run = inference_run(self.model, key.0, key.1, self.precision);
         let g = forward_graph(&run, self.head);
-        let t = roofline::iteration_seconds(&g, &self.device, self.precision);
+        // CostCache::iteration_seconds mirrors roofline::iteration_seconds
+        // op-for-op, so the value is bit-identical to the uncached path.
+        let t = self.cost.iteration_seconds(&g, &self.device, self.precision);
         self.cache.insert(key, t);
         t
     }
@@ -261,6 +276,26 @@ mod tests {
             DeviceSpec::mi100(),
         );
         assert!(mpm.batch_seconds(8, 128) < f32m.batch_seconds(8, 128));
+    }
+
+    #[test]
+    fn shared_cost_cache_changes_no_latency() {
+        let mut solo = mi100_fp32();
+        let shared = Arc::new(CostCache::new());
+        let mut a = LatencyModel::new(ModelConfig::bert_large(), Precision::Fp32,
+                                      DeviceSpec::mi100())
+            .with_cost_cache(Arc::clone(&shared));
+        let mut b = LatencyModel::new(ModelConfig::bert_large(), Precision::Fp32,
+                                      DeviceSpec::mi100())
+            .with_cost_cache(Arc::clone(&shared));
+        for (batch, seq) in [(1u64, 32u64), (8, 128), (32, 384)] {
+            let t = solo.batch_seconds(batch, seq);
+            assert_eq!(t, a.batch_seconds(batch, seq));
+            // The second model re-prices the same shapes entirely from
+            // the shared memo — still bit-identical.
+            assert_eq!(t, b.batch_seconds(batch, seq));
+        }
+        assert!(shared.hits() > 0, "second model never hit the shared cache");
     }
 
     #[test]

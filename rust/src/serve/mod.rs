@@ -20,8 +20,9 @@
 //!   SLO. The time-averaged occupancy it reports satisfies Little's law
 //!   (`rust/tests/serve_sim.rs` asserts `L = λ·W`).
 //! * [`sweep`] — the {batch × seq-len × precision × device} grid run in
-//!   parallel over `std::thread::scope`, each point at an offered load
-//!   proportional to its own modeled saturation, emitting a
+//!   parallel over the shared executor (`scenario::exec::run_grid`)
+//!   with one grid-wide `perf::CostCache`, each point at an offered
+//!   load proportional to its own modeled saturation, emitting a
 //!   deterministic JSON artifact via `util::json`.
 //!
 //! Entry points: `bertprof serve` (CLI), the
@@ -36,4 +37,6 @@ pub mod sweep;
 
 pub use graph::{forward_graph, inference_run, BatchCost, LatencyModel, ServeHead};
 pub use sim::{BatchPolicy, Completion, Request, SimOutcome, SimReport, Simulator, Workload};
-pub use sweep::{run_scenario, run_sweep, sweep_json, write_sweep, Scenario, SweepConfig};
+pub use sweep::{
+    run_scenario, run_sweep, run_sweep_cached, sweep_json, write_sweep, Scenario, SweepConfig,
+};

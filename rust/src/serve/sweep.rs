@@ -7,17 +7,22 @@
 //! latency model, with offered load set to a fixed fraction of that
 //! scenario's modeled saturation rate so configurations are compared at
 //! equal pressure. Scenarios are independent, so the driver fans them
-//! out across `std::thread::scope` workers (no external thread pool);
-//! results come back in grid order regardless of scheduling, and the
-//! JSON artifact is byte-identical for a fixed seed.
+//! out over the shared grid executor (`scenario::exec::run_grid` — the
+//! same work-stealing pool every experiment grid uses), with one
+//! grid-wide `perf::CostCache` deduplicating the roofline costing of
+//! identical padded batch shapes across scenarios; results come back in
+//! grid order regardless of scheduling, and the JSON artifact is
+//! byte-identical for a fixed seed and any worker count.
 
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::config::{ModelConfig, Precision};
 use crate::perf::device::DeviceSpec;
+use crate::perf::CostCache;
+use crate::scenario::exec;
 use crate::serve::graph::{BatchCost, LatencyModel};
 use crate::serve::sim::{BatchPolicy, SimReport, Simulator, Workload};
 use crate::util::Json;
@@ -124,7 +129,14 @@ pub struct Scenario {
 
 /// Simulate one scenario (deterministic given `cfg.seed`).
 pub fn run_scenario(cfg: &SweepConfig, scenario: &Scenario) -> SimReport {
-    let mut lm = LatencyModel::new(cfg.model, scenario.precision, scenario.device.clone());
+    run_scenario_with(cfg, scenario, &Arc::new(CostCache::new()))
+}
+
+/// `run_scenario` against a shared grid-wide roofline memo. Pure
+/// memoization: the report is bit-identical to `run_scenario`'s.
+fn run_scenario_with(cfg: &SweepConfig, scenario: &Scenario, cost: &Arc<CostCache>) -> SimReport {
+    let mut lm = LatencyModel::new(cfg.model, scenario.precision, scenario.device.clone())
+        .with_cost_cache(Arc::clone(cost));
     let trace = Workload::poisson(scenario.rate, cfg.requests, cfg.seed)
         .with_seq_range((scenario.seq_max / 8).max(1), scenario.seq_max)
         .generate();
@@ -133,35 +145,23 @@ pub fn run_scenario(cfg: &SweepConfig, scenario: &Scenario) -> SimReport {
         .report
 }
 
-/// Run the whole grid across up to `threads` workers. Results are
-/// ordered by grid position (not completion order), so the output is
-/// scheduling-independent.
+/// Run the whole grid across up to `threads` workers on the shared
+/// executor. Results are ordered by grid position (not completion
+/// order), so the output is scheduling-independent; one [`CostCache`]
+/// spans the grid, so identical batch shapes are roofline-priced once
+/// per sweep instead of once per scenario.
 pub fn run_sweep(cfg: &SweepConfig, threads: usize) -> Vec<SimReport> {
+    run_sweep_cached(cfg, threads).0
+}
+
+/// `run_sweep`, also returning the grid's cost cache so callers (the
+/// scenario engine, the `fig_scenario_grid` bench) can report the hit
+/// rate.
+pub fn run_sweep_cached(cfg: &SweepConfig, threads: usize) -> (Vec<SimReport>, Arc<CostCache>) {
     let scenarios = cfg.scenarios();
-    let n = scenarios.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = threads.clamp(1, n);
-    let slots: Vec<Mutex<Option<SimReport>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for worker in 0..workers {
-            let scenarios = &scenarios;
-            let slots = &slots;
-            s.spawn(move || {
-                let mut i = worker;
-                while i < n {
-                    let report = run_scenario(cfg, &scenarios[i]);
-                    *slots[i].lock().expect("no panics hold this lock") = Some(report);
-                    i += workers;
-                }
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|m| m.into_inner().expect("worker finished").expect("slot filled"))
-        .collect()
+    let cost = Arc::new(CostCache::new());
+    let reports = exec::run_grid(&scenarios, threads, |s| run_scenario_with(cfg, s, &cost));
+    (reports, cost)
 }
 
 /// One report as a JSON object (latencies in milliseconds, rates in
@@ -275,6 +275,28 @@ mod tests {
         other.seed = 43;
         let c = sweep_json(&other, &run_sweep(&other, 4)).to_string();
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn grid_cost_cache_is_pure_memoization() {
+        // The ISSUE acceptance pair: the cache changes no modeled time.
+        let cfg = small_cfg();
+        let (reports, cost) = run_sweep_cached(&cfg, 4);
+        let baseline = run_sweep(&cfg, 1);
+        for (a, b) in reports.iter().zip(&baseline) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.p99, b.p99);
+            assert_eq!(a.throughput, b.throughput);
+        }
+        // Re-running a scenario against the warm cache is pure hits —
+        // every shape it prices is already in the grid's memo.
+        let (hits, misses) = (cost.hits(), cost.misses());
+        assert!(misses > 0);
+        let scenarios = cfg.scenarios();
+        let again = run_scenario_with(&cfg, &scenarios[0], &cost);
+        assert_eq!(again.p99, reports[0].p99);
+        assert_eq!(cost.misses(), misses, "warm re-run must not re-price");
+        assert!(cost.hits() > hits);
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Test coverage for the CLI argument parser (`bertprof::cli`) — the
+//! flag-vs-option disambiguation rules, negative numeric values,
+//! repeated `--set k=v` pairs for the scenario runner, and the
+//! unknown-scenario / unknown-parameter error surfaces.
+
+use bertprof::cli::{parse_device, parse_from, Args};
+use bertprof::scenario;
+
+fn parse(tokens: &[&str]) -> Args {
+    parse_from(tokens.iter().map(|s| s.to_string())).expect("parse")
+}
+
+#[test]
+fn empty_invocation_defaults_to_help() {
+    let a = parse(&[]);
+    assert_eq!(a.cmd, "help");
+    assert!(a.flags.is_empty() && a.opts.is_empty() && a.sets.is_empty());
+}
+
+#[test]
+fn flags_vs_options_disambiguate_on_the_following_token() {
+    // `--detail` followed by another `--flag` is boolean; `--requests`
+    // followed by a bare token consumes it as the value.
+    let a = parse(&["breakdown", "--detail", "--measured"]);
+    assert!(a.flag("detail") && a.flag("measured"));
+    assert!(a.opts.is_empty());
+
+    let a = parse(&["serve", "--requests", "500", "--device", "v100"]);
+    assert_eq!(a.opts.get("requests").map(String::as_str), Some("500"));
+    assert_eq!(a.opts.get("device").map(String::as_str), Some("v100"));
+    assert!(a.flags.is_empty());
+
+    // An option name is also visible through `flag()` (presence check).
+    assert!(a.flag("requests"));
+    assert!(!a.flag("load"));
+}
+
+#[test]
+fn negative_numeric_values_parse_as_values_not_flags() {
+    // "-0.5" does not start with "--", so it is a value for --load.
+    let a = parse(&["serve", "--load", "-0.5", "--slo-ms", "-100"]);
+    assert_eq!(a.opts.get("load").map(String::as_str), Some("-0.5"));
+    assert_eq!(a.opt_f64("load", 0.65), -0.5);
+    assert_eq!(a.opt_f64("slo-ms", 100.0), -100.0);
+    // And the scenario layer rejects the nonsense value downstream.
+    let err = scenario::run_by_name("serve", &a.param_pairs(), false)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--load must be"), "{err}");
+}
+
+#[test]
+fn opt_parsers_fall_back_to_defaults() {
+    let a = parse(&["serve", "--requests", "not-a-number"]);
+    assert_eq!(a.opt_u64("requests", 123), 123);
+    assert_eq!(a.opt_u64("absent", 7), 7);
+    assert_eq!(a.opt_f64("absent", 1.5), 1.5);
+    assert_eq!(a.artifacts_dir(), std::path::PathBuf::from("artifacts"));
+    let a = parse(&["train", "--artifacts", "elsewhere"]);
+    assert_eq!(a.artifacts_dir(), std::path::PathBuf::from("elsewhere"));
+}
+
+#[test]
+fn positional_scenario_name_is_recorded_before_flags() {
+    let a = parse(&["run", "fig09", "--set", "batches=4,8"]);
+    assert_eq!(a.cmd, "run");
+    assert_eq!(a.positional(), Some("fig09"));
+    assert_eq!(a.sets, vec![("batches".to_string(), "4,8".to_string())]);
+}
+
+#[test]
+fn repeated_set_pairs_accumulate_in_order() {
+    let a = parse(&[
+        "run", "serve", "--set", "requests=1000", "--set", "seed=7", "--set", "requests=2000",
+    ]);
+    assert_eq!(a.sets.len(), 3);
+    assert_eq!(a.sets[0], ("requests".to_string(), "1000".to_string()));
+    assert_eq!(a.sets[2], ("requests".to_string(), "2000".to_string()));
+    // param_pairs keeps the order, so the later --set wins at resolve.
+    let spec = scenario::find("serve").unwrap();
+    let params = scenario::resolve_params(&spec, &a.param_pairs(), true).unwrap();
+    assert_eq!(params.get_u64("requests").unwrap(), 2000);
+    assert_eq!(params.get_u64("seed").unwrap(), 7);
+}
+
+#[test]
+fn set_values_may_contain_equals_signs() {
+    let a = parse(&["run", "x", "--set", "expr=a=b"]);
+    assert_eq!(a.sets, vec![("expr".to_string(), "a=b".to_string())]);
+}
+
+#[test]
+fn malformed_set_pairs_error() {
+    for tokens in [
+        vec!["run", "serve", "--set", "requests"],
+        vec!["run", "serve", "--set", "=5"],
+        vec!["run", "serve", "--set"],
+        vec!["run", "serve", "--set", "--requests"],
+    ] {
+        let r = parse_from(tokens.iter().map(|s| s.to_string()));
+        assert!(r.is_err(), "{tokens:?} should fail");
+        assert!(r.unwrap_err().to_string().contains("--set"), "{tokens:?}");
+    }
+}
+
+#[test]
+fn unknown_scenario_names_error_with_the_registry() {
+    let err = scenario::find("serve2").unwrap_err().to_string();
+    assert!(err.contains("unknown scenario 'serve2'"), "{err}");
+    for name in ["fig04", "fig12", "serve", "compress", "whatif"] {
+        assert!(err.contains(name), "{err} missing {name}");
+    }
+}
+
+#[test]
+fn strict_runs_reject_undeclared_set_keys() {
+    let a = parse(&["run", "fig12", "--set", "devices=v100"]);
+    let spec = scenario::find("fig12").unwrap();
+    let err = scenario::resolve_params(&spec, &a.param_pairs(), true)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown parameter 'devices'"), "{err}");
+    assert!(err.contains("device"), "{err}"); // suggests the valid key
+}
+
+#[test]
+fn device_presets_parse_and_reject() {
+    for (name, expect) in [
+        ("mi100", "MI100"),
+        ("v100", "V100"),
+        ("a100", "A100"),
+        ("tpu", "TPUv3-core"),
+        ("cpu", "CPU-host"),
+    ] {
+        assert_eq!(parse_device(name).unwrap().name, expect);
+    }
+    let err = parse_device("h100").unwrap_err().to_string();
+    assert!(err.contains("unknown device preset 'h100'"), "{err}");
+}

@@ -1,7 +1,7 @@
 //! Golden-artifact regression harness.
 //!
 //! Each test computes one of the crate's canonical JSON artifacts —
-//! the Fig. 4 / Fig. 9 / Fig. 12 figure artifacts
+//! the Fig. 4 / Fig. 7 / Fig. 9 / Fig. 12 figure artifacts
 //! (`profiler::artifact`), the serve sweep, and the compress sweep —
 //! and compares it field-by-field against the checked-in snapshot under
 //! `rust/tests/golden/`. Numbers compare with a relative tolerance
@@ -149,6 +149,20 @@ fn compress_golden_cfg() -> CompressSweepConfig {
 #[test]
 fn golden_fig04_runtime_breakdown() {
     check("fig04", artifact::fig04_json(&DeviceSpec::mi100()));
+}
+
+#[test]
+fn golden_fig07_gemm_intensity() {
+    // The newly artifact-emitting scenario (ISSUE 4 satellite): the
+    // registry's fig07 path is golden-gated end to end.
+    check("fig07", artifact::fig07_json(&DeviceSpec::mi100()));
+}
+
+#[test]
+fn golden_fig07_matches_the_scenario_registry_path() {
+    // `bertprof run fig07` emits exactly the golden-gated artifact.
+    let out = bertprof::scenario::run_by_name("fig07", &[], true).expect("fig07 runs");
+    check("fig07", out.artifact);
 }
 
 #[test]
