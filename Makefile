@@ -1,7 +1,7 @@
-# bertprof build drivers. `make artifacts` is the only step that needs
-# python (JAX); everything else is cargo.
+# bertprof build drivers. The HLO half of `make artifacts` is the only
+# step that needs python (JAX); everything else is cargo.
 
-.PHONY: build test bench doc artifacts clean-artifacts
+.PHONY: build test bench doc artifacts bench-costmodel clean-artifacts
 
 build:
 	cargo build --release
@@ -15,9 +15,21 @@ bench:
 doc:
 	cargo doc --no-deps
 
-# Lower every HLO artifact + manifest.json (DESIGN.md SS2). Run from
-# python/ so aot.py's relative imports and default --out resolve.
-artifacts:
+# The cost-model bench data point (DESIGN.md SSCost): trait-dispatch +
+# cached-vs-uncached pricing overhead on the serve grid, written to
+# BENCH_costmodel.json. Skipped (with a note) on python-only hosts
+# where no cargo exists, so `make artifacts` stays runnable there.
+bench-costmodel:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo bench --bench fig_costmodel; \
+	else \
+		echo "bench-costmodel: no cargo on PATH, skipping (python-only host)"; \
+	fi
+
+# Lower every HLO artifact + manifest.json (DESIGN.md SS2; run from
+# python/ so aot.py's relative imports and default --out resolve) and
+# record the cost-model bench trajectory point.
+artifacts: bench-costmodel
 	cd python && python3 -m compile.aot --out ../artifacts
 
 clean-artifacts:

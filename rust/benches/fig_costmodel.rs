@@ -1,0 +1,162 @@
+//! The cost-model bench: what does the one-pricer API cost, and what
+//! does its caching decorator buy, on the serving grid's graphs?
+//!
+//! Three questions, answered on the {batch x padded-seq x precision}
+//! forward graphs the serve sweep prices (DESIGN.md SSCost):
+//!
+//! 1. **Trait dispatch** — `RooflinePricer` called statically vs through
+//!    `&dyn CostModel` (the price of the pluggable seam; expected to be
+//!    noise next to the roofline arithmetic).
+//! 2. **Identity decorators** — an empty `CalibratedPricer` layered on
+//!    the analytic backend (the cost of composing a no-op policy).
+//! 3. **Caching** — `Cached` cold (fresh table) and warm (grid-lifetime
+//!    table) vs bare pricing.
+//!
+//! Results land in `BENCH_costmodel.json` (the `fig_costmodel` bench
+//! trajectory's first point, wired into `make artifacts`); the bench
+//! asserts every variant prices the grid bit-identically first.
+
+use std::sync::Arc;
+
+use bertprof::config::{ModelConfig, Precision};
+use bertprof::model::IterationGraph;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::perf::{Cached, CalibratedPricer, CostCache, CostModel, RooflinePricer};
+use bertprof::serve::{forward_graph, inference_run, ServeHead};
+use bertprof::util::bench::{black_box, Bench};
+use bertprof::util::Json;
+
+/// The serve grid's padded forward shapes, as (graph, precision) cells.
+fn grid() -> Vec<(IterationGraph, Precision)> {
+    let mut cells = Vec::new();
+    for prec in [Precision::Fp32, Precision::Mixed] {
+        for batch in [1u64, 8, 32] {
+            for seq in [32u64, 64, 128] {
+                let run = inference_run(ModelConfig::bert_large(), batch, seq, prec);
+                cells.push((forward_graph(&run, ServeHead::Squad), prec));
+            }
+        }
+    }
+    cells
+}
+
+fn main() {
+    let cells = grid();
+    let dev = DeviceSpec::mi100();
+    let ops: usize = cells.iter().map(|(g, _)| g.ops.len()).sum();
+    println!(
+        "## fig_costmodel — {} serve-grid graphs ({} ops total) on {}",
+        cells.len(),
+        ops,
+        dev.name
+    );
+
+    // Correctness first: every pricing path is bit-identical.
+    let total_static: f64 = cells
+        .iter()
+        .map(|(g, prec)| RooflinePricer::new(dev.clone(), *prec).iteration_seconds(g))
+        .sum();
+    for (g, prec) in &cells {
+        let base = RooflinePricer::new(dev.clone(), *prec);
+        let want = base.iteration_seconds(g);
+        let dynp: &dyn CostModel = &base;
+        assert_eq!(want, dynp.iteration_seconds(g));
+        assert_eq!(want, CalibratedPricer::identity(base.clone()).iteration_seconds(g));
+        assert_eq!(want, Cached::new(base.clone()).iteration_seconds(g));
+    }
+
+    let pricers: Vec<RooflinePricer> = cells
+        .iter()
+        .map(|(_, prec)| RooflinePricer::new(dev.clone(), *prec))
+        .collect();
+
+    let mut b = Bench::new("fig_costmodel");
+    let static_t = b
+        .run("static dispatch (RooflinePricer)", || {
+            let mut acc = 0.0;
+            for ((g, _), p) in cells.iter().zip(&pricers) {
+                acc += p.iteration_seconds(g);
+            }
+            black_box(acc);
+        })
+        .median;
+    let dyn_t = b
+        .run("dyn dispatch (&dyn CostModel)", || {
+            let mut acc = 0.0;
+            for ((g, _), p) in cells.iter().zip(&pricers) {
+                let m: &dyn CostModel = p;
+                acc += m.iteration_seconds(g);
+            }
+            black_box(acc);
+        })
+        .median;
+    let calibrated: Vec<CalibratedPricer<RooflinePricer>> =
+        pricers.iter().cloned().map(CalibratedPricer::identity).collect();
+    let ident_t = b
+        .run("identity CalibratedPricer decorator", || {
+            let mut acc = 0.0;
+            for ((g, _), p) in cells.iter().zip(&calibrated) {
+                acc += p.iteration_seconds(g);
+            }
+            black_box(acc);
+        })
+        .median;
+    let cold_t = b
+        .run("Cached cold (fresh table per pass)", || {
+            let table = Arc::new(CostCache::new());
+            let mut acc = 0.0;
+            for ((g, _), p) in cells.iter().zip(&pricers) {
+                acc += Cached::with_table(p.clone(), Arc::clone(&table)).iteration_seconds(g);
+            }
+            black_box(acc);
+        })
+        .median;
+    let warm_table = Arc::new(CostCache::new());
+    let warm_pricers: Vec<Cached<RooflinePricer>> = pricers
+        .iter()
+        .map(|p| Cached::with_table(p.clone(), Arc::clone(&warm_table)))
+        .collect();
+    let warm_t = b
+        .run("Cached warm (grid-lifetime table)", || {
+            let mut acc = 0.0;
+            for ((g, _), p) in cells.iter().zip(&warm_pricers) {
+                acc += p.iteration_seconds(g);
+            }
+            black_box(acc);
+        })
+        .median;
+    b.finish();
+
+    let ratio = |num: std::time::Duration, den: std::time::Duration| {
+        num.as_secs_f64() / den.as_secs_f64()
+    };
+    println!(
+        "dyn/static {:.3}x, identity-decorator/static {:.3}x, cold-cache/static {:.3}x, \
+         warm-cache speedup {:.2}x (dedup {:.1}%)",
+        ratio(dyn_t, static_t),
+        ratio(ident_t, static_t),
+        ratio(cold_t, static_t),
+        ratio(static_t, warm_t),
+        warm_table.dedup_rate() * 100.0
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fig_costmodel")),
+        ("grid_graphs", Json::num(cells.len() as f64)),
+        ("grid_ops", Json::num(ops as f64)),
+        ("modeled_grid_seconds", Json::num(total_static)),
+        ("static_median_us", Json::num(static_t.as_secs_f64() * 1e6)),
+        ("dyn_median_us", Json::num(dyn_t.as_secs_f64() * 1e6)),
+        ("identity_calibrated_median_us", Json::num(ident_t.as_secs_f64() * 1e6)),
+        ("cached_cold_median_us", Json::num(cold_t.as_secs_f64() * 1e6)),
+        ("cached_warm_median_us", Json::num(warm_t.as_secs_f64() * 1e6)),
+        ("dyn_overhead", Json::num(ratio(dyn_t, static_t))),
+        ("identity_decorator_overhead", Json::num(ratio(ident_t, static_t))),
+        ("cached_cold_overhead", Json::num(ratio(cold_t, static_t))),
+        ("cached_warm_speedup", Json::num(ratio(static_t, warm_t))),
+        ("warm_dedup_rate", Json::num(warm_table.dedup_rate())),
+    ]);
+    let path = "BENCH_costmodel.json";
+    std::fs::write(path, out.to_string()).expect("write bench artifact");
+    println!("wrote {path}");
+}

@@ -1,19 +1,22 @@
 //! The scenario-grid bench: how much does the shared `perf::CostCache`
-//! buy on a realistic experiment grid?
+//! table buy on a realistic experiment grid?
 //!
 //! The grid is {batch x precision x device} of full BERT-Large
 //! iteration timelines — the shape of the registry's fig04/fig09-style
 //! scenarios. The uncached case re-prices every op per cell; the cached
-//! case shares one `CostCache` across the grid (exactly what the
-//! scenario engine and `serve::run_sweep` do), so the batch-independent
-//! LAMB ops and every repeated shape are priced once. The measured
-//! speedup and hit rate are recorded to `BENCH_scenario_grid.json` —
-//! the first `BENCH_*.json` data point — and the bench asserts the
-//! cached grid totals are bit-identical to the uncached ones.
+//! case decorates each cell's `RooflinePricer` with `Cached` over one
+//! shared table (exactly what the scenario engine and
+//! `serve::run_sweep` do), so the batch-independent LAMB ops and every
+//! repeated shape are priced once. The measured speedup and hit rate
+//! are recorded to `BENCH_scenario_grid.json` — the first
+//! `BENCH_*.json` data point — and the bench asserts the cached grid
+//! totals are bit-identical to the uncached ones.
+
+use std::sync::Arc;
 
 use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
 use bertprof::perf::device::DeviceSpec;
-use bertprof::perf::CostCache;
+use bertprof::perf::{Cached, CostCache, RooflinePricer};
 use bertprof::profiler::Timeline;
 use bertprof::scenario::exec;
 use bertprof::util::bench::{black_box, Bench};
@@ -36,6 +39,17 @@ fn grid() -> Vec<(RunConfig, DeviceSpec)> {
     cells
 }
 
+fn cell_pricer(
+    run: &RunConfig,
+    dev: &DeviceSpec,
+    table: &Arc<CostCache>,
+) -> Cached<RooflinePricer> {
+    Cached::with_table(
+        RooflinePricer::new(dev.clone(), run.precision),
+        Arc::clone(table),
+    )
+}
+
 fn main() {
     let cells = grid();
     println!(
@@ -44,10 +58,10 @@ fn main() {
     );
 
     // Correctness first: the cache changes no modeled time.
-    let cost = CostCache::new();
+    let cost = Arc::new(CostCache::new());
     for (run, dev) in &cells {
         let plain = Timeline::modeled(run, dev).total_seconds();
-        let cached = Timeline::modeled_cached(run, dev, &cost).total_seconds();
+        let cached = Timeline::modeled_with(run, &cell_pricer(run, dev, &cost)).total_seconds();
         assert_eq!(plain, cached, "cache must be pure memoization");
     }
     let warm_rate = cost.hit_rate();
@@ -66,24 +80,24 @@ fn main() {
         })
         .median;
     let cached = b
-        .run("grid cached (one CostCache across cells)", || {
-            let cost = CostCache::new();
+        .run("grid cached (one CostCache table across cells)", || {
+            let cost = Arc::new(CostCache::new());
             for (run, dev) in &cells {
-                black_box(Timeline::modeled_cached(run, dev, &cost));
+                black_box(Timeline::modeled_with(run, &cell_pricer(run, dev, &cost)));
             }
         })
         .median;
     let warm = b
-        .run("grid warm-cached (grid-lifetime CostCache)", || {
+        .run("grid warm-cached (grid-lifetime CostCache table)", || {
             for (run, dev) in &cells {
-                black_box(Timeline::modeled_cached(run, dev, &cost));
+                black_box(Timeline::modeled_with(run, &cell_pricer(run, dev, &cost)));
             }
         })
         .median;
     b.run("grid via exec::run_grid (parallel, shared cache)", || {
-        let cost = CostCache::new();
+        let cost = Arc::new(CostCache::new());
         black_box(exec::run_grid(&cells, 8, |(run, dev)| {
-            Timeline::modeled_cached(run, dev, &cost).total_seconds()
+            Timeline::modeled_with(run, &cell_pricer(run, dev, &cost)).total_seconds()
         }));
     });
     b.finish();

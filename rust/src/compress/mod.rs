@@ -33,7 +33,7 @@ pub mod quant;
 pub mod sweep;
 
 pub use prune::PruneSpec;
-pub use quant::{CompressPrecision, QuantConfig, QuantMode};
+pub use quant::{CompressPrecision, QuantConfig, QuantMode, QuantPricer};
 pub use sweep::{
     compress_json, default_variants, run_scenario, run_sweep, slo_winners, write_compress,
     CompressScenario, CompressSweepConfig, CompressVariant, CompressedLatencyModel, SloWinner,

@@ -20,14 +20,17 @@
 //! Pricing composes the same `perf::roofline` / `perf::gemm_model`
 //! machinery as every other study; graphs must be built at
 //! [`QuantConfig::exec_precision`] so the op-level `elem_bytes` agree
-//! with the mode.
+//! with the mode. The dequant tax is a [`CostModel`] decorator
+//! ([`QuantPricer`], DESIGN.md SSCost) — `op_seconds` /
+//! [`iteration_seconds`] remain as thin `(dev, quant)` delegates.
 
 use crate::config::Precision;
 use crate::model::gemm::{GemmDims, GemmKind};
 use crate::model::op::{Op, OpKind, Pass};
 use crate::model::IterationGraph;
 use crate::perf::device::DeviceSpec;
-use crate::perf::{gemm_model, roofline};
+use crate::perf::roofline::OpTime;
+use crate::perf::{gemm_model, roofline, CostModel, RooflinePricer};
 
 /// Default fractional overhead on memory-bound non-GEMM ops under
 /// weight+activation quantization (per-tensor scale reads plus the
@@ -99,45 +102,123 @@ fn weight_elems(g: &GemmDims) -> u64 {
     }
 }
 
-/// Seconds for one invocation of `op` (from a graph built at
-/// `q.exec_precision()`) on `dev` under quantization `q`.
-pub fn op_seconds(op: &Op, dev: &DeviceSpec, q: &QuantConfig) -> f64 {
-    let prec = q.exec_precision();
-    match &op.kind {
-        OpKind::Gemm(g) => {
-            if q.mode == QuantMode::WeightOnly && op.pass == Pass::Forward {
-                // The weight operand streams at 1 byte instead of the
-                // FP16 pipeline's 2; activations and output unchanged.
-                let act_bytes = prec.act_bytes();
-                let bytes = g.bytes(act_bytes) - weight_elems(g) * (act_bytes - 1);
-                gemm_model::gemm_time_with_bytes(g, dev, prec, bytes)
-            } else {
-                roofline::estimate_op(op, dev, prec).seconds
+/// Quantized-costing decorator on the [`CostModel`] trait: applies the
+/// weight-only GEMM byte discount and the W8A8 dequant tax over any
+/// inner pricer whose precision is [`QuantConfig::exec_precision`].
+///
+/// Arms the quantization does not touch (non-forward GEMMs, transfers,
+/// EW ops under weight-only) delegate to `inner` unchanged, so the
+/// decorator composes with caching and calibration; the two overridden
+/// arms re-derive their roofline terms from `inner.device()` directly
+/// (they change the *byte accounting*, which no outer adjustment of
+/// whole-op seconds could express).
+#[derive(Debug, Clone)]
+pub struct QuantPricer<M: CostModel> {
+    inner: M,
+    quant: QuantConfig,
+}
+
+impl<M: CostModel> QuantPricer<M> {
+    /// Decorate `inner` with quantized costing. Panics unless
+    /// `inner.precision() == quant.exec_precision()` — the graphs this
+    /// pricer prices must be built at the mode's execution precision so
+    /// per-op `elem_bytes` agree with the byte model.
+    pub fn new(inner: M, quant: QuantConfig) -> QuantPricer<M> {
+        assert_eq!(
+            inner.precision(),
+            quant.exec_precision(),
+            "QuantPricer inner precision must be the quant mode's exec precision"
+        );
+        QuantPricer { inner, quant }
+    }
+
+    /// The quantization configuration.
+    pub fn quant(&self) -> &QuantConfig {
+        &self.quant
+    }
+
+    /// The decorated pricer.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+}
+
+impl<M: CostModel> CostModel for QuantPricer<M> {
+    fn device(&self) -> &DeviceSpec {
+        self.inner.device()
+    }
+
+    fn precision(&self) -> Precision {
+        self.inner.precision()
+    }
+
+    fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        0x7175616eu64.hash(&mut h); // "quan"
+        self.inner.fingerprint().hash(&mut h);
+        (self.quant.mode == QuantMode::WeightActivation).hash(&mut h);
+        self.quant.dequant_overhead.to_bits().hash(&mut h);
+        h.finish()
+    }
+
+    fn price_op(&self, op: &Op) -> OpTime {
+        let prec = self.quant.exec_precision();
+        let dev = self.inner.device();
+        match &op.kind {
+            OpKind::Gemm(g) => {
+                if self.quant.mode == QuantMode::WeightOnly && op.pass == Pass::Forward {
+                    // The weight operand streams at 1 byte instead of the
+                    // FP16 pipeline's 2; activations and output unchanged.
+                    let act_bytes = prec.act_bytes();
+                    let bytes = g.bytes(act_bytes) - weight_elems(g) * (act_bytes - 1);
+                    let (compute, memory) = gemm_model::gemm_components(g, dev, prec, bytes);
+                    OpTime {
+                        name: op.name.clone(),
+                        seconds: compute.max(memory) + dev.launch_overhead,
+                        memory_bound: memory > compute,
+                    }
+                } else {
+                    self.inner.price_op(op)
+                }
             }
-        }
-        OpKind::Transfer { .. } => roofline::estimate_op(op, dev, prec).seconds,
-        _ => {
-            if q.mode == QuantMode::WeightActivation {
-                // Dequant/requant scale handling rides the memory term
-                // (extra scale-tensor traffic), never the launch
-                // overhead — so it taxes exactly the memory-bound EW ops
-                // and vanishes where compute dominates.
-                let (compute, memory) =
-                    roofline::ew_components(op, dev, prec).expect("EW-class op");
-                compute.max(memory * (1.0 + q.dequant_overhead)) + dev.launch_overhead
-            } else {
-                roofline::estimate_op(op, dev, prec).seconds
+            OpKind::Transfer { .. } => self.inner.price_op(op),
+            _ => {
+                if self.quant.mode == QuantMode::WeightActivation {
+                    // Dequant/requant scale handling rides the memory term
+                    // (extra scale-tensor traffic), never the launch
+                    // overhead — so it taxes exactly the memory-bound EW ops
+                    // and vanishes where compute dominates.
+                    let (compute, memory) =
+                        roofline::ew_components(op, dev, prec).expect("EW-class op");
+                    let taxed = memory * (1.0 + self.quant.dequant_overhead);
+                    OpTime {
+                        name: op.name.clone(),
+                        seconds: compute.max(taxed) + dev.launch_overhead,
+                        memory_bound: taxed >= compute,
+                    }
+                } else {
+                    self.inner.price_op(op)
+                }
             }
         }
     }
 }
 
-/// Total seconds of a graph built at `q.exec_precision()` under `q`.
+/// Seconds for one invocation of `op` (from a graph built at
+/// `q.exec_precision()`) on `dev` under quantization `q` —
+/// compatibility delegate over [`QuantPricer`].
+pub fn op_seconds(op: &Op, dev: &DeviceSpec, q: &QuantConfig) -> f64 {
+    QuantPricer::new(RooflinePricer::new(dev.clone(), q.exec_precision()), *q)
+        .price_op(op)
+        .seconds
+}
+
+/// Total seconds of a graph built at `q.exec_precision()` under `q` —
+/// compatibility delegate over [`QuantPricer`].
 pub fn iteration_seconds(g: &IterationGraph, dev: &DeviceSpec, q: &QuantConfig) -> f64 {
-    g.ops
-        .iter()
-        .map(|op| op_seconds(op, dev, q) * op.count as f64)
-        .sum()
+    QuantPricer::new(RooflinePricer::new(dev.clone(), q.exec_precision()), *q)
+        .iteration_seconds(g)
 }
 
 /// The full precision/quantization axis of a compression variant — the
@@ -209,13 +290,23 @@ impl CompressPrecision {
     }
 }
 
-/// Total seconds of a graph built at `cp.exec_precision()` under the
-/// compression precision `cp` (plain roofline for the dense points).
-pub fn graph_seconds(g: &IterationGraph, dev: &DeviceSpec, cp: CompressPrecision) -> f64 {
+/// The [`CostModel`] a [`CompressPrecision`] point prices on: the
+/// analytic backend at the point's execution precision, wrapped in
+/// [`QuantPricer`] for the INT8 modes. This is the pricer
+/// `compress::CompressedLatencyModel` holds.
+pub fn pricer(cp: CompressPrecision, dev: &DeviceSpec) -> std::sync::Arc<dyn CostModel> {
+    let base = RooflinePricer::new(dev.clone(), cp.exec_precision());
     match cp.quant() {
-        Some(q) => iteration_seconds(g, dev, &q),
-        None => roofline::iteration_seconds(g, dev, cp.exec_precision()),
+        None => std::sync::Arc::new(base),
+        Some(q) => std::sync::Arc::new(QuantPricer::new(base, q)),
     }
+}
+
+/// Total seconds of a graph built at `cp.exec_precision()` under the
+/// compression precision `cp` (plain roofline for the dense points) —
+/// compatibility delegate over [`pricer`].
+pub fn graph_seconds(g: &IterationGraph, dev: &DeviceSpec, cp: CompressPrecision) -> f64 {
+    pricer(cp, dev).iteration_seconds(g)
 }
 
 #[cfg(test)]

@@ -16,7 +16,9 @@
 //! and `examples/compression_study.rs`.
 
 use std::collections::HashMap;
+use std::fmt;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -24,6 +26,7 @@ use crate::compress::prune::PruneSpec;
 use crate::compress::quant::{self, CompressPrecision};
 use crate::config::ModelConfig;
 use crate::perf::device::DeviceSpec;
+use crate::perf::CostModel;
 use crate::scenario::exec;
 use crate::serve::graph::{forward_graph, inference_run, BatchCost, ServeHead};
 use crate::serve::sim::{BatchPolicy, SimReport, Simulator, Workload};
@@ -96,11 +99,14 @@ pub fn default_variants(cfg: &ModelConfig) -> Vec<CompressVariant> {
     ]
 }
 
-/// Memoized roofline latency of *compressed* forward batches on one
-/// device — the compressed counterpart of `serve::LatencyModel`, sharing
-/// its padded-shape grid (`util::buckets`) and pluggable into the
-/// simulator through `serve::BatchCost`.
-#[derive(Debug, Clone)]
+/// Memoized latency of *compressed* forward batches on one device —
+/// the compressed counterpart of `serve::LatencyModel`, sharing its
+/// padded-shape grid (`util::buckets`) and pluggable into the simulator
+/// through `serve::BatchCost`. Pricing goes through the one
+/// [`CostModel`] API: a `quant::pricer` backend (analytic roofline,
+/// wrapped in `QuantPricer` for the INT8 modes) applied to the pruned
+/// forward graph.
+#[derive(Clone)]
 pub struct CompressedLatencyModel {
     /// Dense served-model hyperparameters (the spec's baseline).
     pub model: ModelConfig,
@@ -115,6 +121,23 @@ pub struct CompressedLatencyModel {
     /// Sequence-length padding granularity.
     pub seq_bucket: u64,
     cache: HashMap<(u64, u64), f64>,
+    /// The variant's pricer (`quant::pricer(self.precision, &device)`).
+    pricer: Arc<dyn CostModel>,
+}
+
+impl fmt::Debug for CompressedLatencyModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CompressedLatencyModel")
+            .field("model", &self.model)
+            .field("prune", &self.prune)
+            .field("precision", &self.precision)
+            .field("device", &self.device.name)
+            .field("head", &self.head)
+            .field("seq_bucket", &self.seq_bucket)
+            .field("cached_points", &self.cache.len())
+            .field("pricer_fingerprint", &self.pricer.fingerprint())
+            .finish()
+    }
 }
 
 impl CompressedLatencyModel {
@@ -125,6 +148,7 @@ impl CompressedLatencyModel {
         variant: &CompressVariant,
         device: DeviceSpec,
     ) -> CompressedLatencyModel {
+        let pricer = quant::pricer(variant.precision, &device);
         CompressedLatencyModel {
             model,
             prune: variant.prune,
@@ -133,6 +157,7 @@ impl CompressedLatencyModel {
             head: ServeHead::Squad,
             seq_bucket: 32,
             cache: HashMap::new(),
+            pricer,
         }
     }
 
@@ -161,7 +186,7 @@ impl BatchCost for CompressedLatencyModel {
         let run = inference_run(self.model, key.0, key.1, self.precision.exec_precision());
         let g = forward_graph(&run, self.head);
         let g = self.prune.apply(&run.model, &g);
-        let t = quant::graph_seconds(&g, &self.device, self.precision);
+        let t = self.pricer.iteration_seconds(&g);
         self.cache.insert(key, t);
         t
     }

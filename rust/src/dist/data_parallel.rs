@@ -21,6 +21,7 @@ use crate::dist::allreduce::{ring_allreduce_time, ring_allreduce_volume};
 use crate::dist::interconnect::LinkSpec;
 use crate::dist::{compute_profile, tail_gradient_bytes, DistBreakdown};
 use crate::perf::device::DeviceSpec;
+use crate::perf::{CostModel, RooflinePricer};
 
 /// Data-parallel configuration: `devices` replicas over `link`, with or
 /// without AllReduce/backprop overlap.
@@ -58,9 +59,16 @@ impl DataParallelModel {
         ring_allreduce_time(self.gradient_bytes(run), self.devices, &self.link)
     }
 
-    /// The Fig. 12 per-device breakdown for this configuration.
+    /// The Fig. 12 per-device breakdown on the analytic roofline —
+    /// delegate over [`DataParallelModel::breakdown_with`].
     pub fn breakdown(&self, run: &RunConfig, dev: &DeviceSpec) -> DistBreakdown {
-        let p = compute_profile(run, dev, 1);
+        self.breakdown_with(run, &RooflinePricer::new(dev.clone(), run.precision))
+    }
+
+    /// The Fig. 12 per-device breakdown with compute priced through any
+    /// [`CostModel`] (the pricer's precision should match `run`'s).
+    pub fn breakdown_with(&self, run: &RunConfig, model: &dyn CostModel) -> DistBreakdown {
+        let p = compute_profile(run, model, 1);
         let total_ar = self.comm_seconds(run);
         let exposed = if self.devices <= 1 {
             0.0

@@ -14,6 +14,7 @@ use crate::dist::interconnect::LinkSpec;
 use crate::dist::model_parallel::ModelParallelModel;
 use crate::dist::{compute_profile, tail_gradient_bytes, DistBreakdown};
 use crate::perf::device::DeviceSpec;
+use crate::perf::{CostModel, RooflinePricer};
 
 /// Hybrid configuration: `dp_devices` data-parallel groups, each
 /// `mp_ways` model-parallel devices wide.
@@ -52,12 +53,19 @@ impl HybridModel {
         self.dp_devices * self.mp_ways
     }
 
-    /// The Fig. 12 per-device breakdown: model-parallel compute + comm
-    /// inside the group, plus the exposed part of the sharded-gradient
-    /// AllReduce across groups.
+    /// The Fig. 12 per-device breakdown on the analytic roofline —
+    /// delegate over [`HybridModel::breakdown_with`].
     pub fn breakdown(&self, run: &RunConfig, dev: &DeviceSpec) -> DistBreakdown {
+        self.breakdown_with(run, &RooflinePricer::new(dev.clone(), run.precision))
+    }
+
+    /// The Fig. 12 per-device breakdown with compute priced through any
+    /// [`CostModel`]: model-parallel compute + comm inside the group,
+    /// plus the exposed part of the sharded-gradient AllReduce across
+    /// groups.
+    pub fn breakdown_with(&self, run: &RunConfig, model: &dyn CostModel) -> DistBreakdown {
         let mp_ways = self.mp_ways.max(1);
-        let p = compute_profile(run, dev, mp_ways);
+        let p = compute_profile(run, model, mp_ways);
         let mp = ModelParallelModel::new(mp_ways, self.mp_link.clone());
         let mut bd = mp.breakdown_from_profile(run, &p);
 

@@ -43,8 +43,7 @@ use crate::config::RunConfig;
 use crate::model::op::{LayerClass, Pass};
 use crate::model::transformer::non_layer_param_count;
 use crate::model::IterationGraph;
-use crate::perf::device::DeviceSpec;
-use crate::perf::roofline;
+use crate::perf::CostModel;
 
 /// Per-device iteration breakdown of one distributed configuration —
 /// one Fig. 12 bar. All fields are seconds of the critical path on one
@@ -105,17 +104,20 @@ pub(crate) struct ComputeProfile {
     pub(crate) backward: f64,
 }
 
-/// Roofline-time the iteration graph with the optimizer sharded
-/// `opt_shards` ways (1 = replicated, as in plain data parallel).
+/// Price the iteration graph with the optimizer sharded `opt_shards`
+/// ways (1 = replicated, as in plain data parallel) through any
+/// [`CostModel`] — the dist models compose whatever pricer the caller
+/// holds (analytic, cached, calibrated), so distributed breakdowns stay
+/// consistent with the single-device path by construction.
 pub(crate) fn compute_profile(
     run: &RunConfig,
-    dev: &DeviceSpec,
+    model: &dyn CostModel,
     opt_shards: u64,
 ) -> ComputeProfile {
     let g = IterationGraph::build_sharded(run, opt_shards, 1);
     let mut p = ComputeProfile::default();
     for op in &g.ops {
-        let t = roofline::estimate_op_total(op, dev, run.precision);
+        let t = model.price_op_total(op);
         match op.layer {
             LayerClass::Transformer => p.transformer += t,
             LayerClass::Optimizer => p.lamb += t,
@@ -146,15 +148,21 @@ pub(crate) fn tail_gradient_bytes(run: &RunConfig) -> u64 {
 mod tests {
     use super::*;
     use crate::config::{ModelConfig, Phase, Precision};
+    use crate::perf::device::DeviceSpec;
+    use crate::perf::{roofline, RooflinePricer};
 
     fn run() -> RunConfig {
         RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
     }
 
+    fn pricer() -> RooflinePricer {
+        RooflinePricer::new(DeviceSpec::mi100(), Precision::Fp32)
+    }
+
     #[test]
     fn profile_matches_iteration_seconds() {
         let dev = DeviceSpec::mi100();
-        let p = compute_profile(&run(), &dev, 1);
+        let p = compute_profile(&run(), &pricer(), 1);
         let g = IterationGraph::build(&run());
         let total = roofline::iteration_seconds(&g, &dev, Precision::Fp32);
         let sum = p.transformer + p.lamb + p.output + p.embedding;
@@ -166,9 +174,8 @@ mod tests {
 
     #[test]
     fn sharding_shrinks_only_lamb() {
-        let dev = DeviceSpec::mi100();
-        let p1 = compute_profile(&run(), &dev, 1);
-        let p8 = compute_profile(&run(), &dev, 8);
+        let p1 = compute_profile(&run(), &pricer(), 1);
+        let p8 = compute_profile(&run(), &pricer(), 8);
         assert!(p8.lamb < 0.5 * p1.lamb, "{} vs {}", p8.lamb, p1.lamb);
         assert!((p8.transformer - p1.transformer).abs() < 1e-12);
         assert!((p8.output - p1.output).abs() < 1e-12);

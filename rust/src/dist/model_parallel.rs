@@ -18,6 +18,7 @@ use crate::dist::allreduce::{ring_allreduce_time, ring_allreduce_volume};
 use crate::dist::interconnect::LinkSpec;
 use crate::dist::{compute_profile, ComputeProfile, DistBreakdown};
 use crate::perf::device::DeviceSpec;
+use crate::perf::{CostModel, RooflinePricer};
 
 /// Megatron-style tensor parallelism across `ways` devices over `link`.
 #[derive(Debug, Clone)]
@@ -57,11 +58,18 @@ impl ModelParallelModel {
             * ring_allreduce_time(self.activation_bytes(run), self.ways, &self.link)
     }
 
-    /// The Fig. 12 per-device breakdown: compute divides by `ways`
-    /// (layers, vocab-parallel embedding + heads, and the sharded
-    /// optimizer), and every AllReduce lands on the critical path.
+    /// The Fig. 12 per-device breakdown on the analytic roofline —
+    /// delegate over [`ModelParallelModel::breakdown_with`].
     pub fn breakdown(&self, run: &RunConfig, dev: &DeviceSpec) -> DistBreakdown {
-        let p = compute_profile(run, dev, self.ways.max(1));
+        self.breakdown_with(run, &RooflinePricer::new(dev.clone(), run.precision))
+    }
+
+    /// The Fig. 12 per-device breakdown with compute priced through any
+    /// [`CostModel`]: compute divides by `ways` (layers, vocab-parallel
+    /// embedding + heads, and the sharded optimizer), and every
+    /// AllReduce lands on the critical path.
+    pub fn breakdown_with(&self, run: &RunConfig, model: &dyn CostModel) -> DistBreakdown {
+        let p = compute_profile(run, model, self.ways.max(1));
         self.breakdown_from_profile(run, &p)
     }
 

@@ -23,6 +23,7 @@ use crate::dist::allreduce::{all_gather_time, reduce_scatter_time, ring_allreduc
 use crate::dist::interconnect::LinkSpec;
 use crate::dist::{compute_profile, DistBreakdown};
 use crate::perf::device::DeviceSpec;
+use crate::perf::{CostModel, RooflinePricer};
 
 /// ZeRO optimizer-sharding configuration over `devices` replicas.
 #[derive(Debug, Clone)]
@@ -50,13 +51,20 @@ impl ZeroModel {
         ring_allreduce_volume(self.payload_bytes(run), self.devices)
     }
 
-    /// The Fig. 12 per-device breakdown: LAMB divides by `devices`, and
-    /// each collective phase exposes only what its overlap window (the
-    /// backward pass for reduce-scatter, the forward pass for
-    /// all-gather) cannot hide — at minimum one per-layer bucket each.
+    /// The Fig. 12 per-device breakdown on the analytic roofline —
+    /// delegate over [`ZeroModel::breakdown_with`].
     pub fn breakdown(&self, run: &RunConfig, dev: &DeviceSpec) -> DistBreakdown {
+        self.breakdown_with(run, &RooflinePricer::new(dev.clone(), run.precision))
+    }
+
+    /// The Fig. 12 per-device breakdown with compute priced through any
+    /// [`CostModel`]: LAMB divides by `devices`, and each collective
+    /// phase exposes only what its overlap window (the backward pass
+    /// for reduce-scatter, the forward pass for all-gather) cannot hide
+    /// — at minimum one per-layer bucket each.
+    pub fn breakdown_with(&self, run: &RunConfig, model: &dyn CostModel) -> DistBreakdown {
         let d = self.devices.max(1);
-        let p = compute_profile(run, dev, d);
+        let p = compute_profile(run, model, d);
         let exposed = if d <= 1 {
             0.0
         } else {

@@ -10,7 +10,7 @@ use crate::config::{Precision, RunConfig};
 use crate::model::adam;
 use crate::model::op::Op;
 use crate::perf::device::DeviceSpec;
-use crate::perf::roofline::estimate_op_total;
+use crate::perf::{CostModel, RooflinePricer};
 
 /// Fig. 13 bar triple, normalized to the unfused baseline.
 #[derive(Debug, Clone)]
@@ -22,12 +22,22 @@ pub struct FusionStats {
 }
 
 impl FusionStats {
+    /// Ratios on the analytic roofline — delegate over
+    /// [`FusionStats::from_ops_with`].
     pub fn from_ops(name: &str, unfused: &[Op], fused: &[Op],
                     dev: &DeviceSpec, prec: Precision) -> FusionStats {
+        Self::from_ops_with(name, unfused, fused, &RooflinePricer::new(dev.clone(), prec))
+    }
+
+    /// Ratios with both op sets priced through any [`CostModel`] —
+    /// fusion what-ifs compose with calibrated or cached backends like
+    /// every other study.
+    pub fn from_ops_with(name: &str, unfused: &[Op], fused: &[Op],
+                         model: &dyn CostModel) -> FusionStats {
         let count = |ops: &[Op]| -> f64 { ops.iter().map(|o| o.count).sum::<u64>() as f64 };
         let bytes = |ops: &[Op]| -> f64 { ops.iter().map(|o| o.total_bytes()).sum::<u64>() as f64 };
         let time = |ops: &[Op]| -> f64 {
-            ops.iter().map(|o| estimate_op_total(o, dev, prec)).sum()
+            ops.iter().map(|o| model.price_op_total(o)).sum()
         };
         FusionStats {
             name: name.into(),

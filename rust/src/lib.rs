@@ -21,9 +21,12 @@
 //! See DESIGN.md for the experiment index (every paper table/figure →
 //! module → bench target). Every experiment is a named entry in the
 //! `scenario` registry (`bertprof list` / `bertprof run <name>`), all
-//! grids share one parallel executor (`scenario::exec`), and all
-//! roofline costing can memoize through `perf::CostCache`
-//! (DESIGN.md SSScenario).
+//! grids share one parallel executor (`scenario::exec`), and all op
+//! pricing flows through the one `perf::CostModel` trait — analytic
+//! [`perf::RooflinePricer`], memoizing [`perf::Cached`] over a shared
+//! [`perf::CostCache`] table, measured-number [`perf::CalibratedPricer`]
+//! overlays, and the compress/what-if decorators (DESIGN.md SSScenario,
+//! SSCost).
 pub mod cli;
 pub mod compress;
 pub mod config;

@@ -55,8 +55,10 @@ fn main() -> Result<()> {
 const HELP: &str = "\
 bertprof — BERT training characterization (paper reproduction)
 
-  list                                            every registered scenario
+  list [--params] [--json]                        every registered scenario
   run <name> [--set k=v ...] [--out FILE]         run one scenario uniformly
+                                                  (serve: --set cost_table=F
+                                                  swaps in measured numbers)
 
 Legacy aliases (same registry entries):
   breakdown [--detail] [--measured] [--inference] Fig. 4 / Fig. 5 / SS6
@@ -79,8 +81,14 @@ Common options: --artifacts DIR (default ./artifacts); `run` validates
 --set keys against the scenario's declared parameters (`bertprof list`
 shows them).";
 
-/// `bertprof list [--params]` — the registry as a table.
+/// `bertprof list [--params] [--json]` — the registry as a table, or
+/// (with `--json`) as the machine-readable CLI-surface artifact that CI
+/// diffs against `rust/tests/golden/cli_surface.json`.
 fn cmd_list(args: &Args) -> Result<()> {
+    if args.flag("json") {
+        println!("{}", scenario::registry_json());
+        return Ok(());
+    }
     println!(
         "{:<10}{:<12}{:<12}{}",
         "name", "figure", "artifact", "what it shows"

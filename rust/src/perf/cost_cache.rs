@@ -1,62 +1,72 @@
-//! Memoized roofline op costing shared across whole experiment grids.
+//! The shared memo table behind the [`Cached`](crate::perf::Cached)
+//! decorator.
 //!
 //! The big sweeps (the scenario registry's grids, `serve::sweep`, the
-//! figure artifacts) re-time the *same* op shapes thousands of times:
+//! figure artifacts) re-price the *same* op shapes thousands of times:
 //! every batch point of a sweep re-prices the batch-independent LAMB
 //! ops, and every serving scenario at the same (device, precision)
 //! re-prices the identical padded batch shapes. [`CostCache`] memoizes
-//! [`roofline::estimate_op`] on exactly the inputs that determine the
-//! cost — (op shape/kind, element width, optimizer-stream flag, device,
-//! precision) — so each distinct shape is priced once per grid.
+//! any [`CostModel`](crate::perf::CostModel)'s `price_op` on exactly the
+//! op fields a pricer is allowed to read — (kind, element width, layer,
+//! category, pass) — plus the pricer's fingerprint, so each distinct
+//! point is priced once per grid no matter how many per-scenario
+//! pricers share the table.
 //!
-//! The cache is `Sync` (a `Mutex`-guarded map plus atomic hit/miss
+//! The table is `Sync` (a `Mutex`-guarded map plus atomic hit/miss
 //! counters) so one instance can be shared across the parallel grid
-//! executor's workers (`scenario::exec`); because
-//! `roofline::estimate_op` is a pure function, a cached value is
+//! executor's workers (`scenario::exec`); because every `CostModel` is
+//! required to be pure over the keyed fields, a cached value is
 //! bit-identical to a recomputed one and the artifacts of a cached
 //! sweep are byte-identical to the uncached ones (asserted in
-//! `rust/tests/scenario.rs`; the `fig_scenario_grid` bench records the
-//! measured cached-vs-uncached grid speedup).
+//! `rust/tests/cost_model.rs` and `rust/tests/scenario.rs`; the
+//! `fig_scenario_grid` and `fig_costmodel` benches record the measured
+//! cached-vs-uncached speedups).
+//!
+//! Historically `CostCache` *was* the caching API — a parallel set of
+//! `estimate_op`/`iteration_seconds` signatures forking `perf::roofline`.
+//! That fork is gone: callers decorate a pricer with
+//! [`Cached`](crate::perf::Cached) and this type only holds the shared
+//! state and its accounting.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::config::Precision;
-use crate::model::op::{LayerClass, Op, OpKind};
-use crate::model::IterationGraph;
-use crate::perf::device::DeviceSpec;
-use crate::perf::roofline::{self, OpTime};
+use crate::model::op::{LayerClass, Op, OpCategory, OpKind, Pass};
+use crate::perf::cost_model::CostModel;
+use crate::perf::roofline::OpTime;
 
-/// Everything `roofline::estimate_op` reads from an op and its context:
-/// the shape, the element width, whether it streams at the optimizer
-/// bandwidth, the device fingerprint, and the precision. Two ops with
-/// equal keys have bit-identical costs.
+/// Everything a [`CostModel`] may legally read from an op, plus the
+/// pricer's fingerprint. Two lookups with equal keys have bit-identical
+/// costs (the trait contract `rust/tests/cost_model.rs` pins).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct CostKey {
     kind: OpKind,
     elem_bytes: u64,
-    optimizer: bool,
-    device: u64,
-    precision: Precision,
+    layer: LayerClass,
+    category: OpCategory,
+    pass: Pass,
+    /// [`CostModel::fingerprint`] of the pricer that owns the entry.
+    pricer: u64,
 }
 
 impl CostKey {
-    fn new(op: &Op, dev: &DeviceSpec, prec: Precision) -> CostKey {
+    fn new(pricer: u64, op: &Op) -> CostKey {
         CostKey {
             kind: op.kind.clone(),
             elem_bytes: op.elem_bytes,
-            optimizer: op.layer == LayerClass::Optimizer,
-            device: dev.cost_fingerprint(),
-            precision: prec,
+            layer: op.layer,
+            category: op.category,
+            pass: op.pass,
+            pricer,
         }
     }
 }
 
-/// Shared memo table over `roofline::estimate_op`, keyed by the op
-/// shape, element width, optimizer-stream flag, device fingerprint,
-/// and precision. Cheap to create; share one per grid (via `&` or
-/// `Arc`) to dedupe costing across grid cells and worker threads.
+/// Shared memo table over [`CostModel::price_op`], keyed by the op's
+/// priceable fields and the pricer fingerprint. Cheap to create; share
+/// one per grid (via `Arc`) to dedupe costing across grid cells and
+/// worker threads.
 #[derive(Debug, Default)]
 pub struct CostCache {
     map: Mutex<HashMap<CostKey, (f64, bool)>>,
@@ -65,16 +75,17 @@ pub struct CostCache {
 }
 
 impl CostCache {
-    /// An empty cache.
+    /// An empty table.
     pub fn new() -> CostCache {
         CostCache::default()
     }
 
-    /// Memoized [`roofline::estimate_op`]: identical output (the cost of
-    /// a cache hit is one map lookup instead of the roofline
-    /// arithmetic), plus hit/miss accounting.
-    pub fn estimate_op(&self, op: &Op, dev: &DeviceSpec, prec: Precision) -> OpTime {
-        let key = CostKey::new(op, dev, prec);
+    /// Memoized `inner.price_op(op)` under fingerprint `fp` — the
+    /// [`Cached`](crate::perf::Cached) decorator's engine. Identical
+    /// output (the cost of a hit is one map lookup instead of the
+    /// pricing arithmetic), plus hit/miss accounting.
+    pub(crate) fn price_op_via<M: CostModel>(&self, fp: u64, op: &Op, inner: &M) -> OpTime {
+        let key = CostKey::new(fp, op);
         if let Some(&(seconds, memory_bound)) =
             self.map.lock().expect("no panics hold this lock").get(&key)
         {
@@ -82,10 +93,10 @@ impl CostCache {
             return OpTime { name: op.name.clone(), seconds, memory_bound };
         }
         // Computed outside the lock: two racing workers may both price a
-        // fresh shape, but estimate_op is pure so both insert the same
-        // value and the artifact stays deterministic.
+        // fresh shape, but price_op is pure over the keyed fields so both
+        // insert the same value and the artifact stays deterministic.
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let t = roofline::estimate_op(op, dev, prec);
+        let t = inner.price_op(op);
         self.map
             .lock()
             .expect("no panics hold this lock")
@@ -93,34 +104,19 @@ impl CostCache {
         t
     }
 
-    /// Memoized [`roofline::estimate_op_total`].
-    pub fn estimate_op_total(&self, op: &Op, dev: &DeviceSpec, prec: Precision) -> f64 {
-        self.estimate_op(op, dev, prec).seconds * op.count as f64
-    }
-
-    /// Memoized [`roofline::iteration_seconds`] — same per-op order and
-    /// summation, so the total is bit-identical to the uncached path.
-    pub fn iteration_seconds(&self, g: &IterationGraph, dev: &DeviceSpec, prec: Precision) -> f64 {
-        g.ops
-            .iter()
-            .map(|op| self.estimate_op_total(op, dev, prec))
-            .sum()
-    }
-
     /// Lookups served from the memo table.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// Lookups that had to run the roofline arithmetic.
+    /// Lookups that had to run the pricing arithmetic.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
 
     /// Total lookups. Deterministic for a deterministic workload (every
-    /// `estimate_op` call bumps exactly one counter), unlike the
-    /// hit/miss *split*: two workers racing on a fresh key may both
-    /// count a miss.
+    /// `price_op` call bumps exactly one counter), unlike the hit/miss
+    /// *split*: two workers racing on a fresh key may both count a miss.
     pub fn lookups(&self) -> u64 {
         self.hits() + self.misses()
     }
@@ -151,7 +147,7 @@ impl CostCache {
         }
     }
 
-    /// Distinct (shape, device, precision) points priced so far.
+    /// Distinct (op fields, pricer) points priced so far.
     pub fn len(&self) -> usize {
         self.map.lock().expect("no panics hold this lock").len()
     }
@@ -164,8 +160,14 @@ impl CostCache {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
-    use crate::config::{ModelConfig, Phase, RunConfig};
+    use crate::config::{ModelConfig, Phase, Precision, RunConfig};
+    use crate::model::IterationGraph;
+    use crate::perf::cost_model::{Cached, RooflinePricer};
+    use crate::perf::device::DeviceSpec;
+    use crate::perf::roofline;
 
     fn graph(prec: Precision) -> IterationGraph {
         IterationGraph::build(&RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, prec))
@@ -173,84 +175,76 @@ mod tests {
 
     #[test]
     fn cached_costs_are_bit_identical_to_uncached() {
-        let cache = CostCache::new();
+        let table = Arc::new(CostCache::new());
         for prec in [Precision::Fp32, Precision::Mixed] {
             let g = graph(prec);
             for dev in [DeviceSpec::mi100(), DeviceSpec::v100()] {
+                let cached = Cached::with_table(
+                    RooflinePricer::new(dev.clone(), prec),
+                    Arc::clone(&table),
+                );
                 for op in &g.ops {
                     let plain = roofline::estimate_op(op, &dev, prec);
-                    let cached = cache.estimate_op(op, &dev, prec);
-                    assert_eq!(plain.seconds, cached.seconds, "{}", op.name);
-                    assert_eq!(plain.memory_bound, cached.memory_bound, "{}", op.name);
+                    let c = cached.price_op(op);
+                    assert_eq!(plain.seconds, c.seconds, "{}", op.name);
+                    assert_eq!(plain.memory_bound, c.memory_bound, "{}", op.name);
                     // And again, now served from the table.
-                    let hot = cache.estimate_op(op, &dev, prec);
+                    let hot = cached.price_op(op);
                     assert_eq!(plain.seconds, hot.seconds, "{}", op.name);
                 }
                 assert_eq!(
                     roofline::iteration_seconds(&g, &dev, prec),
-                    cache.iteration_seconds(&g, &dev, prec),
+                    cached.iteration_seconds(&g),
                 );
             }
         }
-        assert!(cache.hits() > 0 && cache.misses() > 0);
+        assert!(table.hits() > 0 && table.misses() > 0);
     }
 
     #[test]
     fn repeated_shapes_hit_across_grid_cells() {
         // The batch sweep's LAMB ops are batch-independent: pricing B=4
         // after B=32 must hit for every optimizer op.
-        let cache = CostCache::new();
+        let table = Arc::new(CostCache::new());
         let dev = DeviceSpec::mi100();
+        let pricer = Cached::with_table(
+            RooflinePricer::new(dev, Precision::Fp32),
+            Arc::clone(&table),
+        );
         let b32 = graph(Precision::Fp32);
-        cache.iteration_seconds(&b32, &dev, Precision::Fp32);
-        let misses_after_first = cache.misses();
+        pricer.iteration_seconds(&b32);
+        let misses_after_first = table.misses();
         let b4 = IterationGraph::build(&RunConfig::new(
             ModelConfig::bert_large().with_batch(4),
             Phase::Phase1,
             Precision::Fp32,
         ));
-        cache.iteration_seconds(&b4, &dev, Precision::Fp32);
-        assert!(cache.hits() > 0, "no cross-batch reuse");
+        pricer.iteration_seconds(&b4);
+        assert!(table.hits() > 0, "no cross-batch reuse");
         // Re-pricing the first graph is a pure hit.
-        cache.iteration_seconds(&b32, &dev, Precision::Fp32);
-        assert!(cache.misses() < misses_after_first + b4.ops.len() as u64);
-        assert!(cache.hit_rate() > 0.0 && cache.hit_rate() < 1.0);
-    }
-
-    #[test]
-    fn distinct_devices_and_precisions_do_not_collide() {
-        // A GEMM op: its cost reads the device matrix rate *and* the
-        // precision (non-GEMM ops only see precision through their baked
-        // elem_bytes, so they would legitimately tie across precisions).
-        let cache = CostCache::new();
-        let g = graph(Precision::Fp32);
-        let op = g
-            .ops
-            .iter()
-            .find(|o| matches!(o.kind, OpKind::Gemm(_)))
-            .expect("graph has GEMMs");
-        let a = cache.estimate_op(op, &DeviceSpec::mi100(), Precision::Fp32);
-        let b = cache.estimate_op(op, &DeviceSpec::v100(), Precision::Fp32);
-        let c = cache.estimate_op(op, &DeviceSpec::mi100(), Precision::Mixed);
-        assert_ne!(a.seconds, b.seconds);
-        assert_ne!(a.seconds, c.seconds);
-        assert_eq!(cache.hits(), 0);
-        assert_eq!(cache.len(), 3);
+        pricer.iteration_seconds(&b32);
+        assert!(table.misses() < misses_after_first + b4.ops.len() as u64);
+        assert!(table.hit_rate() > 0.0 && table.hit_rate() < 1.0);
+        assert!(table.dedup_rate() > 0.0);
     }
 
     #[test]
     fn shared_across_threads_stays_consistent() {
-        let cache = CostCache::new();
+        let table = Arc::new(CostCache::new());
         let g = graph(Precision::Fp32);
         let dev = DeviceSpec::mi100();
         let serial = roofline::iteration_seconds(&g, &dev, Precision::Fp32);
+        let pricer = Cached::with_table(
+            RooflinePricer::new(dev, Precision::Fp32),
+            Arc::clone(&table),
+        );
         std::thread::scope(|s| {
             for _ in 0..4 {
                 s.spawn(|| {
-                    assert_eq!(cache.iteration_seconds(&g, &dev, Precision::Fp32), serial);
+                    assert_eq!(pricer.iteration_seconds(&g), serial);
                 });
             }
         });
-        assert!(!cache.is_empty());
+        assert!(!table.is_empty());
     }
 }

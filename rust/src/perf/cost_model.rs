@@ -1,0 +1,591 @@
+//! The one costing API: every subsystem prices ops through a
+//! [`CostModel`] (DESIGN.md SSCost).
+//!
+//! Before this module the paper's core method — pricing each BERT op
+//! against a device roofline — was smeared across three parallel
+//! surfaces: the `perf::roofline` free functions, a `CostCache` that
+//! mirrored the same three signatures, and per-subsystem wrappers
+//! (`serve::LatencyModel`, `compress::CompressedLatencyModel`), all
+//! threading raw `(&DeviceSpec, Precision)` pairs. [`CostModel`] bundles
+//! device, precision, and pricing policy into one object:
+//!
+//! * [`RooflinePricer`] — the canonical analytic backend (the arithmetic
+//!   of `roofline::estimate_op`, which is kept as a thin compatibility
+//!   delegate);
+//! * [`Cached`] — a transparent memoizing decorator over any backend
+//!   (what `perf::CostCache` used to be as an API fork; the table itself
+//!   is still `CostCache`, now shareable across many decorated pricers);
+//! * [`CalibratedPricer`] — per-op-category time overrides loaded from a
+//!   JSON [`CalibrationTable`], the SSHardware-Adaptation seam for
+//!   swapping measured platform numbers into any experiment
+//!   (`bertprof run serve --set cost_table=path`);
+//! * `compress::quant::QuantPricer` and `perf::whatif::NmcPricer` — the
+//!   dequant-tax and near-memory-computing what-ifs as decorators on the
+//!   same trait, composable with the above.
+//!
+//! Decorators must price an op purely from its `kind`, `elem_bytes`,
+//! `layer`, `category`, and `pass` fields (never `name` or `count`):
+//! those five fields plus the pricer's [`CostModel::fingerprint`] form
+//! the [`Cached`] memo key, so anything outside them would break the
+//! cached == uncached identity that `rust/tests/cost_model.rs` pins.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Precision;
+use crate::model::op::{Op, OpCategory};
+use crate::model::IterationGraph;
+use crate::perf::cost_cache::CostCache;
+use crate::perf::device::DeviceSpec;
+use crate::perf::roofline::{self, OpTime};
+use crate::util::Json;
+
+/// A pluggable op pricer: one object bundling the device, the numeric
+/// precision, and the pricing policy (analytic roofline, cached,
+/// calibrated, quantized, what-if...). Object safe — subsystems take
+/// `&dyn CostModel` (or stay generic over `M: CostModel` on hot paths).
+pub trait CostModel: Send + Sync {
+    /// The device this pricer models.
+    fn device(&self) -> &DeviceSpec;
+
+    /// The numeric precision graphs priced by this model are built at
+    /// (ops carry their own `elem_bytes`; this is the matrix-engine /
+    /// ladder axis).
+    fn precision(&self) -> Precision;
+
+    /// Process-stable fingerprint over everything [`CostModel::price_op`]
+    /// reads *besides* the op itself. Two pricers with equal
+    /// fingerprints must price every op identically — this is the
+    /// pricer component of the [`Cached`] memo key, so one shared
+    /// [`CostCache`] can safely span a whole grid of per-scenario
+    /// pricers (different devices, precisions, calibrations).
+    fn fingerprint(&self) -> u64;
+
+    /// Time and binding resource for a single invocation of `op`.
+    fn price_op(&self, op: &Op) -> OpTime;
+
+    /// Total seconds across all `op.count` invocations.
+    fn price_op_total(&self, op: &Op) -> f64 {
+        self.price_op(op).seconds * op.count as f64
+    }
+
+    /// Per-op totals for a whole iteration graph (serial schedule — the
+    /// paper's single-stream GPU execution).
+    fn price_graph(&self, g: &IterationGraph) -> Vec<(Op, f64)> {
+        g.ops
+            .iter()
+            .map(|op| (op.clone(), self.price_op_total(op)))
+            .collect()
+    }
+
+    /// Total iteration seconds (same per-op order and summation as the
+    /// historical `roofline::iteration_seconds`, so totals are
+    /// bit-identical across the compatibility delegates).
+    fn iteration_seconds(&self, g: &IterationGraph) -> f64 {
+        g.ops.iter().map(|op| self.price_op_total(op)).sum()
+    }
+}
+
+/// Every `Arc<dyn CostModel>` is itself a pricer, so subsystems holding
+/// a shared pricer (`serve::LatencyModel`) can hand it on by reference.
+impl CostModel for Arc<dyn CostModel> {
+    fn device(&self) -> &DeviceSpec {
+        (**self).device()
+    }
+
+    fn precision(&self) -> Precision {
+        (**self).precision()
+    }
+
+    fn fingerprint(&self) -> u64 {
+        (**self).fingerprint()
+    }
+
+    fn price_op(&self, op: &Op) -> OpTime {
+        (**self).price_op(op)
+    }
+}
+
+fn hash_parts(parts: &[u64]) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    for p in parts {
+        p.hash(&mut h);
+    }
+    h.finish()
+}
+
+fn precision_tag(p: Precision) -> u64 {
+    match p {
+        Precision::Fp32 => 0,
+        Precision::Mixed => 1,
+        Precision::Int8 => 2,
+    }
+}
+
+/// The canonical analytic backend: the paper's roofline arithmetic at a
+/// fixed `(device, precision)` point. `perf::roofline`'s free functions
+/// are thin compatibility delegates over this pricer's kernel.
+#[derive(Debug, Clone)]
+pub struct RooflinePricer {
+    /// Roofline device preset every op is priced on.
+    pub device: DeviceSpec,
+    /// Matrix-engine / ladder precision.
+    pub precision: Precision,
+}
+
+impl RooflinePricer {
+    /// An analytic pricer for `device` at `precision`.
+    pub fn new(device: DeviceSpec, precision: Precision) -> RooflinePricer {
+        RooflinePricer { device, precision }
+    }
+}
+
+impl CostModel for RooflinePricer {
+    fn device(&self) -> &DeviceSpec {
+        &self.device
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn fingerprint(&self) -> u64 {
+        hash_parts(&[
+            0x726f6f66, // "roof"
+            self.device.cost_fingerprint(),
+            precision_tag(self.precision),
+        ])
+    }
+
+    fn price_op(&self, op: &Op) -> OpTime {
+        roofline::estimate_op(op, &self.device, self.precision)
+    }
+}
+
+/// Transparent memoizing decorator: prices through `inner`, but each
+/// distinct (op shape, element width, layer, category, pass) point is
+/// priced once per [`CostCache`] table. Because every [`CostModel`] is
+/// required to be a pure function of those fields, a cached value is
+/// bit-identical to a recomputed one — the decorator changes no artifact
+/// byte (`rust/tests/cost_model.rs`, `rust/tests/scenario.rs`).
+///
+/// The table is behind an `Arc`, so one cache can span a whole grid of
+/// decorated pricers ([`Cached::with_table`]) across worker threads —
+/// exactly what `serve::run_sweep_cached` and the fig09/fig10/depth
+/// timeline sweeps do.
+#[derive(Debug, Clone)]
+pub struct Cached<M: CostModel> {
+    inner: M,
+    table: Arc<CostCache>,
+    /// `inner.fingerprint()`, computed once at construction (pricers are
+    /// immutable after construction).
+    fp: u64,
+}
+
+impl<M: CostModel> Cached<M> {
+    /// Decorate `inner` with a fresh private memo table.
+    pub fn new(inner: M) -> Cached<M> {
+        Cached::with_table(inner, Arc::new(CostCache::new()))
+    }
+
+    /// Decorate `inner` over a shared (possibly grid-wide) table.
+    pub fn with_table(inner: M, table: Arc<CostCache>) -> Cached<M> {
+        let fp = inner.fingerprint();
+        Cached { inner, table, fp }
+    }
+
+    /// The shared memo table (hit/dedup accounting lives there).
+    pub fn table(&self) -> &Arc<CostCache> {
+        &self.table
+    }
+
+    /// The decorated pricer.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+}
+
+impl<M: CostModel> CostModel for Cached<M> {
+    fn device(&self) -> &DeviceSpec {
+        self.inner.device()
+    }
+
+    fn precision(&self) -> Precision {
+        self.inner.precision()
+    }
+
+    /// Caching is transparent: the fingerprint is the inner pricer's.
+    fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+
+    fn price_op(&self, op: &Op) -> OpTime {
+        self.table.price_op_via(self.fp, op, &self.inner)
+    }
+}
+
+/// Per-op-category time overrides: the ratio of measured to modeled
+/// seconds for each `OpCategory` label, loaded from a JSON table. The
+/// SSHardware-Adaptation seam — when a platform's kernels diverge from
+/// the analytic roofline (a different EW launch path, a better fused
+/// softmax, a slower integer GEMM), measure the ratio once and swap it
+/// in without touching the model.
+///
+/// Schema (DESIGN.md SSCost):
+///
+/// ```json
+/// {"scale": {"FC-GEMM": 1.07, "Attn-BGEMM": 1.18, "DR+Res+LN": 0.92}}
+/// ```
+///
+/// Keys are `OpCategory::label()` strings; values multiply the inner
+/// pricer's modeled seconds for ops of that category. Categories absent
+/// from the table pass through *untouched* (not multiplied by 1.0), so
+/// an empty table is exactly the identity — `CalibratedPricer` over an
+/// empty table is op-for-op bit-identical to its inner backend
+/// (`rust/tests/cost_model.rs`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibrationTable {
+    /// `OpCategory::label()` → seconds multiplier (measured / modeled).
+    pub scale: BTreeMap<String, f64>,
+}
+
+/// Every valid calibration key, in `OpCategory` declaration order.
+const CATEGORY_LABELS: [&str; 13] = [
+    "Linear-GEMM",
+    "Attn-BGEMM",
+    "FC-GEMM",
+    "Scale/Mask/Softmax",
+    "GeLU",
+    "DR+Res+LN",
+    "LAMB-S1",
+    "LAMB-Norm",
+    "LAMB-S2",
+    "Embedding",
+    "Output",
+    "GradAccum",
+    "AllReduce",
+];
+
+impl CalibrationTable {
+    /// The identity table (no overrides).
+    pub fn empty() -> CalibrationTable {
+        CalibrationTable::default()
+    }
+
+    /// True when no category is overridden.
+    pub fn is_identity(&self) -> bool {
+        self.scale.is_empty()
+    }
+
+    /// Add one override (builder style; panics on an unknown label or a
+    /// non-positive factor — programmatic construction should never
+    /// carry user input, which goes through [`CalibrationTable::from_json`]).
+    pub fn with(mut self, category: &str, factor: f64) -> CalibrationTable {
+        assert!(
+            CATEGORY_LABELS.contains(&category),
+            "unknown op category '{category}'"
+        );
+        assert!(factor.is_finite() && factor > 0.0, "bad factor {factor}");
+        self.scale.insert(category.to_string(), factor);
+        self
+    }
+
+    /// Parse the `{"scale": {...}}` schema, validating every key against
+    /// the known `OpCategory` labels and every factor for positivity.
+    pub fn from_json(json: &Json) -> Result<CalibrationTable> {
+        let obj = json
+            .as_obj()
+            .context("calibration table must be a JSON object")?;
+        for key in obj.keys() {
+            if key != "scale" {
+                bail!("unknown calibration-table key '{key}' (schema: {{\"scale\": {{...}}}})");
+            }
+        }
+        let mut table = CalibrationTable::empty();
+        if let Some(scale) = json.get("scale") {
+            let scale = scale
+                .as_obj()
+                .context("calibration 'scale' must be an object of category -> factor")?;
+            for (category, factor) in scale {
+                if !CATEGORY_LABELS.contains(&category.as_str()) {
+                    bail!(
+                        "unknown op category '{category}' in calibration table (valid: {})",
+                        CATEGORY_LABELS.join(", ")
+                    );
+                }
+                let f = factor
+                    .as_f64()
+                    .with_context(|| format!("calibration factor for '{category}' must be a number"))?;
+                if !(f.is_finite() && f > 0.0) {
+                    bail!("calibration factor for '{category}' must be finite and positive, got {f}");
+                }
+                table.scale.insert(category.clone(), f);
+            }
+        }
+        Ok(table)
+    }
+
+    /// Load and parse a calibration-table file.
+    pub fn load(path: &Path) -> Result<CalibrationTable> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibration table {}", path.display()))?;
+        let json = Json::parse(&text)
+            .with_context(|| format!("parsing calibration table {}", path.display()))?;
+        CalibrationTable::from_json(&json)
+            .with_context(|| format!("validating calibration table {}", path.display()))
+    }
+
+    /// The table as its own JSON schema (artifact `cost_table` field).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "scale",
+            Json::Obj(
+                self.scale
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::num(*v)))
+                    .collect(),
+            ),
+        )])
+    }
+
+    /// The multiplier for one category, if overridden.
+    pub fn factor(&self, category: OpCategory) -> Option<f64> {
+        self.scale.get(category.label()).copied()
+    }
+}
+
+/// Calibrated backend: applies a [`CalibrationTable`]'s per-category
+/// multipliers over any inner pricer. Ops in categories the table does
+/// not name are returned from the inner pricer *unmodified*, so the
+/// empty table is the exact identity.
+#[derive(Debug, Clone)]
+pub struct CalibratedPricer<M: CostModel> {
+    inner: M,
+    table: CalibrationTable,
+}
+
+impl<M: CostModel> CalibratedPricer<M> {
+    /// Calibrate `inner` with `table`.
+    pub fn new(inner: M, table: CalibrationTable) -> CalibratedPricer<M> {
+        CalibratedPricer { inner, table }
+    }
+
+    /// The identity calibration (useful as the degenerate case in tests
+    /// and sweeps that take an optional table).
+    pub fn identity(inner: M) -> CalibratedPricer<M> {
+        CalibratedPricer::new(inner, CalibrationTable::empty())
+    }
+
+    /// The calibration table.
+    pub fn table(&self) -> &CalibrationTable {
+        &self.table
+    }
+
+    /// The decorated pricer.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+}
+
+impl<M: CostModel> CostModel for CalibratedPricer<M> {
+    fn device(&self) -> &DeviceSpec {
+        self.inner.device()
+    }
+
+    fn precision(&self) -> Precision {
+        self.inner.precision()
+    }
+
+    fn fingerprint(&self) -> u64 {
+        let mut parts = vec![0x63616c69, self.inner.fingerprint()]; // "cali"
+        for (k, v) in &self.table.scale {
+            parts.push(hash_parts(&[k.len() as u64]) ^ hash_str(k));
+            parts.push(v.to_bits());
+        }
+        hash_parts(&parts)
+    }
+
+    fn price_op(&self, op: &Op) -> OpTime {
+        let base = self.inner.price_op(op);
+        match self.table.factor(op.category) {
+            // No entry: pass through untouched (exact identity).
+            None => base,
+            Some(s) => OpTime { seconds: base.seconds * s, ..base },
+        }
+    }
+}
+
+fn hash_str(s: &str) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    s.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Phase, RunConfig};
+
+    fn graph(prec: Precision) -> IterationGraph {
+        IterationGraph::build(&RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, prec))
+    }
+
+    #[test]
+    fn roofline_pricer_matches_the_free_functions() {
+        for prec in [Precision::Fp32, Precision::Mixed] {
+            let g = graph(prec);
+            for dev in [DeviceSpec::mi100(), DeviceSpec::v100()] {
+                let m = RooflinePricer::new(dev.clone(), prec);
+                for op in &g.ops {
+                    let a = roofline::estimate_op(op, &dev, prec);
+                    let b = m.price_op(op);
+                    assert_eq!(a.seconds, b.seconds, "{}", op.name);
+                    assert_eq!(a.memory_bound, b.memory_bound, "{}", op.name);
+                    assert_eq!(roofline::estimate_op_total(op, &dev, prec), m.price_op_total(op));
+                }
+                assert_eq!(
+                    roofline::iteration_seconds(&g, &dev, prec),
+                    m.iteration_seconds(&g)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cached_decorator_is_pure_memoization() {
+        let g = graph(Precision::Fp32);
+        let bare = RooflinePricer::new(DeviceSpec::mi100(), Precision::Fp32);
+        let cached = Cached::new(bare.clone());
+        for op in &g.ops {
+            assert_eq!(bare.price_op(op).seconds, cached.price_op(op).seconds);
+            // And again, now served from the table.
+            assert_eq!(bare.price_op(op).seconds, cached.price_op(op).seconds);
+            assert_eq!(bare.price_op(op).memory_bound, cached.price_op(op).memory_bound);
+        }
+        assert_eq!(bare.iteration_seconds(&g), cached.iteration_seconds(&g));
+        assert!(cached.table().hits() > 0 && cached.table().misses() > 0);
+    }
+
+    #[test]
+    fn one_table_spans_pricers_without_collisions() {
+        // A grid-shaped share: two devices and two precisions through one
+        // table must not cross-contaminate (distinct fingerprints).
+        let table = Arc::new(CostCache::new());
+        let g = graph(Precision::Fp32);
+        let op = g
+            .ops
+            .iter()
+            .find(|o| matches!(o.kind, crate::model::op::OpKind::Gemm(_)))
+            .expect("graph has GEMMs");
+        let a = Cached::with_table(
+            RooflinePricer::new(DeviceSpec::mi100(), Precision::Fp32),
+            Arc::clone(&table),
+        );
+        let b = Cached::with_table(
+            RooflinePricer::new(DeviceSpec::v100(), Precision::Fp32),
+            Arc::clone(&table),
+        );
+        let c = Cached::with_table(
+            RooflinePricer::new(DeviceSpec::mi100(), Precision::Mixed),
+            Arc::clone(&table),
+        );
+        let ta = a.price_op(op).seconds;
+        let tb = b.price_op(op).seconds;
+        let tc = c.price_op(op).seconds;
+        assert_ne!(ta, tb);
+        assert_ne!(ta, tc);
+        assert_eq!(table.hits(), 0);
+        assert_eq!(table.len(), 3);
+        // Same (device, precision) in a fresh pricer is a pure hit.
+        let a2 = Cached::with_table(
+            RooflinePricer::new(DeviceSpec::mi100(), Precision::Fp32),
+            Arc::clone(&table),
+        );
+        assert_eq!(a2.price_op(op).seconds, ta);
+        assert_eq!(table.hits(), 1);
+    }
+
+    #[test]
+    fn empty_calibration_is_the_exact_identity() {
+        let g = graph(Precision::Fp32);
+        let bare = RooflinePricer::new(DeviceSpec::mi100(), Precision::Fp32);
+        let cal = CalibratedPricer::identity(bare.clone());
+        for op in &g.ops {
+            assert_eq!(bare.price_op(op).seconds, cal.price_op(op).seconds, "{}", op.name);
+        }
+        assert!(cal.table().is_identity());
+    }
+
+    #[test]
+    fn calibration_scales_only_named_categories() {
+        let g = graph(Precision::Fp32);
+        let bare = RooflinePricer::new(DeviceSpec::mi100(), Precision::Fp32);
+        let table = CalibrationTable::empty().with("FC-GEMM", 1.25);
+        let cal = CalibratedPricer::new(bare.clone(), table);
+        let mut scaled = 0;
+        for op in &g.ops {
+            let b = bare.price_op(op).seconds;
+            let c = cal.price_op(op).seconds;
+            if op.category == OpCategory::FcGemm {
+                assert_eq!(c, b * 1.25, "{}", op.name);
+                scaled += 1;
+            } else {
+                assert_eq!(c, b, "{}", op.name);
+            }
+        }
+        assert!(scaled > 0, "graph has FC GEMMs");
+        // The fingerprint reflects the table (a shared cache would not
+        // confuse calibrated with uncalibrated pricing).
+        assert_ne!(cal.fingerprint(), bare.fingerprint());
+        assert_ne!(
+            cal.fingerprint(),
+            CalibratedPricer::new(bare.clone(), CalibrationTable::empty().with("FC-GEMM", 1.5))
+                .fingerprint()
+        );
+        assert_eq!(CalibratedPricer::identity(bare.clone()).fingerprint(), {
+            // Identity still tags itself as calibrated; what matters is
+            // determinism, pinned here.
+            CalibratedPricer::identity(bare).fingerprint()
+        });
+    }
+
+    #[test]
+    fn calibration_table_json_roundtrip_and_validation() {
+        let json = Json::parse(r#"{"scale":{"FC-GEMM":1.07,"DR+Res+LN":0.92}}"#).unwrap();
+        let t = CalibrationTable::from_json(&json).unwrap();
+        assert_eq!(t.factor(OpCategory::FcGemm), Some(1.07));
+        assert_eq!(t.factor(OpCategory::DrResLn), Some(0.92));
+        assert_eq!(t.factor(OpCategory::Gelu), None);
+        assert_eq!(t.to_json().to_string(), json.to_string());
+
+        let bad_key = Json::parse(r#"{"scale":{"NotACategory":1.0}}"#).unwrap();
+        let err = CalibrationTable::from_json(&bad_key).unwrap_err().to_string();
+        assert!(err.contains("unknown op category"), "{err}");
+        let bad_val = Json::parse(r#"{"scale":{"GeLU":-2.0}}"#).unwrap();
+        assert!(CalibrationTable::from_json(&bad_val).is_err());
+        let bad_top = Json::parse(r#"{"scales":{}}"#).unwrap();
+        assert!(CalibrationTable::from_json(&bad_top).is_err());
+    }
+
+    #[test]
+    fn decorators_compose_and_stay_object_safe() {
+        let g = graph(Precision::Fp32);
+        let pricer: Arc<dyn CostModel> = Arc::new(Cached::new(CalibratedPricer::new(
+            RooflinePricer::new(DeviceSpec::mi100(), Precision::Fp32),
+            CalibrationTable::empty().with("GeLU", 2.0),
+        )));
+        let bare = RooflinePricer::new(DeviceSpec::mi100(), Precision::Fp32);
+        let total_dyn = pricer.iteration_seconds(&g);
+        assert!(total_dyn > bare.iteration_seconds(&g));
+        assert_eq!(pricer.device().name, "MI100");
+        assert_eq!(pricer.precision(), Precision::Fp32);
+        // The Arc wrapper is itself a CostModel (delegation impl).
+        let rewrapped: &dyn CostModel = &pricer;
+        assert_eq!(rewrapped.iteration_seconds(&g), total_dyn);
+    }
+}

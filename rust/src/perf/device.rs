@@ -168,9 +168,28 @@ impl DeviceSpec {
         }
     }
 
-    /// Vector peak (non-GEMM ops gain little arithmetic speed from FP16;
-    /// the paper's 1.5-1.9x MP speedup of memory-bound ops comes from
-    /// halved *traffic*, which the byte model already captures).
+    /// Vector peak for the non-GEMM (EW/reduction/gather) ops.
+    ///
+    /// **Deliberately precision-invariant.** The `_prec` argument is
+    /// accepted (it is part of the roofline call shape) but ignored, for
+    /// two modeling reasons the paper supports:
+    ///
+    /// 1. The EW/reduction kernels are memory-latency bound (SS3.2.3),
+    ///    so their roofline time is set by the bandwidth term, not this
+    ///    compute term — the paper's observed 1.5-1.9x mixed-precision
+    ///    speedup of memory-bound ops comes entirely from halved
+    ///    *traffic*, which the per-op `elem_bytes` accounting already
+    ///    captures. Scaling the vector rate too would double-count.
+    /// 2. GPU vector units issue FP16 at roughly the FP32 rate unless
+    ///    kernels are hand-packed (rocBLAS/PyTorch EW kernels are not),
+    ///    so FP32-rate compute is the faithful floor on both terms.
+    ///
+    /// A platform whose vector engine genuinely retires packed FP16 at
+    /// 2x (and whose EW kernels exploit it) is a *measured* deviation
+    /// from this model — express it through the `CostModel` seam as a
+    /// [`CalibratedPricer`](crate::perf::CalibratedPricer) entry for the
+    /// affected EW categories rather than by changing this invariant
+    /// (which would silently drift every golden artifact).
     pub fn vector_flops(&self, _prec: Precision) -> f64 {
         self.fp32_vector_flops
     }
@@ -199,7 +218,8 @@ impl DeviceSpec {
     }
 
     /// Fingerprint over every field the roofline model reads — the
-    /// device component of `perf::CostCache`'s memo key. Two specs with
+    /// device component of `RooflinePricer::fingerprint()`, and through
+    /// it of `perf::CostCache`'s memo key. Two specs with
     /// equal fingerprints cost every op identically (the name alone
     /// would collide for a preset tweaked in place, so the numeric
     /// fields hash too). Stable only within one process, which is all a

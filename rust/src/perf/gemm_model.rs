@@ -47,6 +47,18 @@ pub fn gemm_mem_efficiency(g: &GemmDims) -> f64 {
     (min_dim / 128.0).min(1.0).max(0.25)
 }
 
+/// The (compute, memory) roofline terms of a GEMM at an explicit
+/// operand-byte count — the single source for the GEMM composition,
+/// shared by [`gemm_time_with_bytes`], [`is_memory_bound`], and the
+/// quantized pricer (`compress::quant::QuantPricer`), so the three
+/// never drift apart.
+pub fn gemm_components(g: &GemmDims, dev: &DeviceSpec, prec: Precision, bytes: u64) -> (f64, f64) {
+    let eff = gemm_efficiency(g);
+    let compute = g.flops() as f64 / (dev.matrix_flops(prec) * eff);
+    let memory = bytes as f64 / (dev.effective_bw() * gemm_mem_efficiency(g));
+    (compute, memory)
+}
+
 /// Roofline time for a GEMM on `dev`: max of compute at modeled
 /// efficiency and memory streaming of unique bytes.
 pub fn gemm_time(g: &GemmDims, dev: &DeviceSpec, prec: Precision) -> f64 {
@@ -57,18 +69,13 @@ pub fn gemm_time(g: &GemmDims, dev: &DeviceSpec, prec: Precision) -> f64 {
 /// paths (`compress::quant`) stream some operands at widths other than
 /// `prec.act_bytes()` (e.g. INT8 weights feeding an FP16 pipeline).
 pub fn gemm_time_with_bytes(g: &GemmDims, dev: &DeviceSpec, prec: Precision, bytes: u64) -> f64 {
-    let eff = gemm_efficiency(g);
-    let compute = g.flops() as f64 / (dev.matrix_flops(prec) * eff);
-    let memory = bytes as f64 / (dev.effective_bw() * gemm_mem_efficiency(g));
+    let (compute, memory) = gemm_components(g, dev, prec, bytes);
     compute.max(memory) + dev.launch_overhead
 }
 
 /// Is this GEMM memory-bound on `dev`? (Fig. 8's B-GEMM bars.)
 pub fn is_memory_bound(g: &GemmDims, dev: &DeviceSpec, prec: Precision) -> bool {
-    let eff = gemm_efficiency(g);
-    let compute = g.flops() as f64 / (dev.matrix_flops(prec) * eff);
-    let memory = g.bytes(prec.act_bytes()) as f64
-        / (dev.effective_bw() * gemm_mem_efficiency(g));
+    let (compute, memory) = gemm_components(g, dev, prec, g.bytes(prec.act_bytes()));
     memory > compute
 }
 

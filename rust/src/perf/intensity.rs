@@ -1,11 +1,16 @@
 //! Arithmetic-intensity / bandwidth-demand analysis (SS2.6, Fig. 7, Fig. 8).
+//!
+//! The op-level analyses price through the [`CostModel`] trait
+//! (`*_with` entry points); the historical `(run, &DeviceSpec)`
+//! wrappers construct a [`RooflinePricer`] and delegate.
 
 use crate::config::{Precision, RunConfig};
 use crate::model::gemm::table3;
 use crate::model::op::{Op, OpKind, Pass};
 use crate::model::IterationGraph;
+use crate::perf::cost_model::{CostModel, RooflinePricer};
 use crate::perf::device::DeviceSpec;
-use crate::perf::{estimate_op, gemm_model};
+use crate::perf::gemm_model;
 
 /// One Fig. 7 / Fig. 8 bar.
 #[derive(Debug, Clone)]
@@ -54,11 +59,18 @@ pub fn op_intensities(run: &RunConfig) -> Vec<IntensityRow> {
 
 /// [`op_intensities`] on an explicit device.
 pub fn op_intensities_on(run: &RunConfig, dev: &DeviceSpec) -> Vec<IntensityRow> {
+    op_intensities_with(run, &RooflinePricer::new(dev.clone(), run.precision))
+}
+
+/// [`op_intensities`] through an arbitrary pricer — the bandwidth-demand
+/// bars follow whatever backend (cached, calibrated, what-if) prices the
+/// graph, while ops/byte stays a pure property of the op inventory.
+pub fn op_intensities_with(run: &RunConfig, model: &dyn CostModel) -> Vec<IntensityRow> {
     let g = IterationGraph::build(run);
     let mut by_cat: std::collections::BTreeMap<String, (u64, u64, f64, bool)> =
         Default::default();
     for op in &g.ops {
-        let t = estimate_op(op, dev, run.precision);
+        let t = model.price_op(op);
         let e = by_cat
             .entry(format!("{:?}", op.category))
             .or_insert((0, 0, 0.0, false));
@@ -96,7 +108,7 @@ pub fn op_intensities_on(run: &RunConfig, dev: &DeviceSpec) -> Vec<IntensityRow>
 pub fn op_is_memory_bound(op: &Op, dev: &DeviceSpec, prec: Precision) -> bool {
     match &op.kind {
         OpKind::Gemm(g) => gemm_model::is_memory_bound(g, dev, prec),
-        _ => estimate_op(op, dev, prec).memory_bound,
+        _ => RooflinePricer::new(dev.clone(), prec).price_op(op).memory_bound,
     }
 }
 

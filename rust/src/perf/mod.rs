@@ -1,8 +1,17 @@
 //! Roofline performance model: converts the op graph's exact FLOP/byte
 //! counts into device-time estimates, reproducing the paper's MI100-scale
 //! runtime breakdowns without the MI100 (DESIGN.md SS3 substitution).
+//!
+//! All pricing flows through one API: the [`CostModel`] trait
+//! (DESIGN.md SSCost). [`RooflinePricer`] is the canonical analytic
+//! backend; [`Cached`] memoizes any backend through a shareable
+//! [`CostCache`] table; [`CalibratedPricer`] overlays measured
+//! per-op-category numbers from a JSON [`CalibrationTable`]. The
+//! `roofline` free functions remain as thin compatibility delegates
+//! over the same kernel.
 
 pub mod cost_cache;
+pub mod cost_model;
 pub mod device;
 pub mod gemm_model;
 pub mod intensity;
@@ -11,5 +20,6 @@ pub mod roofline;
 pub mod whatif;
 
 pub use cost_cache::CostCache;
+pub use cost_model::{Cached, CalibratedPricer, CalibrationTable, CostModel, RooflinePricer};
 pub use device::DeviceSpec;
 pub use roofline::{estimate_graph, estimate_op, OpTime};

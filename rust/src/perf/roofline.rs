@@ -1,4 +1,12 @@
 //! Roofline timing of ops and whole iteration graphs.
+//!
+//! The arithmetic here is the kernel of the canonical analytic backend,
+//! [`RooflinePricer`](crate::perf::RooflinePricer) (DESIGN.md SSCost);
+//! these free functions are kept as thin compatibility delegates for
+//! call sites that still hold a raw `(&DeviceSpec, Precision)` pair.
+//! New code should construct a pricer and go through the
+//! [`CostModel`](crate::perf::CostModel) trait, which composes with the
+//! caching/calibration/what-if decorators.
 
 use crate::config::Precision;
 use crate::model::op::{Op, OpKind};
@@ -14,7 +22,9 @@ pub struct OpTime {
     pub memory_bound: bool,
 }
 
-/// Time for a single invocation of `op` on `dev`.
+/// Time for a single invocation of `op` on `dev` — the analytic kernel
+/// [`RooflinePricer::price_op`](crate::perf::RooflinePricer) delegates
+/// to (one implementation, two spellings).
 pub fn estimate_op(op: &Op, dev: &DeviceSpec, prec: Precision) -> OpTime {
     let (seconds, memory_bound) = match &op.kind {
         OpKind::Gemm(g) => {

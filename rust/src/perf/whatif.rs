@@ -8,29 +8,39 @@
 //!   temporal locality.
 //! * **Near-memory computing (NMC)** — memory-bound EW/reduction ops run
 //!   at a multiple of HBM bandwidth (in-memory ALUs), GEMMs unchanged.
+//!   Exposed as the [`NmcPricer`] decorator on the
+//!   [`CostModel`](crate::perf::CostModel) trait, so it composes with
+//!   caching/calibration like every other pricing policy.
 //! * **In-network processing** — AllReduce executes in the switch: one
 //!   payload traversal instead of ring 2(D-1)/D, no end-host reduction.
+//!
+//! All graph-level entry points take `&dyn CostModel`; the historical
+//! `(RunConfig, &DeviceSpec)` wrappers construct a
+//! [`RooflinePricer`](crate::perf::RooflinePricer) and delegate.
 
 use crate::config::{Precision, RunConfig};
 use crate::dist::interconnect::LinkSpec;
 use crate::model::op::{LayerClass, Op, OpKind};
 use crate::model::IterationGraph;
+use crate::perf::cost_model::{CostModel, RooflinePricer};
 use crate::perf::device::DeviceSpec;
-use crate::perf::roofline;
+use crate::perf::roofline::OpTime;
 
 /// Iteration time with an LLC of `llc_bytes` capturing producer->consumer
 /// reuse between *adjacent* transformer ops (the paper's "retain data
-/// between producer and consumer layers").
+/// between producer and consumer layers"). Takes any [`CostModel`] for
+/// the baseline per-op pricing; the reuse adjustment is inherently a
+/// graph-order effect (it reads the *previous* op's output size), so it
+/// lives here rather than in a per-op decorator.
 pub fn iteration_seconds_with_llc(
     g: &IterationGraph,
-    dev: &DeviceSpec,
-    prec: Precision,
+    model: &dyn CostModel,
     llc_bytes: u64,
 ) -> f64 {
     let mut total = 0.0;
     let mut prev_output: u64 = 0; // bytes the previous op wrote
     for op in &g.ops {
-        let t_base = roofline::estimate_op(op, dev, prec);
+        let t_base = model.price_op(op);
         let mut seconds = t_base.seconds;
         // Optimizer ops never hit: their inputs were produced across the
         // whole backprop, long since evicted (paper SS5.2).
@@ -61,11 +71,12 @@ pub fn iteration_seconds_with_llc(
 /// Speedup of doubling/eightfolding the LLC relative to the baseline LLC.
 pub fn llc_scaling(run: &RunConfig, dev: &DeviceSpec, factors: &[u64]) -> Vec<(u64, f64)> {
     let g = IterationGraph::build(run);
-    let base = iteration_seconds_with_llc(&g, dev, run.precision, dev.llc_bytes);
+    let model = RooflinePricer::new(dev.clone(), run.precision);
+    let base = iteration_seconds_with_llc(&g, &model, dev.llc_bytes);
     factors
         .iter()
         .map(|&f| {
-            let t = iteration_seconds_with_llc(&g, dev, run.precision, dev.llc_bytes * f);
+            let t = iteration_seconds_with_llc(&g, &model, dev.llc_bytes * f);
             (f, base / t)
         })
         .collect()
@@ -81,35 +92,82 @@ pub fn lamb_llc_benefit(run: &RunConfig, dev: &DeviceSpec) -> f64 {
         .cloned()
         .collect();
     let sub = IterationGraph { ops: lamb_ops };
-    let small = iteration_seconds_with_llc(&sub, dev, run.precision, dev.llc_bytes);
-    let huge = iteration_seconds_with_llc(&sub, dev, run.precision, u64::MAX / 4);
+    let model = RooflinePricer::new(dev.clone(), run.precision);
+    let small = iteration_seconds_with_llc(&sub, &model, dev.llc_bytes);
+    let huge = iteration_seconds_with_llc(&sub, &model, u64::MAX / 4);
     1.0 - huge / small
 }
 
-/// NMC: memory-bound non-GEMM ops execute at `bw_multiple` x HBM
-/// bandwidth (ALUs in the memory, no on-chip round trip).
+/// Near-memory-computing decorator: memory-bound non-GEMM ops execute at
+/// `bw_multiple` x raw HBM bandwidth (ALUs in the memory, no on-chip
+/// round trip); GEMMs and compute-bound ops delegate to the inner
+/// pricer unchanged. Launch overhead is preserved — NMC moves the
+/// arithmetic, not the dispatch.
+#[derive(Debug, Clone)]
+pub struct NmcPricer<M: CostModel> {
+    inner: M,
+    /// Effective bandwidth multiple of the in-memory ALUs.
+    pub bw_multiple: f64,
+}
+
+impl<M: CostModel> NmcPricer<M> {
+    /// Decorate `inner` with `bw_multiple`x near-memory bandwidth.
+    pub fn new(inner: M, bw_multiple: f64) -> NmcPricer<M> {
+        NmcPricer { inner, bw_multiple }
+    }
+
+    /// The decorated pricer.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+}
+
+impl<M: CostModel> CostModel for NmcPricer<M> {
+    fn device(&self) -> &DeviceSpec {
+        self.inner.device()
+    }
+
+    fn precision(&self) -> Precision {
+        self.inner.precision()
+    }
+
+    fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        0x6e6d63u64.hash(&mut h); // "nmc"
+        self.inner.fingerprint().hash(&mut h);
+        self.bw_multiple.to_bits().hash(&mut h);
+        h.finish()
+    }
+
+    fn price_op(&self, op: &Op) -> OpTime {
+        let t = self.inner.price_op(op);
+        match &op.kind {
+            OpKind::Gemm(_) => t,
+            _ if t.memory_bound => {
+                // NMC sees raw HBM bandwidth scaled by the ALU multiple;
+                // launch overhead unchanged.
+                let dev = self.inner.device();
+                OpTime {
+                    seconds: op.bytes() as f64 / (dev.mem_bw * self.bw_multiple)
+                        + dev.launch_overhead,
+                    ..t
+                }
+            }
+            _ => t,
+        }
+    }
+}
+
+/// NMC iteration time over any baseline pricer (the [`NmcPricer`]
+/// decorator applied for one graph).
 pub fn iteration_seconds_with_nmc(
     g: &IterationGraph,
     dev: &DeviceSpec,
     prec: Precision,
     bw_multiple: f64,
 ) -> f64 {
-    g.ops
-        .iter()
-        .map(|op| {
-            let t = roofline::estimate_op(op, dev, prec);
-            let seconds = match &op.kind {
-                OpKind::Gemm(_) => t.seconds,
-                _ if t.memory_bound => {
-                    // NMC sees raw HBM bandwidth scaled by the ALU
-                    // multiple; launch overhead unchanged.
-                    op.bytes() as f64 / (dev.mem_bw * bw_multiple) + dev.launch_overhead
-                }
-                _ => t.seconds,
-            };
-            seconds * op.count as f64
-        })
-        .sum()
+    NmcPricer::new(RooflinePricer::new(dev.clone(), prec), bw_multiple).iteration_seconds(g)
 }
 
 /// SSCompress what-if: forward-pass (inference) seconds across the full
@@ -123,7 +181,7 @@ pub fn precision_scaling(run: &RunConfig, dev: &DeviceSpec) -> Vec<(&'static str
             let mut r = *run;
             r.precision = p;
             let g = IterationGraph::build_inference(&r);
-            (p.label(), roofline::iteration_seconds(&g, dev, p))
+            (p.label(), RooflinePricer::new(dev.clone(), p).iteration_seconds(&g))
         })
         .collect()
 }
@@ -171,12 +229,40 @@ mod tests {
     fn nmc_accelerates_memory_bound_share() {
         let dev = DeviceSpec::mi100();
         let g = IterationGraph::build(&run());
-        let base: f64 = crate::perf::roofline::iteration_seconds(&g, &dev, Precision::Fp32);
+        let base: f64 =
+            RooflinePricer::new(dev.clone(), Precision::Fp32).iteration_seconds(&g);
         let nmc = iteration_seconds_with_nmc(&g, &dev, Precision::Fp32, 4.0);
         // Non-GEMM is ~30% of runtime; 4x-ing its bandwidth should save
         // a visible but bounded chunk.
         assert!(nmc < base, "{nmc} !< {base}");
         assert!(nmc > 0.6 * base, "{nmc} vs {base}");
+    }
+
+    #[test]
+    fn nmc_decorator_touches_only_memory_bound_non_gemms() {
+        let dev = DeviceSpec::mi100();
+        let g = IterationGraph::build(&run());
+        let base = RooflinePricer::new(dev.clone(), Precision::Fp32);
+        let nmc = NmcPricer::new(base.clone(), 4.0);
+        let mut changed = 0;
+        for op in &g.ops {
+            let a = base.price_op(op);
+            let b = nmc.price_op(op);
+            match &op.kind {
+                OpKind::Gemm(_) => assert_eq!(a.seconds, b.seconds, "{}", op.name),
+                _ if a.memory_bound => {
+                    assert!(b.seconds < a.seconds, "{}", op.name);
+                    changed += 1;
+                }
+                _ => assert_eq!(a.seconds, b.seconds, "{}", op.name),
+            }
+        }
+        assert!(changed > 0);
+        assert_ne!(nmc.fingerprint(), base.fingerprint());
+        assert_ne!(
+            nmc.fingerprint(),
+            NmcPricer::new(base, 8.0).fingerprint()
+        );
     }
 
     #[test]

@@ -11,8 +11,7 @@ use crate::config::{Precision, RunConfig};
 use crate::model::op::{LayerClass, OpCategory};
 use crate::model::IterationGraph;
 use crate::perf::device::DeviceSpec;
-use crate::perf::roofline::estimate_op_total;
-use crate::perf::CostCache;
+use crate::perf::{CostModel, RooflinePricer};
 
 /// One timed entry (an op aggregate).
 #[derive(Debug, Clone)]
@@ -34,41 +33,32 @@ pub struct Timeline {
 }
 
 impl Timeline {
-    /// Model-estimated timeline on a device (the paper-scale path).
+    /// Model-estimated timeline on a device (the paper-scale path) —
+    /// delegate constructing a [`RooflinePricer`] at `run.precision`.
     pub fn modeled(run: &RunConfig, dev: &DeviceSpec) -> Timeline {
-        let g = IterationGraph::build(run);
-        Self::from_graph(run.label(), &g, dev, run.precision)
+        Self::modeled_with(run, &RooflinePricer::new(dev.clone(), run.precision))
     }
 
-    /// `modeled`, sharing a grid-wide `perf::CostCache` — identical
-    /// entries (pure memoization), used by grid drivers and the
-    /// `fig_scenario_grid` bench to stop re-pricing repeated shapes.
-    pub fn modeled_cached(run: &RunConfig, dev: &DeviceSpec, cost: &CostCache) -> Timeline {
+    /// `modeled` through an arbitrary [`CostModel`] — the grid drivers
+    /// pass a `Cached` pricer sharing one grid-wide table (identical
+    /// entries, pure memoization); calibrated/what-if backends plug in
+    /// the same way. The pricer's precision governs (graphs are built
+    /// from `run`, whose precision should match).
+    pub fn modeled_with(run: &RunConfig, model: &dyn CostModel) -> Timeline {
         let g = IterationGraph::build(run);
-        Self::from_graph_cached(run.label(), &g, dev, run.precision, cost)
+        Self::from_graph_with(run.label(), &g, model)
     }
 
+    /// Roofline-priced timeline for a prebuilt graph — delegate over
+    /// [`Timeline::from_graph_with`].
     pub fn from_graph(label: String, g: &IterationGraph, dev: &DeviceSpec,
                       prec: Precision) -> Timeline {
-        let entries = g
-            .ops
-            .iter()
-            .map(|op| TimedOp {
-                name: op.name.clone(),
-                layer: op.layer,
-                category: op.category,
-                seconds: estimate_op_total(op, dev, prec),
-                flops: op.total_flops(),
-                bytes: op.total_bytes(),
-                launches: op.count,
-            })
-            .collect();
-        Timeline { label, entries }
+        Self::from_graph_with(label, g, &RooflinePricer::new(dev.clone(), prec))
     }
 
-    /// `from_graph` with memoized op costing (bit-identical entries).
-    pub fn from_graph_cached(label: String, g: &IterationGraph, dev: &DeviceSpec,
-                             prec: Precision, cost: &CostCache) -> Timeline {
+    /// Timeline of a prebuilt graph through any [`CostModel`].
+    pub fn from_graph_with(label: String, g: &IterationGraph,
+                           model: &dyn CostModel) -> Timeline {
         let entries = g
             .ops
             .iter()
@@ -76,7 +66,7 @@ impl Timeline {
                 name: op.name.clone(),
                 layer: op.layer,
                 category: op.category,
-                seconds: cost.estimate_op_total(op, dev, prec),
+                seconds: model.price_op_total(op),
                 flops: op.total_flops(),
                 bytes: op.total_bytes(),
                 launches: op.count,

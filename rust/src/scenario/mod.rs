@@ -14,17 +14,19 @@
 //! same entries.
 //!
 //! Grids inside scenarios fan out over [`exec::run_grid`] (the one
-//! parallel executor); roofline-priced grids (the serve sweep and the
-//! fig09/fig10/depth timeline sweeps) additionally share one
-//! `perf::CostCache` per grid, while the compress grid's quantized
-//! costing keeps its own batch-level memo. A new experiment is a
-//! ~50-line registry entry that inherits parallelism, artifact
-//! emission, and (for roofline costing) the shared memoization for
-//! free.
+//! parallel executor); all op pricing flows through `perf::CostModel`
+//! pricers (DESIGN.md SSCost) — the serve sweep and the
+//! fig09/fig10/depth timeline sweeps share one `perf::CostCache` table
+//! per grid via the `Cached` decorator, the serve grid accepts a
+//! measured `CalibratedPricer` table (`--set cost_table=path`), and the
+//! compress grid prices through `QuantPricer` backends. A new
+//! experiment is a ~50-line registry entry that inherits parallelism,
+//! artifact emission, and the shared memoization for free.
 
 pub mod exec;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -34,7 +36,9 @@ use crate::config::{ModelConfig, Phase, Precision, RunConfig};
 use crate::model::gemm::table3;
 use crate::model::IterationGraph;
 use crate::perf::device::DeviceSpec;
-use crate::perf::{intensity, memory, roofline, whatif, CostCache};
+use crate::perf::{
+    intensity, memory, whatif, Cached, CalibrationTable, CostCache, CostModel, RooflinePricer,
+};
 use crate::profiler::{artifact, report, Timeline};
 use crate::serve::{self, SweepConfig};
 use crate::util::Json;
@@ -357,6 +361,50 @@ pub fn run_by_name(name: &str, pairs: &[(String, String)], strict: bool) -> Resu
     (spec.run)(&params)
 }
 
+/// The whole registry as one `util::Json` artifact — the machine-readable
+/// CLI surface (`bertprof list --json`). Tooling and CI diff this
+/// against a checked-in snapshot (`rust/tests/golden/cli_surface.json`),
+/// so adding/renaming a scenario or a parameter is a reviewed change.
+pub fn registry_json() -> Json {
+    Json::obj(vec![
+        ("surface", Json::str("bertprof_cli")),
+        (
+            "scenarios",
+            Json::arr(
+                registry()
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::str(s.name)),
+                            ("figure", Json::str(s.figure)),
+                            ("title", Json::str(s.title)),
+                            (
+                                "default_out",
+                                s.default_out.map(Json::str).unwrap_or(Json::Null),
+                            ),
+                            (
+                                "params",
+                                Json::arr(
+                                    s.params
+                                        .iter()
+                                        .map(|p| {
+                                            Json::obj(vec![
+                                                ("key", Json::str(p.key)),
+                                                ("default", Json::str(p.default)),
+                                                ("help", Json::str(p.help)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 // ------------------------------------------------------ figure bodies --
 
 fn run_fig04(p: &Params) -> Result<ScenarioOutput> {
@@ -435,10 +483,11 @@ fn run_fig08(p: &Params) -> Result<ScenarioOutput> {
 }
 
 /// The shared body of the three timeline sweeps (fig09/fig10/depth):
-/// the points fan out over the grid executor with one `CostCache`, so
-/// batch-independent shapes (every LAMB op, repeated GEMMs) are
-/// roofline-priced once per sweep — pure memoization, values identical
-/// to the serial path.
+/// the points fan out over the grid executor, each cell pricing through
+/// a `Cached` roofline pricer over one grid-wide `CostCache` table, so
+/// batch-independent shapes (every LAMB op, repeated GEMMs) are priced
+/// once per sweep — pure memoization, values identical to the serial
+/// path.
 fn sweep_timelines(
     p: &Params,
     dev: &DeviceSpec,
@@ -446,10 +495,14 @@ fn sweep_timelines(
     make: impl Fn(u64) -> RunConfig + Sync,
     relabel: impl Fn(u64) -> Option<String> + Sync,
 ) -> Result<Vec<Timeline>> {
-    let cost = CostCache::new();
+    let cost = Arc::new(CostCache::new());
     Ok(exec::run_grid(points, p.threads()?, |&x| {
         let r = make(x);
-        let mut t = Timeline::modeled_cached(&r, dev, &cost);
+        let pricer = Cached::with_table(
+            RooflinePricer::new(dev.clone(), r.precision),
+            Arc::clone(&cost),
+        );
+        let mut t = Timeline::modeled_with(&r, &pricer);
         if let Some(label) = relabel(x) {
             t.label = label;
         }
@@ -681,7 +734,7 @@ fn run_whatif(p: &Params) -> Result<ScenarioOutput> {
     ));
 
     text.push_str("\n## SS5.2 — near-memory computing (memory-bound ops at k x HBM bw)\n");
-    let base = roofline::iteration_seconds(&g, &dev, run.precision);
+    let base = RooflinePricer::new(dev.clone(), run.precision).iteration_seconds(&g);
     for k in [2.0, 4.0, 8.0] {
         let t = whatif::iteration_seconds_with_nmc(&g, &dev, run.precision, k);
         text.push_str(&format!(
@@ -724,6 +777,11 @@ const SWEEP_PARAMS_SERVE: &[ParamSpec] = &[
     ParamSpec { key: "max-batches", default: "", help: "max-batch grid (1,8,32)" },
     ParamSpec { key: "seq-max", default: "", help: "single seq-max point" },
     ParamSpec { key: "seq-maxes", default: "", help: "seq-max grid (128)" },
+    ParamSpec {
+        key: "cost_table",
+        default: "",
+        help: "calibration-table JSON path (DESIGN.md SSCost; default: analytic)",
+    },
     THREADS_PARAM,
 ];
 
@@ -826,6 +884,12 @@ fn run_serve(p: &Params) -> Result<ScenarioOutput> {
         ("", _) => cfg.seq_maxes = p.get_u64_list("seq-maxes")?,
         _ => cfg.seq_maxes = vec![p.get_u64("seq-max")?],
     }
+    match p.get("cost_table") {
+        "" => {}
+        path => {
+            cfg.calibration = Some(CalibrationTable::load(std::path::Path::new(path))?);
+        }
+    }
     let (reports, cost) = serve::run_sweep_cached(&cfg, p.threads()?);
 
     let mut text = format!(
@@ -836,6 +900,12 @@ fn run_serve(p: &Params) -> Result<ScenarioOutput> {
         cfg.slo * 1e3,
         cfg.seed
     );
+    if let Some(t) = &cfg.calibration {
+        text.push_str(&format!(
+            "calibrated pricing: {} op-category override(s) from the cost table\n",
+            t.scale.len()
+        ));
+    }
     let cols: &[(&str, usize)] = &[
         ("config", 22),
         ("rate/s", 9),
@@ -1092,5 +1162,58 @@ mod tests {
     fn load_must_stay_positive() {
         let err = run_by_name("serve", &pairs(&[("load", "-0.5")]), true).unwrap_err();
         assert!(err.to_string().contains("--load must be"), "{err}");
+    }
+
+    #[test]
+    fn registry_json_mirrors_the_registry() {
+        let j = registry_json();
+        assert_eq!(j.get("surface").unwrap().as_str().unwrap(), "bertprof_cli");
+        let scenarios = j.get("scenarios").unwrap().as_arr().unwrap();
+        let reg = registry();
+        assert_eq!(scenarios.len(), reg.len());
+        for (row, spec) in scenarios.iter().zip(&reg) {
+            assert_eq!(row.get("name").unwrap().as_str().unwrap(), spec.name);
+            assert_eq!(
+                row.get("params").unwrap().as_arr().unwrap().len(),
+                spec.params.len(),
+                "{}",
+                spec.name
+            );
+        }
+        // Round-trips through the parser (the CI diff path).
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed.to_string(), j.to_string());
+    }
+
+    #[test]
+    fn serve_cost_table_param_loads_and_validates() {
+        let dir = std::env::temp_dir().join("bertprof_cost_table_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.json");
+        std::fs::write(&good, r#"{"scale":{"FC-GEMM":1.5}}"#).unwrap();
+        let p = pairs(&[
+            ("requests", "150"),
+            ("max-batches", "1"),
+            ("threads", "2"),
+            ("cost_table", good.to_str().unwrap()),
+        ]);
+        let out = run_by_name("serve", &p, true).unwrap();
+        assert!(out.text.contains("calibrated pricing"), "{}", out.text);
+        assert!(out.artifact.get("cost_table").is_some());
+        // And the calibrated grid really prices differently.
+        let base = run_by_name(
+            "serve",
+            &pairs(&[("requests", "150"), ("max-batches", "1"), ("threads", "2")]),
+            true,
+        )
+        .unwrap();
+        assert!(base.artifact.get("cost_table").is_none());
+        assert_ne!(out.artifact.to_string(), base.artifact.to_string());
+
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, r#"{"scale":{"NotACategory":1.0}}"#).unwrap();
+        let p = pairs(&[("cost_table", bad.to_str().unwrap())]);
+        let err = run_by_name("serve", &p, true).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown op category"), "{err:#}");
     }
 }

@@ -12,13 +12,14 @@
 //! MLM/NSP pre-training heads.
 
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::Arc;
 
 use crate::config::{ModelConfig, Phase, Precision, RunConfig};
 use crate::model::op::{LayerClass, Pass};
 use crate::model::{output, IterationGraph};
 use crate::perf::device::DeviceSpec;
-use crate::perf::CostCache;
+use crate::perf::{Cached, CostCache, CostModel, RooflinePricer};
 use crate::util::buckets;
 
 /// What the dynamic-batching simulator needs from a latency model: a
@@ -98,36 +99,55 @@ pub fn forward_graph(run: &RunConfig, head: ServeHead) -> IterationGraph {
     g
 }
 
-/// Memoized roofline latency of forward batches on one device.
+/// Memoized latency of forward batches on one device.
 ///
 /// The simulator asks for thousands of batch latencies per run; padding
 /// sequence lengths up to a bucket multiple (as a real serving stack
 /// pads to its compiled shape set) collapses them onto a small grid of
-/// `(batch, padded_seq)` keys, each costed once via
-/// `perf::roofline::iteration_seconds` over the forward graph.
-#[derive(Debug, Clone)]
+/// `(batch, padded_seq)` keys, each costed once through the model's
+/// [`CostModel`] pricer (by default a [`Cached`] [`RooflinePricer`];
+/// any backend — calibrated, quantized, what-if — plugs in via
+/// [`LatencyModel::with_pricer`] without touching the simulator).
+#[derive(Clone)]
 pub struct LatencyModel {
     /// Served model hyperparameters (Table 2).
     pub model: ModelConfig,
-    /// Numeric precision of the forward pass.
+    /// Numeric precision of the forward pass (must match the pricer's).
     pub precision: Precision,
-    /// Roofline device preset the batches run on.
+    /// Roofline device preset the batches run on (must match the
+    /// pricer's).
     pub device: DeviceSpec,
     /// Output head variant.
     pub head: ServeHead,
     /// Sequence-length padding granularity (compiled-shape bucket).
     pub seq_bucket: u64,
     cache: HashMap<(u64, u64), f64>,
-    /// Per-op roofline memo, sharable across a whole sweep grid (every
-    /// scenario at the same (device, precision) prices identical padded
-    /// shapes; a shared cache collapses them to one costing each).
-    cost: Arc<CostCache>,
+    /// The op pricer every batch is costed through. Shared by `Arc` so
+    /// a whole sweep grid can run one memo table (every scenario at the
+    /// same (device, precision) prices identical padded shapes; a
+    /// shared cache collapses them to one costing each).
+    pricer: Arc<dyn CostModel>,
+}
+
+impl fmt::Debug for LatencyModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LatencyModel")
+            .field("model", &self.model)
+            .field("precision", &self.precision)
+            .field("device", &self.device.name)
+            .field("head", &self.head)
+            .field("seq_bucket", &self.seq_bucket)
+            .field("cached_points", &self.cache.len())
+            .field("pricer_fingerprint", &self.pricer.fingerprint())
+            .finish()
+    }
 }
 
 impl LatencyModel {
-    /// A latency model with the default 32-token shape bucket and the
-    /// SQuAD serving head.
+    /// A latency model with the default 32-token shape bucket, the
+    /// SQuAD serving head, and a privately-cached analytic pricer.
     pub fn new(model: ModelConfig, precision: Precision, device: DeviceSpec) -> LatencyModel {
+        let pricer = Arc::new(Cached::new(RooflinePricer::new(device.clone(), precision)));
         LatencyModel {
             model,
             precision,
@@ -135,15 +155,39 @@ impl LatencyModel {
             head: ServeHead::Squad,
             seq_bucket: 32,
             cache: HashMap::new(),
-            cost: Arc::new(CostCache::new()),
+            pricer,
         }
     }
 
-    /// Share a grid-wide [`CostCache`] (pure memoization: batch
-    /// latencies are bit-identical with or without sharing).
-    pub fn with_cost_cache(mut self, cost: Arc<CostCache>) -> LatencyModel {
-        self.cost = cost;
+    /// Swap in an arbitrary [`CostModel`] backend (calibrated, what-if,
+    /// pre-shared cache...). The pricer's device/precision must match
+    /// the model's — graphs are built at `self.precision` and priced
+    /// verbatim by the pricer. Clears the batch memo.
+    pub fn with_pricer(mut self, pricer: Arc<dyn CostModel>) -> LatencyModel {
+        assert_eq!(
+            pricer.precision(),
+            self.precision,
+            "pricer precision must match the latency model's"
+        );
+        assert_eq!(
+            pricer.device().cost_fingerprint(),
+            self.device.cost_fingerprint(),
+            "pricer device must match the latency model's"
+        );
+        self.pricer = pricer;
+        self.cache.clear();
         self
+    }
+
+    /// Share a grid-wide [`CostCache`] table under the default analytic
+    /// backend (pure memoization: batch latencies are bit-identical
+    /// with or without sharing).
+    pub fn with_cost_cache(self, cost: Arc<CostCache>) -> LatencyModel {
+        let pricer = Arc::new(Cached::with_table(
+            RooflinePricer::new(self.device.clone(), self.precision),
+            cost,
+        ));
+        self.with_pricer(pricer)
     }
 
     /// Override the padding bucket (1 = exact per-length shapes).
@@ -165,8 +209,9 @@ impl LatencyModel {
         buckets::pad_to_bucket(seq_len, self.seq_bucket, self.model.max_seq_len)
     }
 
-    /// Roofline seconds for one forward batch of `batch` requests padded
-    /// to `seq_len` tokens (memoized per `(batch, padded_seq)`).
+    /// Seconds for one forward batch of `batch` requests padded to
+    /// `seq_len` tokens (memoized per `(batch, padded_seq)`), priced
+    /// through the model's [`CostModel`].
     pub fn batch_seconds(&mut self, batch: u64, seq_len: u64) -> f64 {
         let key = (batch.max(1), self.padded_seq(seq_len));
         if let Some(&t) = self.cache.get(&key) {
@@ -174,9 +219,9 @@ impl LatencyModel {
         }
         let run = inference_run(self.model, key.0, key.1, self.precision);
         let g = forward_graph(&run, self.head);
-        // CostCache::iteration_seconds mirrors roofline::iteration_seconds
-        // op-for-op, so the value is bit-identical to the uncached path.
-        let t = self.cost.iteration_seconds(&g, &self.device, self.precision);
+        // Cached pricing mirrors the bare backend op-for-op, so the
+        // value is bit-identical to the uncached path.
+        let t = self.pricer.iteration_seconds(&g);
         self.cache.insert(key, t);
         t
     }

@@ -21,7 +21,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{ModelConfig, Precision};
 use crate::perf::device::DeviceSpec;
-use crate::perf::CostCache;
+use crate::perf::{Cached, CalibratedPricer, CalibrationTable, CostCache, CostModel, RooflinePricer};
 use crate::scenario::exec;
 use crate::serve::graph::{BatchCost, LatencyModel};
 use crate::serve::sim::{BatchPolicy, SimReport, Simulator, Workload};
@@ -52,6 +52,11 @@ pub struct SweepConfig {
     /// Offered load as a fraction of each scenario's modeled saturation
     /// rate (0.65 = comfortably loaded, >1 = overload).
     pub load: f64,
+    /// Optional per-op-category calibration overrides (the
+    /// SSHardware-Adaptation seam: `bertprof run serve --set
+    /// cost_table=path`). `None` keeps the pure analytic backend — and
+    /// the default artifact byte-identical to the pre-`CostModel` one.
+    pub calibration: Option<CalibrationTable>,
 }
 
 impl SweepConfig {
@@ -69,17 +74,46 @@ impl SweepConfig {
             slo: 0.100,
             max_wait: 0.010,
             load: 0.65,
+            calibration: None,
         }
+    }
+
+    /// The pricer one grid point runs on: the analytic backend wrapped
+    /// in this config's calibration (when any) and memoized over
+    /// `table`. A fresh private table prices standalone scenarios; the
+    /// sweep passes one grid-wide table.
+    pub fn pricer(
+        &self,
+        dev: &DeviceSpec,
+        prec: Precision,
+        table: Arc<CostCache>,
+    ) -> Arc<dyn CostModel> {
+        let base = RooflinePricer::new(dev.clone(), prec);
+        match &self.calibration {
+            None => Arc::new(Cached::with_table(base, table)),
+            Some(t) => Arc::new(Cached::with_table(
+                CalibratedPricer::new(base, t.clone()),
+                table,
+            )),
+        }
+    }
+
+    /// A latency model for one (device, precision) point under this
+    /// config's calibration (private cost table).
+    fn latency_model(&self, dev: &DeviceSpec, prec: Precision) -> LatencyModel {
+        LatencyModel::new(self.model, prec, dev.clone())
+            .with_pricer(self.pricer(dev, prec, Arc::new(CostCache::new())))
     }
 
     /// Materialize the grid in deterministic (device, precision,
     /// max-batch, seq-max) order, deriving each scenario's offered rate
-    /// from its own saturation point.
+    /// from its own saturation point (calibration-aware: a calibrated
+    /// pricer shifts saturation, hence the offered load).
     pub fn scenarios(&self) -> Vec<Scenario> {
         let mut out = Vec::new();
         for dev in &self.devices {
             for &prec in &self.precisions {
-                let mut lm = LatencyModel::new(self.model, prec, dev.clone());
+                let mut lm = self.latency_model(dev, prec);
                 for &max_batch in &self.max_batches {
                     for &seq_max in &self.seq_maxes {
                         let rate = self.load * lm.saturation_rate(max_batch, seq_max);
@@ -132,11 +166,12 @@ pub fn run_scenario(cfg: &SweepConfig, scenario: &Scenario) -> SimReport {
     run_scenario_with(cfg, scenario, &Arc::new(CostCache::new()))
 }
 
-/// `run_scenario` against a shared grid-wide roofline memo. Pure
+/// `run_scenario` against a shared grid-wide cost table. Pure
 /// memoization: the report is bit-identical to `run_scenario`'s.
 fn run_scenario_with(cfg: &SweepConfig, scenario: &Scenario, cost: &Arc<CostCache>) -> SimReport {
+    let pricer = cfg.pricer(&scenario.device, scenario.precision, Arc::clone(cost));
     let mut lm = LatencyModel::new(cfg.model, scenario.precision, scenario.device.clone())
-        .with_cost_cache(Arc::clone(cost));
+        .with_pricer(pricer);
     let trace = Workload::poisson(scenario.rate, cfg.requests, cfg.seed)
         .with_seq_range((scenario.seq_max / 8).max(1), scenario.seq_max)
         .generate();
@@ -190,9 +225,12 @@ pub fn report_json(r: &SimReport) -> Json {
 
 /// The whole sweep as one JSON artifact (deterministic for a fixed
 /// seed: BTreeMap-ordered keys, grid-ordered scenarios, and a fully
-/// deterministic simulator underneath).
+/// deterministic simulator underneath). A calibrated sweep additionally
+/// records its `cost_table`, so the artifact is self-describing; the
+/// default (uncalibrated) artifact carries the exact historical key
+/// set, which the golden snapshots pin.
 pub fn sweep_json(cfg: &SweepConfig, reports: &[SimReport]) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("study", Json::str("serve_latency_throughput")),
         (
             "model",
@@ -210,7 +248,11 @@ pub fn sweep_json(cfg: &SweepConfig, reports: &[SimReport]) -> Json {
         ("max_wait_ms", Json::num(cfg.max_wait * 1e3)),
         ("load", Json::num(cfg.load)),
         ("scenarios", Json::arr(reports.iter().map(report_json).collect())),
-    ])
+    ];
+    if let Some(t) = &cfg.calibration {
+        pairs.push(("cost_table", t.to_json()));
+    }
+    Json::obj(pairs)
 }
 
 /// Write the sweep artifact to `path` (parent directories created).
@@ -297,6 +339,36 @@ mod tests {
         assert_eq!(again.p99, reports[0].p99);
         assert_eq!(cost.misses(), misses, "warm re-run must not re-price");
         assert!(cost.hits() > hits);
+    }
+
+    #[test]
+    fn calibration_changes_rates_and_tags_the_artifact() {
+        let mut cfg = small_cfg();
+        cfg.requests = 200;
+        let base = sweep_json(&cfg, &run_sweep(&cfg, 2));
+        cfg.calibration = Some(CalibrationTable::empty().with("FC-GEMM", 1.25));
+        let cal = sweep_json(&cfg, &run_sweep(&cfg, 2));
+        assert!(base.get("cost_table").is_none());
+        assert!(cal.get("cost_table").is_some());
+        // Slower GEMMs -> lower saturation -> lower offered rate.
+        let rate = |j: &Json| {
+            j.get("scenarios")
+                .unwrap()
+                .idx(0)
+                .unwrap()
+                .get("arrival_rate_rps")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert!(rate(&cal) < rate(&base), "{} !< {}", rate(&cal), rate(&base));
+        // An identity table reprices nothing: scenarios byte-identical.
+        cfg.calibration = Some(CalibrationTable::empty());
+        let ident = sweep_json(&cfg, &run_sweep(&cfg, 2));
+        assert_eq!(
+            ident.get("scenarios").unwrap().to_string(),
+            base.get("scenarios").unwrap().to_string()
+        );
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Decorator laws for the one `CostModel` API (ISSUE 5 acceptance):
+//!
+//! * `Cached<RooflinePricer>` is op-for-op bit-identical to the bare
+//!   `RooflinePricer` across every registry scenario's graphs;
+//! * an identity `CalibratedPricer` (empty table) matches the analytic
+//!   backend exactly;
+//! * the quantized and NMC decorators match their historical
+//!   free-function spellings exactly;
+//! * one shared `CostCache` table spans all of the above without
+//!   cross-contamination (fingerprints keep pricers apart).
+
+use std::sync::Arc;
+
+use bertprof::compress::quant::{self, QuantConfig, QuantPricer};
+use bertprof::compress::{CompressSweepConfig, CompressedLatencyModel};
+use bertprof::config::{ModelConfig, Phase, Precision, RunConfig};
+use bertprof::model::IterationGraph;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::perf::whatif::{self, NmcPricer};
+use bertprof::perf::{roofline, Cached, CalibratedPricer, CostCache, CostModel, RooflinePricer};
+use bertprof::serve::{forward_graph, inference_run, BatchCost, ServeHead};
+
+/// Every graph shape the scenario registry prices, labeled: the Fig. 4
+/// config set (fig04/fig05/fig08 and the memory/whatif bases), the
+/// fig09 batch points, the fig10 width points, the depth points, the
+/// fig12 sharded graph, and the serve grid's forward graphs (serve and
+/// the dense compress rungs).
+fn registry_graphs() -> Vec<(String, IterationGraph, Precision)> {
+    let mut out = Vec::new();
+    // fig04/fig05/fig08/memory/whatif: the figure-4 config set.
+    for run in RunConfig::figure4_set() {
+        out.push((run.label(), IterationGraph::build(&run), run.precision));
+    }
+    // fig09 batches / fig10 widths / depth points (FP32 grids).
+    for b in [4u64, 8, 16, 32] {
+        let run = RunConfig::new(
+            ModelConfig::bert_large().with_batch(b),
+            Phase::Phase1,
+            Precision::Fp32,
+        );
+        out.push((format!("fig09 B{b}"), IterationGraph::build(&run), run.precision));
+    }
+    for w in [512u64, 768, 1024, 1536, 2048] {
+        let run = RunConfig::new(
+            ModelConfig::bert_large().with_width(w),
+            Phase::Phase1,
+            Precision::Fp32,
+        );
+        out.push((format!("fig10 d{w}"), IterationGraph::build(&run), run.precision));
+    }
+    for n in [6u64, 12, 24, 48] {
+        let run = RunConfig::new(
+            ModelConfig::bert_large().with_layers(n),
+            Phase::Phase1,
+            Precision::Fp32,
+        );
+        out.push((format!("depth N{n}"), IterationGraph::build(&run), run.precision));
+    }
+    // fig12: the sharded-optimizer graph the dist models price.
+    let run16 = RunConfig::new(
+        ModelConfig::bert_large().with_batch(16),
+        Phase::Phase1,
+        Precision::Fp32,
+    );
+    out.push((
+        "fig12 sharded-8".into(),
+        IterationGraph::build_sharded(&run16, 8, 1),
+        run16.precision,
+    ));
+    // serve / compress dense rungs: forward graphs at the padded shapes.
+    for prec in [Precision::Fp32, Precision::Mixed, Precision::Int8] {
+        for (b, s) in [(1u64, 32u64), (8, 128), (32, 128)] {
+            let run = inference_run(ModelConfig::bert_large(), b, s, prec);
+            out.push((
+                format!("serve {} B{b} n{s}", prec.label()),
+                forward_graph(&run, ServeHead::Squad),
+                prec,
+            ));
+        }
+    }
+    out
+}
+
+#[test]
+fn cached_roofline_is_op_for_op_identical_across_every_registry_graph() {
+    let table = Arc::new(CostCache::new());
+    for dev in [DeviceSpec::mi100(), DeviceSpec::v100()] {
+        for (label, g, prec) in registry_graphs() {
+            let bare = RooflinePricer::new(dev.clone(), prec);
+            let cached = Cached::with_table(bare.clone(), Arc::clone(&table));
+            for op in &g.ops {
+                let a = bare.price_op(op);
+                let b = cached.price_op(op);
+                assert_eq!(a.seconds, b.seconds, "{} {} {}", dev.name, label, op.name);
+                assert_eq!(
+                    a.memory_bound, b.memory_bound,
+                    "{} {} {}",
+                    dev.name, label, op.name
+                );
+            }
+            assert_eq!(
+                bare.iteration_seconds(&g),
+                cached.iteration_seconds(&g),
+                "{} {label}",
+                dev.name
+            );
+        }
+    }
+    // The grid genuinely exercised the memo (repeated shapes hit).
+    assert!(table.hits() > table.misses(), "{} hits {} misses", table.hits(), table.misses());
+}
+
+#[test]
+fn identity_calibrated_pricer_matches_the_analytic_backend() {
+    for dev in [DeviceSpec::mi100(), DeviceSpec::a100()] {
+        for (label, g, prec) in registry_graphs() {
+            let bare = RooflinePricer::new(dev.clone(), prec);
+            let ident = CalibratedPricer::identity(bare.clone());
+            for op in &g.ops {
+                assert_eq!(
+                    bare.price_op(op).seconds,
+                    ident.price_op(op).seconds,
+                    "{} {} {}",
+                    dev.name,
+                    label,
+                    op.name
+                );
+            }
+            assert_eq!(bare.iteration_seconds(&g), ident.iteration_seconds(&g));
+            // And cached-calibrated-identity too (two decorators deep).
+            let stacked = Cached::new(CalibratedPricer::identity(bare.clone()));
+            assert_eq!(bare.iteration_seconds(&g), stacked.iteration_seconds(&g));
+        }
+    }
+}
+
+#[test]
+fn quant_pricer_matches_the_quant_free_functions() {
+    let dev = DeviceSpec::mi100();
+    for (q, prec) in [
+        (QuantConfig::weight_only(), Precision::Mixed),
+        (QuantConfig::int8(), Precision::Int8),
+    ] {
+        for (b, s) in [(1u64, 32u64), (8, 128), (32, 128)] {
+            let run = inference_run(ModelConfig::bert_large(), b, s, prec);
+            let g = forward_graph(&run, ServeHead::Squad);
+            let pricer = QuantPricer::new(RooflinePricer::new(dev.clone(), prec), q);
+            for op in &g.ops {
+                assert_eq!(
+                    quant::op_seconds(op, &dev, &q),
+                    pricer.price_op(op).seconds,
+                    "{} B{b} n{s} {}",
+                    q.label(),
+                    op.name
+                );
+            }
+            assert_eq!(
+                quant::iteration_seconds(&g, &dev, &q),
+                pricer.iteration_seconds(&g)
+            );
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "exec precision")]
+fn quant_pricer_rejects_a_mismatched_inner_precision() {
+    let _ = QuantPricer::new(
+        RooflinePricer::new(DeviceSpec::mi100(), Precision::Fp32),
+        QuantConfig::int8(),
+    );
+}
+
+#[test]
+fn nmc_pricer_matches_the_whatif_free_function() {
+    let dev = DeviceSpec::mi100();
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32);
+    let g = IterationGraph::build(&run);
+    for k in [2.0, 4.0, 8.0] {
+        let pricer = NmcPricer::new(RooflinePricer::new(dev.clone(), run.precision), k);
+        assert_eq!(
+            whatif::iteration_seconds_with_nmc(&g, &dev, run.precision, k),
+            pricer.iteration_seconds(&g)
+        );
+    }
+}
+
+#[test]
+fn compressed_latency_model_still_prices_through_the_quant_backend() {
+    // The subsystem wrapper and the raw decorator agree — the sweep's
+    // simulator sees exactly the trait's numbers.
+    let cfg = CompressSweepConfig::bert_large_default();
+    let dev = DeviceSpec::mi100();
+    for variant in &cfg.variants {
+        let mut lm = CompressedLatencyModel::new(cfg.model, variant, dev.clone());
+        let pricer = quant::pricer(variant.precision, &dev);
+        for (b, s) in [(1u64, 32u64), (8, 128), (32, 128)] {
+            let run = inference_run(cfg.model, b, lm.padded_seq(s), variant.precision.exec_precision());
+            let g = forward_graph(&run, ServeHead::Squad);
+            let g = variant.prune.apply(&run.model, &g);
+            assert_eq!(
+                lm.batch_seconds(b, s),
+                pricer.iteration_seconds(&g),
+                "{} B{b} n{s}",
+                variant.name
+            );
+        }
+    }
+}
+
+#[test]
+fn one_shared_table_keeps_distinct_pricers_apart() {
+    // Roofline, calibrated, quantized, and NMC pricers all share one
+    // table; every combination still prices exactly like its bare twin.
+    let table = Arc::new(CostCache::new());
+    let dev = DeviceSpec::mi100();
+    let run = inference_run(ModelConfig::bert_large(), 8, 128, Precision::Int8);
+    let g = forward_graph(&run, ServeHead::Squad);
+
+    let base = RooflinePricer::new(dev.clone(), Precision::Int8);
+    let cal = CalibratedPricer::new(
+        base.clone(),
+        bertprof::perf::CalibrationTable::empty().with("FC-GEMM", 1.3),
+    );
+    let qp = QuantPricer::new(base.clone(), QuantConfig::int8());
+    let nmc = NmcPricer::new(base.clone(), 4.0);
+
+    let want_base = base.iteration_seconds(&g);
+    let want_cal = cal.iteration_seconds(&g);
+    let want_q = qp.iteration_seconds(&g);
+    let want_nmc = nmc.iteration_seconds(&g);
+    assert!(want_cal > want_base && want_q != want_base && want_nmc < want_base);
+
+    // Interleave cached pricing over the one table, twice (cold + warm).
+    for _ in 0..2 {
+        assert_eq!(
+            Cached::with_table(base.clone(), Arc::clone(&table)).iteration_seconds(&g),
+            want_base
+        );
+        assert_eq!(
+            Cached::with_table(cal.clone(), Arc::clone(&table)).iteration_seconds(&g),
+            want_cal
+        );
+        assert_eq!(
+            Cached::with_table(qp.clone(), Arc::clone(&table)).iteration_seconds(&g),
+            want_q
+        );
+        assert_eq!(
+            Cached::with_table(nmc.clone(), Arc::clone(&table)).iteration_seconds(&g),
+            want_nmc
+        );
+    }
+    assert!(table.hits() > 0);
+}
+
+#[test]
+fn roofline_free_functions_are_faithful_delegates() {
+    // The compatibility surface prices exactly like the canonical
+    // pricer (one kernel, two spellings).
+    let dev = DeviceSpec::v100();
+    let run = RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Mixed);
+    let g = IterationGraph::build(&run);
+    let pricer = RooflinePricer::new(dev.clone(), run.precision);
+    assert_eq!(
+        roofline::iteration_seconds(&g, &dev, run.precision),
+        pricer.iteration_seconds(&g)
+    );
+    let graph_a = roofline::estimate_graph(&g, &dev, run.precision);
+    let graph_b = pricer.price_graph(&g);
+    assert_eq!(graph_a.len(), graph_b.len());
+    for ((oa, ta), (ob, tb)) in graph_a.iter().zip(&graph_b) {
+        assert_eq!(oa.name, ob.name);
+        assert_eq!(ta, tb);
+    }
+}

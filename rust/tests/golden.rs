@@ -21,6 +21,7 @@ use std::path::PathBuf;
 
 use bertprof::compress::{self, CompressPrecision, CompressSweepConfig, CompressVariant};
 use bertprof::perf::device::DeviceSpec;
+use bertprof::perf::CalibrationTable;
 use bertprof::profiler::artifact;
 use bertprof::serve::{self, SweepConfig};
 use bertprof::util::Json;
@@ -180,6 +181,57 @@ fn golden_serve_sweep() {
     let cfg = serve_golden_cfg();
     let reports = serve::run_sweep(&cfg, 2);
     check("serve_sweep", serve::sweep_json(&cfg, &reports));
+}
+
+/// The checked-in example calibration table (the SSHardware-Adaptation
+/// seam's documentation artifact).
+fn example_cost_table() -> CalibrationTable {
+    let path = golden_dir()
+        .parent()
+        .and_then(|p| p.parent())
+        .and_then(|p| p.parent())
+        .expect("repo root")
+        .join("examples/cost_table_mi100.json");
+    CalibrationTable::load(&path).expect("example calibration table loads")
+}
+
+#[test]
+fn golden_serve_calibrated_sweep() {
+    // The ISSUE 5 acceptance artifact: `bertprof run serve --set
+    // requests=1000 --set max-batches=1,8 --set
+    // cost_table=examples/cost_table_mi100.json` — a *non-identity*
+    // calibration, mirror-validated (golden_mirror.py regenerates this
+    // snapshot through its calibration hook).
+    let mut cfg = serve_golden_cfg();
+    cfg.calibration = Some(example_cost_table());
+    let reports = serve::run_sweep(&cfg, 2);
+    check("serve_calibrated", serve::sweep_json(&cfg, &reports));
+}
+
+#[test]
+fn golden_serve_calibrated_matches_the_registry_path() {
+    // The CLI spelling emits exactly the golden-gated calibrated bytes.
+    let out = bertprof::scenario::run_by_name(
+        "serve",
+        &[
+            ("requests".into(), "1000".into()),
+            ("max-batches".into(), "1,8".into()),
+            ("cost_table".into(), "examples/cost_table_mi100.json".into()),
+            ("threads".into(), "2".into()),
+        ],
+        true,
+    )
+    .expect("calibrated serve runs");
+    check("serve_calibrated", out.artifact);
+}
+
+#[test]
+fn golden_cli_surface() {
+    // `bertprof list --json` — the machine-readable CLI surface. A
+    // mismatch means a scenario or parameter changed without its
+    // snapshot (regenerate with UPDATE_GOLDEN=1 and review like any
+    // interface change).
+    check("cli_surface", bertprof::scenario::registry_json());
 }
 
 #[test]

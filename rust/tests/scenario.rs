@@ -4,11 +4,13 @@
 //! modeled time anywhere, and the one executor keeps every grid
 //! deterministic across worker counts.
 
+use std::sync::Arc;
+
 use bertprof::compress::{self, CompressPrecision, CompressSweepConfig, CompressVariant};
 use bertprof::config::{Precision, RunConfig};
 use bertprof::model::IterationGraph;
 use bertprof::perf::device::DeviceSpec;
-use bertprof::perf::{roofline, CostCache};
+use bertprof::perf::{roofline, Cached, CostCache, CostModel, RooflinePricer};
 use bertprof::profiler::{artifact, Timeline};
 use bertprof::scenario::{self, exec};
 use bertprof::serve::{self, SweepConfig};
@@ -75,9 +77,10 @@ fn run_compress_is_byte_identical_to_the_pre_refactor_sweep() {
 
 #[test]
 fn cost_cache_changes_no_modeled_time_across_the_figure_grid() {
-    // ISSUE acceptance: "a test proves CostCache changes no modeled
-    // time" — every fig04 config on every preset, op for op.
-    let cost = CostCache::new();
+    // ISSUE acceptance: "a test proves the cache changes no modeled
+    // time" — every fig04 config on every preset, op for op, with one
+    // shared table spanning all (device, precision) pricers.
+    let cost = Arc::new(CostCache::new());
     for dev in [
         DeviceSpec::mi100(),
         DeviceSpec::v100(),
@@ -87,15 +90,19 @@ fn cost_cache_changes_no_modeled_time_across_the_figure_grid() {
     ] {
         for run in RunConfig::figure4_set() {
             let g = IterationGraph::build(&run);
+            let pricer = Cached::with_table(
+                RooflinePricer::new(dev.clone(), run.precision),
+                Arc::clone(&cost),
+            );
             assert_eq!(
                 roofline::iteration_seconds(&g, &dev, run.precision),
-                cost.iteration_seconds(&g, &dev, run.precision),
+                pricer.iteration_seconds(&g),
                 "{} {}",
                 dev.name,
                 run.label()
             );
             let plain = Timeline::modeled(&run, &dev);
-            let cached = Timeline::modeled_cached(&run, &dev, &cost);
+            let cached = Timeline::modeled_with(&run, &pricer);
             for (a, b) in plain.entries.iter().zip(&cached.entries) {
                 assert_eq!(a.seconds, b.seconds, "{} {}", dev.name, a.name);
             }
@@ -108,7 +115,7 @@ fn cost_cache_changes_no_modeled_time_across_the_figure_grid() {
 fn inference_ladder_survives_the_cache() {
     // The compress sweep's dense rungs run through the same cached
     // pricing; ladder order is a property of the model, not the memo.
-    let cost = CostCache::new();
+    let cost = Arc::new(CostCache::new());
     let dev = DeviceSpec::mi100();
     let secs = |prec| {
         let run = bertprof::serve::inference_run(
@@ -118,7 +125,8 @@ fn inference_ladder_survives_the_cache() {
             prec,
         );
         let g = bertprof::serve::forward_graph(&run, bertprof::serve::ServeHead::Squad);
-        cost.iteration_seconds(&g, &dev, prec)
+        Cached::with_table(RooflinePricer::new(dev.clone(), prec), Arc::clone(&cost))
+            .iteration_seconds(&g)
     };
     let f32t = secs(Precision::Fp32);
     let f16t = secs(Precision::Mixed);
