@@ -1,7 +1,7 @@
 # bertprof build drivers. The HLO half of `make artifacts` is the only
 # step that needs python (JAX); everything else is cargo.
 
-.PHONY: build test bench doc artifacts bench-costmodel clean-artifacts
+.PHONY: build test bench doc artifacts bench-costmodel bench-decode clean-artifacts
 
 build:
 	cargo build --release
@@ -26,10 +26,21 @@ bench-costmodel:
 		echo "bench-costmodel: no cargo on PATH, skipping (python-only host)"; \
 	fi
 
+# The decode bench data point (DESIGN.md SSDecode): cold vs memoized
+# decode-step pricing plus one FIFO and one continuous-batching
+# simulator run, written to BENCH_decode.json. Same python-only-host
+# escape hatch as bench-costmodel.
+bench-decode:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo bench --bench fig_decode; \
+	else \
+		echo "bench-decode: no cargo on PATH, skipping (python-only host)"; \
+	fi
+
 # Lower every HLO artifact + manifest.json (DESIGN.md SS2; run from
 # python/ so aot.py's relative imports and default --out resolve) and
-# record the cost-model bench trajectory point.
-artifacts: bench-costmodel
+# record the cost-model + decode bench trajectory points.
+artifacts: bench-costmodel bench-decode
 	cd python && python3 -m compile.aot --out ../artifacts
 
 clean-artifacts:

@@ -1,0 +1,122 @@
+//! The decode bench: what does a generation step cost to price, and
+//! what does the decode simulator cost to run?
+//!
+//! Three questions on the SSDecode grid (DESIGN.md):
+//!
+//! 1. **Step pricing** — a decode-graph build + roofline pass, cold
+//!    (fresh pricer) vs warm (memoized `DecodeModel`), across the
+//!    {batch x KV-depth} shape grid the sweep touches.
+//! 2. **Scheduler cost** — one FIFO lock-step run vs one continuous
+//!    -batching run over the same trace (the simulator bookkeeping,
+//!    with all step prices already memoized).
+//! 3. **Headline sanity** — the bench asserts the cache-0 pricing
+//!    identity and token conservation before timing anything.
+//!
+//! Results land in `BENCH_decode.json` (wired into `make artifacts`).
+
+use bertprof::config::{ModelConfig, Precision};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::perf::{CostModel, RooflinePricer};
+use bertprof::serve::{
+    decode_graph, forward_graph, inference_run, BatchPolicy, ContinuousBatchPolicy, DecodeModel,
+    DecodePolicy, DecodeSimulator, DecodeWorkload, ServeHead,
+};
+use bertprof::util::bench::{black_box, Bench};
+use bertprof::util::Json;
+
+fn main() {
+    let dev = DeviceSpec::mi100();
+    let prec = Precision::Mixed;
+    let shapes: Vec<(u64, u64)> = [1u64, 8, 32]
+        .iter()
+        .flat_map(|&b| [32u64, 128, 512].iter().map(move |&kv| (b, kv)))
+        .collect();
+    println!(
+        "## fig_decode — {} decode shapes on {}, plus one {}-request sim per scheduler",
+        shapes.len(),
+        dev.name,
+        800
+    );
+
+    // Correctness first: the cache-0 identity and token conservation.
+    let pricer = RooflinePricer::new(dev.clone(), prec);
+    let run = inference_run(ModelConfig::bert_large(), 8, 1, prec);
+    assert_eq!(
+        pricer.iteration_seconds(&forward_graph(&run, ServeHead::Squad)),
+        pricer.iteration_seconds(&decode_graph(&run, ServeHead::Squad, 0)),
+        "decode at cache 0 must price as the seq-1 forward slice"
+    );
+    let trace = DecodeWorkload::poisson(18.0, 800, 42).generate();
+    let want_tokens: u64 = trace.iter().map(|r| r.output_len).sum();
+    let mut prefill =
+        bertprof::serve::LatencyModel::new(ModelConfig::bert_large(), prec, dev.clone());
+    let mut decode = DecodeModel::new(ModelConfig::bert_large(), prec, dev.clone());
+    for policy in [
+        DecodePolicy::Fifo(BatchPolicy::new(16, 0.010)),
+        DecodePolicy::Continuous(ContinuousBatchPolicy::new(16)),
+    ] {
+        let out = DecodeSimulator::new(policy, 2.0).run("warm", &trace, &mut prefill, &mut decode);
+        assert_eq!(out.tokens, want_tokens, "{}", policy.label());
+    }
+
+    let mut b = Bench::new("fig_decode");
+    let cold_t = b
+        .run("cold step pricing (graph build + roofline)", || {
+            let mut acc = 0.0;
+            for &(batch, kv) in &shapes {
+                let r = inference_run(ModelConfig::bert_large(), batch, 1, prec);
+                acc += pricer.iteration_seconds(&decode_graph(&r, ServeHead::Squad, kv));
+            }
+            black_box(acc);
+        })
+        .median;
+    let warm_t = b
+        .run("warm step pricing (DecodeModel memo)", || {
+            let mut acc = 0.0;
+            for &(batch, kv) in &shapes {
+                acc += decode.step_seconds(batch, kv);
+            }
+            black_box(acc);
+        })
+        .median;
+    let fifo_t = b
+        .run("FIFO lock-step simulation (800 req)", || {
+            let out = DecodeSimulator::new(DecodePolicy::Fifo(BatchPolicy::new(16, 0.010)), 2.0)
+                .run("fifo", &trace, &mut prefill, &mut decode);
+            black_box(out.report.goodput);
+        })
+        .median;
+    let cont_t = b
+        .run("continuous-batching simulation (800 req)", || {
+            let out = DecodeSimulator::new(
+                DecodePolicy::Continuous(ContinuousBatchPolicy::new(16)),
+                2.0,
+            )
+            .run("cont", &trace, &mut prefill, &mut decode);
+            black_box(out.report.goodput);
+        })
+        .median;
+    b.finish();
+
+    let us = |d: std::time::Duration| d.as_secs_f64() * 1e6;
+    println!(
+        "warm-step speedup {:.1}x over cold; continuous/fifo sim cost {:.2}x",
+        us(cold_t) / us(warm_t).max(1e-9),
+        us(cont_t) / us(fifo_t).max(1e-9)
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fig_decode")),
+        ("shapes", Json::num(shapes.len() as f64)),
+        ("sim_requests", Json::num(800.0)),
+        ("cold_step_median_us", Json::num(us(cold_t))),
+        ("warm_step_median_us", Json::num(us(warm_t))),
+        ("fifo_sim_median_us", Json::num(us(fifo_t))),
+        ("continuous_sim_median_us", Json::num(us(cont_t))),
+        ("warm_step_speedup", Json::num(us(cold_t) / us(warm_t).max(1e-9))),
+        ("decode_shapes_cached", Json::num(decode.cached_points() as f64)),
+    ]);
+    let path = "BENCH_decode.json";
+    std::fs::write(path, out.to_string()).expect("write bench artifact");
+    println!("wrote {path}");
+}

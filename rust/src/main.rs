@@ -37,6 +37,7 @@ fn main() -> Result<()> {
         "fusion" => cmd_fusion(&args),
         "gemm-table" => alias(&args, "table3"),
         "serve" => alias(&args, "serve"),
+        "decode" => alias(&args, "decode"),
         "compress" => alias(&args, "compress"),
         "whatif" => alias(&args, "whatif"),
         "memory" => alias(&args, "memory"),
@@ -68,6 +69,7 @@ Legacy aliases (same registry entries):
   fusion --kernels [--measured] | --gemms         Fig. 13 / Fig. 15
   gemm-table                                      Table 3
   serve [--requests N] [--device D] [--out F] ... SSServe dynamic-batching grid
+  decode [--requests N] [--slots S,S] ...         SSDecode continuous-vs-FIFO grid
   compress [--requests N] [--device D] ...        SSCompress SLO what-if grid
   whatif [--device D]                             SS5.2 hardware what-ifs
   memory [--hbm GB]                               SS5.2 capacity model

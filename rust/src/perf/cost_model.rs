@@ -28,6 +28,14 @@
 //! those five fields plus the pricer's [`CostModel::fingerprint`] form
 //! the [`Cached`] memo key, so anything outside them would break the
 //! cached == uncached identity that `rust/tests/cost_model.rs` pins.
+//!
+//! That purity is also why decode-side serving needed no pricer work:
+//! `serve::decode_graph` encodes the KV-cache reads of a generation
+//! step as the attention B-GEMMs' operand dimensions (the score GEMM's
+//! `k·n` term is the K-cache, the weighted-sum GEMM's `m·k` term the
+//! V-cache), so every backend above — analytic, cached, calibrated,
+//! quantized — accounts KV traffic in its roofline memory term
+//! automatically.
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -35,6 +35,39 @@ pub fn footprint_bytes(run: &RunConfig) -> u64 {
     state_bytes(run) + activation_bytes(run)
 }
 
+/// KV-cache bytes for a generative deployment: per layer, keys and
+/// values for `kv_len` context tokens across the batch, at activation
+/// precision — `2 · n_layers · batch · kv_len · d_model · eb`. Exactly
+/// linear in `kv_len` (the decode property tests pin the slope), and the
+/// same bytes the decode graph's attention B-GEMMs stream per step
+/// (`serve::decode_graph` — capacity here, traffic there).
+pub fn kv_cache_bytes(run: &RunConfig, kv_len: u64) -> u64 {
+    let cfg = &run.model;
+    2 * cfg.n_layers * cfg.batch * kv_len * cfg.d_model * run.precision.act_bytes()
+}
+
+/// Serving-time footprint: the weights' working copy plus the KV-cache
+/// at context depth `kv_len` — no gradients, no optimizer state, no
+/// retained activations (paper SS6: inference drops backprop).
+pub fn serve_footprint_bytes(run: &RunConfig, kv_len: u64) -> u64 {
+    run.model.param_count() * run.precision.act_bytes() + kv_cache_bytes(run, kv_len)
+}
+
+/// Largest number of concurrent decode slots (requests at context depth
+/// `kv_len`) whose KV-caches fit beside the weights in `hbm_bytes` —
+/// the capacity bound on `serve::ContinuousBatchPolicy::slots` (0 if
+/// the weights alone do not fit).
+pub fn max_kv_slots(run: &RunConfig, kv_len: u64, hbm_bytes: u64) -> u64 {
+    let weights = run.model.param_count() * run.precision.act_bytes();
+    if weights >= hbm_bytes {
+        return 0;
+    }
+    let mut one = *run;
+    one.model.batch = 1;
+    let per_slot = kv_cache_bytes(&one, kv_len).max(1);
+    (hbm_bytes - weights) / per_slot
+}
+
 /// Largest mini-batch that fits in `hbm_bytes` (0 if the model itself
 /// does not fit — the paper's "model parallelism becomes mandatory").
 pub fn max_batch(run: &RunConfig, hbm_bytes: u64) -> u64 {
@@ -118,5 +151,42 @@ mod tests {
         let m = max_batch(&run(32, Precision::Mixed), 32_000_000_000);
         let ratio = m as f64 / f as f64;
         assert!(ratio > 1.6 && ratio < 2.4, "{ratio}");
+    }
+
+    #[test]
+    fn kv_cache_bytes_are_exactly_linear_in_context() {
+        let r = run(8, Precision::Mixed);
+        let slope = kv_cache_bytes(&r, 1);
+        // 2 (K+V) x 24 layers x B8 x d1024 x 2 bytes per token.
+        assert_eq!(slope, 2 * 24 * 8 * 1024 * 2);
+        for kv in [0u64, 1, 7, 128, 512] {
+            assert_eq!(kv_cache_bytes(&r, kv), slope * kv);
+        }
+    }
+
+    #[test]
+    fn serve_footprint_is_weights_plus_cache() {
+        let r = run(4, Precision::Fp32);
+        assert_eq!(serve_footprint_bytes(&r, 0),
+                   r.model.param_count() * 4);
+        assert_eq!(
+            serve_footprint_bytes(&r, 256) - serve_footprint_bytes(&r, 0),
+            kv_cache_bytes(&r, 256)
+        );
+        // Far below the training footprint at the same batch.
+        assert!(serve_footprint_bytes(&r, 512) < footprint_bytes(&r));
+    }
+
+    #[test]
+    fn kv_slot_capacity_scales_with_hbm_and_context() {
+        let r = run(1, Precision::Mixed);
+        let s32 = max_kv_slots(&r, 512, 32_000_000_000);
+        let s64 = max_kv_slots(&r, 512, 64_000_000_000);
+        assert!(s32 > 32, "{s32}");
+        assert!(s64 > s32);
+        // Deeper context, fewer slots.
+        assert!(max_kv_slots(&r, 128, 32_000_000_000) > s32);
+        // Weights that don't fit leave zero slots.
+        assert_eq!(max_kv_slots(&r, 512, 100_000_000), 0);
     }
 }

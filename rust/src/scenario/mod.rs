@@ -40,7 +40,7 @@ use crate::perf::{
     intensity, memory, whatif, Cached, CalibrationTable, CostCache, CostModel, RooflinePricer,
 };
 use crate::profiler::{artifact, report, Timeline};
-use crate::serve::{self, SweepConfig};
+use crate::serve::{self, DecodeSweepConfig, SweepConfig};
 use crate::util::Json;
 
 /// One declared scenario parameter: the `--set key=value` surface.
@@ -325,6 +325,14 @@ pub fn registry() -> Vec<ScenarioSpec> {
             params: SWEEP_PARAMS_SERVE,
             default_out: Some("serve_sweep.json"),
             run: run_serve,
+        },
+        ScenarioSpec {
+            name: "decode",
+            figure: "SSDecode",
+            title: "generative prefill/decode serving grid (continuous vs FIFO batching)",
+            params: SWEEP_PARAMS_DECODE,
+            default_out: Some("decode_sweep.json"),
+            run: run_decode,
         },
         ScenarioSpec {
             name: "compress",
@@ -785,6 +793,24 @@ const SWEEP_PARAMS_SERVE: &[ParamSpec] = &[
     THREADS_PARAM,
 ];
 
+const SWEEP_PARAMS_DECODE: &[ParamSpec] = &[
+    ParamSpec { key: "requests", default: "", help: "requests per scenario trace (4000)" },
+    ParamSpec { key: "seed", default: "", help: "workload RNG seed (42)" },
+    ParamSpec { key: "slo-ms", default: "", help: "generation SLO in milliseconds (2000)" },
+    ParamSpec { key: "max-wait-ms", default: "", help: "FIFO co-batching timeout in ms (10)" },
+    ParamSpec { key: "load", default: "", help: "offered fraction of estimated capacity (0.65)" },
+    ParamSpec { key: "device", default: "", help: "single device preset (default grid: mi100)" },
+    ParamSpec { key: "slots", default: "", help: "decode slot / FIFO max-batch grid (8,32)" },
+    ParamSpec { key: "prompt-max", default: "", help: "prompt-length upper bound grid (128)" },
+    ParamSpec { key: "output-max", default: "", help: "output-length upper bound grid (32)" },
+    ParamSpec {
+        key: "cost_table",
+        default: "",
+        help: "calibration-table JSON path (DESIGN.md SSCost; default: analytic)",
+    },
+    THREADS_PARAM,
+];
+
 const SWEEP_PARAMS_COMPRESS: &[ParamSpec] = &[
     ParamSpec { key: "requests", default: "", help: "requests per scenario trace (4000)" },
     ParamSpec { key: "seed", default: "", help: "workload RNG seed (42)" },
@@ -948,6 +974,132 @@ fn run_serve(p: &Params) -> Result<ScenarioOutput> {
     Ok(ScenarioOutput { text, artifact: serve::sweep_json(&cfg, &reports) })
 }
 
+fn run_decode(p: &Params) -> Result<ScenarioOutput> {
+    let mut cfg = DecodeSweepConfig::bert_large_default();
+    // Parsed inline (not via `parse_sweep_common`): the decode grid's
+    // axes are slots/prompt-max/output-max, not max-batch/seq-max.
+    let opt_u64 = |key: &str| -> Result<Option<u64>> {
+        match p.get(key) {
+            "" => Ok(None),
+            _ => p.get_u64(key).map(Some),
+        }
+    };
+    let opt_f64 = |key: &str| -> Result<Option<f64>> {
+        match p.get(key) {
+            "" => Ok(None),
+            _ => p.get_f64(key).map(Some),
+        }
+    };
+    if let Some(v) = opt_u64("requests")? {
+        cfg.requests = v;
+    }
+    if let Some(v) = opt_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = opt_f64("slo-ms")? {
+        cfg.slo = v / 1e3;
+    }
+    if let Some(v) = opt_f64("max-wait-ms")? {
+        cfg.max_wait = v / 1e3;
+    }
+    if let Some(l) = opt_f64("load")? {
+        if !(l.is_finite() && l > 0.0) {
+            bail!("--load must be a positive finite saturation fraction, got {l}");
+        }
+        cfg.load = l;
+    }
+    if !p.get("device").is_empty() {
+        cfg.devices = vec![p.device()?];
+    }
+    if !p.get("slots").is_empty() {
+        cfg.slots = p.get_u64_list("slots")?;
+    }
+    if !p.get("prompt-max").is_empty() {
+        cfg.prompt_maxes = p.get_u64_list("prompt-max")?;
+    }
+    if !p.get("output-max").is_empty() {
+        cfg.output_maxes = p.get_u64_list("output-max")?;
+    }
+    match p.get("cost_table") {
+        "" => {}
+        path => {
+            cfg.calibration = Some(CalibrationTable::load(std::path::Path::new(path))?);
+        }
+    }
+    let (reports, cost) = serve::run_decode_sweep_cached(&cfg, p.threads()?);
+
+    let mut text = format!(
+        "## SSDecode — prefill/decode serving study ({} req/scenario, \
+         load {:.0}% of estimated capacity, SLO {:.0} ms, seed {})\n",
+        cfg.requests,
+        cfg.load * 100.0,
+        cfg.slo * 1e3,
+        cfg.seed
+    );
+    if let Some(t) = &cfg.calibration {
+        text.push_str(&format!(
+            "calibrated pricing: {} op-category override(s) from the cost table\n",
+            t.scale.len()
+        ));
+    }
+    let cols: &[(&str, usize)] = &[
+        ("config", 26),
+        ("rate/s", 9),
+        ("thr/s", 9),
+        ("tok/s", 9),
+        ("util", 7),
+        ("p50(ms)", 9),
+        ("p99(ms)", 9),
+        ("SLO%", 7),
+        ("goodput/s", 10),
+    ];
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.sim.label.clone(),
+                format!("{:.1}", r.sim.arrival_rate),
+                format!("{:.1}", r.sim.throughput),
+                format!("{:.0}", r.tokens as f64 / r.sim.makespan),
+                format!("{:.2}", r.sim.utilization),
+                format!("{:.1}", r.sim.p50 * 1e3),
+                format!("{:.1}", r.sim.p99 * 1e3),
+                format!("{:.1}%", r.sim.slo_attainment * 100.0),
+                format!("{:.1}", r.sim.goodput),
+            ]
+        })
+        .collect();
+    text.push_str(&report::sweep_table("", cols, &rows));
+    text.push_str(&format!(
+        "\n## Continuous vs FIFO at equal offered rate and {:.0} ms SLO\n",
+        cfg.slo * 1e3
+    ));
+    for pair in reports.chunks_exact(2) {
+        let (fifo, cont) = (&pair[0], &pair[1]);
+        text.push_str(&format!(
+            "  S{} p{} o{}: FIFO {:.1} vs continuous {:.1} goodput/s — {}\n",
+            fifo.slots,
+            fifo.prompt_max,
+            fifo.output_max,
+            fifo.sim.goodput,
+            cont.sim.goodput,
+            if cont.sim.goodput > fifo.sim.goodput {
+                "continuous wins"
+            } else {
+                "FIFO holds"
+            }
+        ));
+    }
+    text.push_str(&format!(
+        "cost-cache: {} op shapes priced across {} lookups \
+         ({:.1}% deduplicated)\n",
+        cost.len(),
+        cost.lookups(),
+        cost.dedup_rate() * 100.0
+    ));
+    Ok(ScenarioOutput { text, artifact: serve::decode_sweep_json(&cfg, &reports) })
+}
+
 fn run_compress(p: &Params) -> Result<ScenarioOutput> {
     let mut cfg = CompressSweepConfig::bert_large_default();
     let o = parse_sweep_common(p)?;
@@ -1043,7 +1195,7 @@ mod tests {
         let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
         for required in [
             "fig04", "fig05", "fig07", "fig08", "fig09", "fig10", "fig12", "fig13", "fig15",
-            "table3", "memory", "whatif", "serve", "compress",
+            "table3", "memory", "whatif", "serve", "decode", "compress",
         ] {
             assert!(names.contains(&required), "{required} missing from registry");
         }
@@ -1115,6 +1267,7 @@ mod tests {
         for s in registry() {
             match s.name {
                 "serve" => assert_eq!(s.default_out, Some("serve_sweep.json")),
+                "decode" => assert_eq!(s.default_out, Some("decode_sweep.json")),
                 "compress" => assert_eq!(s.default_out, Some("compress_sweep.json")),
                 _ => assert_eq!(s.default_out, None, "{}", s.name),
             }
@@ -1138,6 +1291,23 @@ mod tests {
         assert_eq!(out.artifact.to_string(), direct.to_string());
         assert!(out.text.contains("cost-cache"));
         assert!(out.text.contains("p99(ms)"));
+    }
+
+    #[test]
+    fn decode_scenario_matches_the_direct_sweep_artifact() {
+        let p = pairs(&[
+            ("requests", "250"),
+            ("slots", "8"),
+            ("threads", "2"),
+        ]);
+        let out = run_by_name("decode", &p, true).unwrap();
+        let mut cfg = DecodeSweepConfig::bert_large_default();
+        cfg.requests = 250;
+        cfg.slots = vec![8];
+        let direct = serve::decode_sweep_json(&cfg, &serve::run_decode_sweep(&cfg, 2));
+        assert_eq!(out.artifact.to_string(), direct.to_string());
+        assert!(out.text.contains("cost-cache"));
+        assert!(out.text.contains("Continuous vs FIFO"));
     }
 
     #[test]

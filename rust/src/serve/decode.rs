@@ -1,0 +1,519 @@
+//! Deterministic generative-serving simulator: prefill/decode split with
+//! FIFO co-batching vs slot-based continuous batching (DESIGN.md
+//! SSDecode).
+//!
+//! A generative request carries a prompt (prefilled in one batched
+//! forward pass) and an output budget (decoded one token per iteration,
+//! attending over the growing KV-cache). Two schedulers drive the same
+//! [`BatchCost`]-priced cost seams:
+//!
+//! - **FIFO** ([`BatchPolicy`]): requests co-batch under the encoder
+//!   policy's timeout + max-batch rule, then the batch runs *lock-step*
+//!   to the longest output in it — short requests pad out the batch's
+//!   tail iterations, the throughput tax continuous batching removes.
+//! - **Continuous** ([`ContinuousBatchPolicy`]): a fixed number of
+//!   decode slots; waiting requests are admitted (and prefilled) at
+//!   token boundaries, and each finished request frees its slot
+//!   immediately — the vLLM/Orca-style iteration-level scheduler.
+//!
+//! Both paths are event-driven over the arrival trace — no wall clock,
+//! no threads — and produce the same [`SimReport`] shape as the encoder
+//! simulator, so the sweep/report plumbing is shared. Little's law and
+//! token conservation are asserted for both in
+//! `rust/tests/decode_sim.rs`.
+
+use crate::serve::graph::BatchCost;
+use crate::serve::sim::{percentile, BatchPolicy, SimReport};
+use crate::util::Rng;
+
+/// One generative request: arrival, prompt length, and how many tokens
+/// it wants decoded.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    /// Dense id in arrival order.
+    pub id: u64,
+    /// Arrival time in seconds since the start of the trace.
+    pub arrival: f64,
+    /// Prompt (prefill) token count.
+    pub prompt_len: u64,
+    /// Requested output (decode) token count, >= 1.
+    pub output_len: u64,
+}
+
+/// A reproducible open-loop generative arrival process: Poisson arrivals
+/// with prompt and output lengths uniform in their ranges, all drawn
+/// from one seeded [`Rng`] in a fixed order (inter-arrival, prompt,
+/// output per request — `golden_mirror.py` replays the same order).
+#[derive(Debug, Clone)]
+pub struct DecodeWorkload {
+    /// Mean arrival rate (requests per second).
+    pub rate: f64,
+    /// Number of requests in the trace.
+    pub requests: u64,
+    /// Minimum prompt length (inclusive).
+    pub prompt_min: u64,
+    /// Maximum prompt length (inclusive).
+    pub prompt_max: u64,
+    /// Minimum output length (inclusive).
+    pub output_min: u64,
+    /// Maximum output length (inclusive).
+    pub output_max: u64,
+    /// RNG seed — same seed, same trace, bit-for-bit.
+    pub seed: u64,
+}
+
+impl DecodeWorkload {
+    /// Poisson arrivals with the default 16–128 token prompts and 8–32
+    /// token outputs.
+    pub fn poisson(rate: f64, requests: u64, seed: u64) -> DecodeWorkload {
+        DecodeWorkload {
+            rate,
+            requests,
+            prompt_min: 16,
+            prompt_max: 128,
+            output_min: 8,
+            output_max: 32,
+            seed,
+        }
+    }
+
+    /// Override the prompt-length range.
+    pub fn with_prompt_range(mut self, min: u64, max: u64) -> DecodeWorkload {
+        self.prompt_min = min.max(1);
+        self.prompt_max = max.max(self.prompt_min);
+        self
+    }
+
+    /// Override the output-length range (floored at one token).
+    pub fn with_output_range(mut self, min: u64, max: u64) -> DecodeWorkload {
+        self.output_min = min.max(1);
+        self.output_max = max.max(self.output_min);
+        self
+    }
+
+    /// Materialize the trace (sorted by arrival by construction).
+    pub fn generate(&self) -> Vec<DecodeRequest> {
+        let mut rng = Rng::seed(self.seed);
+        let mut t = 0.0;
+        (0..self.requests)
+            .map(|id| {
+                let u = rng.uniform();
+                t += -(1.0 - u).ln() / self.rate;
+                let prompt_len =
+                    rng.int_range(self.prompt_min as i64, self.prompt_max as i64) as u64;
+                let output_len =
+                    rng.int_range(self.output_min as i64, self.output_max as i64) as u64;
+                DecodeRequest { id, arrival: t, prompt_len, output_len }
+            })
+            .collect()
+    }
+}
+
+/// Slot-based continuous batching: up to `slots` requests decode
+/// concurrently; admission (with its prefill) happens at token
+/// boundaries, and a finished request frees its slot the same iteration
+/// it emits its last token.
+#[derive(Debug, Clone, Copy)]
+pub struct ContinuousBatchPolicy {
+    /// Concurrent decode slots (the running batch's max size).
+    pub slots: u64,
+}
+
+impl ContinuousBatchPolicy {
+    /// A scheduler with `slots` concurrent decode slots (floored at 1).
+    pub fn new(slots: u64) -> ContinuousBatchPolicy {
+        ContinuousBatchPolicy { slots: slots.max(1) }
+    }
+
+    /// Short policy label for tables (`CB8`).
+    pub fn label(&self) -> String {
+        format!("CB{}", self.slots)
+    }
+}
+
+/// Which scheduler a decode simulation runs under.
+#[derive(Debug, Clone, Copy)]
+pub enum DecodePolicy {
+    /// FIFO co-batching (timeout + max-batch), lock-step decode.
+    Fifo(BatchPolicy),
+    /// Slot-based continuous batching at token boundaries.
+    Continuous(ContinuousBatchPolicy),
+}
+
+impl DecodePolicy {
+    /// Short policy label for tables (`B8/10ms` / `CB8`).
+    pub fn label(&self) -> String {
+        match self {
+            DecodePolicy::Fifo(p) => p.label(),
+            DecodePolicy::Continuous(p) => p.label(),
+        }
+    }
+}
+
+/// One generative request's lifecycle record.
+#[derive(Debug, Clone)]
+pub struct DecodeCompletion {
+    /// Request id (arrival order).
+    pub id: u64,
+    /// Arrival time (copied from the request).
+    pub arrival: f64,
+    /// Time the request's last token finished decoding.
+    pub done: f64,
+    /// Prompt length (copied from the request).
+    pub prompt_len: u64,
+    /// Requested output length (copied from the request).
+    pub output_len: u64,
+    /// Tokens actually decoded for this request (== `output_len`; the
+    /// token-conservation property test sums these).
+    pub decoded_tokens: u64,
+}
+
+/// The decode simulation result: aggregate report, per-request records,
+/// and the token-level counters the property tests integrate.
+#[derive(Debug, Clone)]
+pub struct DecodeOutcome {
+    /// Aggregate metrics (same shape as the encoder simulator's, with
+    /// `mean_batch` = mean decoded tokens per decode iteration and
+    /// `batches` = prefill launches + decode iterations).
+    pub report: SimReport,
+    /// Per-request lifecycle records, in completion order.
+    pub completions: Vec<DecodeCompletion>,
+    /// Total tokens decoded across the run.
+    pub tokens: u64,
+    /// Decode iterations executed.
+    pub decode_iters: u64,
+    /// Prefill launches executed.
+    pub prefills: u64,
+}
+
+/// A request occupying a decode slot.
+#[derive(Debug, Clone, Copy)]
+struct Active {
+    idx: usize,
+    prompt_len: u64,
+    generated: u64,
+}
+
+/// The generative-serving simulator: one device, one [`DecodePolicy`],
+/// scored against one end-to-end latency SLO.
+#[derive(Debug, Clone)]
+pub struct DecodeSimulator {
+    /// Scheduling policy.
+    pub policy: DecodePolicy,
+    /// End-to-end latency SLO in seconds (arrival to last token).
+    pub slo: f64,
+}
+
+impl DecodeSimulator {
+    /// A server under `policy`, scored against `slo`.
+    pub fn new(policy: DecodePolicy, slo: f64) -> DecodeSimulator {
+        DecodeSimulator { policy, slo }
+    }
+
+    /// Run the trace to completion. `requests` must be sorted by arrival
+    /// (as [`DecodeWorkload::generate`] produces); `prefill` prices the
+    /// batched prompt pass (sequence slot = prompt length) and `decode`
+    /// prices one token iteration (sequence slot = KV-cache depth) —
+    /// any [`BatchCost`] pair, so dense and compressed deployments share
+    /// this loop. Fully deterministic.
+    pub fn run<P: BatchCost, D: BatchCost>(
+        &self,
+        label: &str,
+        requests: &[DecodeRequest],
+        prefill: &mut P,
+        decode: &mut D,
+    ) -> DecodeOutcome {
+        if requests.is_empty() {
+            return DecodeOutcome {
+                report: SimReport::empty(label),
+                completions: Vec::new(),
+                tokens: 0,
+                decode_iters: 0,
+                prefills: 0,
+            };
+        }
+        match self.policy {
+            DecodePolicy::Fifo(p) => self.run_fifo(label, requests, prefill, decode, p),
+            DecodePolicy::Continuous(p) => {
+                self.run_continuous(label, requests, prefill, decode, p)
+            }
+        }
+    }
+
+    /// FIFO co-batching: encoder batch formation on arrivals, then the
+    /// whole batch prefills together and decodes lock-step to its
+    /// longest output (short requests complete mid-flight but their
+    /// slots idle until the batch drains — the padding tax).
+    fn run_fifo<P: BatchCost, D: BatchCost>(
+        &self,
+        label: &str,
+        requests: &[DecodeRequest],
+        prefill: &mut P,
+        decode: &mut D,
+        policy: BatchPolicy,
+    ) -> DecodeOutcome {
+        let n = requests.len();
+        let max_batch = policy.max_batch.max(1) as usize;
+        let mut completions = Vec::with_capacity(n);
+        let mut t_free = 0.0_f64;
+        let mut busy = 0.0_f64;
+        let (mut tokens, mut decode_iters, mut prefills) = (0u64, 0u64, 0u64);
+        let mut i = 0_usize;
+        while i < n {
+            let head_arrival = requests[i].arrival;
+            // Identical batch-formation rule to the encoder simulator.
+            let deadline = (head_arrival + policy.max_wait).max(t_free);
+            let fill = i + max_batch - 1;
+            let (launch, end) = if fill < n && requests[fill].arrival <= deadline {
+                (t_free.max(requests[fill].arrival), fill + 1)
+            } else {
+                let launch = deadline.max(head_arrival);
+                let mut end = i;
+                while end < n && requests[end].arrival <= launch && end - i < max_batch {
+                    end += 1;
+                }
+                (launch, end)
+            };
+            let batch = &requests[i..end];
+            let batch_size = batch.len() as u64;
+            let prompt = batch.iter().map(|r| r.prompt_len).max().unwrap_or(1);
+            let mut t = launch + prefill.batch_seconds(batch_size, prompt);
+            prefills += 1;
+            let max_out = batch.iter().map(|r| r.output_len).max().unwrap_or(1);
+            for s in 0..max_out {
+                // Lock-step iteration: the whole batch pays the step even
+                // after members finish (their slots pad the shape).
+                t += decode.batch_seconds(batch_size, prompt + s);
+                decode_iters += 1;
+                tokens += batch.iter().filter(|r| r.output_len > s).count() as u64;
+                for r in batch.iter().filter(|r| r.output_len == s + 1) {
+                    completions.push(DecodeCompletion {
+                        id: r.id,
+                        arrival: r.arrival,
+                        done: t,
+                        prompt_len: r.prompt_len,
+                        output_len: r.output_len,
+                        decoded_tokens: r.output_len,
+                    });
+                }
+            }
+            busy += t - launch;
+            t_free = t;
+            i = end;
+        }
+        self.finish(label, completions, t_free, busy, tokens, decode_iters, prefills)
+    }
+
+    /// Continuous batching: a slot pool; each iteration first admits
+    /// (and prefills) arrivals into free slots, then decodes one token
+    /// for every active request, retiring finished ones at the boundary.
+    fn run_continuous<P: BatchCost, D: BatchCost>(
+        &self,
+        label: &str,
+        requests: &[DecodeRequest],
+        prefill: &mut P,
+        decode: &mut D,
+        policy: ContinuousBatchPolicy,
+    ) -> DecodeOutcome {
+        let n = requests.len();
+        let slots = policy.slots.max(1) as usize;
+        let mut completions = Vec::with_capacity(n);
+        let mut active: Vec<Active> = Vec::with_capacity(slots);
+        let mut t = 0.0_f64;
+        let mut busy = 0.0_f64;
+        let (mut tokens, mut decode_iters, mut prefills) = (0u64, 0u64, 0u64);
+        let mut next = 0_usize;
+        while !active.is_empty() || next < n {
+            if active.is_empty() && next < n && requests[next].arrival > t {
+                // Idle until the next arrival.
+                t = requests[next].arrival;
+            }
+            // Admit arrivals into free slots; newcomers prefill together
+            // as one batched prompt pass before joining the decode pool.
+            let first_new = active.len();
+            while next < n && active.len() < slots && requests[next].arrival <= t {
+                active.push(Active {
+                    idx: next,
+                    prompt_len: requests[next].prompt_len,
+                    generated: 0,
+                });
+                next += 1;
+            }
+            if active.len() > first_new {
+                let newcomers = &active[first_new..];
+                let bsz = newcomers.len() as u64;
+                let prompt = newcomers.iter().map(|a| a.prompt_len).max().unwrap_or(1);
+                let cost = prefill.batch_seconds(bsz, prompt);
+                t += cost;
+                busy += cost;
+                prefills += 1;
+            }
+            if active.is_empty() {
+                continue;
+            }
+            // One decode iteration for the whole pool, priced at the
+            // deepest KV-cache in it (the compiled shape the step runs
+            // at — shallower requests pad up to it).
+            let bsz = active.len() as u64;
+            let kv = active
+                .iter()
+                .map(|a| a.prompt_len + a.generated)
+                .max()
+                .unwrap_or(1);
+            let cost = decode.batch_seconds(bsz, kv);
+            t += cost;
+            busy += cost;
+            decode_iters += 1;
+            tokens += bsz;
+            for a in &mut active {
+                a.generated += 1;
+            }
+            for a in active.iter().filter(|a| a.generated == requests[a.idx].output_len) {
+                let r = &requests[a.idx];
+                completions.push(DecodeCompletion {
+                    id: r.id,
+                    arrival: r.arrival,
+                    done: t,
+                    prompt_len: r.prompt_len,
+                    output_len: r.output_len,
+                    decoded_tokens: a.generated,
+                });
+            }
+            active.retain(|a| a.generated < requests[a.idx].output_len);
+        }
+        self.finish(label, completions, t, busy, tokens, decode_iters, prefills)
+    }
+
+    /// Shared report builder (metric definitions identical to the
+    /// encoder simulator's: total wait summed in completion order,
+    /// nearest-rank percentiles, `L = total_wait / makespan`).
+    #[allow(clippy::too_many_arguments)]
+    fn finish(
+        &self,
+        label: &str,
+        completions: Vec<DecodeCompletion>,
+        makespan: f64,
+        busy: f64,
+        tokens: u64,
+        decode_iters: u64,
+        prefills: u64,
+    ) -> DecodeOutcome {
+        let n = completions.len();
+        let mut sorted: Vec<f64> = completions.iter().map(|c| c.done - c.arrival).collect();
+        let total_wait: f64 = sorted.iter().sum();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let within = sorted.iter().filter(|&&l| l <= self.slo).count();
+        let report = SimReport {
+            label: label.to_string(),
+            requests: n as u64,
+            batches: prefills + decode_iters,
+            mean_batch: tokens as f64 / decode_iters.max(1) as f64,
+            makespan,
+            throughput: n as f64 / makespan,
+            utilization: busy / makespan,
+            mean_latency: total_wait / n as f64,
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
+            max_latency: *sorted.last().expect("non-empty"),
+            slo: self.slo,
+            slo_attainment: within as f64 / n as f64,
+            goodput: within as f64 / makespan,
+            mean_in_system: total_wait / makespan,
+            arrival_rate: n as f64 / makespan,
+        };
+        DecodeOutcome { report, completions, tokens, decode_iters, prefills }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Precision};
+    use crate::perf::device::DeviceSpec;
+    use crate::serve::graph::{DecodeModel, LatencyModel};
+
+    fn models() -> (LatencyModel, DecodeModel) {
+        (
+            LatencyModel::new(ModelConfig::bert_large(), Precision::Mixed, DeviceSpec::mi100()),
+            DecodeModel::new(ModelConfig::bert_large(), Precision::Mixed, DeviceSpec::mi100()),
+        )
+    }
+
+    fn trace(rate: f64, n: u64, seed: u64) -> Vec<DecodeRequest> {
+        DecodeWorkload::poisson(rate, n, seed).generate()
+    }
+
+    #[test]
+    fn workload_is_sorted_seeded_and_in_range() {
+        let a = trace(50.0, 400, 9);
+        let b = trace(50.0, 400, 9);
+        let c = trace(50.0, 400, 10);
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(a.iter().zip(&b).all(|(x, y)| {
+            x.arrival == y.arrival && x.prompt_len == y.prompt_len && x.output_len == y.output_len
+        }));
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival));
+        assert!(a.iter().all(|r| (16..=128).contains(&r.prompt_len)));
+        assert!(a.iter().all(|r| (8..=32).contains(&r.output_len)));
+    }
+
+    #[test]
+    fn every_request_completes_under_both_policies() {
+        let (mut pf, mut dm) = models();
+        let reqs = trace(20.0, 300, 3);
+        for policy in [
+            DecodePolicy::Fifo(BatchPolicy::new(8, 0.010)),
+            DecodePolicy::Continuous(ContinuousBatchPolicy::new(8)),
+        ] {
+            let out = DecodeSimulator::new(policy, 0.5).run("t", &reqs, &mut pf, &mut dm);
+            assert_eq!(out.completions.len(), 300, "{}", policy.label());
+            assert!(out.completions.iter().all(|c| c.done > c.arrival));
+            assert!(out.prefills > 0 && out.decode_iters > 0);
+        }
+    }
+
+    #[test]
+    fn tokens_are_conserved_under_both_policies() {
+        let (mut pf, mut dm) = models();
+        let reqs = trace(25.0, 250, 11);
+        let want: u64 = reqs.iter().map(|r| r.output_len).sum();
+        for policy in [
+            DecodePolicy::Fifo(BatchPolicy::new(16, 0.010)),
+            DecodePolicy::Continuous(ContinuousBatchPolicy::new(16)),
+        ] {
+            let out = DecodeSimulator::new(policy, 0.5).run("c", &reqs, &mut pf, &mut dm);
+            assert_eq!(out.tokens, want, "{}", policy.label());
+            let decoded: u64 = out.completions.iter().map(|c| c.decoded_tokens).sum();
+            assert_eq!(decoded, want, "{}", policy.label());
+        }
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_report() {
+        let (mut pf, mut dm) = models();
+        let out = DecodeSimulator::new(DecodePolicy::Continuous(ContinuousBatchPolicy::new(4)), 0.5)
+            .run("e", &[], &mut pf, &mut dm);
+        assert_eq!(out.report.requests, 0);
+        assert!(out.completions.is_empty());
+    }
+
+    #[test]
+    fn continuous_slots_bound_the_pool() {
+        // With one slot, every decode iteration carries exactly one
+        // token: tokens == decode_iters.
+        let (mut pf, mut dm) = models();
+        let reqs = trace(30.0, 120, 7);
+        let out = DecodeSimulator::new(DecodePolicy::Continuous(ContinuousBatchPolicy::new(1)), 0.5)
+            .run("s1", &reqs, &mut pf, &mut dm);
+        assert_eq!(out.tokens, out.decode_iters);
+        assert!((out.report.mean_batch - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_labels() {
+        assert_eq!(ContinuousBatchPolicy::new(8).label(), "CB8");
+        assert_eq!(DecodePolicy::Fifo(BatchPolicy::new(8, 0.010)).label(), "B8/10ms");
+        assert_eq!(DecodePolicy::Continuous(ContinuousBatchPolicy::new(0)).label(), "CB1");
+    }
+}

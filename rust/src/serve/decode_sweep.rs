@@ -1,0 +1,463 @@
+//! Parallel scenario-sweep driver over the generative serving grid
+//! {policy × device × precision × prompt/output length} (DESIGN.md
+//! SSDecode).
+//!
+//! Each grid point is simulated twice — once under FIFO co-batching
+//! (the encoder policy extended with lock-step decode) and once under
+//! slot-based continuous batching — against the *same* seeded request
+//! trace and the same offered rate, so the artifact directly answers
+//! the ROADMAP question: when does continuous batching beat
+//! timeout+max-batch at the same SLO? The paired goodputs are distilled
+//! into a `verdicts` array (`continuous_wins` per point). Scenarios fan
+//! out over `scenario::exec::run_grid` with one grid-wide
+//! `perf::CostCache`, exactly like the encoder sweep; the artifact is
+//! byte-identical for a fixed seed and any worker count.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelConfig, Precision};
+use crate::perf::device::DeviceSpec;
+use crate::perf::{CalibrationTable, CostCache};
+use crate::scenario::exec;
+use crate::serve::decode::{
+    ContinuousBatchPolicy, DecodePolicy, DecodeSimulator, DecodeWorkload,
+};
+use crate::serve::graph::{BatchCost, DecodeModel, LatencyModel};
+use crate::serve::sim::{BatchPolicy, SimReport};
+use crate::serve::sweep::report_json;
+use crate::util::Json;
+
+/// The decode-sweep grid plus the shared workload/scoring parameters.
+#[derive(Debug, Clone)]
+pub struct DecodeSweepConfig {
+    /// Served model hyperparameters (Table 2).
+    pub model: ModelConfig,
+    /// Device presets to sweep (roofline axis).
+    pub devices: Vec<DeviceSpec>,
+    /// Precisions to sweep.
+    pub precisions: Vec<Precision>,
+    /// Decode slot counts; each doubles as the FIFO policy's
+    /// `max_batch`, so the two schedulers are compared at equal
+    /// parallelism.
+    pub slots: Vec<u64>,
+    /// Maximum prompt lengths (prompts draw uniformly from
+    /// `[prompt_max/8, prompt_max]`).
+    pub prompt_maxes: Vec<u64>,
+    /// Maximum output lengths (outputs draw uniformly from
+    /// `[output_max/4, output_max]`).
+    pub output_maxes: Vec<u64>,
+    /// Requests per scenario trace.
+    pub requests: u64,
+    /// Workload RNG seed (same seed → identical artifact).
+    pub seed: u64,
+    /// End-to-end latency SLO in seconds (arrival to last token — a
+    /// full generation, so much looser than the encoder sweep's).
+    pub slo: f64,
+    /// FIFO co-batching timeout in seconds (continuous batching has no
+    /// timeout; it admits at token boundaries).
+    pub max_wait: f64,
+    /// Offered load as a fraction of each point's estimated
+    /// token-throughput capacity.
+    pub load: f64,
+    /// Optional per-op-category calibration overrides (same
+    /// SSHardware-Adaptation seam as the encoder sweep).
+    pub calibration: Option<CalibrationTable>,
+}
+
+impl DecodeSweepConfig {
+    /// The default decode study: BERT-Large on MI100, FP32 vs Mixed,
+    /// 8 vs 32 slots, prompts ≤128, outputs ≤32, 2 s generation SLO.
+    pub fn bert_large_default() -> DecodeSweepConfig {
+        DecodeSweepConfig {
+            model: ModelConfig::bert_large(),
+            devices: vec![DeviceSpec::mi100()],
+            precisions: vec![Precision::Fp32, Precision::Mixed],
+            slots: vec![8, 32],
+            prompt_maxes: vec![128],
+            output_maxes: vec![32],
+            requests: 4_000,
+            seed: 42,
+            slo: 2.0,
+            max_wait: 0.010,
+            load: 0.65,
+            calibration: None,
+        }
+    }
+
+    /// The prefill/decode model pair for one (device, precision) point,
+    /// sharing one pricer over `table` (both halves price through the
+    /// same memo, as a real engine runs prefill and decode on one
+    /// compiled stack).
+    fn model_pair(
+        &self,
+        dev: &DeviceSpec,
+        prec: Precision,
+        table: Arc<CostCache>,
+    ) -> (LatencyModel, DecodeModel) {
+        // Reuse the encoder sweep's pricer assembly (analytic +
+        // optional calibration + shared memo) verbatim.
+        let shim = crate::serve::sweep::SweepConfig {
+            calibration: self.calibration.clone(),
+            ..crate::serve::sweep::SweepConfig::bert_large_default()
+        };
+        let pricer = shim.pricer(dev, prec, table);
+        (
+            LatencyModel::new(self.model, prec, dev.clone()).with_pricer(Arc::clone(&pricer)),
+            DecodeModel::new(self.model, prec, dev.clone()).with_pricer(pricer),
+        )
+    }
+
+    /// Materialize the grid in deterministic (device, precision, slots,
+    /// prompt-max, output-max, [fifo, continuous]) order — the two
+    /// policies of one point are adjacent, at the same offered rate, so
+    /// `decode_sweep_json` can pair them into verdicts.
+    pub fn scenarios(&self) -> Vec<DecodeScenario> {
+        let mut out = Vec::new();
+        for dev in &self.devices {
+            for &prec in &self.precisions {
+                let (mut pf, mut dm) =
+                    self.model_pair(dev, prec, Arc::new(CostCache::new()));
+                for &slots in &self.slots {
+                    for &prompt_max in &self.prompt_maxes {
+                        for &output_max in &self.output_maxes {
+                            let rate =
+                                self.offered_rate(&mut pf, &mut dm, slots, prompt_max, output_max);
+                            for policy in [
+                                DecodePolicy::Fifo(BatchPolicy::new(slots, self.max_wait)),
+                                DecodePolicy::Continuous(ContinuousBatchPolicy::new(slots)),
+                            ] {
+                                out.push(DecodeScenario {
+                                    label: format!(
+                                        "{} {} {} p{} o{}",
+                                        dev.name,
+                                        prec.label(),
+                                        policy.label(),
+                                        prompt_max,
+                                        output_max
+                                    ),
+                                    device: dev.clone(),
+                                    precision: prec,
+                                    policy,
+                                    slots,
+                                    prompt_max,
+                                    output_max,
+                                    rate,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Offered request rate for one point: `load` times the estimated
+    /// per-request capacity of a full-slot pipeline (amortized prefill
+    /// plus mean-output decode steps at mid-depth cache). Both policies
+    /// of the point get the same rate, so they are compared at equal
+    /// pressure rather than each at its own saturation.
+    fn offered_rate<P: BatchCost, D: BatchCost>(
+        &self,
+        prefill: &mut P,
+        decode: &mut D,
+        slots: u64,
+        prompt_max: u64,
+        output_max: u64,
+    ) -> f64 {
+        let b = slots.max(1);
+        let omin = (output_max / 4).max(1);
+        let out_mean = (omin + output_max) as f64 / 2.0;
+        let pre = prefill.batch_seconds(b, prompt_max) / b as f64;
+        let mid = prompt_max + output_max / 2;
+        let step = decode.batch_seconds(b, mid) / b as f64;
+        self.load * (1.0 / (pre + out_mean * step))
+    }
+
+    /// Grid cardinality (scenarios the sweep will run; ×2 for the two
+    /// policies per point).
+    pub fn scenario_count(&self) -> usize {
+        self.devices.len()
+            * self.precisions.len()
+            * self.slots.len()
+            * self.prompt_maxes.len()
+            * self.output_maxes.len()
+            * 2
+    }
+}
+
+/// One fully-resolved decode grid point (one policy of a pair).
+#[derive(Debug, Clone)]
+pub struct DecodeScenario {
+    /// Table label (`MI100 FP32 CB8 p128 o32`).
+    pub label: String,
+    /// Device preset this scenario serves on.
+    pub device: DeviceSpec,
+    /// Forward-pass precision.
+    pub precision: Precision,
+    /// Scheduling policy.
+    pub policy: DecodePolicy,
+    /// Decode slots / FIFO max-batch.
+    pub slots: u64,
+    /// Upper bound of the prompt length distribution.
+    pub prompt_max: u64,
+    /// Upper bound of the output length distribution.
+    pub output_max: u64,
+    /// Offered arrival rate (requests/second), shared by both policies
+    /// of the point.
+    pub rate: f64,
+}
+
+/// One decode scenario's results: the shared report shape plus the
+/// token-level counters.
+#[derive(Debug, Clone)]
+pub struct DecodeReport {
+    /// Aggregate serving metrics (same definitions as the encoder
+    /// sweep's reports).
+    pub sim: SimReport,
+    /// `"fifo"` or `"continuous"`.
+    pub policy: String,
+    /// Decode slots / FIFO max-batch.
+    pub slots: u64,
+    /// Prompt-length upper bound.
+    pub prompt_max: u64,
+    /// Output-length upper bound.
+    pub output_max: u64,
+    /// Total tokens decoded.
+    pub tokens: u64,
+    /// Decode iterations executed.
+    pub decode_iters: u64,
+    /// Prefill launches executed.
+    pub prefills: u64,
+}
+
+/// Simulate one decode scenario (deterministic given `cfg.seed`).
+pub fn run_decode_scenario(cfg: &DecodeSweepConfig, scenario: &DecodeScenario) -> DecodeReport {
+    run_decode_scenario_with(cfg, scenario, &Arc::new(CostCache::new()))
+}
+
+/// `run_decode_scenario` against a shared grid-wide cost table (pure
+/// memoization, bit-identical reports).
+fn run_decode_scenario_with(
+    cfg: &DecodeSweepConfig,
+    scenario: &DecodeScenario,
+    cost: &Arc<CostCache>,
+) -> DecodeReport {
+    let (mut pf, mut dm) =
+        cfg.model_pair(&scenario.device, scenario.precision, Arc::clone(cost));
+    let trace = DecodeWorkload::poisson(scenario.rate, cfg.requests, cfg.seed)
+        .with_prompt_range((scenario.prompt_max / 8).max(1), scenario.prompt_max)
+        .with_output_range((scenario.output_max / 4).max(1), scenario.output_max)
+        .generate();
+    let out = DecodeSimulator::new(scenario.policy, cfg.slo)
+        .run(&scenario.label, &trace, &mut pf, &mut dm);
+    DecodeReport {
+        sim: out.report,
+        policy: match scenario.policy {
+            DecodePolicy::Fifo(_) => "fifo".to_string(),
+            DecodePolicy::Continuous(_) => "continuous".to_string(),
+        },
+        slots: scenario.slots,
+        prompt_max: scenario.prompt_max,
+        output_max: scenario.output_max,
+        tokens: out.tokens,
+        decode_iters: out.decode_iters,
+        prefills: out.prefills,
+    }
+}
+
+/// Run the whole grid across up to `threads` workers on the shared
+/// executor; grid-ordered results, one grid-wide [`CostCache`].
+pub fn run_decode_sweep(cfg: &DecodeSweepConfig, threads: usize) -> Vec<DecodeReport> {
+    run_decode_sweep_cached(cfg, threads).0
+}
+
+/// `run_decode_sweep`, also returning the grid's cost cache so callers
+/// can report the hit rate.
+pub fn run_decode_sweep_cached(
+    cfg: &DecodeSweepConfig,
+    threads: usize,
+) -> (Vec<DecodeReport>, Arc<CostCache>) {
+    let scenarios = cfg.scenarios();
+    let cost = Arc::new(CostCache::new());
+    let reports =
+        exec::run_grid(&scenarios, threads, |s| run_decode_scenario_with(cfg, s, &cost));
+    (reports, cost)
+}
+
+/// One decode report as a JSON object: the encoder sweep's report keys
+/// plus the generative columns.
+pub fn decode_report_json(r: &DecodeReport) -> Json {
+    let Json::Obj(mut m) = report_json(&r.sim) else {
+        unreachable!("report_json returns an object")
+    };
+    m.insert("policy".into(), Json::str(r.policy.clone()));
+    m.insert("slots".into(), Json::num(r.slots as f64));
+    m.insert("prompt_max".into(), Json::num(r.prompt_max as f64));
+    m.insert("output_max".into(), Json::num(r.output_max as f64));
+    m.insert("tokens".into(), Json::num(r.tokens as f64));
+    m.insert(
+        "tokens_per_s".into(),
+        Json::num(r.tokens as f64 / r.sim.makespan),
+    );
+    m.insert("decode_iters".into(), Json::num(r.decode_iters as f64));
+    m.insert("prefills".into(), Json::num(r.prefills as f64));
+    Json::Obj(m)
+}
+
+/// The whole decode sweep as one JSON artifact. Adjacent report pairs
+/// (FIFO then continuous, by grid construction) are distilled into a
+/// `verdicts` array answering the headline question per point.
+pub fn decode_sweep_json(cfg: &DecodeSweepConfig, reports: &[DecodeReport]) -> Json {
+    let verdicts: Vec<Json> = reports
+        .chunks_exact(2)
+        .map(|pair| {
+            let (fifo, cont) = (&pair[0], &pair[1]);
+            // Strip the policy token out of the label to name the point.
+            let point = format!(
+                "{} S{} p{} o{}",
+                fifo.sim
+                    .label
+                    .split(' ')
+                    .take(2)
+                    .collect::<Vec<_>>()
+                    .join(" "),
+                fifo.slots,
+                fifo.prompt_max,
+                fifo.output_max
+            );
+            Json::obj(vec![
+                ("point", Json::str(point)),
+                ("fifo_goodput_rps", Json::num(fifo.sim.goodput)),
+                ("continuous_goodput_rps", Json::num(cont.sim.goodput)),
+                ("continuous_wins", Json::Bool(cont.sim.goodput > fifo.sim.goodput)),
+            ])
+        })
+        .collect();
+    let mut pairs = vec![
+        ("study", Json::str("decode_continuous_batching")),
+        (
+            "model",
+            Json::obj(vec![
+                ("d_model", Json::num(cfg.model.d_model as f64)),
+                ("n_layers", Json::num(cfg.model.n_layers as f64)),
+                ("n_heads", Json::num(cfg.model.n_heads as f64)),
+                ("vocab", Json::num(cfg.model.vocab as f64)),
+            ]),
+        ),
+        ("requests", Json::num(cfg.requests as f64)),
+        // As a string: u64 seeds above 2^53 don't survive an f64 number.
+        ("seed", Json::str(cfg.seed.to_string())),
+        ("slo_ms", Json::num(cfg.slo * 1e3)),
+        ("max_wait_ms", Json::num(cfg.max_wait * 1e3)),
+        ("load", Json::num(cfg.load)),
+        ("scenarios", Json::arr(reports.iter().map(decode_report_json).collect())),
+        ("verdicts", Json::arr(verdicts)),
+    ];
+    if let Some(t) = &cfg.calibration {
+        pairs.push(("cost_table", t.to_json()));
+    }
+    Json::obj(pairs)
+}
+
+/// Write the decode sweep artifact to `path` (parent dirs created).
+pub fn write_decode_sweep(
+    path: &Path,
+    cfg: &DecodeSweepConfig,
+    reports: &[DecodeReport],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, decode_sweep_json(cfg, reports).to_string())
+        .with_context(|| format!("writing decode sweep artifact {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> DecodeSweepConfig {
+        let mut cfg = DecodeSweepConfig::bert_large_default();
+        cfg.requests = 300;
+        cfg.slots = vec![8];
+        cfg
+    }
+
+    #[test]
+    fn grid_order_pairs_policies() {
+        let cfg = small_cfg();
+        let s = cfg.scenarios();
+        assert_eq!(s.len(), cfg.scenario_count());
+        assert_eq!(s[0].label, "MI100 FP32 B8/10ms p128 o32");
+        assert_eq!(s[1].label, "MI100 FP32 CB8 p128 o32");
+        // Each pair shares one offered rate.
+        assert_eq!(s[0].rate, s[1].rate);
+        assert!(s.iter().all(|sc| sc.rate > 0.0));
+    }
+
+    #[test]
+    fn sweep_results_independent_of_worker_count() {
+        let cfg = small_cfg();
+        let serial = run_decode_sweep(&cfg, 1);
+        let parallel = run_decode_sweep(&cfg, 8);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.sim.label, b.sim.label);
+            assert_eq!(a.sim.p99, b.sim.p99);
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn artifact_has_verdicts_and_is_seed_stable() {
+        let cfg = small_cfg();
+        let a = decode_sweep_json(&cfg, &run_decode_sweep(&cfg, 4)).to_string();
+        let b = decode_sweep_json(&cfg, &run_decode_sweep(&cfg, 2)).to_string();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(
+            parsed.get("scenarios").unwrap().as_arr().unwrap().len(),
+            cfg.scenario_count()
+        );
+        assert_eq!(
+            parsed.get("verdicts").unwrap().as_arr().unwrap().len(),
+            cfg.scenario_count() / 2
+        );
+        let mut other = cfg.clone();
+        other.seed = 43;
+        let c = decode_sweep_json(&other, &run_decode_sweep(&other, 4)).to_string();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn both_policies_serve_the_same_tokens() {
+        let cfg = small_cfg();
+        let reports = run_decode_sweep(&cfg, 4);
+        for pair in reports.chunks_exact(2) {
+            assert_eq!(pair[0].policy, "fifo");
+            assert_eq!(pair[1].policy, "continuous");
+            // Same trace, same outputs: token totals must match.
+            assert_eq!(pair[0].tokens, pair[1].tokens);
+        }
+    }
+
+    #[test]
+    fn grid_cost_cache_is_pure_memoization() {
+        let cfg = small_cfg();
+        let (reports, cost) = run_decode_sweep_cached(&cfg, 4);
+        let baseline = run_decode_sweep(&cfg, 1);
+        for (a, b) in reports.iter().zip(&baseline) {
+            assert_eq!(a.sim.label, b.sim.label);
+            assert_eq!(a.sim.p99, b.sim.p99);
+        }
+        assert!(cost.misses() > 0);
+    }
+}

@@ -16,8 +16,8 @@ use std::fmt;
 use std::sync::Arc;
 
 use crate::config::{ModelConfig, Phase, Precision, RunConfig};
-use crate::model::op::{LayerClass, Pass};
-use crate::model::{output, IterationGraph};
+use crate::model::op::{LayerClass, OpCategory, OpKind, Pass};
+use crate::model::{output, GemmKind, IterationGraph};
 use crate::perf::device::DeviceSpec;
 use crate::perf::{Cached, CostCache, CostModel, RooflinePricer};
 use crate::util::buckets;
@@ -242,6 +242,189 @@ impl BatchCost for LatencyModel {
     }
 }
 
+// ------------------------------------------------------------- decode --
+
+/// The prefill graph of a generative serving step: the whole prompt in
+/// one batched forward pass — exactly [`forward_graph`], named for the
+/// prefill/decode split (DESIGN.md SSDecode). The prompt's keys and
+/// values land in the KV-cache as a side effect of the QKV projections,
+/// so no extra ops appear.
+pub fn prefill_graph(run: &RunConfig, head: ServeHead) -> IterationGraph {
+    forward_graph(run, head)
+}
+
+/// The per-token decode graph: one new token (`seq_len == 1` in `run`)
+/// attending over `cache_len` previously generated KV entries.
+///
+/// Built by transforming the seq-1 forward slice: with `l = cache_len +
+/// 1` keys/values visible, the attention score B-GEMM grows to
+/// `(1 × l × d_h)` per head (its `k·n` operand term *is* the K-cache
+/// read), the weighted-sum B-GEMM to `(d_h × 1 × l)` (its `m·k` term is
+/// the V-cache read), and the softmax/mask elementwise chain scales by
+/// `l`. Every other op (projections, FFN, head) is the plain seq-1 GEMV
+/// shape — the weight-streaming-bound regime where the roofline memory
+/// term is the whole story. At `cache_len == 0` the graph is identical
+/// to the seq-1 forward slice (`rust/tests/decode_sim.rs` pins this), so
+/// KV-cache bytes flow through every [`CostModel`] pricer with no
+/// pricer-side changes: they are ordinary GEMM operand bytes.
+pub fn decode_graph(run: &RunConfig, head: ServeHead, cache_len: u64) -> IterationGraph {
+    assert_eq!(run.model.seq_len, 1, "decode steps generate one token");
+    let mut g = forward_graph(run, head);
+    let l = cache_len + 1;
+    for op in &mut g.ops {
+        if op.layer != LayerClass::Transformer {
+            continue;
+        }
+        match &mut op.kind {
+            OpKind::Gemm(d) if d.kind == GemmKind::AttnScore => d.n = l,
+            OpKind::Gemm(d) if d.kind == GemmKind::AttnOutput => d.k = l,
+            OpKind::Elementwise { elems, .. } if op.category == OpCategory::AttnEw => {
+                *elems *= l;
+            }
+            _ => {}
+        }
+    }
+    g
+}
+
+/// Memoized per-token decode-step latency on one device — the decode
+/// half of the prefill/decode split, shaped like [`LatencyModel`] so the
+/// two sides of a generative deployment share builders and pricers.
+///
+/// Implements [`BatchCost`] with the *KV-cache length* in the sequence
+/// slot: `batch_seconds(b, kv)` prices one decode iteration of `b`
+/// concurrent requests whose deepest cache holds `kv` tokens (padded to
+/// `cache_bucket`, as a real stack compiles a small grid of cache
+/// shapes). That lets the decode simulator drive prefill and decode
+/// through the same seam the FIFO simulator already uses.
+#[derive(Clone)]
+pub struct DecodeModel {
+    /// Served model hyperparameters (Table 2).
+    pub model: ModelConfig,
+    /// Numeric precision of the decode pass (must match the pricer's).
+    pub precision: Precision,
+    /// Roofline device preset (must match the pricer's).
+    pub device: DeviceSpec,
+    /// Output head variant.
+    pub head: ServeHead,
+    /// KV-cache-length padding granularity (compiled-shape bucket).
+    pub cache_bucket: u64,
+    cache: HashMap<(u64, u64), f64>,
+    /// The op pricer every decode step is costed through (shareable by
+    /// `Arc`, exactly as [`LatencyModel`] shares grid-wide caches).
+    pricer: Arc<dyn CostModel>,
+}
+
+impl fmt::Debug for DecodeModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("DecodeModel")
+            .field("model", &self.model)
+            .field("precision", &self.precision)
+            .field("device", &self.device.name)
+            .field("head", &self.head)
+            .field("cache_bucket", &self.cache_bucket)
+            .field("cached_points", &self.cache.len())
+            .field("pricer_fingerprint", &self.pricer.fingerprint())
+            .finish()
+    }
+}
+
+impl DecodeModel {
+    /// A decode model with the default 32-token cache bucket, the SQuAD
+    /// serving head, and a privately-cached analytic pricer.
+    pub fn new(model: ModelConfig, precision: Precision, device: DeviceSpec) -> DecodeModel {
+        let pricer = Arc::new(Cached::new(RooflinePricer::new(device.clone(), precision)));
+        DecodeModel {
+            model,
+            precision,
+            device,
+            head: ServeHead::Squad,
+            cache_bucket: 32,
+            cache: HashMap::new(),
+            pricer,
+        }
+    }
+
+    /// Swap in an arbitrary [`CostModel`] backend (calibrated, what-if,
+    /// pre-shared cache...). Same contract as
+    /// [`LatencyModel::with_pricer`]: device/precision must match.
+    pub fn with_pricer(mut self, pricer: Arc<dyn CostModel>) -> DecodeModel {
+        assert_eq!(
+            pricer.precision(),
+            self.precision,
+            "pricer precision must match the decode model's"
+        );
+        assert_eq!(
+            pricer.device().cost_fingerprint(),
+            self.device.cost_fingerprint(),
+            "pricer device must match the decode model's"
+        );
+        self.pricer = pricer;
+        self.cache.clear();
+        self
+    }
+
+    /// Share a grid-wide [`CostCache`] table under the default analytic
+    /// backend (pure memoization, bit-identical results).
+    pub fn with_cost_cache(self, cost: Arc<CostCache>) -> DecodeModel {
+        let pricer = Arc::new(Cached::with_table(
+            RooflinePricer::new(self.device.clone(), self.precision),
+            cost,
+        ));
+        self.with_pricer(pricer)
+    }
+
+    /// Override the cache-length padding bucket (1 = exact shapes).
+    pub fn with_cache_bucket(mut self, bucket: u64) -> DecodeModel {
+        self.cache_bucket = bucket.max(1);
+        self
+    }
+
+    /// Override the output head.
+    pub fn with_head(mut self, head: ServeHead) -> DecodeModel {
+        self.head = head;
+        self
+    }
+
+    /// The padded (compiled) KV-cache length a step at cache depth
+    /// `cache_len` executes at: rounded up to the bucket, capped at
+    /// `max_seq_len` (the position table bounds total context).
+    pub fn padded_cache(&self, cache_len: u64) -> u64 {
+        buckets::pad_to_bucket(cache_len, self.cache_bucket, self.model.max_seq_len)
+    }
+
+    /// Seconds for one decode iteration of `batch` concurrent requests
+    /// over a `cache_len`-deep KV-cache (memoized per
+    /// `(batch, padded_cache)`), priced through the model's
+    /// [`CostModel`].
+    pub fn step_seconds(&mut self, batch: u64, cache_len: u64) -> f64 {
+        let key = (batch.max(1), self.padded_cache(cache_len));
+        if let Some(&t) = self.cache.get(&key) {
+            return t;
+        }
+        let run = inference_run(self.model, key.0, 1, self.precision);
+        let g = decode_graph(&run, self.head, key.1);
+        let t = self.pricer.iteration_seconds(&g);
+        self.cache.insert(key, t);
+        t
+    }
+
+    /// Number of distinct `(batch, padded_cache)` shapes costed so far.
+    pub fn cached_points(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+impl BatchCost for DecodeModel {
+    fn padded_seq(&self, seq_len: u64) -> u64 {
+        DecodeModel::padded_cache(self, seq_len)
+    }
+
+    fn batch_seconds(&mut self, batch: u64, seq_len: u64) -> f64 {
+        DecodeModel::step_seconds(self, batch, seq_len)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,5 +534,62 @@ mod tests {
         }
         // 64 raw lengths -> 2 padded shapes (32 and 64).
         assert_eq!(lm.cached_points(), 2);
+    }
+
+    #[test]
+    fn decode_graph_at_cache_zero_is_the_seq1_forward_slice() {
+        let run = inference_run(ModelConfig::bert_large(), 4, 1, Precision::Fp32);
+        let fwd = forward_graph(&run, ServeHead::Squad);
+        let dec = decode_graph(&run, ServeHead::Squad, 0);
+        assert_eq!(fwd.ops.len(), dec.ops.len());
+        assert_eq!(fwd.total_flops(), dec.total_flops());
+        let bytes = |g: &IterationGraph| g.ops.iter().map(|o| o.total_bytes()).sum::<u64>();
+        assert_eq!(bytes(&fwd), bytes(&dec));
+    }
+
+    #[test]
+    fn decode_work_grows_with_cache_depth() {
+        let run = inference_run(ModelConfig::bert_large(), 4, 1, Precision::Fp32);
+        let bytes = |kv: u64| {
+            decode_graph(&run, ServeHead::Squad, kv)
+                .ops
+                .iter()
+                .map(|o| o.total_bytes())
+                .sum::<u64>()
+        };
+        assert!(bytes(0) < bytes(64) && bytes(64) < bytes(256));
+    }
+
+    #[test]
+    fn decode_step_is_cheaper_than_prefill_at_equal_context() {
+        // One token over a 128-deep cache streams the weights once;
+        // prefilling 128 tokens does 128x the GEMM work.
+        let mut dm = DecodeModel::new(ModelConfig::bert_large(), Precision::Fp32,
+                                      DeviceSpec::mi100());
+        let mut lm = mi100_fp32();
+        assert!(dm.step_seconds(8, 128) < lm.batch_seconds(8, 128));
+    }
+
+    #[test]
+    fn decode_cache_collapses_onto_the_bucket_grid() {
+        let mut dm = DecodeModel::new(ModelConfig::bert_large(), Precision::Fp32,
+                                      DeviceSpec::mi100());
+        for kv in 1..=64 {
+            dm.step_seconds(4, kv);
+        }
+        assert_eq!(dm.cached_points(), 2);
+    }
+
+    #[test]
+    fn shared_cost_cache_changes_no_decode_latency() {
+        let mut solo = DecodeModel::new(ModelConfig::bert_large(), Precision::Fp32,
+                                        DeviceSpec::mi100());
+        let shared = Arc::new(CostCache::new());
+        let mut a = DecodeModel::new(ModelConfig::bert_large(), Precision::Fp32,
+                                     DeviceSpec::mi100())
+            .with_cost_cache(Arc::clone(&shared));
+        for (batch, kv) in [(1u64, 32u64), (8, 128), (32, 384)] {
+            assert_eq!(solo.step_seconds(batch, kv), a.step_seconds(batch, kv));
+        }
     }
 }

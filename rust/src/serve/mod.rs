@@ -24,18 +24,39 @@
 //!   with one grid-wide `perf::CostCache`, each point at an offered
 //!   load proportional to its own modeled saturation, emitting a
 //!   deterministic JSON artifact via `util::json`.
+//! * [`decode`] / [`decode_sweep`] — the generative extension (DESIGN.md
+//!   SSDecode): [`graph::decode_graph`] reshapes the seq-1 forward slice
+//!   into a per-token GEMV step over a growing KV-cache (cache bytes are
+//!   GEMM operand bytes, so every `CostModel` pricer accounts them with
+//!   no pricer changes), [`DecodeSimulator`] drives FIFO lock-step vs
+//!   slot-based continuous batching over one trace, and the decode sweep
+//!   pairs the two policies per grid point into `continuous_wins`
+//!   verdicts (`bertprof run decode`).
 //!
-//! Entry points: `bertprof serve` (CLI), the
+//! Entry points: `bertprof serve` / `bertprof run decode` (CLI), the
 //! `serve_latency_throughput` bench, and `examples/serving_study.rs`.
 //! Everything composes the same `model::op` inventory and
 //! `perf::roofline` costing as the training-side studies, so serving
 //! numbers stay consistent with Fig. 4 by construction.
 
+pub mod decode;
+pub mod decode_sweep;
 pub mod graph;
 pub mod sim;
 pub mod sweep;
 
-pub use graph::{forward_graph, inference_run, BatchCost, LatencyModel, ServeHead};
+pub use decode::{
+    ContinuousBatchPolicy, DecodeCompletion, DecodeOutcome, DecodePolicy, DecodeRequest,
+    DecodeSimulator, DecodeWorkload,
+};
+pub use decode_sweep::{
+    decode_report_json, decode_sweep_json, run_decode_scenario, run_decode_sweep,
+    run_decode_sweep_cached, write_decode_sweep, DecodeReport, DecodeScenario, DecodeSweepConfig,
+};
+pub use graph::{
+    decode_graph, forward_graph, inference_run, prefill_graph, BatchCost, DecodeModel,
+    LatencyModel, ServeHead,
+};
 pub use sim::{BatchPolicy, Completion, Request, SimOutcome, SimReport, Simulator, Workload};
 pub use sweep::{
     run_scenario, run_sweep, run_sweep_cached, sweep_json, write_sweep, Scenario, SweepConfig,

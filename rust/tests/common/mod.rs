@@ -1,0 +1,49 @@
+//! Invariant helpers shared by the serving test suites
+//! (`serve_sim.rs`, `decode_sim.rs`): queueing identities checked from
+//! raw per-request lifecycle events, so the same suite runs against any
+//! `BatchPolicy`-like scheduler — FIFO co-batching, lock-step decode,
+//! and slot-based continuous batching alike.
+
+// Each integration-test crate compiles its own copy; not every crate
+// uses every helper.
+#![allow(dead_code)]
+
+use bertprof::serve::SimReport;
+
+/// Time-average of N(t) over [0, makespan], integrated from raw
+/// `(arrival, done)` spans — independent of any simulator's own
+/// `mean_in_system` bookkeeping.
+pub fn occupancy_by_event_integration(spans: &[(f64, f64)], makespan: f64) -> f64 {
+    let mut events: Vec<(f64, f64)> = spans
+        .iter()
+        .flat_map(|&(arrival, done)| [(arrival, 1.0), (done, -1.0)])
+        .collect();
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite times"));
+    let (mut area, mut level, mut last) = (0.0_f64, 0.0_f64, 0.0_f64);
+    for (t, delta) in events {
+        area += level * (t - last);
+        last = t;
+        level += delta;
+    }
+    assert!(level.abs() < 1e-9, "system did not drain: {level}");
+    area / makespan
+}
+
+/// Assert Little's law `L = λ·W` on a report, with the `L` side
+/// re-integrated from the raw spans, and the report's own
+/// `mean_in_system` agreeing with the integration.
+pub fn assert_littles_law(report: &SimReport, spans: &[(f64, f64)]) {
+    let l = occupancy_by_event_integration(spans, report.makespan);
+    let lam_w = report.arrival_rate * report.mean_latency;
+    assert!(
+        (l - lam_w).abs() < 1e-6 * l.max(1e-12),
+        "[{}] L {l} != λW {lam_w}",
+        report.label
+    );
+    assert!(
+        (report.mean_in_system - l).abs() < 1e-6 * l.max(1e-12),
+        "[{}] report L {} != integrated L {l}",
+        report.label,
+        report.mean_in_system
+    );
+}

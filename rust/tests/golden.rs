@@ -23,7 +23,7 @@ use bertprof::compress::{self, CompressPrecision, CompressSweepConfig, CompressV
 use bertprof::perf::device::DeviceSpec;
 use bertprof::perf::CalibrationTable;
 use bertprof::profiler::artifact;
-use bertprof::serve::{self, SweepConfig};
+use bertprof::serve::{self, DecodeSweepConfig, SweepConfig};
 use bertprof::util::Json;
 
 /// Relative tolerance for numeric fields: wide enough to absorb
@@ -132,6 +132,15 @@ fn serve_golden_cfg() -> SweepConfig {
     cfg
 }
 
+/// The reduced decode grid the snapshot pins: MI100, FP32 vs Mixed,
+/// 8 vs 32 slots, 500 requests — both schedulers at every point, so the
+/// continuous-vs-FIFO verdicts are golden-gated too.
+fn decode_golden_cfg() -> DecodeSweepConfig {
+    let mut cfg = DecodeSweepConfig::bert_large_default();
+    cfg.requests = 500;
+    cfg
+}
+
 /// The reduced compress grid: MI100 only, the dense FP32/FP16 anchors
 /// plus the headline pruned+INT8 variant, B32, 800 requests.
 fn compress_golden_cfg() -> CompressSweepConfig {
@@ -223,6 +232,38 @@ fn golden_serve_calibrated_matches_the_registry_path() {
     )
     .expect("calibrated serve runs");
     check("serve_calibrated", out.artifact);
+}
+
+#[test]
+fn golden_decode_sweep() {
+    let cfg = decode_golden_cfg();
+    let reports = serve::run_decode_sweep(&cfg, 2);
+    let artifact = serve::decode_sweep_json(&cfg, &reports);
+    // The ISSUE 6 acceptance shape rides inside the snapshot: at least
+    // one swept point where continuous batching strictly wins.
+    let wins = artifact
+        .get("verdicts")
+        .expect("verdicts array")
+        .as_arr()
+        .expect("array")
+        .iter()
+        .filter(|v| matches!(v.get("continuous_wins"), Some(Json::Bool(true))))
+        .count();
+    assert!(wins >= 1, "no continuous-batching win on the golden grid");
+    check("decode_sweep", artifact);
+}
+
+#[test]
+fn golden_decode_matches_the_registry_path() {
+    // `bertprof run decode --set requests=500` emits exactly the
+    // golden-gated artifact (the CI scenario-artifacts row).
+    let out = bertprof::scenario::run_by_name(
+        "decode",
+        &[("requests".into(), "500".into()), ("threads".into(), "2".into())],
+        true,
+    )
+    .expect("decode runs");
+    check("decode_sweep", out.artifact);
 }
 
 #[test]

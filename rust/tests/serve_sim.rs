@@ -15,6 +15,8 @@ use bertprof::serve::{
 };
 use bertprof::util::Rng;
 
+mod common;
+
 fn latency_model(prec: Precision) -> LatencyModel {
     LatencyModel::new(ModelConfig::bert_large(), prec, DeviceSpec::mi100())
 }
@@ -26,46 +28,22 @@ fn simulate(rate_frac: f64, max_batch: u64, requests: u64, seed: u64) -> SimOutc
     Simulator::new(BatchPolicy::new(max_batch, 0.010), 0.100).run("prop", &trace, &mut lm)
 }
 
-/// Time-average of N(t) over [0, makespan], integrated from the raw
-/// arrival/completion events — independent of the simulator's own
-/// `mean_in_system` bookkeeping.
-fn occupancy_by_event_integration(out: &SimOutcome, makespan: f64) -> f64 {
-    let mut events: Vec<(f64, f64)> = out
-        .completions
-        .iter()
-        .flat_map(|c| [(c.arrival, 1.0), (c.done, -1.0)])
-        .collect();
-    events.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite times"));
-    let (mut area, mut level, mut last) = (0.0_f64, 0.0_f64, 0.0_f64);
-    for (t, delta) in events {
-        area += level * (t - last);
-        last = t;
-        level += delta;
-    }
-    assert!(level.abs() < 1e-9, "system did not drain: {level}");
-    area / makespan
+/// Raw (arrival, done) spans for the shared invariant helpers.
+fn spans(out: &SimOutcome) -> Vec<(f64, f64)> {
+    out.completions.iter().map(|c| (c.arrival, c.done)).collect()
 }
 
 #[test]
 fn prop_littles_law_holds_across_loads_and_policies() {
+    // The identity itself lives in tests/common so the decode suite
+    // runs the same check against both generative schedulers.
     let mut rng = Rng::seed(2024);
     for _ in 0..6 {
         let rate_frac = 0.2 + 0.7 * rng.uniform();
         let max_batch = rng.int_range(1, 32) as u64;
         let seed = rng.next_u64();
         let out = simulate(rate_frac, max_batch, 2_000, seed);
-        let r = &out.report;
-        let l = occupancy_by_event_integration(&out, r.makespan);
-        let lam_w = r.arrival_rate * r.mean_latency;
-        assert!(
-            (l - lam_w).abs() < 1e-6 * l.max(1e-12),
-            "L {l} != λW {lam_w} (load {rate_frac:.2}, B{max_batch})"
-        );
-        assert!(
-            (r.mean_in_system - l).abs() < 1e-6 * l.max(1e-12),
-            "report L {} != integrated L {l}",
-            r.mean_in_system
-        );
+        common::assert_littles_law(&out.report, &spans(&out));
     }
 }
 
