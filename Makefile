@@ -1,7 +1,7 @@
 # bertprof build drivers. The HLO half of `make artifacts` is the only
 # step that needs python (JAX); everything else is cargo.
 
-.PHONY: build test bench doc artifacts bench-costmodel bench-decode clean-artifacts
+.PHONY: build test bench doc artifacts bench-costmodel bench-decode bench-fleet clean-artifacts
 
 build:
 	cargo build --release
@@ -37,10 +37,21 @@ bench-decode:
 		echo "bench-decode: no cargo on PATH, skipping (python-only host)"; \
 	fi
 
+# The fleet bench data point (DESIGN.md SSFleet): one multi-replica
+# simulation per routing policy plus the autoscaler's tick-loop
+# overhead, written to BENCH_fleet.json. Same python-only-host escape
+# hatch as bench-costmodel.
+bench-fleet:
+	@if command -v cargo >/dev/null 2>&1; then \
+		cargo bench --bench fig_fleet; \
+	else \
+		echo "bench-fleet: no cargo on PATH, skipping (python-only host)"; \
+	fi
+
 # Lower every HLO artifact + manifest.json (DESIGN.md SS2; run from
 # python/ so aot.py's relative imports and default --out resolve) and
-# record the cost-model + decode bench trajectory points.
-artifacts: bench-costmodel bench-decode
+# record the cost-model + decode + fleet bench trajectory points.
+artifacts: bench-costmodel bench-decode bench-fleet
 	cd python && python3 -m compile.aot --out ../artifacts
 
 clean-artifacts:

@@ -1,0 +1,128 @@
+//! The fleet bench: what does one multi-replica simulation cost per
+//! routing policy, and what does the autoscaler's tick loop add?
+//!
+//! Three questions on the SSFleet grid (DESIGN.md):
+//!
+//! 1. **Routing cost** — one heterogeneous-pool run per policy
+//!    (round-robin, least-loaded, power-of-two-choices) over the same
+//!    diurnal trace, all batch prices pre-memoized.
+//! 2. **Autoscaler overhead** — the same pool and trace with the
+//!    queue-depth autoscaler ticking vs static.
+//! 3. **Headline sanity** — the bench asserts request conservation and
+//!    per-policy determinism before timing anything.
+//!
+//! Results land in `BENCH_fleet.json` (wired into `make artifacts`).
+
+use bertprof::config::{ModelConfig, Precision};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::serve::{
+    ArrivalProcess, AutoscalerConfig, BatchPolicy, Fleet, LatencyModel, Routing, ROUTE_SEED_SALT,
+};
+use bertprof::util::bench::{black_box, Bench};
+use bertprof::util::Json;
+
+const REQUESTS: u64 = 2_000;
+const SEED: u64 = 42;
+
+fn pool() -> Vec<(String, LatencyModel)> {
+    let prec = Precision::Mixed;
+    [DeviceSpec::mi100(), DeviceSpec::a100(), DeviceSpec::v100()]
+        .into_iter()
+        .flat_map(|d| {
+            (0..2).map(move |_| {
+                (
+                    d.name.clone(),
+                    LatencyModel::new(ModelConfig::bert_large(), prec, d.clone()),
+                )
+            })
+        })
+        .collect()
+}
+
+fn main() {
+    let arrivals = ArrivalProcess::Diurnal { base: 350.0, amplitude: 0.6, period: 3.0 };
+    let trace = arrivals.generate(REQUESTS, SEED, 16, 128);
+    let fleet = Fleet::new(BatchPolicy::new(8, 0.010), 0.100);
+    let auto = AutoscalerConfig {
+        enabled: true,
+        min_replicas: 3,
+        max_replicas: 6,
+        up_threshold: 12.0,
+        down_threshold: 4.0,
+        tick: 0.1,
+        cooldown_ticks: 2,
+        warmup: 0.2,
+    };
+    println!(
+        "## fig_fleet — {} requests over a 6-replica heterogeneous pool, per routing policy",
+        REQUESTS
+    );
+
+    // Correctness first: conservation and per-policy determinism.
+    for routing in [Routing::RoundRobin, Routing::LeastLoaded, Routing::PowerOfTwo] {
+        let run = |_: usize| {
+            let mut p = routing.build();
+            fleet
+                .run("sanity", &trace, pool(), p.as_mut(), SEED ^ ROUTE_SEED_SALT)
+                .report
+        };
+        let (a, b) = (run(0), run(1));
+        assert_eq!(a.admitted, REQUESTS, "{} lost requests", routing.label());
+        assert_eq!(a.rejected, 0);
+        assert_eq!(a.sim.p99, b.sim.p99, "{} is nondeterministic", routing.label());
+    }
+
+    let mut b = Bench::new("fig_fleet");
+    let mut medians: Vec<(String, std::time::Duration)> = Vec::new();
+    for routing in [Routing::RoundRobin, Routing::LeastLoaded, Routing::PowerOfTwo] {
+        let label = format!("{} static fleet run ({REQUESTS} req)", routing.label());
+        let t = b
+            .run(&label, || {
+                let mut p = routing.build();
+                let out = fleet.run("bench", &trace, pool(), p.as_mut(), SEED ^ ROUTE_SEED_SALT);
+                black_box(out.report.sim.goodput);
+            })
+            .median;
+        medians.push((routing.label().to_string(), t));
+    }
+    let auto_t = b
+        .run(&format!("p2c autoscaled fleet run ({REQUESTS} req)"), || {
+            let mut p = Routing::PowerOfTwo.build();
+            let out = fleet
+                .clone()
+                .with_autoscaler(auto)
+                .run("bench", &trace, pool(), p.as_mut(), SEED ^ ROUTE_SEED_SALT);
+            black_box(out.report.sim.goodput);
+        })
+        .median;
+    b.finish();
+
+    let us = |d: std::time::Duration| d.as_secs_f64() * 1e6;
+    let p2c_t = medians.last().expect("three policies").1;
+    println!(
+        "autoscaler tick loop costs {:.2}x the static p2c run",
+        us(auto_t) / us(p2c_t).max(1e-9)
+    );
+
+    let mut pairs = vec![
+        ("bench", Json::str("fig_fleet")),
+        ("sim_requests", Json::num(REQUESTS as f64)),
+        ("pool_replicas", Json::num(6.0)),
+        ("autoscaled_median_us", Json::num(us(auto_t))),
+        (
+            "autoscaler_overhead",
+            Json::num(us(auto_t) / us(p2c_t).max(1e-9)),
+        ),
+    ];
+    for (name, t) in &medians {
+        pairs.push(match name.as_str() {
+            "rr" => ("rr_median_us", Json::num(us(*t))),
+            "ll" => ("ll_median_us", Json::num(us(*t))),
+            _ => ("p2c_median_us", Json::num(us(*t))),
+        });
+    }
+    let out = Json::obj(pairs);
+    let path = "BENCH_fleet.json";
+    std::fs::write(path, out.to_string()).expect("write bench artifact");
+    println!("wrote {path}");
+}

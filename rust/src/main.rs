@@ -38,6 +38,7 @@ fn main() -> Result<()> {
         "gemm-table" => alias(&args, "table3"),
         "serve" => alias(&args, "serve"),
         "decode" => alias(&args, "decode"),
+        "fleet" => alias(&args, "fleet"),
         "compress" => alias(&args, "compress"),
         "whatif" => alias(&args, "whatif"),
         "memory" => alias(&args, "memory"),
@@ -70,6 +71,7 @@ Legacy aliases (same registry entries):
   gemm-table                                      Table 3
   serve [--requests N] [--device D] [--out F] ... SSServe dynamic-batching grid
   decode [--requests N] [--slots S,S] ...         SSDecode continuous-vs-FIFO grid
+  fleet [--requests N] [--load F] ...             SSFleet routing/autoscaling grid
   compress [--requests N] [--device D] ...        SSCompress SLO what-if grid
   whatif [--device D]                             SS5.2 hardware what-ifs
   memory [--hbm GB]                               SS5.2 capacity model

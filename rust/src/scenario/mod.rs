@@ -40,7 +40,7 @@ use crate::perf::{
     intensity, memory, whatif, Cached, CalibrationTable, CostCache, CostModel, RooflinePricer,
 };
 use crate::profiler::{artifact, report, Timeline};
-use crate::serve::{self, DecodeSweepConfig, SweepConfig};
+use crate::serve::{self, DecodeSweepConfig, FleetSweepConfig, SweepConfig};
 use crate::util::Json;
 
 /// One declared scenario parameter: the `--set key=value` surface.
@@ -333,6 +333,14 @@ pub fn registry() -> Vec<ScenarioSpec> {
             params: SWEEP_PARAMS_DECODE,
             default_out: Some("decode_sweep.json"),
             run: run_decode,
+        },
+        ScenarioSpec {
+            name: "fleet",
+            figure: "SSFleet",
+            title: "multi-replica fleet grid (routing x arrivals x autoscaling)",
+            params: SWEEP_PARAMS_FLEET,
+            default_out: Some("fleet_sweep.json"),
+            run: run_fleet,
         },
         ScenarioSpec {
             name: "compress",
@@ -811,6 +819,24 @@ const SWEEP_PARAMS_DECODE: &[ParamSpec] = &[
     THREADS_PARAM,
 ];
 
+const SWEEP_PARAMS_FLEET: &[ParamSpec] = &[
+    ParamSpec { key: "requests", default: "", help: "requests per scenario trace (6000)" },
+    ParamSpec { key: "seed", default: "", help: "workload + routing RNG seed (42)" },
+    ParamSpec { key: "slo-ms", default: "", help: "latency SLO in milliseconds (100)" },
+    ParamSpec { key: "max-wait-ms", default: "", help: "co-batching timeout in ms (10)" },
+    ParamSpec { key: "load", default: "", help: "mean fraction of pool saturation (0.55)" },
+    ParamSpec { key: "max-batch", default: "", help: "per-replica max batch (8)" },
+    ParamSpec { key: "seq-max", default: "", help: "request seq-len upper bound (128)" },
+    ParamSpec { key: "amplitude", default: "", help: "diurnal rate swing fraction (0.6)" },
+    ParamSpec { key: "burst", default: "", help: "flash-crowd rate multiplier (2.5)" },
+    ParamSpec {
+        key: "cost_table",
+        default: "",
+        help: "calibration-table JSON path (DESIGN.md SSCost; default: analytic)",
+    },
+    THREADS_PARAM,
+];
+
 const SWEEP_PARAMS_COMPRESS: &[ParamSpec] = &[
     ParamSpec { key: "requests", default: "", help: "requests per scenario trace (4000)" },
     ParamSpec { key: "seed", default: "", help: "workload RNG seed (42)" },
@@ -1100,6 +1126,161 @@ fn run_decode(p: &Params) -> Result<ScenarioOutput> {
     Ok(ScenarioOutput { text, artifact: serve::decode_sweep_json(&cfg, &reports) })
 }
 
+fn run_fleet(p: &Params) -> Result<ScenarioOutput> {
+    let mut cfg = FleetSweepConfig::bert_large_default();
+    // Parsed inline (not via `parse_sweep_common`): the fleet grid's
+    // axes are pools/arrivals/routing, not max-batch/seq-max grids.
+    let opt_u64 = |key: &str| -> Result<Option<u64>> {
+        match p.get(key) {
+            "" => Ok(None),
+            _ => p.get_u64(key).map(Some),
+        }
+    };
+    let opt_f64 = |key: &str| -> Result<Option<f64>> {
+        match p.get(key) {
+            "" => Ok(None),
+            _ => p.get_f64(key).map(Some),
+        }
+    };
+    if let Some(v) = opt_u64("requests")? {
+        cfg.requests = v;
+    }
+    if let Some(v) = opt_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = opt_f64("slo-ms")? {
+        cfg.slo = v / 1e3;
+    }
+    if let Some(v) = opt_f64("max-wait-ms")? {
+        cfg.max_wait = v / 1e3;
+    }
+    if let Some(l) = opt_f64("load")? {
+        if !(l.is_finite() && l > 0.0) {
+            bail!("--load must be a positive finite saturation fraction, got {l}");
+        }
+        cfg.load = l;
+    }
+    if let Some(v) = opt_u64("max-batch")? {
+        cfg.max_batch = v;
+    }
+    if let Some(v) = opt_u64("seq-max")? {
+        cfg.seq_max = v;
+    }
+    if let Some(v) = opt_f64("amplitude")? {
+        cfg.amplitude = v;
+    }
+    if let Some(v) = opt_f64("burst")? {
+        cfg.burst_factor = v;
+    }
+    match p.get("cost_table") {
+        "" => {}
+        path => {
+            cfg.calibration = Some(CalibrationTable::load(std::path::Path::new(path))?);
+        }
+    }
+    let (reports, cost) = serve::run_fleet_sweep_cached(&cfg, p.threads()?);
+    let scenarios = cfg.scenarios();
+
+    let mut text = format!(
+        "## SSFleet — multi-replica fleet serving study ({} req/scenario, \
+         load {:.0}% of pool saturation, SLO {:.0} ms, seed {})\n",
+        cfg.requests,
+        cfg.load * 100.0,
+        cfg.slo * 1e3,
+        cfg.seed
+    );
+    if let Some(t) = &cfg.calibration {
+        text.push_str(&format!(
+            "calibrated pricing: {} op-category override(s) from the cost table\n",
+            t.scale.len()
+        ));
+    }
+    let cols: &[(&str, usize)] = &[
+        ("config", 28),
+        ("rate/s", 9),
+        ("thr/s", 9),
+        ("p99(ms)", 9),
+        ("SLO%", 7),
+        ("spread", 8),
+        ("repl-s", 9),
+        ("$/Mreq", 9),
+    ];
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.sim.label.clone(),
+                format!("{:.1}", r.sim.arrival_rate),
+                format!("{:.1}", r.sim.throughput),
+                format!("{:.1}", r.sim.p99 * 1e3),
+                format!("{:.1}%", r.sim.slo_attainment * 100.0),
+                format!("{:.2}", r.util_spread),
+                format!("{:.1}", r.replica_seconds),
+                format!("{:.2}", r.cost_per_m_requests),
+            ]
+        })
+        .collect();
+    text.push_str(&report::sweep_table("", cols, &rows));
+
+    // Verdict summaries mirror `fleet_sweep_json`: each block of the
+    // grid holds one {pool, arrival} at static then autoscaled, with
+    // the routing policies innermost.
+    let nr = cfg.routings.len();
+    let block = 2 * nr;
+    let rr = cfg.routings.iter().position(|r| *r == serve::Routing::RoundRobin);
+    let p2c = cfg.routings.iter().position(|r| *r == serve::Routing::PowerOfTwo);
+    if let (Some(ri), Some(pi)) = (rr, p2c) {
+        text.push_str("\n## p2c vs round-robin tail latency at equal offered rate\n");
+        for (bi, chunk) in reports.chunks_exact(block).enumerate() {
+            let scn = &scenarios[bi * block];
+            for (half, name) in [(0usize, "static"), (1usize, "auto")] {
+                let (r, c) = (&chunk[half * nr + ri], &chunk[half * nr + pi]);
+                text.push_str(&format!(
+                    "  {} {} {}: rr p99 {:.1} ms vs p2c {:.1} ms — {}\n",
+                    scn.pool,
+                    scn.arrival.label(),
+                    name,
+                    r.sim.p99 * 1e3,
+                    c.sim.p99 * 1e3,
+                    if c.sim.p99 < r.sim.p99 { "p2c wins" } else { "rr holds" }
+                ));
+            }
+        }
+    }
+    text.push_str("\n## Autoscaled vs static replica-seconds at equal SLO attainment\n");
+    for (bi, chunk) in reports.chunks_exact(block).enumerate() {
+        let scn = &scenarios[bi * block];
+        for (ri, routing) in cfg.routings.iter().enumerate() {
+            let (st, au) = (&chunk[ri], &chunk[nr + ri]);
+            text.push_str(&format!(
+                "  {} {} {}: {:.0} -> {:.0} repl-s, SLO {:.1}% -> {:.1}% — {}\n",
+                scn.pool,
+                scn.arrival.label(),
+                routing.label(),
+                st.replica_seconds,
+                au.replica_seconds,
+                st.sim.slo_attainment * 100.0,
+                au.sim.slo_attainment * 100.0,
+                if au.replica_seconds < st.replica_seconds
+                    && au.sim.slo_attainment >= st.sim.slo_attainment - 0.02
+                {
+                    "autoscaler saves"
+                } else {
+                    "static holds"
+                }
+            ));
+        }
+    }
+    text.push_str(&format!(
+        "cost-cache: {} op shapes priced across {} lookups \
+         ({:.1}% deduplicated)\n",
+        cost.len(),
+        cost.lookups(),
+        cost.dedup_rate() * 100.0
+    ));
+    Ok(ScenarioOutput { text, artifact: serve::fleet_sweep_json(&cfg, &reports) })
+}
+
 fn run_compress(p: &Params) -> Result<ScenarioOutput> {
     let mut cfg = CompressSweepConfig::bert_large_default();
     let o = parse_sweep_common(p)?;
@@ -1195,7 +1376,7 @@ mod tests {
         let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
         for required in [
             "fig04", "fig05", "fig07", "fig08", "fig09", "fig10", "fig12", "fig13", "fig15",
-            "table3", "memory", "whatif", "serve", "decode", "compress",
+            "table3", "memory", "whatif", "serve", "decode", "fleet", "compress",
         ] {
             assert!(names.contains(&required), "{required} missing from registry");
         }
@@ -1268,6 +1449,7 @@ mod tests {
             match s.name {
                 "serve" => assert_eq!(s.default_out, Some("serve_sweep.json")),
                 "decode" => assert_eq!(s.default_out, Some("decode_sweep.json")),
+                "fleet" => assert_eq!(s.default_out, Some("fleet_sweep.json")),
                 "compress" => assert_eq!(s.default_out, Some("compress_sweep.json")),
                 _ => assert_eq!(s.default_out, None, "{}", s.name),
             }
@@ -1308,6 +1490,19 @@ mod tests {
         assert_eq!(out.artifact.to_string(), direct.to_string());
         assert!(out.text.contains("cost-cache"));
         assert!(out.text.contains("Continuous vs FIFO"));
+    }
+
+    #[test]
+    fn fleet_scenario_matches_the_direct_sweep_artifact() {
+        let p = pairs(&[("requests", "400"), ("threads", "2")]);
+        let out = run_by_name("fleet", &p, true).unwrap();
+        let mut cfg = FleetSweepConfig::bert_large_default();
+        cfg.requests = 400;
+        let direct = serve::fleet_sweep_json(&cfg, &serve::run_fleet_sweep(&cfg, 2));
+        assert_eq!(out.artifact.to_string(), direct.to_string());
+        assert!(out.text.contains("cost-cache"));
+        assert!(out.text.contains("p2c vs round-robin"));
+        assert!(out.text.contains("Autoscaled vs static"));
     }
 
     #[test]

@@ -1,0 +1,1017 @@
+//! Fleet-scale serving simulator (DESIGN.md SSFleet).
+//!
+//! The ROADMAP's north star is traffic from millions of users, which
+//! means more than one device: this module lifts the single-replica
+//! dynamic-batching simulator ([`super::sim`]) to a *fleet* of N
+//! replicas over heterogeneous [`DeviceSpec`]s, with pluggable routing
+//! ([`RoutePolicy`]: round-robin, least-loaded, SLO-aware
+//! power-of-two-choices), a queue-depth-driven autoscaler with
+//! hysteresis (thresholds + cooldown ticks + warm-up delay), and
+//! non-stationary arrival processes ([`ArrivalProcess`]: diurnal
+//! sinusoid and flash-crowd bursts beside the fixed-rate Poisson).
+//!
+//! Every replica runs the *exact* single-replica batching discipline,
+//! restated as an online event loop: the queue seals when it reaches
+//! `max_batch` (launching at `max(t_free, now)`) or when the
+//! head-of-line deadline passes (launching at the deadline), and each
+//! launch drains the whole queue. A one-replica fleet with round-robin
+//! routing and the autoscaler off is therefore *bit-identical* to a
+//! [`Simulator`] run on the same trace — `rust/tests/fleet_sim.rs`
+//! pins that equivalence, which is what makes the fleet numbers
+//! trustworthy extensions of every earlier serving study.
+//!
+//! Determinism contract: the trace is fully materialized up front from
+//! one seeded RNG, routing randomness (power-of-two-choices) draws from
+//! its own seeded RNG, and the event loop is single-threaded over
+//! arrivals — so a fixed seed gives a byte-identical artifact at any
+//! sweep worker count.
+
+use crate::serve::graph::{BatchCost, LatencyModel};
+use crate::serve::sim::{BatchPolicy, Completion, Request, SimReport, Workload};
+use crate::util::Rng;
+
+/// XOR'd into the workload seed to derive the routing RNG stream
+/// (ASCII "fleet"), so routing draws never alias the trace draws.
+pub const ROUTE_SEED_SALT: u64 = 0x666c_6565_74;
+
+/// On-demand $/hour per device preset (public list prices, flat —
+/// the FTRANS-style cost-per-million-requests headline metric; the
+/// planned energy backend swaps joules in behind the same shape).
+pub fn hourly_usd(device: &str) -> f64 {
+    match device {
+        "MI100" => 1.90,
+        "A100" => 3.67,
+        "V100" => 2.48,
+        "TPUv3-core" => 2.40,
+        "CPU-host" => 0.20,
+        _ => 2.00,
+    }
+}
+
+// ------------------------------------------------------------------
+// Arrival processes
+// ------------------------------------------------------------------
+
+/// A reproducible open-loop arrival process. `Fixed` delegates to the
+/// existing Poisson [`Workload`] (identical RNG draw order, so fleet
+/// and single-replica studies share traces); the non-stationary
+/// processes generate via Lewis–Shedler thinning against their peak
+/// rate, all on the same xoshiro256** stream.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Stationary Poisson at `rate` requests/second.
+    Fixed {
+        /// Mean arrival rate (requests/second).
+        rate: f64,
+    },
+    /// Diurnal sinusoid: `rate(t) = base·(1 + amplitude·sin(2πt/period))`.
+    /// `amplitude` is clamped to [0, 1] so the rate stays nonnegative;
+    /// the long-run mean over whole periods is `base`.
+    Diurnal {
+        /// Mean (and midline) rate, requests/second.
+        base: f64,
+        /// Peak-to-midline swing as a fraction of `base` (0..=1).
+        amplitude: f64,
+        /// Seconds per full day-night cycle.
+        period: f64,
+    },
+    /// Flash crowd: `base` everywhere except a burst window
+    /// `[burst_start, burst_start + burst_len)` at `burst_rate`.
+    FlashCrowd {
+        /// Baseline rate, requests/second.
+        base: f64,
+        /// Rate inside the burst window, requests/second.
+        burst_rate: f64,
+        /// Burst window start, seconds.
+        burst_start: f64,
+        /// Burst window length, seconds.
+        burst_len: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Short label for tables and artifact keys.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Fixed { .. } => "fixed",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+            ArrivalProcess::FlashCrowd { .. } => "flash",
+        }
+    }
+
+    /// The long-run mean rate (requests/second): the diurnal sinusoid
+    /// averages to `base` over whole periods, and the flash-crowd burst
+    /// is a transient on top of `base`. `rust/tests/fleet_sim.rs`
+    /// checks the diurnal empirical rate against this analytically.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Fixed { rate } => rate,
+            ArrivalProcess::Diurnal { base, .. } => base,
+            ArrivalProcess::FlashCrowd { base, .. } => base,
+        }
+    }
+
+    /// Instantaneous rate at time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Fixed { rate } => rate,
+            ArrivalProcess::Diurnal { base, amplitude, period } => {
+                let a = amplitude.clamp(0.0, 1.0);
+                base * (1.0 + a * (2.0 * std::f64::consts::PI * t / period).sin())
+            }
+            ArrivalProcess::FlashCrowd { base, burst_rate, burst_start, burst_len } => {
+                if t >= burst_start && t < burst_start + burst_len {
+                    burst_rate
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Peak rate — the thinning envelope.
+    pub fn peak_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Fixed { rate } => rate,
+            ArrivalProcess::Diurnal { base, amplitude, .. } => {
+                base * (1.0 + amplitude.clamp(0.0, 1.0))
+            }
+            ArrivalProcess::FlashCrowd { base, burst_rate, .. } => base.max(burst_rate),
+        }
+    }
+
+    /// Materialize a trace of `requests` arrivals with sequence lengths
+    /// uniform in `[seq_min, seq_max]`, sorted by arrival by
+    /// construction. Fixed delegates to [`Workload`] verbatim; the
+    /// non-stationary processes thin candidate arrivals at the peak
+    /// rate (draw order per candidate: inter-arrival uniform, accept
+    /// uniform, then — accepted only — the sequence length).
+    pub fn generate(&self, requests: u64, seed: u64, seq_min: u64, seq_max: u64) -> Vec<Request> {
+        if let ArrivalProcess::Fixed { rate } = *self {
+            return Workload::poisson(rate, requests, seed)
+                .with_seq_range(seq_min, seq_max)
+                .generate();
+        }
+        let seq_min = seq_min.max(1);
+        let seq_max = seq_max.max(seq_min);
+        let peak = self.peak_rate();
+        let mut rng = Rng::seed(seed);
+        let mut t = 0.0_f64;
+        let mut out = Vec::with_capacity(requests as usize);
+        let mut id = 0_u64;
+        while id < requests {
+            let u = rng.uniform();
+            t += -(1.0 - u).ln() / peak;
+            if rng.uniform() * peak <= self.rate_at(t) {
+                let seq_len = rng.int_range(seq_min as i64, seq_max as i64) as u64;
+                out.push(Request { id, arrival: t, seq_len });
+                id += 1;
+            }
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------------------
+// Routing
+// ------------------------------------------------------------------
+
+/// What a router sees of one replica at decision time.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteView {
+    /// Active and past its warm-up — eligible to receive requests.
+    pub routable: bool,
+    /// Queued + in-flight requests at decision time.
+    pub depth: usize,
+    /// Modeled per-request service seconds at the full batch shape —
+    /// the device-speed signal the SLO-aware router weighs depth by.
+    pub service_estimate: f64,
+}
+
+/// A router's verdict: the chosen replica, plus (for sampling routers)
+/// the candidates it looked at — kept so property tests can audit the
+/// choice against the observed depths.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteDecision {
+    /// Global index of the chosen replica.
+    pub chosen: usize,
+    /// The two sampled candidates (power-of-two-choices only).
+    pub sampled: Option<(usize, usize)>,
+}
+
+/// A pluggable routing policy over the replica views. Implementors may
+/// keep state (round-robin's counter) and draw from the fleet's
+/// routing RNG (power-of-two-choices' samples).
+pub trait RoutePolicy {
+    /// Short label for tables and artifact keys.
+    fn label(&self) -> &'static str;
+    /// Pick a replica for the next request. `views` is indexed by
+    /// global replica id; at least one view is routable.
+    fn route(&mut self, views: &[RouteView], rng: &mut Rng) -> RouteDecision;
+}
+
+fn routable_indices(views: &[RouteView]) -> Vec<usize> {
+    let idx: Vec<usize> = (0..views.len()).filter(|&i| views[i].routable).collect();
+    if idx.is_empty() {
+        // Unreachable under Fleet's invariants (min_replicas ≥ 1 and
+        // the initial actives have no warm-up), but degrade to replica
+        // 0 rather than panicking mid-sweep.
+        vec![0]
+    } else {
+        idx
+    }
+}
+
+/// Cycle through the routable replicas in index order.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    counter: u64,
+}
+
+impl RoutePolicy for RoundRobin {
+    fn label(&self) -> &'static str {
+        "rr"
+    }
+    fn route(&mut self, views: &[RouteView], _rng: &mut Rng) -> RouteDecision {
+        let idx = routable_indices(views);
+        let chosen = idx[(self.counter % idx.len() as u64) as usize];
+        self.counter += 1;
+        RouteDecision { chosen, sampled: None }
+    }
+}
+
+/// Send to the shallowest routable queue (ties to the lowest index).
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl RoutePolicy for LeastLoaded {
+    fn label(&self) -> &'static str {
+        "ll"
+    }
+    fn route(&mut self, views: &[RouteView], _rng: &mut Rng) -> RouteDecision {
+        let idx = routable_indices(views);
+        let chosen = idx
+            .into_iter()
+            .min_by_key(|&i| views[i].depth)
+            .expect("routable_indices is non-empty");
+        RouteDecision { chosen, sampled: None }
+    }
+}
+
+/// SLO-aware power-of-two-choices: sample two distinct routable
+/// replicas, score each as `(depth + 1) · service_estimate` (modeled
+/// seconds of work ahead of the new request — so a fast replica may
+/// win with a deeper queue), and take the lower score (ties to the
+/// lower index). O(1) state per decision, near-least-loaded balance —
+/// the classic Mitzenmacher result, here weighted for heterogeneity.
+#[derive(Debug, Default)]
+pub struct PowerOfTwoChoices;
+
+impl RoutePolicy for PowerOfTwoChoices {
+    fn label(&self) -> &'static str {
+        "p2c"
+    }
+    fn route(&mut self, views: &[RouteView], rng: &mut Rng) -> RouteDecision {
+        let idx = routable_indices(views);
+        let m = idx.len();
+        if m == 1 {
+            return RouteDecision { chosen: idx[0], sampled: None };
+        }
+        let i = rng.int_range(0, m as i64 - 1) as usize;
+        let mut j = rng.int_range(0, m as i64 - 2) as usize;
+        if j >= i {
+            j += 1;
+        }
+        let (a, b) = (idx[i], idx[j]);
+        let score = |k: usize| (views[k].depth + 1) as f64 * views[k].service_estimate;
+        let (sa, sb) = (score(a), score(b));
+        let chosen = if sa < sb || (sa == sb && a < b) { a } else { b };
+        RouteDecision { chosen, sampled: Some((a, b)) }
+    }
+}
+
+/// The routing-policy axis of the fleet sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// [`RoundRobin`].
+    RoundRobin,
+    /// [`LeastLoaded`].
+    LeastLoaded,
+    /// [`PowerOfTwoChoices`].
+    PowerOfTwo,
+}
+
+impl Routing {
+    /// Short label (`rr` / `ll` / `p2c`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Routing::RoundRobin => "rr",
+            Routing::LeastLoaded => "ll",
+            Routing::PowerOfTwo => "p2c",
+        }
+    }
+
+    /// Instantiate the policy (fresh state per run).
+    pub fn build(&self) -> Box<dyn RoutePolicy> {
+        match self {
+            Routing::RoundRobin => Box::new(RoundRobin::default()),
+            Routing::LeastLoaded => Box::new(LeastLoaded),
+            Routing::PowerOfTwo => Box::new(PowerOfTwoChoices),
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Autoscaler
+// ------------------------------------------------------------------
+
+/// Queue-depth autoscaler with hysteresis. Every `tick` seconds the
+/// fleet computes mean depth (queued + in-flight) per active replica;
+/// above `up_threshold` it activates one more replica (routable after
+/// `warmup` seconds, billed immediately), below `down_threshold` it
+/// drains and deactivates the shallowest one. Every decision starts a
+/// cooldown of `cooldown_ticks` ticks during which no further decision
+/// fires — consecutive scale events are therefore always more than
+/// `cooldown_ticks · tick` seconds apart (the hysteresis property
+/// `rust/tests/fleet_sim.rs` asserts).
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscalerConfig {
+    /// Master switch; disabled = all replicas active from t=0.
+    pub enabled: bool,
+    /// Floor on active replicas (≥ 1).
+    pub min_replicas: usize,
+    /// Ceiling on active replicas (≤ pool size).
+    pub max_replicas: usize,
+    /// Scale up when mean depth per active replica exceeds this.
+    pub up_threshold: f64,
+    /// Scale down when mean depth per active replica falls below this.
+    pub down_threshold: f64,
+    /// Seconds between autoscaler decisions.
+    pub tick: f64,
+    /// Ticks to sit out after any scale decision.
+    pub cooldown_ticks: u64,
+    /// Seconds a newly activated replica warms up (billed, unroutable).
+    pub warmup: f64,
+}
+
+impl AutoscalerConfig {
+    /// Autoscaling off: the whole pool serves from t=0.
+    pub fn disabled() -> AutoscalerConfig {
+        AutoscalerConfig {
+            enabled: false,
+            min_replicas: 1,
+            max_replicas: usize::MAX,
+            up_threshold: f64::INFINITY,
+            down_threshold: 0.0,
+            tick: 1.0,
+            cooldown_ticks: 0,
+            warmup: 0.0,
+        }
+    }
+}
+
+/// One autoscaler decision, for the artifact and the hysteresis test.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleEvent {
+    /// Decision time (a tick boundary), seconds.
+    pub time: f64,
+    /// Scale-up (true) or scale-down (false).
+    pub up: bool,
+    /// Global index of the (de)activated replica.
+    pub replica: usize,
+    /// Active replica count after the decision.
+    pub active_after: usize,
+}
+
+// ------------------------------------------------------------------
+// Replicas
+// ------------------------------------------------------------------
+
+/// One replica's event-loop state: the single-replica batching
+/// discipline restated online (see the module docs for the equivalence
+/// argument), plus the activation ledger the cost model bills from.
+struct Replica {
+    device: String,
+    lm: LatencyModel,
+    policy: BatchPolicy,
+    service_estimate: f64,
+    queue: Vec<Request>,
+    head_deadline: f64,
+    t_free: f64,
+    busy: f64,
+    batches: u64,
+    completions: Vec<Completion>,
+    assigned: u64,
+    rejected: u64,
+    active: bool,
+    routable_from: f64,
+    active_from: f64,
+    active_seconds: f64,
+}
+
+impl Replica {
+    fn new(device: String, lm: LatencyModel, policy: BatchPolicy, service_estimate: f64) -> Replica {
+        Replica {
+            device,
+            lm,
+            policy,
+            service_estimate,
+            queue: Vec::new(),
+            head_deadline: 0.0,
+            t_free: 0.0,
+            busy: 0.0,
+            batches: 0,
+            completions: Vec::new(),
+            assigned: 0,
+            rejected: 0,
+            active: false,
+            routable_from: 0.0,
+            active_from: 0.0,
+            active_seconds: 0.0,
+        }
+    }
+
+    /// Queued + in-flight requests at `now`. Completion times are
+    /// monotone per replica, so in-flight counts from the ledger tail.
+    fn depth(&self, now: f64) -> usize {
+        let in_flight = self
+            .completions
+            .iter()
+            .rev()
+            .take_while(|c| c.done > now)
+            .count();
+        self.queue.len() + in_flight
+    }
+
+    /// Fire any pending timeout launch whose deadline passed strictly
+    /// before `now` (an arrival exactly at the deadline still joins the
+    /// batch, matching the offline loop's `<=` collection).
+    fn advance(&mut self, now: f64) {
+        if !self.queue.is_empty() && self.head_deadline < now {
+            let at = self.head_deadline;
+            self.launch(at);
+        }
+    }
+
+    /// Admit one request at its arrival instant; seal and launch when
+    /// the queue reaches `max_batch` (at `max(t_free, now)`, exactly
+    /// the offline fill path).
+    fn enqueue(&mut self, r: Request, now: f64) {
+        self.assigned += 1;
+        if self.queue.is_empty() {
+            self.head_deadline = (r.arrival + self.policy.max_wait).max(self.t_free);
+        }
+        self.queue.push(r);
+        if self.queue.len() as u64 >= self.policy.max_batch {
+            let at = self.t_free.max(now);
+            self.launch(at);
+        }
+    }
+
+    /// Launch the whole queue as one padded batch at time `at`.
+    fn launch(&mut self, at: f64) {
+        let batch_size = self.queue.len() as u64;
+        let seq = self.queue.iter().map(|r| r.seq_len).max().unwrap_or(1);
+        let padded_seq = self.lm.padded_seq(seq);
+        let service = self.lm.batch_seconds(batch_size, seq);
+        let done = at + service;
+        self.busy += service;
+        self.batches += 1;
+        for r in self.queue.drain(..) {
+            self.completions.push(Completion {
+                id: r.id,
+                arrival: r.arrival,
+                done,
+                batch_size,
+                padded_seq,
+            });
+        }
+        self.t_free = done;
+    }
+
+    /// End-of-trace: fire the last pending batch at its deadline.
+    fn drain(&mut self) {
+        if !self.queue.is_empty() {
+            let at = self.head_deadline;
+            self.launch(at);
+        }
+    }
+
+    fn activate(&mut self, now: f64, warmup: f64) {
+        self.active = true;
+        self.active_from = now;
+        self.routable_from = now + warmup;
+    }
+
+    /// Flush the queue (an early launch at `max(t_free, now)`) and stop
+    /// billing once in-flight work lands.
+    fn deactivate(&mut self, now: f64) {
+        if !self.queue.is_empty() {
+            let at = self.t_free.max(now);
+            self.launch(at);
+        }
+        self.active = false;
+        self.active_seconds += self.t_free.max(now) - self.active_from;
+    }
+}
+
+// ------------------------------------------------------------------
+// Fleet
+// ------------------------------------------------------------------
+
+/// One replica's slice of the fleet report.
+#[derive(Debug, Clone)]
+pub struct ReplicaStat {
+    /// Device preset name.
+    pub device: String,
+    /// Requests admitted to this replica's queue.
+    pub assigned: u64,
+    /// Requests completed (== assigned after the final drain).
+    pub completed: u64,
+    /// Requests bounced off a full queue (queue-cap runs only).
+    pub rejected: u64,
+    /// Batches launched.
+    pub batches: u64,
+    /// Modeled busy seconds.
+    pub busy: f64,
+    /// Billed seconds (sum of activation intervals).
+    pub active_seconds: f64,
+    /// busy / active_seconds (0 when never activated).
+    pub utilization: f64,
+}
+
+/// Fleet-level aggregate: the familiar [`SimReport`] over the merged
+/// completion ledger, plus the fleet-only axes (routing, scaling,
+/// billing, per-replica spread).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// The latency/throughput report over all completions, built by the
+    /// same constructor as the single-replica simulator.
+    pub sim: SimReport,
+    /// Routing policy label (`rr` / `ll` / `p2c`).
+    pub routing: String,
+    /// Whether the autoscaler was enabled.
+    pub autoscaled: bool,
+    /// Requests offered to the fleet.
+    pub arrivals: u64,
+    /// Requests admitted to some replica queue.
+    pub admitted: u64,
+    /// Requests rejected at admission.
+    pub rejected: u64,
+    /// Total billed replica-seconds across the pool.
+    pub replica_seconds: f64,
+    /// Max − min utilization across replicas that ever ran.
+    pub util_spread: f64,
+    /// Billed dollars at the per-device on-demand rates.
+    pub cost_usd: f64,
+    /// Dollars per million completed requests.
+    pub cost_per_m_requests: f64,
+    /// Scale-up decisions taken.
+    pub scale_ups: u64,
+    /// Scale-down decisions taken.
+    pub scale_downs: u64,
+    /// Per-replica ledgers, in pool order.
+    pub replicas: Vec<ReplicaStat>,
+}
+
+/// One routing decision's audit record (kept in memory for the
+/// property tests; not serialized).
+#[derive(Debug, Clone)]
+pub struct RouteRecord {
+    /// Request id.
+    pub id: u64,
+    /// Arrival (= decision) time.
+    pub time: f64,
+    /// Chosen replica (global index).
+    pub chosen: usize,
+    /// Whether the request was admitted (false = queue-cap bounce).
+    pub admitted: bool,
+    /// Power-of-two-choices' sampled candidates.
+    pub sampled: Option<(usize, usize)>,
+    /// Every replica's depth at decision time.
+    pub depths: Vec<usize>,
+}
+
+/// A fleet run's full result: the report plus the raw ledgers the
+/// property battery audits.
+pub struct FleetOutcome {
+    /// Aggregate report.
+    pub report: FleetReport,
+    /// All completions, merged in pool order (per-replica launch order
+    /// within each replica).
+    pub completions: Vec<Completion>,
+    /// Each replica's own completion ledger.
+    pub per_replica: Vec<Vec<Completion>>,
+    /// One audit record per offered request, in arrival order.
+    pub routes: Vec<RouteRecord>,
+    /// Autoscaler decision log.
+    pub scale_events: Vec<ScaleEvent>,
+}
+
+/// The fleet simulator: shared batching policy and SLO, optional
+/// admission cap, and the autoscaler config.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    /// Per-replica batch-formation policy.
+    pub policy: BatchPolicy,
+    /// End-to-end latency SLO in seconds.
+    pub slo: f64,
+    /// Per-replica queue cap; `None` = never reject (the sweep
+    /// default — property tests exercise the bounded-queue mode).
+    pub queue_cap: Option<usize>,
+    /// Autoscaler settings.
+    pub autoscaler: AutoscalerConfig,
+}
+
+impl Fleet {
+    /// A fleet under `policy`, scored against `slo`, autoscaling off.
+    pub fn new(policy: BatchPolicy, slo: f64) -> Fleet {
+        Fleet { policy, slo, queue_cap: None, autoscaler: AutoscalerConfig::disabled() }
+    }
+
+    /// Enable the autoscaler.
+    pub fn with_autoscaler(mut self, auto: AutoscalerConfig) -> Fleet {
+        self.autoscaler = auto;
+        self
+    }
+
+    /// Bound each replica's queue (admission control).
+    pub fn with_queue_cap(mut self, cap: usize) -> Fleet {
+        self.queue_cap = Some(cap);
+        self
+    }
+
+    /// Run the trace to completion over `replicas` (device name +
+    /// latency model, pool order), routing with `routing` whose random
+    /// draws come from `Rng::seed(route_seed)`. `requests` must be
+    /// sorted by arrival. Fully deterministic.
+    pub fn run(
+        &self,
+        label: &str,
+        requests: &[Request],
+        replicas: Vec<(String, LatencyModel)>,
+        routing: &mut dyn RoutePolicy,
+        route_seed: u64,
+    ) -> FleetOutcome {
+        assert!(!replicas.is_empty(), "a fleet needs at least one replica");
+        let pool = replicas.len();
+        let auto = self.autoscaler;
+        let initial_active = if auto.enabled {
+            auto.min_replicas.clamp(1, pool)
+        } else {
+            pool
+        };
+        let max_active = if auto.enabled { auto.max_replicas.clamp(initial_active, pool) } else { pool };
+
+        // The router's device-speed signal: per-request seconds at the
+        // full batch shape, against the trace's longest request.
+        let seq_ref = requests.iter().map(|r| r.seq_len).max().unwrap_or(1);
+        let mut reps: Vec<Replica> = replicas
+            .into_iter()
+            .map(|(device, mut lm)| {
+                let est = lm.batch_seconds(self.policy.max_batch, seq_ref)
+                    / self.policy.max_batch.max(1) as f64;
+                Replica::new(device, lm, self.policy, est)
+            })
+            .collect();
+        for rep in reps.iter_mut().take(initial_active) {
+            rep.activate(0.0, 0.0);
+        }
+
+        let mut rng = Rng::seed(route_seed);
+        let mut routes: Vec<RouteRecord> = Vec::with_capacity(requests.len());
+        let mut scale_events: Vec<ScaleEvent> = Vec::new();
+        let mut active = initial_active;
+        let mut tick_idx: u64 = 1;
+        let mut cooldown: u64 = 0;
+
+        for r in requests {
+            let now = r.arrival;
+            // Autoscaler ticks strictly before this arrival.
+            while auto.enabled && tick_idx as f64 * auto.tick <= now {
+                let t = tick_idx as f64 * auto.tick;
+                tick_idx += 1;
+                for rep in reps.iter_mut() {
+                    if rep.active {
+                        rep.advance(t);
+                    }
+                }
+                if cooldown > 0 {
+                    cooldown -= 1;
+                    continue;
+                }
+                let depth_sum: usize =
+                    reps.iter().filter(|rp| rp.active).map(|rp| rp.depth(t)).sum();
+                let pressure = depth_sum as f64 / active as f64;
+                if pressure > auto.up_threshold && active < max_active {
+                    let k = reps
+                        .iter()
+                        .position(|rp| !rp.active)
+                        .expect("active < pool implies an inactive replica");
+                    reps[k].activate(t, auto.warmup);
+                    active += 1;
+                    scale_events.push(ScaleEvent { time: t, up: true, replica: k, active_after: active });
+                    cooldown = auto.cooldown_ticks;
+                } else if pressure < auto.down_threshold && active > auto.min_replicas.clamp(1, pool) {
+                    // Drop the shallowest active replica (ties to the
+                    // highest index, so the pool's head stays stable).
+                    let mut k = usize::MAX;
+                    let mut best = usize::MAX;
+                    for (i, rp) in reps.iter().enumerate() {
+                        if rp.active {
+                            let d = rp.depth(t);
+                            if d < best || (d == best && k != usize::MAX && i > k) {
+                                best = d;
+                                k = i;
+                            }
+                        }
+                    }
+                    reps[k].deactivate(t);
+                    active -= 1;
+                    scale_events.push(ScaleEvent { time: t, up: false, replica: k, active_after: active });
+                    cooldown = auto.cooldown_ticks;
+                }
+            }
+            // Fire pending timeout launches before looking at queues.
+            for rep in reps.iter_mut() {
+                if rep.active {
+                    rep.advance(now);
+                }
+            }
+            let views: Vec<RouteView> = reps
+                .iter()
+                .map(|rp| RouteView {
+                    routable: rp.active && now >= rp.routable_from,
+                    depth: rp.depth(now),
+                    service_estimate: rp.service_estimate,
+                })
+                .collect();
+            let decision = routing.route(&views, &mut rng);
+            let rep = &mut reps[decision.chosen];
+            let admitted = match self.queue_cap {
+                Some(cap) if rep.queue.len() >= cap => {
+                    rep.rejected += 1;
+                    false
+                }
+                _ => {
+                    rep.enqueue(r.clone(), now);
+                    true
+                }
+            };
+            routes.push(RouteRecord {
+                id: r.id,
+                time: now,
+                chosen: decision.chosen,
+                admitted,
+                sampled: decision.sampled,
+                depths: views.iter().map(|v| v.depth).collect(),
+            });
+        }
+        for rep in reps.iter_mut() {
+            rep.drain();
+        }
+
+        // Close the billing ledger: still-active replicas bill to the
+        // fleet makespan (the static fleet's replica-seconds baseline).
+        let makespan = reps.iter().map(|rp| rp.t_free).fold(0.0_f64, f64::max);
+        for rep in reps.iter_mut() {
+            if rep.active {
+                rep.active_seconds += makespan.max(rep.active_from) - rep.active_from;
+                rep.active = false;
+            }
+        }
+
+        let mut completions: Vec<Completion> = Vec::new();
+        let mut per_replica: Vec<Vec<Completion>> = Vec::with_capacity(pool);
+        let mut busy = 0.0_f64;
+        let mut batches = 0_u64;
+        let mut stats: Vec<ReplicaStat> = Vec::with_capacity(pool);
+        for rep in &reps {
+            completions.extend(rep.completions.iter().cloned());
+            per_replica.push(rep.completions.clone());
+            busy += rep.busy;
+            batches += rep.batches;
+            stats.push(ReplicaStat {
+                device: rep.device.clone(),
+                assigned: rep.assigned,
+                completed: rep.completions.len() as u64,
+                rejected: rep.rejected,
+                batches: rep.batches,
+                busy: rep.busy,
+                active_seconds: rep.active_seconds,
+                utilization: if rep.active_seconds > 0.0 { rep.busy / rep.active_seconds } else { 0.0 },
+            });
+        }
+        let sim = SimReport::from_run(label, &completions, makespan, busy, batches, self.slo);
+
+        let ran: Vec<f64> = stats
+            .iter()
+            .filter(|s| s.active_seconds > 0.0)
+            .map(|s| s.utilization)
+            .collect();
+        let util_spread = if ran.len() > 1 {
+            ran.iter().fold(f64::MIN, |a, &b| a.max(b)) - ran.iter().fold(f64::MAX, |a, &b| a.min(b))
+        } else {
+            0.0
+        };
+        let replica_seconds: f64 = stats.iter().map(|s| s.active_seconds).sum();
+        let cost_usd: f64 = stats
+            .iter()
+            .map(|s| s.active_seconds * hourly_usd(&s.device) / 3600.0)
+            .sum();
+        let completed = completions.len() as u64;
+        let cost_per_m_requests =
+            if completed > 0 { cost_usd / completed as f64 * 1.0e6 } else { 0.0 };
+        let report = FleetReport {
+            sim,
+            routing: routing.label().to_string(),
+            autoscaled: auto.enabled,
+            arrivals: requests.len() as u64,
+            admitted: stats.iter().map(|s| s.assigned).sum(),
+            rejected: stats.iter().map(|s| s.rejected).sum(),
+            replica_seconds,
+            util_spread,
+            cost_usd,
+            cost_per_m_requests,
+            scale_ups: scale_events.iter().filter(|e| e.up).count() as u64,
+            scale_downs: scale_events.iter().filter(|e| !e.up).count() as u64,
+            replicas: stats,
+        };
+        FleetOutcome { report, completions, per_replica, routes, scale_events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Precision};
+    use crate::perf::device::DeviceSpec;
+
+    fn lm(dev: DeviceSpec) -> LatencyModel {
+        LatencyModel::new(ModelConfig::bert_large(), Precision::Mixed, dev)
+    }
+
+    fn pool(n: usize) -> Vec<(String, LatencyModel)> {
+        (0..n)
+            .map(|_| ("MI100".to_string(), lm(DeviceSpec::mi100())))
+            .collect()
+    }
+
+    fn trace(rate: f64, n: u64, seed: u64) -> Vec<Request> {
+        ArrivalProcess::Fixed { rate }.generate(n, seed, 16, 128)
+    }
+
+    #[test]
+    fn fixed_process_matches_the_poisson_workload() {
+        let a = ArrivalProcess::Fixed { rate: 80.0 }.generate(300, 9, 16, 128);
+        let b = Workload::poisson(80.0, 300, 9).generate();
+        assert_eq!(a.len(), b.len());
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.arrival == y.arrival && x.seq_len == y.seq_len));
+    }
+
+    #[test]
+    fn nonstationary_traces_are_sorted_seeded_and_in_range() {
+        for p in [
+            ArrivalProcess::Diurnal { base: 50.0, amplitude: 0.6, period: 10.0 },
+            ArrivalProcess::FlashCrowd {
+                base: 50.0,
+                burst_rate: 150.0,
+                burst_start: 2.0,
+                burst_len: 1.0,
+            },
+        ] {
+            let a = p.generate(400, 5, 16, 128);
+            let b = p.generate(400, 5, 16, 128);
+            let c = p.generate(400, 6, 16, 128);
+            assert_eq!(a.len(), 400);
+            assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+            assert!(a
+                .iter()
+                .zip(&b)
+                .all(|(x, y)| x.arrival == y.arrival && x.seq_len == y.seq_len));
+            assert!(a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival));
+            assert!(a.iter().all(|r| (16..=128).contains(&r.seq_len)));
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_and_least_loaded_picks_the_shallowest() {
+        let views = vec![
+            RouteView { routable: true, depth: 3, service_estimate: 1.0 },
+            RouteView { routable: false, depth: 0, service_estimate: 1.0 },
+            RouteView { routable: true, depth: 1, service_estimate: 1.0 },
+        ];
+        let mut rng = Rng::seed(1);
+        let mut rr = RoundRobin::default();
+        let picks: Vec<usize> = (0..4).map(|_| rr.route(&views, &mut rng).chosen).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        let mut ll = LeastLoaded;
+        assert_eq!(ll.route(&views, &mut rng).chosen, 2);
+    }
+
+    #[test]
+    fn p2c_scores_by_depth_times_speed() {
+        // Replica 0: depth 4 but 4x faster than replica 1 at depth 2:
+        // score 5*0.25 < 3*1.0, so the deeper-but-faster replica wins.
+        let views = vec![
+            RouteView { routable: true, depth: 4, service_estimate: 0.25 },
+            RouteView { routable: true, depth: 2, service_estimate: 1.0 },
+        ];
+        let mut rng = Rng::seed(3);
+        let mut p2c = PowerOfTwoChoices;
+        let d = p2c.route(&views, &mut rng).chosen;
+        assert_eq!(d, 0);
+    }
+
+    #[test]
+    fn every_request_completes_and_ledgers_balance() {
+        let mut routing = Routing::LeastLoaded.build();
+        let t = trace(200.0, 600, 7);
+        let out = Fleet::new(BatchPolicy::new(8, 0.010), 0.1).run(
+            "fleet",
+            &t,
+            pool(3),
+            routing.as_mut(),
+            7 ^ ROUTE_SEED_SALT,
+        );
+        assert_eq!(out.completions.len(), 600);
+        assert_eq!(out.report.admitted, 600);
+        assert_eq!(out.report.rejected, 0);
+        let per: u64 = out.report.replicas.iter().map(|s| s.completed).sum();
+        assert_eq!(per, 600);
+        assert!(out.completions.iter().all(|c| c.done > c.arrival));
+    }
+
+    #[test]
+    fn queue_cap_rejects_and_conserves() {
+        let mut routing = Routing::RoundRobin.build();
+        let t = trace(5000.0, 500, 11); // heavy overload
+        let out = Fleet::new(BatchPolicy::new(4, 0.050), 0.1)
+            .with_queue_cap(2)
+            .run("cap", &t, pool(2), routing.as_mut(), 11 ^ ROUTE_SEED_SALT);
+        assert!(out.report.rejected > 0);
+        assert_eq!(out.report.admitted + out.report.rejected, 500);
+        assert_eq!(out.completions.len() as u64, out.report.admitted);
+    }
+
+    #[test]
+    fn autoscaler_respects_bounds_and_flushes_on_scale_down() {
+        let auto = AutoscalerConfig {
+            enabled: true,
+            min_replicas: 1,
+            max_replicas: 3,
+            up_threshold: 2.0,
+            down_threshold: 0.5,
+            tick: 0.05,
+            cooldown_ticks: 2,
+            warmup: 0.05,
+        };
+        let mut routing = Routing::LeastLoaded.build();
+        let t = trace(400.0, 1200, 13);
+        let out = Fleet::new(BatchPolicy::new(8, 0.010), 0.1)
+            .with_autoscaler(auto)
+            .run("auto", &t, pool(3), routing.as_mut(), 13 ^ ROUTE_SEED_SALT);
+        assert_eq!(out.completions.len(), 1200);
+        for e in &out.scale_events {
+            assert!(e.active_after >= 1 && e.active_after <= 3);
+        }
+        // Billing covers at least the work actually done.
+        for s in &out.report.replicas {
+            assert!(s.active_seconds + 1e-9 >= s.busy, "{} < {}", s.active_seconds, s.busy);
+        }
+    }
+
+    #[test]
+    fn cost_scales_with_the_pool_price() {
+        let mut rr1 = Routing::RoundRobin.build();
+        let mut rr2 = Routing::RoundRobin.build();
+        let t = trace(150.0, 400, 17);
+        let cheap = Fleet::new(BatchPolicy::new(8, 0.010), 0.1).run(
+            "mi100",
+            &t,
+            pool(2),
+            rr1.as_mut(),
+            17,
+        );
+        let pricey_pool: Vec<(String, LatencyModel)> = (0..2)
+            .map(|_| ("A100".to_string(), lm(DeviceSpec::a100())))
+            .collect();
+        let pricey = Fleet::new(BatchPolicy::new(8, 0.010), 0.1).run(
+            "a100",
+            &t,
+            pricey_pool,
+            rr2.as_mut(),
+            17,
+        );
+        assert!(cheap.report.cost_usd > 0.0);
+        // Same makespan window notwithstanding, the A100 pool bills at
+        // nearly double the hourly rate per replica-second.
+        let cheap_rate = cheap.report.cost_usd / cheap.report.replica_seconds;
+        let pricey_rate = pricey.report.cost_usd / pricey.report.replica_seconds;
+        assert!((cheap_rate * 3600.0 - 1.90).abs() < 1e-9);
+        assert!((pricey_rate * 3600.0 - 3.67).abs() < 1e-9);
+    }
+}

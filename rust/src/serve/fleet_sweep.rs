@@ -1,0 +1,610 @@
+//! Parallel sweep driver over the fleet-serving grid
+//! {pool × arrival process × autoscaler on/off × routing policy}
+//! (DESIGN.md SSFleet).
+//!
+//! Each pool derives one offered base rate from the *sum* of its
+//! replicas' modeled saturation rates (so pools of different sizes and
+//! generations are compared at equal pressure), then every combination
+//! of arrival process (diurnal sinusoid, flash crowd), autoscaler
+//! setting, and routing policy replays the same seeded trace through
+//! [`Fleet::run`]. Adjacent grid points are distilled into verdicts:
+//! does SLO-aware power-of-two-choices beat round-robin on p99 over
+//! the heterogeneous pool, and does the autoscaler save
+//! replica-seconds at equal SLO attainment? A cost-per-million-requests
+//! Pareto frontier across all points is the FTRANS-style headline.
+//! Scenarios fan out over `scenario::exec::run_grid` with one
+//! grid-wide `perf::CostCache`; the artifact is byte-identical for a
+//! fixed seed at any worker count.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelConfig, Precision};
+use crate::perf::device::DeviceSpec;
+use crate::perf::{CalibrationTable, CostCache};
+use crate::scenario::exec;
+use crate::serve::fleet::{
+    ArrivalProcess, AutoscalerConfig, Fleet, FleetReport, Routing, ROUTE_SEED_SALT,
+};
+use crate::serve::graph::{BatchCost, LatencyModel};
+use crate::serve::sim::BatchPolicy;
+use crate::serve::sweep::report_json;
+use crate::util::Json;
+
+/// One replica pool: a name plus (device, count) entries expanded in
+/// order into the fleet's replica list.
+#[derive(Debug, Clone)]
+pub struct FleetPool {
+    /// Pool label (`hetero-6`).
+    pub name: String,
+    /// Device presets and how many replicas of each, in pool order.
+    pub devices: Vec<(DeviceSpec, usize)>,
+}
+
+impl FleetPool {
+    /// Total replica count.
+    pub fn size(&self) -> usize {
+        self.devices.iter().map(|(_, n)| n).sum()
+    }
+
+    /// The expanded per-replica device list.
+    pub fn expand(&self) -> Vec<DeviceSpec> {
+        let mut out = Vec::with_capacity(self.size());
+        for (dev, n) in &self.devices {
+            for _ in 0..*n {
+                out.push(dev.clone());
+            }
+        }
+        out
+    }
+}
+
+/// The arrival-process axis of the sweep (parameters are derived per
+/// pool from its base rate, so the axis is just the shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Stationary Poisson.
+    Fixed,
+    /// Diurnal sinusoid.
+    Diurnal,
+    /// Flash-crowd burst.
+    Flash,
+}
+
+/// The fleet-sweep grid plus the shared workload/scoring parameters.
+#[derive(Debug, Clone)]
+pub struct FleetSweepConfig {
+    /// Served model hyperparameters (Table 2).
+    pub model: ModelConfig,
+    /// Replica pools to sweep (the heterogeneity axis).
+    pub pools: Vec<FleetPool>,
+    /// Forward-pass precision (one per sweep — the serving deployment,
+    /// not the precision study).
+    pub precision: Precision,
+    /// Per-replica dynamic-batching `max_batch`.
+    pub max_batch: u64,
+    /// Maximum request sequence length (requests draw uniformly from
+    /// `[seq_max/8, seq_max]`).
+    pub seq_max: u64,
+    /// Requests per scenario trace.
+    pub requests: u64,
+    /// Workload RNG seed (same seed → identical artifact).
+    pub seed: u64,
+    /// End-to-end latency SLO in seconds.
+    pub slo: f64,
+    /// Co-batching timeout in seconds.
+    pub max_wait: f64,
+    /// Offered base rate as a fraction of the pool's summed saturation
+    /// rate (the diurnal peak reaches `load · (1 + amplitude)`).
+    pub load: f64,
+    /// Diurnal swing as a fraction of the base rate (0..=1).
+    pub amplitude: f64,
+    /// Flash-crowd burst rate as a multiple of the base rate.
+    pub burst_factor: f64,
+    /// Autoscaler scale-up threshold (mean depth per active replica).
+    pub up_depth: f64,
+    /// Autoscaler scale-down threshold.
+    pub down_depth: f64,
+    /// Routing policies to sweep.
+    pub routings: Vec<Routing>,
+    /// Arrival processes to sweep.
+    pub arrivals: Vec<ArrivalKind>,
+    /// Optional per-op-category calibration overrides (same
+    /// SSHardware-Adaptation seam as the other serving sweeps).
+    pub calibration: Option<CalibrationTable>,
+}
+
+impl FleetSweepConfig {
+    /// The default fleet study: a heterogeneous 6-replica pool
+    /// (2×MI100 + 2×A100 + 2×V100) against a homogeneous 4×A100 pool,
+    /// Mixed precision, B8/10ms, diurnal + flash-crowd arrivals, all
+    /// three routers, autoscaler off and on.
+    pub fn bert_large_default() -> FleetSweepConfig {
+        FleetSweepConfig {
+            model: ModelConfig::bert_large(),
+            pools: vec![
+                FleetPool {
+                    name: "hetero-6".to_string(),
+                    devices: vec![
+                        (DeviceSpec::mi100(), 2),
+                        (DeviceSpec::a100(), 2),
+                        (DeviceSpec::v100(), 2),
+                    ],
+                },
+                FleetPool {
+                    name: "a100-4".to_string(),
+                    devices: vec![(DeviceSpec::a100(), 4)],
+                },
+            ],
+            precision: Precision::Mixed,
+            max_batch: 8,
+            seq_max: 128,
+            requests: 6_000,
+            seed: 42,
+            slo: 0.100,
+            max_wait: 0.010,
+            load: 0.55,
+            amplitude: 0.6,
+            burst_factor: 2.5,
+            up_depth: 12.0,
+            down_depth: 4.0,
+            routings: vec![Routing::RoundRobin, Routing::LeastLoaded, Routing::PowerOfTwo],
+            arrivals: vec![ArrivalKind::Diurnal, ArrivalKind::Flash],
+            calibration: None,
+        }
+    }
+
+    /// One replica's latency model, priced through the shared `table`
+    /// (the encoder sweep's pricer assembly, reused verbatim).
+    fn replica_model(&self, dev: &DeviceSpec, table: Arc<CostCache>) -> LatencyModel {
+        let shim = crate::serve::sweep::SweepConfig {
+            calibration: self.calibration.clone(),
+            ..crate::serve::sweep::SweepConfig::bert_large_default()
+        };
+        let pricer = shim.pricer(dev, self.precision, table);
+        LatencyModel::new(self.model, self.precision, dev.clone()).with_pricer(pricer)
+    }
+
+    /// A pool's summed saturation rate at the sweep's batch shape —
+    /// what the offered base rate scales against.
+    fn pool_saturation(&self, pool: &FleetPool) -> f64 {
+        pool.expand()
+            .iter()
+            .map(|d| {
+                self.replica_model(d, Arc::new(CostCache::new()))
+                    .saturation_rate(self.max_batch, self.seq_max)
+            })
+            .sum()
+    }
+
+    /// Materialize the grid in deterministic (pool, arrival,
+    /// [static, auto], routing) order — each (pool, arrival) block is
+    /// 2×`routings.len()` points sharing one trace, so
+    /// `fleet_sweep_json` can pair them into verdicts.
+    pub fn scenarios(&self) -> Vec<FleetScenario> {
+        let mut out = Vec::new();
+        for pool in &self.pools {
+            let size = pool.size();
+            let base = self.load * self.pool_saturation(pool);
+            let duration = self.requests as f64 / base;
+            // Two full day-night cycles per trace; the autoscaler ticks
+            // 48× per cycle and sits out 2 ticks after each decision.
+            let period = duration / 2.0;
+            for &kind in &self.arrivals {
+                let arrival = match kind {
+                    ArrivalKind::Fixed => ArrivalProcess::Fixed { rate: base },
+                    ArrivalKind::Diurnal => ArrivalProcess::Diurnal {
+                        base,
+                        amplitude: self.amplitude,
+                        period,
+                    },
+                    ArrivalKind::Flash => ArrivalProcess::FlashCrowd {
+                        base,
+                        burst_rate: self.burst_factor * base,
+                        burst_start: 0.4 * duration,
+                        burst_len: 0.1 * duration,
+                    },
+                };
+                for auto_on in [false, true] {
+                    let autoscaler = if auto_on {
+                        AutoscalerConfig {
+                            enabled: true,
+                            min_replicas: (size + 1) / 2,
+                            max_replicas: size,
+                            up_threshold: self.up_depth,
+                            down_threshold: self.down_depth,
+                            tick: period / 48.0,
+                            cooldown_ticks: 2,
+                            warmup: period / 24.0,
+                        }
+                    } else {
+                        AutoscalerConfig::disabled()
+                    };
+                    for &routing in &self.routings {
+                        out.push(FleetScenario {
+                            label: format!(
+                                "{} {} {} {}",
+                                pool.name,
+                                routing.label(),
+                                arrival.label(),
+                                if auto_on { "auto" } else { "static" }
+                            ),
+                            pool: pool.name.clone(),
+                            devices: pool.expand(),
+                            routing,
+                            arrival,
+                            autoscaler,
+                            rate: base,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Grid cardinality.
+    pub fn scenario_count(&self) -> usize {
+        self.pools.len() * self.arrivals.len() * 2 * self.routings.len()
+    }
+}
+
+/// One fully-resolved fleet grid point.
+#[derive(Debug, Clone)]
+pub struct FleetScenario {
+    /// Point label (`hetero-6 p2c diurnal auto`).
+    pub label: String,
+    /// Pool name.
+    pub pool: String,
+    /// Expanded per-replica device list.
+    pub devices: Vec<DeviceSpec>,
+    /// Routing policy.
+    pub routing: Routing,
+    /// Fully-derived arrival process.
+    pub arrival: ArrivalProcess,
+    /// Autoscaler settings (disabled for the static points).
+    pub autoscaler: AutoscalerConfig,
+    /// Offered base rate (requests/second).
+    pub rate: f64,
+}
+
+/// Simulate one fleet scenario (deterministic given `cfg.seed`).
+pub fn run_fleet_scenario(cfg: &FleetSweepConfig, scenario: &FleetScenario) -> FleetReport {
+    run_fleet_scenario_with(cfg, scenario, &Arc::new(CostCache::new()))
+}
+
+/// `run_fleet_scenario` against a shared grid-wide cost table (pure
+/// memoization, bit-identical reports).
+fn run_fleet_scenario_with(
+    cfg: &FleetSweepConfig,
+    scenario: &FleetScenario,
+    cost: &Arc<CostCache>,
+) -> FleetReport {
+    let replicas: Vec<(String, LatencyModel)> = scenario
+        .devices
+        .iter()
+        .map(|d| (d.name.clone(), cfg.replica_model(d, Arc::clone(cost))))
+        .collect();
+    let trace = scenario.arrival.generate(
+        cfg.requests,
+        cfg.seed,
+        (cfg.seq_max / 8).max(1),
+        cfg.seq_max,
+    );
+    let mut routing = scenario.routing.build();
+    Fleet::new(BatchPolicy::new(cfg.max_batch, cfg.max_wait), cfg.slo)
+        .with_autoscaler(scenario.autoscaler)
+        .run(
+            &scenario.label,
+            &trace,
+            replicas,
+            routing.as_mut(),
+            cfg.seed ^ ROUTE_SEED_SALT,
+        )
+        .report
+}
+
+/// Run the whole grid across up to `threads` workers on the shared
+/// executor; grid-ordered results, one grid-wide [`CostCache`].
+pub fn run_fleet_sweep(cfg: &FleetSweepConfig, threads: usize) -> Vec<FleetReport> {
+    run_fleet_sweep_cached(cfg, threads).0
+}
+
+/// `run_fleet_sweep`, also returning the grid's cost cache so callers
+/// can report the hit rate.
+pub fn run_fleet_sweep_cached(
+    cfg: &FleetSweepConfig,
+    threads: usize,
+) -> (Vec<FleetReport>, Arc<CostCache>) {
+    let scenarios = cfg.scenarios();
+    let cost = Arc::new(CostCache::new());
+    let reports = exec::run_grid(&scenarios, threads, |s| run_fleet_scenario_with(cfg, s, &cost));
+    (reports, cost)
+}
+
+/// One fleet report as a JSON object: the shared serving-report keys
+/// plus the fleet-only columns and the per-replica ledger.
+pub fn fleet_report_json(r: &FleetReport, pool: &str, arrival: &str) -> Json {
+    let Json::Obj(mut m) = report_json(&r.sim) else {
+        unreachable!("report_json returns an object")
+    };
+    m.insert("pool".into(), Json::str(pool));
+    m.insert("routing".into(), Json::str(r.routing.clone()));
+    m.insert("arrival".into(), Json::str(arrival));
+    m.insert("autoscaled".into(), Json::Bool(r.autoscaled));
+    m.insert("arrivals".into(), Json::num(r.arrivals as f64));
+    m.insert("admitted".into(), Json::num(r.admitted as f64));
+    m.insert("rejected".into(), Json::num(r.rejected as f64));
+    m.insert("replica_seconds".into(), Json::num(r.replica_seconds));
+    m.insert("util_spread".into(), Json::num(r.util_spread));
+    m.insert("cost_usd".into(), Json::num(r.cost_usd));
+    m.insert("cost_per_m_requests".into(), Json::num(r.cost_per_m_requests));
+    m.insert("scale_ups".into(), Json::num(r.scale_ups as f64));
+    m.insert("scale_downs".into(), Json::num(r.scale_downs as f64));
+    m.insert(
+        "per_replica".into(),
+        Json::arr(
+            r.replicas
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("device", Json::str(s.device.clone())),
+                        ("assigned", Json::num(s.assigned as f64)),
+                        ("completed", Json::num(s.completed as f64)),
+                        ("rejected", Json::num(s.rejected as f64)),
+                        ("batches", Json::num(s.batches as f64)),
+                        ("busy_s", Json::num(s.busy)),
+                        ("active_s", Json::num(s.active_seconds)),
+                        ("utilization", Json::num(s.utilization)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(m)
+}
+
+/// The grid-order labels of the points no other point beats on *both*
+/// cost-per-million-requests and p99 — the artifact's headline
+/// frontier.
+fn pareto_frontier(reports: &[FleetReport]) -> Vec<Json> {
+    let dominated = |i: usize| {
+        reports.iter().enumerate().any(|(j, b)| {
+            let a = &reports[i];
+            j != i
+                && b.cost_per_m_requests <= a.cost_per_m_requests
+                && b.sim.p99 <= a.sim.p99
+                && (b.cost_per_m_requests < a.cost_per_m_requests || b.sim.p99 < a.sim.p99)
+        })
+    };
+    (0..reports.len())
+        .filter(|&i| !dominated(i))
+        .map(|i| Json::str(reports[i].sim.label.clone()))
+        .collect()
+}
+
+/// The whole fleet sweep as one JSON artifact. Each (pool, arrival)
+/// block of `2 × routings` reports is distilled into `verdicts`
+/// (p2c vs round-robin on p99, per static/auto half) and
+/// `autoscale_verdicts` (auto vs static replica-seconds and SLO
+/// attainment, per routing); `frontier` lists the Pareto-optimal
+/// points by (cost-per-million-requests, p99).
+pub fn fleet_sweep_json(cfg: &FleetSweepConfig, reports: &[FleetReport]) -> Json {
+    let scenarios = cfg.scenarios();
+    let nr = cfg.routings.len();
+    let block = 2 * nr;
+    let mut verdicts: Vec<Json> = Vec::new();
+    let mut autoscale_verdicts: Vec<Json> = Vec::new();
+    let rr = cfg.routings.iter().position(|r| *r == Routing::RoundRobin);
+    let p2c = cfg.routings.iter().position(|r| *r == Routing::PowerOfTwo);
+    for (bi, chunk) in reports.chunks_exact(block).enumerate() {
+        let scn = &scenarios[bi * block];
+        let point = |suffix: &str| format!("{} {} {}", scn.pool, scn.arrival.label(), suffix);
+        if let (Some(ri), Some(pi)) = (rr, p2c) {
+            for (half, name) in [(0, "static"), (1, "auto")] {
+                let r = &chunk[half * nr + ri];
+                let p = &chunk[half * nr + pi];
+                verdicts.push(Json::obj(vec![
+                    ("point", Json::str(point(name))),
+                    ("rr_p99_ms", Json::num(r.sim.p99 * 1e3)),
+                    ("p2c_p99_ms", Json::num(p.sim.p99 * 1e3)),
+                    ("p2c_wins", Json::Bool(p.sim.p99 < r.sim.p99)),
+                ]));
+            }
+        }
+        for (ri, routing) in cfg.routings.iter().enumerate() {
+            let st = &chunk[ri];
+            let au = &chunk[nr + ri];
+            autoscale_verdicts.push(Json::obj(vec![
+                ("point", Json::str(point(routing.label()))),
+                ("static_replica_seconds", Json::num(st.replica_seconds)),
+                ("auto_replica_seconds", Json::num(au.replica_seconds)),
+                ("static_slo_attainment", Json::num(st.sim.slo_attainment)),
+                ("auto_slo_attainment", Json::num(au.sim.slo_attainment)),
+                (
+                    "saves_replica_seconds",
+                    Json::Bool(au.replica_seconds < st.replica_seconds),
+                ),
+                (
+                    "holds_slo",
+                    Json::Bool(au.sim.slo_attainment >= st.sim.slo_attainment - 0.02),
+                ),
+            ]));
+        }
+    }
+    let mut pairs = vec![
+        ("study", Json::str("fleet_serving")),
+        (
+            "model",
+            Json::obj(vec![
+                ("d_model", Json::num(cfg.model.d_model as f64)),
+                ("n_layers", Json::num(cfg.model.n_layers as f64)),
+                ("n_heads", Json::num(cfg.model.n_heads as f64)),
+                ("vocab", Json::num(cfg.model.vocab as f64)),
+            ]),
+        ),
+        ("requests", Json::num(cfg.requests as f64)),
+        // As a string: u64 seeds above 2^53 don't survive an f64 number.
+        ("seed", Json::str(cfg.seed.to_string())),
+        ("slo_ms", Json::num(cfg.slo * 1e3)),
+        ("max_wait_ms", Json::num(cfg.max_wait * 1e3)),
+        ("load", Json::num(cfg.load)),
+        ("max_batch", Json::num(cfg.max_batch as f64)),
+        ("seq_max", Json::num(cfg.seq_max as f64)),
+        ("amplitude", Json::num(cfg.amplitude)),
+        ("burst_factor", Json::num(cfg.burst_factor)),
+        (
+            "pools",
+            Json::arr(
+                cfg.pools
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("name", Json::str(p.name.clone())),
+                            (
+                                "devices",
+                                Json::arr(
+                                    p.devices
+                                        .iter()
+                                        .map(|(d, n)| {
+                                            Json::obj(vec![
+                                                ("device", Json::str(d.name.clone())),
+                                                ("count", Json::num(*n as f64)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "scenarios",
+            Json::arr(
+                reports
+                    .iter()
+                    .zip(&scenarios)
+                    .map(|(r, s)| fleet_report_json(r, &s.pool, s.arrival.label()))
+                    .collect(),
+            ),
+        ),
+        ("verdicts", Json::arr(verdicts)),
+        ("autoscale_verdicts", Json::arr(autoscale_verdicts)),
+        ("frontier", Json::arr(pareto_frontier(reports))),
+    ];
+    if let Some(t) = &cfg.calibration {
+        pairs.push(("cost_table", t.to_json()));
+    }
+    Json::obj(pairs)
+}
+
+/// Write the fleet sweep artifact to `path` (parent dirs created).
+pub fn write_fleet_sweep(
+    path: &Path,
+    cfg: &FleetSweepConfig,
+    reports: &[FleetReport],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, fleet_sweep_json(cfg, reports).to_string())
+        .with_context(|| format!("writing fleet sweep artifact {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> FleetSweepConfig {
+        let mut cfg = FleetSweepConfig::bert_large_default();
+        cfg.requests = 800;
+        cfg
+    }
+
+    #[test]
+    fn grid_order_blocks_static_then_auto() {
+        let cfg = small_cfg();
+        let s = cfg.scenarios();
+        assert_eq!(s.len(), cfg.scenario_count());
+        assert_eq!(s.len(), 24);
+        assert_eq!(s[0].label, "hetero-6 rr diurnal static");
+        assert_eq!(s[2].label, "hetero-6 p2c diurnal static");
+        assert_eq!(s[3].label, "hetero-6 rr diurnal auto");
+        assert_eq!(s[6].label, "hetero-6 rr flash static");
+        assert_eq!(s[12].label, "a100-4 rr diurnal static");
+        // One trace per (pool, arrival): the whole block shares a rate.
+        assert!(s[..6].iter().all(|x| x.rate == s[0].rate));
+        assert!(s.iter().all(|x| x.rate > 0.0));
+    }
+
+    #[test]
+    fn sweep_results_independent_of_worker_count() {
+        let cfg = small_cfg();
+        let serial = run_fleet_sweep(&cfg, 1);
+        let parallel = run_fleet_sweep(&cfg, 8);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.sim.label, b.sim.label);
+            assert_eq!(a.sim.p99, b.sim.p99);
+            assert_eq!(a.replica_seconds, b.replica_seconds);
+        }
+    }
+
+    #[test]
+    fn artifact_has_verdicts_and_is_seed_stable() {
+        let cfg = small_cfg();
+        let a = fleet_sweep_json(&cfg, &run_fleet_sweep(&cfg, 4)).to_string();
+        let b = fleet_sweep_json(&cfg, &run_fleet_sweep(&cfg, 2)).to_string();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(
+            parsed.get("scenarios").unwrap().as_arr().unwrap().len(),
+            cfg.scenario_count()
+        );
+        // 2 verdicts (static/auto) per (pool, arrival) block of 6.
+        assert_eq!(parsed.get("verdicts").unwrap().as_arr().unwrap().len(), 8);
+        // One autoscale verdict per routing per block.
+        assert_eq!(
+            parsed.get("autoscale_verdicts").unwrap().as_arr().unwrap().len(),
+            12
+        );
+        assert!(!parsed.get("frontier").unwrap().as_arr().unwrap().is_empty());
+        let mut other = cfg.clone();
+        other.seed = 43;
+        let c = fleet_sweep_json(&other, &run_fleet_sweep(&other, 4)).to_string();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn every_block_conserves_requests() {
+        let cfg = small_cfg();
+        let reports = run_fleet_sweep(&cfg, 4);
+        for r in &reports {
+            assert_eq!(r.arrivals, cfg.requests);
+            assert_eq!(r.admitted, cfg.requests, "{}", r.sim.label);
+            assert_eq!(r.rejected, 0);
+            let per: u64 = r.replicas.iter().map(|s| s.completed).sum();
+            assert_eq!(per, cfg.requests);
+        }
+    }
+
+    #[test]
+    fn grid_cost_cache_is_pure_memoization() {
+        let cfg = small_cfg();
+        let (reports, cost) = run_fleet_sweep_cached(&cfg, 4);
+        let baseline = run_fleet_sweep(&cfg, 1);
+        for (a, b) in reports.iter().zip(&baseline) {
+            assert_eq!(a.sim.label, b.sim.label);
+            assert_eq!(a.sim.p99, b.sim.p99);
+        }
+        assert!(cost.misses() > 0);
+    }
+}

@@ -32,6 +32,15 @@
 //!   slot-based continuous batching over one trace, and the decode sweep
 //!   pairs the two policies per grid point into `continuous_wins`
 //!   verdicts (`bertprof run decode`).
+//! * [`fleet`] / [`fleet_sweep`] — the multi-replica layer (DESIGN.md
+//!   SSFleet): N replicas over heterogeneous `DeviceSpec`s running the
+//!   exact single-replica batching discipline online (a 1-replica fleet
+//!   is bit-identical to [`Simulator`]), pluggable routing
+//!   ([`RoutePolicy`]: round-robin / least-loaded / SLO-aware
+//!   power-of-two-choices), a queue-depth autoscaler with hysteresis,
+//!   non-stationary arrivals ([`ArrivalProcess`]: diurnal, flash
+//!   crowd), and the {pool × arrival × autoscaler × routing} sweep with
+//!   cost-per-million-requests frontiers (`bertprof run fleet`).
 //!
 //! Entry points: `bertprof serve` / `bertprof run decode` (CLI), the
 //! `serve_latency_throughput` bench, and `examples/serving_study.rs`.
@@ -41,6 +50,8 @@
 
 pub mod decode;
 pub mod decode_sweep;
+pub mod fleet;
+pub mod fleet_sweep;
 pub mod graph;
 pub mod sim;
 pub mod sweep;
@@ -52,6 +63,16 @@ pub use decode::{
 pub use decode_sweep::{
     decode_report_json, decode_sweep_json, run_decode_scenario, run_decode_sweep,
     run_decode_sweep_cached, write_decode_sweep, DecodeReport, DecodeScenario, DecodeSweepConfig,
+};
+pub use fleet::{
+    hourly_usd, ArrivalProcess, AutoscalerConfig, Fleet, FleetOutcome, FleetReport, LeastLoaded,
+    PowerOfTwoChoices, ReplicaStat, RoundRobin, RouteDecision, RoutePolicy, RouteRecord,
+    RouteView, Routing, ScaleEvent, ROUTE_SEED_SALT,
+};
+pub use fleet_sweep::{
+    fleet_report_json, fleet_sweep_json, run_fleet_scenario, run_fleet_sweep,
+    run_fleet_sweep_cached, write_fleet_sweep, ArrivalKind, FleetPool, FleetScenario,
+    FleetSweepConfig,
 };
 pub use graph::{
     decode_graph, forward_graph, inference_run, prefill_graph, BatchCost, DecodeModel,

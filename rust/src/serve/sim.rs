@@ -165,6 +165,52 @@ pub struct SimReport {
 }
 
 impl SimReport {
+    /// Build the aggregate report from a finished run's ledgers:
+    /// per-request completion records plus the device-time counters the
+    /// event loop accumulated. The float-op order in here is
+    /// load-bearing — `serve::fleet` merges per-replica ledgers and
+    /// calls this same constructor, which is what makes a degenerate
+    /// one-replica fleet reproduce a [`Simulator`] run bit-for-bit
+    /// (`rust/tests/fleet_sim.rs` pins that identity).
+    pub fn from_run(
+        label: &str,
+        completions: &[Completion],
+        makespan: f64,
+        busy: f64,
+        batches: u64,
+        slo: f64,
+    ) -> SimReport {
+        let n = completions.len();
+        if n == 0 {
+            return SimReport::empty(label);
+        }
+        let mut sorted: Vec<f64> = completions.iter().map(|c| c.done - c.arrival).collect();
+        let total_wait: f64 = sorted.iter().sum();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let within = sorted.iter().filter(|&&l| l <= slo).count();
+        SimReport {
+            label: label.to_string(),
+            requests: n as u64,
+            batches,
+            mean_batch: n as f64 / batches as f64,
+            makespan,
+            throughput: n as f64 / makespan,
+            utilization: busy / makespan,
+            mean_latency: total_wait / n as f64,
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
+            max_latency: *sorted.last().expect("non-empty"),
+            slo,
+            slo_attainment: within as f64 / n as f64,
+            goodput: within as f64 / makespan,
+            // ∫N(t)dt over [0, makespan] equals the summed per-request
+            // time-in-system; dividing by the window gives Little's L.
+            mean_in_system: total_wait / makespan,
+            arrival_rate: n as f64 / makespan,
+        }
+    }
+
     /// All-zero report for an empty trace.
     pub fn empty(label: &str) -> SimReport {
         SimReport {
@@ -287,32 +333,7 @@ impl Simulator {
             i = end;
         }
 
-        let makespan = t_free;
-        let mut sorted: Vec<f64> = completions.iter().map(|c| c.done - c.arrival).collect();
-        let total_wait: f64 = sorted.iter().sum();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
-        let within = sorted.iter().filter(|&&l| l <= self.slo).count();
-        let report = SimReport {
-            label: label.to_string(),
-            requests: n as u64,
-            batches,
-            mean_batch: n as f64 / batches as f64,
-            makespan,
-            throughput: n as f64 / makespan,
-            utilization: busy / makespan,
-            mean_latency: total_wait / n as f64,
-            p50: percentile(&sorted, 0.50),
-            p95: percentile(&sorted, 0.95),
-            p99: percentile(&sorted, 0.99),
-            max_latency: *sorted.last().expect("non-empty"),
-            slo: self.slo,
-            slo_attainment: within as f64 / n as f64,
-            goodput: within as f64 / makespan,
-            // ∫N(t)dt over [0, makespan] equals the summed per-request
-            // time-in-system; dividing by the window gives Little's L.
-            mean_in_system: total_wait / makespan,
-            arrival_rate: n as f64 / makespan,
-        };
+        let report = SimReport::from_run(label, &completions, t_free, busy, batches, self.slo);
         SimOutcome { report, completions }
     }
 }

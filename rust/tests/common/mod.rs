@@ -1,14 +1,21 @@
-//! Invariant helpers shared by the serving test suites
-//! (`serve_sim.rs`, `decode_sim.rs`): queueing identities checked from
-//! raw per-request lifecycle events, so the same suite runs against any
-//! `BatchPolicy`-like scheduler — FIFO co-batching, lock-step decode,
-//! and slot-based continuous batching alike.
+//! Helpers shared by the integration-test suites: queueing invariants
+//! checked from raw per-request lifecycle events (`serve_sim.rs`,
+//! `decode_sim.rs`, `fleet_sim.rs`), the golden-snapshot comparison
+//! harness (`golden.rs`), and the seeded-artifact determinism check
+//! every sweep suite runs. Everything works from public surfaces only,
+//! so the same suite runs against any `BatchPolicy`-like scheduler —
+//! FIFO co-batching, lock-step decode, continuous batching, and the
+//! multi-replica fleet alike.
 
 // Each integration-test crate compiles its own copy; not every crate
 // uses every helper.
 #![allow(dead_code)]
 
+use std::fs;
+use std::path::PathBuf;
+
 use bertprof::serve::SimReport;
+use bertprof::util::Json;
 
 /// Time-average of N(t) over [0, makespan], integrated from raw
 /// `(arrival, done)` spans — independent of any simulator's own
@@ -45,5 +52,121 @@ pub fn assert_littles_law(report: &SimReport, spans: &[(f64, f64)]) {
         "[{}] report L {} != integrated L {l}",
         report.label,
         report.mean_in_system
+    );
+}
+
+/// Every sweep artifact is a pure function of its seed: recomputing at
+/// a different worker count must not move a byte, and reseeding must.
+/// `artifact` maps `(seed, threads)` to the serialized artifact.
+pub fn assert_seeded_artifact_determinism(
+    artifact: impl Fn(u64, usize) -> String,
+    base_seed: u64,
+    other_seed: u64,
+) {
+    let a = artifact(base_seed, 4);
+    let b = artifact(base_seed, 1);
+    assert_eq!(a, b, "artifact must not depend on thread count");
+    let c = artifact(other_seed, 4);
+    assert_ne!(a, c, "different seed must change the trace");
+}
+
+// ------------------------------------------------------------------
+// Golden-snapshot harness (used by golden.rs; hoisted here so other
+// suites can pin artifacts against the same snapshots).
+// ------------------------------------------------------------------
+
+/// Relative tolerance for numeric fields: wide enough to absorb
+/// benign float-accumulation differences, narrow enough that any real
+/// model change (which shifts latencies by percents) trips it.
+pub const REL_TOL: f64 = 1e-3;
+/// Absolute floor for values near zero.
+pub const ABS_TOL: f64 = 1e-9;
+
+pub fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+pub fn update_mode() -> bool {
+    std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Recursive field-by-field comparison; appends every divergence to
+/// `errs` as a `path: detail` line.
+pub fn diff(path: &str, want: &Json, got: &Json, errs: &mut Vec<String>) {
+    match (want, got) {
+        (Json::Num(a), Json::Num(b)) => {
+            let tol = ABS_TOL + REL_TOL * a.abs().max(b.abs());
+            if (a - b).abs() > tol {
+                errs.push(format!("{path}: {a} != {b} (tol {tol:e})"));
+            }
+        }
+        (Json::Str(a), Json::Str(b)) => {
+            if a != b {
+                errs.push(format!("{path}: {a:?} != {b:?}"));
+            }
+        }
+        (Json::Bool(a), Json::Bool(b)) => {
+            if a != b {
+                errs.push(format!("{path}: {a} != {b}"));
+            }
+        }
+        (Json::Null, Json::Null) => {}
+        (Json::Arr(a), Json::Arr(b)) => {
+            if a.len() != b.len() {
+                errs.push(format!("{path}: array length {} != {}", a.len(), b.len()));
+                return;
+            }
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                diff(&format!("{path}[{i}]"), x, y, errs);
+            }
+        }
+        (Json::Obj(a), Json::Obj(b)) => {
+            for k in a.keys() {
+                if !b.contains_key(k) {
+                    errs.push(format!("{path}.{k}: missing from computed artifact"));
+                }
+            }
+            for k in b.keys() {
+                if !a.contains_key(k) {
+                    errs.push(format!("{path}.{k}: not in golden snapshot"));
+                }
+            }
+            for (k, x) in a {
+                if let Some(y) = b.get(k) {
+                    diff(&format!("{path}.{k}"), x, y, errs);
+                }
+            }
+        }
+        _ => errs.push(format!("{path}: type mismatch ({want:?} vs {got:?})")),
+    }
+}
+
+/// Compare `got` against the checked-in snapshot `<name>.json`, or
+/// rewrite the snapshot when `UPDATE_GOLDEN=1`.
+pub fn check(name: &str, got: Json) {
+    let file = golden_dir().join(format!("{name}.json"));
+    if update_mode() {
+        fs::create_dir_all(golden_dir()).expect("golden dir");
+        fs::write(&file, got.to_string()).expect("write snapshot");
+        eprintln!("golden: regenerated {}", file.display());
+        return;
+    }
+    let text = fs::read_to_string(&file).unwrap_or_else(|e| {
+        panic!(
+            "missing/unreadable golden snapshot {}: {e}\n\
+             regenerate with: UPDATE_GOLDEN=1 cargo test --test golden",
+            file.display()
+        )
+    });
+    let want = Json::parse(&text).expect("golden snapshot parses");
+    let mut errs = Vec::new();
+    diff(name, &want, &got, &mut errs);
+    assert!(
+        errs.is_empty(),
+        "golden mismatch for {name} — {} field(s) diverged:\n{}\n\
+         if the model change is intentional, regenerate with \
+         UPDATE_GOLDEN=1 cargo test --test golden and review the diff",
+        errs.len(),
+        errs.join("\n")
     );
 }

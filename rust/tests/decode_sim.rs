@@ -162,18 +162,19 @@ fn decode_model_prices_through_any_shared_pricer() {
 
 #[test]
 fn prop_same_seed_same_artifact() {
-    // The serve_sim.rs artifact-identity check, decode edition: thread
-    // count must not change a byte; the seed must.
-    let mut cfg = DecodeSweepConfig::bert_large_default();
-    cfg.requests = 400;
-    cfg.slots = vec![8];
-    let a = decode_sweep_json(&cfg, &run_decode_sweep(&cfg, 4)).to_string();
-    let b = decode_sweep_json(&cfg, &run_decode_sweep(&cfg, 1)).to_string();
-    assert_eq!(a, b, "artifact must not depend on thread count");
-    let mut reseeded = cfg.clone();
-    reseeded.seed = 7;
-    let c = decode_sweep_json(&reseeded, &run_decode_sweep(&reseeded, 4)).to_string();
-    assert_ne!(a, c, "different seed must change the trace");
+    // The serve_sim.rs artifact-identity check, decode edition, via the
+    // shared helper: thread count must not change a byte; the seed must.
+    common::assert_seeded_artifact_determinism(
+        |seed, threads| {
+            let mut cfg = DecodeSweepConfig::bert_large_default();
+            cfg.requests = 400;
+            cfg.slots = vec![8];
+            cfg.seed = seed;
+            decode_sweep_json(&cfg, &run_decode_sweep(&cfg, threads)).to_string()
+        },
+        42,
+        7,
+    );
 }
 
 #[test]

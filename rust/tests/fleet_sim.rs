@@ -1,0 +1,280 @@
+//! Property tests for the fleet-scale serving subsystem (DESIGN.md
+//! SSFleet): request conservation across admission/rejection ledgers,
+//! Little's law fleet-wide (re-integrated from raw completion spans),
+//! round-robin fairness, the power-of-two-choices routing contract
+//! audited from the per-request route records, autoscaler hysteresis,
+//! the diurnal process's empirical mean rate, seed/thread determinism
+//! of the sweep artifact, and the degenerate one-replica fleet
+//! reproducing the single-replica simulator bit-for-bit.
+
+use bertprof::config::{ModelConfig, Precision};
+use bertprof::perf::device::DeviceSpec;
+use bertprof::serve::sweep::report_json;
+use bertprof::serve::{
+    fleet_sweep_json, run_fleet_sweep, ArrivalProcess, AutoscalerConfig, BatchPolicy, Fleet,
+    FleetOutcome, FleetSweepConfig, LatencyModel, Routing, Simulator, Workload, ROUTE_SEED_SALT,
+};
+
+mod common;
+
+fn lm(dev: DeviceSpec) -> LatencyModel {
+    LatencyModel::new(ModelConfig::bert_large(), Precision::Mixed, dev)
+}
+
+/// A homogeneous MI100 pool (equal service estimates, so routing
+/// contracts reduce to pure depth comparisons).
+fn mi100_pool(n: usize) -> Vec<(String, LatencyModel)> {
+    (0..n).map(|_| ("MI100".to_string(), lm(DeviceSpec::mi100()))).collect()
+}
+
+/// The heterogeneous pool of the default sweep, small.
+fn hetero_pool() -> Vec<(String, LatencyModel)> {
+    vec![
+        ("MI100".to_string(), lm(DeviceSpec::mi100())),
+        ("A100".to_string(), lm(DeviceSpec::a100())),
+        ("V100".to_string(), lm(DeviceSpec::v100())),
+    ]
+}
+
+fn run_fleet(
+    fleet: Fleet,
+    trace_rate: f64,
+    requests: u64,
+    seed: u64,
+    pool: Vec<(String, LatencyModel)>,
+    routing: Routing,
+) -> FleetOutcome {
+    let trace = ArrivalProcess::Fixed { rate: trace_rate }.generate(requests, seed, 16, 128);
+    let mut policy = routing.build();
+    fleet.run("prop", &trace, pool, policy.as_mut(), seed ^ ROUTE_SEED_SALT)
+}
+
+#[test]
+fn prop_requests_are_conserved_across_every_ledger() {
+    // Offered = admitted + rejected, per replica and fleet-wide; every
+    // admitted request completes after the final drain; the route
+    // records' own admission flags agree with the replica counters.
+    for (cap, seed) in [(None, 3u64), (Some(2), 4), (Some(6), 5)] {
+        let mut fleet = Fleet::new(BatchPolicy::new(8, 0.010), 0.1);
+        if let Some(c) = cap {
+            fleet = fleet.with_queue_cap(c);
+        }
+        let out = run_fleet(fleet, 3_000.0, 1_500, seed, mi100_pool(3), Routing::LeastLoaded);
+        let r = &out.report;
+        assert_eq!(r.arrivals, 1_500);
+        assert_eq!(r.admitted + r.rejected, r.arrivals, "cap {cap:?}");
+        assert_eq!(out.completions.len() as u64, r.admitted);
+        let per_admitted: u64 = r.replicas.iter().map(|s| s.assigned).sum();
+        let per_completed: u64 = r.replicas.iter().map(|s| s.completed).sum();
+        let per_rejected: u64 = r.replicas.iter().map(|s| s.rejected).sum();
+        assert_eq!(per_admitted, r.admitted);
+        assert_eq!(per_completed, r.admitted, "a queued request vanished");
+        assert_eq!(per_rejected, r.rejected);
+        for (i, ledger) in out.per_replica.iter().enumerate() {
+            assert_eq!(ledger.len() as u64, r.replicas[i].completed);
+        }
+        let route_admitted = out.routes.iter().filter(|x| x.admitted).count() as u64;
+        assert_eq!(route_admitted, r.admitted);
+        if cap.is_none() {
+            assert_eq!(r.rejected, 0);
+        } else {
+            assert!(r.rejected > 0, "overload at cap {cap:?} must reject");
+        }
+    }
+}
+
+#[test]
+fn prop_littles_law_holds_fleet_wide() {
+    // The same `L = λ·W` identity the single-replica suites assert,
+    // here over the merged multi-replica ledger under a heterogeneous
+    // pool and a diurnal arrival process.
+    let arrivals = ArrivalProcess::Diurnal { base: 250.0, amplitude: 0.6, period: 3.0 };
+    let trace = arrivals.generate(2_000, 11, 16, 128);
+    let mut policy = Routing::PowerOfTwo.build();
+    let out = Fleet::new(BatchPolicy::new(8, 0.010), 0.1).run(
+        "little",
+        &trace,
+        hetero_pool(),
+        policy.as_mut(),
+        11 ^ ROUTE_SEED_SALT,
+    );
+    let spans: Vec<(f64, f64)> =
+        out.completions.iter().map(|c| (c.arrival, c.done)).collect();
+    common::assert_littles_law(&out.report.sim, &spans);
+}
+
+#[test]
+fn prop_round_robin_is_fair_on_a_homogeneous_pool() {
+    // Equal service rates, no autoscaler, no cap: round-robin assigns
+    // within one request of perfectly even.
+    let out = run_fleet(
+        Fleet::new(BatchPolicy::new(8, 0.010), 0.1),
+        600.0,
+        1_001, // deliberately not divisible by the pool size
+        21,
+        mi100_pool(4),
+        Routing::RoundRobin,
+    );
+    let assigned: Vec<u64> = out.report.replicas.iter().map(|s| s.assigned).collect();
+    let (min, max) = (
+        *assigned.iter().min().expect("non-empty pool"),
+        *assigned.iter().max().expect("non-empty pool"),
+    );
+    assert!(max - min <= 1, "round-robin drifted: {assigned:?}");
+    assert_eq!(assigned.iter().sum::<u64>(), 1_001);
+}
+
+#[test]
+fn prop_p2c_routes_to_the_better_sampled_candidate() {
+    // Audit every routing decision from the records: the chosen replica
+    // is one of the two sampled candidates, and (equal service
+    // estimates) never the strictly deeper one.
+    let out = run_fleet(
+        Fleet::new(BatchPolicy::new(8, 0.010), 0.1),
+        700.0,
+        2_000,
+        31,
+        mi100_pool(4),
+        Routing::PowerOfTwo,
+    );
+    let mut sampled_decisions = 0;
+    for rec in &out.routes {
+        let Some((a, b)) = rec.sampled else { continue };
+        sampled_decisions += 1;
+        assert_ne!(a, b, "p2c sampled the same replica twice");
+        assert!(
+            rec.chosen == a || rec.chosen == b,
+            "chose {} outside the sample ({a},{b})",
+            rec.chosen
+        );
+        let other = if rec.chosen == a { b } else { a };
+        assert!(
+            rec.depths[rec.chosen] <= rec.depths[other],
+            "req {}: chose depth {} over {}",
+            rec.id,
+            rec.depths[rec.chosen],
+            rec.depths[other]
+        );
+    }
+    assert_eq!(sampled_decisions, out.routes.len(), "pool > 1 always samples");
+}
+
+#[test]
+fn prop_autoscaler_hysteresis_spaces_decisions() {
+    // Consecutive scale events are always more than one cooldown window
+    // apart, and the active count stays within [min, max].
+    let auto = AutoscalerConfig {
+        enabled: true,
+        min_replicas: 1,
+        max_replicas: 4,
+        up_threshold: 10.0,
+        down_threshold: 2.0,
+        tick: 0.05,
+        cooldown_ticks: 3,
+        warmup: 0.05,
+    };
+    let arrivals = ArrivalProcess::Diurnal { base: 200.0, amplitude: 0.8, period: 2.5 };
+    let trace = arrivals.generate(3_000, 41, 16, 128);
+    let mut policy = Routing::LeastLoaded.build();
+    let out = Fleet::new(BatchPolicy::new(8, 0.010), 0.1)
+        .with_autoscaler(auto)
+        .run("hyst", &trace, mi100_pool(4), policy.as_mut(), 41 ^ ROUTE_SEED_SALT);
+    assert_eq!(out.completions.len(), 3_000);
+    assert!(
+        out.report.scale_ups >= 1,
+        "the diurnal peak never tripped a scale-up"
+    );
+    let min_gap = (auto.cooldown_ticks + 1) as f64 * auto.tick;
+    for w in out.scale_events.windows(2) {
+        assert!(
+            w[1].time - w[0].time >= min_gap - 1e-9,
+            "events {:.3}s apart inside the {min_gap:.3}s cooldown window",
+            w[1].time - w[0].time
+        );
+        assert!((1..=4).contains(&w[1].active_after));
+    }
+}
+
+#[test]
+fn prop_diurnal_empirical_rate_matches_the_analytic_mean() {
+    // Over many whole periods the thinned sinusoid's empirical rate
+    // (n / span) converges to `base`; the flash crowd's stays between
+    // base and burst.
+    let base = 100.0;
+    let p = ArrivalProcess::Diurnal { base, amplitude: 0.6, period: 10.0 };
+    assert_eq!(p.mean_rate(), base);
+    let trace = p.generate(20_000, 77, 16, 128);
+    let span = trace.last().expect("non-empty").arrival;
+    let empirical = trace.len() as f64 / span;
+    assert!(
+        (empirical - base).abs() < 0.05 * base,
+        "empirical {empirical:.1}/s vs analytic {base:.1}/s"
+    );
+    let f = ArrivalProcess::FlashCrowd {
+        base,
+        burst_rate: 250.0,
+        burst_start: 50.0,
+        burst_len: 20.0,
+    };
+    let ftrace = f.generate(20_000, 77, 16, 128);
+    let frate = ftrace.len() as f64 / ftrace.last().expect("non-empty").arrival;
+    assert!(frate > base && frate < 250.0, "flash rate {frate:.1}/s out of band");
+}
+
+#[test]
+fn prop_same_seed_same_artifact() {
+    // The sweep artifact is a pure function of the seed: byte-identical
+    // across worker counts, different under a reseed (the shared
+    // helper every sweep suite runs).
+    common::assert_seeded_artifact_determinism(
+        |seed, threads| {
+            let mut cfg = FleetSweepConfig::bert_large_default();
+            cfg.requests = 600;
+            cfg.seed = seed;
+            fleet_sweep_json(&cfg, &run_fleet_sweep(&cfg, threads)).to_string()
+        },
+        42,
+        7,
+    );
+}
+
+#[test]
+fn degenerate_fleet_reproduces_the_single_replica_simulator() {
+    // A 1-replica homogeneous fleet with round-robin routing and the
+    // autoscaler off IS the single-replica simulator: same trace, same
+    // report (bit-for-bit through the shared constructor), same
+    // completion ledger. This identity is what lets the fleet numbers
+    // extend every earlier serving study without a new baseline.
+    for (max_batch, seed) in [(1u64, 51u64), (8, 52), (32, 53)] {
+        let trace = Workload::poisson(180.0, 1_000, seed)
+            .with_seq_range(16, 128)
+            .generate();
+        let policy = BatchPolicy::new(max_batch, 0.010);
+        let solo = Simulator::new(policy, 0.1).run("twin", &trace, &mut lm(DeviceSpec::mi100()));
+        let mut rr = Routing::RoundRobin.build();
+        let fleet = Fleet::new(policy, 0.1).run(
+            "twin",
+            &trace,
+            mi100_pool(1),
+            rr.as_mut(),
+            seed ^ ROUTE_SEED_SALT,
+        );
+        assert_eq!(
+            report_json(&fleet.report.sim).to_string(),
+            report_json(&solo.report).to_string(),
+            "B{max_batch} report diverged"
+        );
+        assert_eq!(fleet.completions.len(), solo.completions.len());
+        for (a, b) in fleet.completions.iter().zip(&solo.completions) {
+            assert_eq!(a.id, b.id, "B{max_batch}");
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.done, b.done, "B{max_batch} req {}", a.id);
+            assert_eq!(a.batch_size, b.batch_size);
+            assert_eq!(a.padded_seq, b.padded_seq);
+        }
+        // And the fleet-only ledgers collapse to the trivial values.
+        assert_eq!(fleet.report.replicas.len(), 1);
+        assert_eq!(fleet.report.scale_ups + fleet.report.scale_downs, 0);
+        assert!((fleet.report.util_spread).abs() < 1e-12);
+    }
+}

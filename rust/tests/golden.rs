@@ -16,111 +16,18 @@
 //!
 //! and review the snapshot diff like any other code change.
 
-use std::fs;
-use std::path::PathBuf;
-
 use bertprof::compress::{self, CompressPrecision, CompressSweepConfig, CompressVariant};
 use bertprof::perf::device::DeviceSpec;
 use bertprof::perf::CalibrationTable;
 use bertprof::profiler::artifact;
-use bertprof::serve::{self, DecodeSweepConfig, SweepConfig};
+use bertprof::serve::{self, DecodeSweepConfig, FleetSweepConfig, SweepConfig};
 use bertprof::util::Json;
 
-/// Relative tolerance for numeric fields: wide enough to absorb
-/// benign float-accumulation differences, narrow enough that any real
-/// model change (which shifts latencies by percents) trips it.
-const REL_TOL: f64 = 1e-3;
-/// Absolute floor for values near zero.
-const ABS_TOL: f64 = 1e-9;
+mod common;
 
-fn golden_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
-}
-
-fn update_mode() -> bool {
-    std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false)
-}
-
-/// Recursive field-by-field comparison; appends every divergence to
-/// `errs` as a `path: detail` line.
-fn diff(path: &str, want: &Json, got: &Json, errs: &mut Vec<String>) {
-    match (want, got) {
-        (Json::Num(a), Json::Num(b)) => {
-            let tol = ABS_TOL + REL_TOL * a.abs().max(b.abs());
-            if (a - b).abs() > tol {
-                errs.push(format!("{path}: {a} != {b} (tol {tol:e})"));
-            }
-        }
-        (Json::Str(a), Json::Str(b)) => {
-            if a != b {
-                errs.push(format!("{path}: {a:?} != {b:?}"));
-            }
-        }
-        (Json::Bool(a), Json::Bool(b)) => {
-            if a != b {
-                errs.push(format!("{path}: {a} != {b}"));
-            }
-        }
-        (Json::Null, Json::Null) => {}
-        (Json::Arr(a), Json::Arr(b)) => {
-            if a.len() != b.len() {
-                errs.push(format!("{path}: array length {} != {}", a.len(), b.len()));
-                return;
-            }
-            for (i, (x, y)) in a.iter().zip(b).enumerate() {
-                diff(&format!("{path}[{i}]"), x, y, errs);
-            }
-        }
-        (Json::Obj(a), Json::Obj(b)) => {
-            for k in a.keys() {
-                if !b.contains_key(k) {
-                    errs.push(format!("{path}.{k}: missing from computed artifact"));
-                }
-            }
-            for k in b.keys() {
-                if !a.contains_key(k) {
-                    errs.push(format!("{path}.{k}: not in golden snapshot"));
-                }
-            }
-            for (k, x) in a {
-                if let Some(y) = b.get(k) {
-                    diff(&format!("{path}.{k}"), x, y, errs);
-                }
-            }
-        }
-        _ => errs.push(format!("{path}: type mismatch ({want:?} vs {got:?})")),
-    }
-}
-
-/// Compare `got` against the checked-in snapshot `<name>.json`, or
-/// rewrite the snapshot when `UPDATE_GOLDEN=1`.
-fn check(name: &str, got: Json) {
-    let file = golden_dir().join(format!("{name}.json"));
-    if update_mode() {
-        fs::create_dir_all(golden_dir()).expect("golden dir");
-        fs::write(&file, got.to_string()).expect("write snapshot");
-        eprintln!("golden: regenerated {}", file.display());
-        return;
-    }
-    let text = fs::read_to_string(&file).unwrap_or_else(|e| {
-        panic!(
-            "missing/unreadable golden snapshot {}: {e}\n\
-             regenerate with: UPDATE_GOLDEN=1 cargo test --test golden",
-            file.display()
-        )
-    });
-    let want = Json::parse(&text).expect("golden snapshot parses");
-    let mut errs = Vec::new();
-    diff(name, &want, &got, &mut errs);
-    assert!(
-        errs.is_empty(),
-        "golden mismatch for {name} — {} field(s) diverged:\n{}\n\
-         if the model change is intentional, regenerate with \
-         UPDATE_GOLDEN=1 cargo test --test golden and review the diff",
-        errs.len(),
-        errs.join("\n")
-    );
-}
+// The comparison harness (REL_TOL diff + UPDATE_GOLDEN regeneration)
+// lives in tests/common so every suite pins artifacts the same way.
+use common::{check, golden_dir};
 
 /// The reduced serve grid the snapshot pins: MI100, FP32 vs Mixed,
 /// B1/B8, 1000 requests — small enough to run in seconds, rich enough
@@ -138,6 +45,15 @@ fn serve_golden_cfg() -> SweepConfig {
 fn decode_golden_cfg() -> DecodeSweepConfig {
     let mut cfg = DecodeSweepConfig::bert_large_default();
     cfg.requests = 500;
+    cfg
+}
+
+/// The reduced fleet grid the snapshot pins: the default pools,
+/// arrivals, routers, and autoscaler settings at 2000 requests — every
+/// verdict and the cost frontier ride inside the snapshot.
+fn fleet_golden_cfg() -> FleetSweepConfig {
+    let mut cfg = FleetSweepConfig::bert_large_default();
+    cfg.requests = 2_000;
     cfg
 }
 
@@ -264,6 +180,64 @@ fn golden_decode_matches_the_registry_path() {
     )
     .expect("decode runs");
     check("decode_sweep", out.artifact);
+}
+
+#[test]
+fn golden_fleet_sweep() {
+    let cfg = fleet_golden_cfg();
+    let reports = serve::run_fleet_sweep(&cfg, 2);
+    let artifact = serve::fleet_sweep_json(&cfg, &reports);
+    // The ISSUE acceptance shape rides inside the snapshot: (a) at
+    // least one heterogeneous-pool point where SLO-aware
+    // power-of-two-choices beats round-robin on p99, and (b) at least
+    // one diurnal point where the autoscaler saves replica-seconds at
+    // equal (±2pp) SLO attainment.
+    let arr = |key: &str| {
+        artifact
+            .get(key)
+            .unwrap_or_else(|| panic!("{key} array"))
+            .as_arr()
+            .expect("array")
+            .to_vec()
+    };
+    let p2c_wins = arr("verdicts")
+        .iter()
+        .filter(|v| {
+            v.get("point")
+                .and_then(|p| p.as_str())
+                .is_some_and(|p| p.starts_with("hetero"))
+                && matches!(v.get("p2c_wins"), Some(Json::Bool(true)))
+        })
+        .count();
+    assert!(p2c_wins >= 1, "p2c never beat rr on p99 over the hetero pool");
+    let auto_saves = arr("autoscale_verdicts")
+        .iter()
+        .filter(|v| {
+            v.get("point")
+                .and_then(|p| p.as_str())
+                .is_some_and(|p| p.contains("diurnal"))
+                && matches!(v.get("saves_replica_seconds"), Some(Json::Bool(true)))
+                && matches!(v.get("holds_slo"), Some(Json::Bool(true)))
+        })
+        .count();
+    assert!(
+        auto_saves >= 1,
+        "autoscaling never saved replica-seconds at equal SLO on a diurnal point"
+    );
+    check("fleet_sweep", artifact);
+}
+
+#[test]
+fn golden_fleet_matches_the_registry_path() {
+    // `bertprof run fleet --set requests=2000` emits exactly the
+    // golden-gated artifact (the CI scenario-artifacts row).
+    let out = bertprof::scenario::run_by_name(
+        "fleet",
+        &[("requests".into(), "2000".into()), ("threads".into(), "2".into())],
+        true,
+    )
+    .expect("fleet runs");
+    check("fleet_sweep", out.artifact);
 }
 
 #[test]

@@ -85,16 +85,19 @@ fn variable_seq_len_scales_forward_work() {
 
 #[test]
 fn prop_same_seed_same_artifact() {
-    let mut cfg = SweepConfig::bert_large_default();
-    cfg.requests = 1_200;
-    cfg.max_batches = vec![1, 8];
-    let a = sweep_json(&cfg, &run_sweep(&cfg, 4)).to_string();
-    let b = sweep_json(&cfg, &run_sweep(&cfg, 1)).to_string();
-    assert_eq!(a, b, "artifact must not depend on thread count");
-    let mut reseeded = cfg.clone();
-    reseeded.seed = 7;
-    let c = sweep_json(&reseeded, &run_sweep(&reseeded, 4)).to_string();
-    assert_ne!(a, c, "different seed must change the trace");
+    // The shared determinism contract (tests/common): thread count must
+    // not change a byte; the seed must.
+    common::assert_seeded_artifact_determinism(
+        |seed, threads| {
+            let mut cfg = SweepConfig::bert_large_default();
+            cfg.requests = 1_200;
+            cfg.max_batches = vec![1, 8];
+            cfg.seed = seed;
+            sweep_json(&cfg, &run_sweep(&cfg, threads)).to_string()
+        },
+        42,
+        7,
+    );
 }
 
 #[test]
