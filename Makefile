@@ -1,7 +1,7 @@
 # bertprof build drivers. The HLO half of `make artifacts` is the only
 # step that needs python (JAX); everything else is cargo.
 
-.PHONY: build test bench doc artifacts bench-costmodel bench-decode bench-fleet clean-artifacts
+.PHONY: build test bench doc artifacts bench-costmodel bench-decode bench-fleet bench-pareto clean-artifacts
 
 build:
 	cargo build --release
@@ -15,43 +15,53 @@ bench:
 doc:
 	cargo doc --no-deps
 
+# The BENCH_*.json targets need cargo. They used to skip silently on
+# python-only hosts, which let `make artifacts` "succeed" while quietly
+# omitting every BENCH_*.json it promises — fail loudly instead, so a
+# missing toolchain is a visible error, not a hole in the output
+# (run the aot step directly if you only want the HLO artifacts).
+define require_cargo
+	@command -v cargo >/dev/null 2>&1 || { \
+		echo "$(1): cargo not on PATH — cannot produce $(2)." >&2; \
+		echo "$(1): install a rust toolchain, or run the python step alone:" >&2; \
+		echo "$(1):   cd python && python3 -m compile.aot --out ../artifacts" >&2; \
+		exit 1; \
+	}
+endef
+
 # The cost-model bench data point (DESIGN.md SSCost): trait-dispatch +
 # cached-vs-uncached pricing overhead on the serve grid, written to
-# BENCH_costmodel.json. Skipped (with a note) on python-only hosts
-# where no cargo exists, so `make artifacts` stays runnable there.
+# BENCH_costmodel.json.
 bench-costmodel:
-	@if command -v cargo >/dev/null 2>&1; then \
-		cargo bench --bench fig_costmodel; \
-	else \
-		echo "bench-costmodel: no cargo on PATH, skipping (python-only host)"; \
-	fi
+	$(call require_cargo,bench-costmodel,BENCH_costmodel.json)
+	cargo bench --bench fig_costmodel
 
 # The decode bench data point (DESIGN.md SSDecode): cold vs memoized
 # decode-step pricing plus one FIFO and one continuous-batching
-# simulator run, written to BENCH_decode.json. Same python-only-host
-# escape hatch as bench-costmodel.
+# simulator run, written to BENCH_decode.json.
 bench-decode:
-	@if command -v cargo >/dev/null 2>&1; then \
-		cargo bench --bench fig_decode; \
-	else \
-		echo "bench-decode: no cargo on PATH, skipping (python-only host)"; \
-	fi
+	$(call require_cargo,bench-decode,BENCH_decode.json)
+	cargo bench --bench fig_decode
 
 # The fleet bench data point (DESIGN.md SSFleet): one multi-replica
 # simulation per routing policy plus the autoscaler's tick-loop
-# overhead, written to BENCH_fleet.json. Same python-only-host escape
-# hatch as bench-costmodel.
+# overhead, written to BENCH_fleet.json.
 bench-fleet:
-	@if command -v cargo >/dev/null 2>&1; then \
-		cargo bench --bench fig_fleet; \
-	else \
-		echo "bench-fleet: no cargo on PATH, skipping (python-only host)"; \
-	fi
+	$(call require_cargo,bench-fleet,BENCH_fleet.json)
+	cargo bench --bench fig_fleet
+
+# The pareto bench data point (DESIGN.md SSPareto): cold vs warm-table
+# candidate evaluation and the full 16-candidate halving search,
+# written to BENCH_pareto.json.
+bench-pareto:
+	$(call require_cargo,bench-pareto,BENCH_pareto.json)
+	cargo bench --bench fig_pareto
 
 # Lower every HLO artifact + manifest.json (DESIGN.md SS2; run from
 # python/ so aot.py's relative imports and default --out resolve) and
-# record the cost-model + decode + fleet bench trajectory points.
-artifacts: bench-costmodel bench-decode bench-fleet
+# record the cost-model + decode + fleet + pareto bench trajectory
+# points.
+artifacts: bench-costmodel bench-decode bench-fleet bench-pareto
 	cd python && python3 -m compile.aot --out ../artifacts
 
 clean-artifacts:

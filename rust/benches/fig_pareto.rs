@@ -1,0 +1,126 @@
+//! The pareto bench: what does one successive-halving rung cost, and
+//! how much does the shared op-price table actually save?
+//!
+//! Three questions on the SSPareto search (DESIGN.md):
+//!
+//! 1. **Cold evaluation** — scoring a candidate against a fresh
+//!    `CostCache` (every op shape priced from the roofline).
+//! 2. **Warm evaluation** — the same candidate against the table a
+//!    prior rung already filled (every lookup a hit) — the reuse that
+//!    makes the 576-candidate default budget cheap.
+//! 3. **Whole search** — the full halving loop on a 16-candidate
+//!    space, the unit CI runs repeatedly.
+//!
+//! Correctness asserts (determinism, dedup rate) run before timing.
+//! Results land in `BENCH_pareto.json` (wired into `make artifacts`).
+
+use std::sync::Arc;
+
+use bertprof::compress::{CompressPrecision, PruneSpec};
+use bertprof::config::ModelConfig;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::perf::CostCache;
+use bertprof::scenario::pareto::{
+    evaluate_candidate, run_search, Candidate, ParetoSearchConfig,
+};
+use bertprof::util::bench::{black_box, Bench};
+use bertprof::util::Json;
+
+fn bench_cfg() -> ParetoSearchConfig {
+    let model = ModelConfig::bert_large();
+    ParetoSearchConfig {
+        model,
+        devices: vec![DeviceSpec::mi100()],
+        prunes: vec![
+            PruneSpec::dense(&model),
+            PruneSpec::dense(&model)
+                .keep_heads(model.n_heads / 2)
+                .keep_ff(model.d_ff / 2),
+        ],
+        precisions: vec![CompressPrecision::Mixed, CompressPrecision::Int8Full],
+        max_batches: vec![8, 32],
+        replicas: vec![1, 2],
+        rungs: 3,
+        requests: 400,
+        seed: 42,
+        slo: 0.100,
+        max_wait: 0.010,
+        demand: 2.0,
+        seq_max: 128,
+    }
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    let cand = Candidate {
+        device: DeviceSpec::mi100(),
+        prune: PruneSpec::dense(&cfg.model),
+        precision: CompressPrecision::Int8Full,
+        max_batch: 8,
+        replicas: 2,
+    };
+    println!(
+        "## fig_pareto — {}-candidate space, {} rungs, {} final-rung requests",
+        cfg.candidates().len(),
+        cfg.rungs,
+        cfg.requests
+    );
+
+    // Correctness first: the search is deterministic and the shared
+    // table dedups the bulk of its lookups.
+    let (a, ta) = run_search(&cfg, 1);
+    let (b, _) = run_search(&cfg, 4);
+    assert_eq!(a.frontier, b.frontier, "search is nondeterministic");
+    assert_eq!(a.searched, b.searched);
+    assert!(ta.dedup_rate() > 0.5, "dedup {:.2}", ta.dedup_rate());
+
+    let demand = {
+        let t = Arc::new(CostCache::new());
+        cfg.demand_rps(&t)
+    };
+    let warm_table = Arc::new(CostCache::new());
+    let warmed = evaluate_candidate(&cfg, &cand, cfg.requests, demand, &warm_table);
+
+    let mut bench = Bench::new("fig_pareto");
+    let cold_t = bench
+        .run("candidate eval, cold table (400 req, x2)", || {
+            let table = Arc::new(CostCache::new());
+            let p = evaluate_candidate(&cfg, &cand, cfg.requests, demand, &table);
+            black_box(p.p99);
+        })
+        .median;
+    let warm_t = bench
+        .run("candidate eval, warm table (400 req, x2)", || {
+            let p = evaluate_candidate(&cfg, &cand, cfg.requests, demand, &warm_table);
+            assert_eq!(p.p99, warmed.p99, "warm eval drifted");
+            black_box(p.p99);
+        })
+        .median;
+    let search_t = bench
+        .run("full halving search (16 candidates, 3 rungs)", || {
+            let (o, _) = run_search(&cfg, 2);
+            black_box(o.searched);
+        })
+        .median;
+    bench.finish();
+
+    let us = |d: std::time::Duration| d.as_secs_f64() * 1e6;
+    println!(
+        "shared table makes a re-evaluation {:.2}x cheaper than a cold one",
+        us(cold_t) / us(warm_t).max(1e-9)
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fig_pareto")),
+        ("space_candidates", Json::num(cfg.candidates().len() as f64)),
+        ("searched_points", Json::num(a.searched as f64)),
+        ("dedup_rate", Json::num(ta.dedup_rate())),
+        ("eval_cold_median_us", Json::num(us(cold_t))),
+        ("eval_warm_median_us", Json::num(us(warm_t))),
+        ("cache_speedup", Json::num(us(cold_t) / us(warm_t).max(1e-9))),
+        ("search_median_us", Json::num(us(search_t))),
+    ]);
+    let path = "BENCH_pareto.json";
+    std::fs::write(path, out.to_string()).expect("write bench artifact");
+    println!("wrote {path}");
+}

@@ -167,6 +167,23 @@ impl CompressedLatencyModel {
         self
     }
 
+    /// Swap in a replacement pricer — in practice a `Cached` decorator
+    /// over a grid-wide [`crate::perf::CostCache`] table, so many
+    /// variants (and search rungs) share one op-price store. The
+    /// replacement must price exactly like the variant's own backend;
+    /// fingerprint equality enforces that (a transparent `Cached`
+    /// wrapper inherits its inner pricer's fingerprint, so the
+    /// intended use passes by construction).
+    pub fn with_pricer(mut self, pricer: Arc<dyn CostModel>) -> CompressedLatencyModel {
+        assert_eq!(
+            pricer.fingerprint(),
+            self.pricer.fingerprint(),
+            "replacement pricer must match the variant's own backend"
+        );
+        self.pricer = pricer;
+        self
+    }
+
     /// Number of distinct `(batch, padded_seq)` shapes costed so far.
     pub fn cached_points(&self) -> usize {
         self.cache.len()

@@ -40,6 +40,7 @@ fn main() -> Result<()> {
         "decode" => alias(&args, "decode"),
         "fleet" => alias(&args, "fleet"),
         "compress" => alias(&args, "compress"),
+        "pareto" => alias(&args, "pareto"),
         "whatif" => alias(&args, "whatif"),
         "memory" => alias(&args, "memory"),
         // --------------------------------------------- runtime-backed ----
@@ -73,6 +74,7 @@ Legacy aliases (same registry entries):
   decode [--requests N] [--slots S,S] ...         SSDecode continuous-vs-FIFO grid
   fleet [--requests N] [--load F] ...             SSFleet routing/autoscaling grid
   compress [--requests N] [--device D] ...        SSCompress SLO what-if grid
+  pareto [--requests N] [--rungs R] ...           SSPareto compression x serving search
   whatif [--device D]                             SS5.2 hardware what-ifs
   memory [--hbm GB]                               SS5.2 capacity model
 

@@ -1,0 +1,150 @@
+//! Pareto-dominance primitives shared by every (cost, p99) frontier in
+//! the crate.
+//!
+//! PR 7's fleet sweep and the successive-halving search
+//! ([`super::pareto`]) both distill a grid of deployments into the set
+//! of points no other point beats on *both* cost-per-million-requests
+//! and tail latency. The predicate lives here exactly once — pure
+//! comparisons, no float arithmetic — so the two callers cannot drift,
+//! and the tie rule is explicit and tested rather than implied:
+//! **equal (cost, p99) points do not dominate each other, so duplicate
+//! optima all survive** (a frontier is a set of witnesses, and a tie is
+//! two witnesses, not one winner).
+//!
+//! Everything operates on `(f64, f64)` pairs ordered (cost, p99) — or
+//! any other "lower is better on both axes" pair — and returns
+//! *indices* in ascending input order, so callers keep their own
+//! report types and grid-deterministic label ordering.
+
+/// True when `a` Pareto-dominates `b`: no worse on either axis and
+/// strictly better on at least one. Equal points dominate in neither
+/// direction (the tie rule above).
+pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 <= b.0 && a.1 <= b.1 && (a.0 < b.0 || a.1 < b.1)
+}
+
+/// Indices of the non-dominated points, ascending — the first
+/// (rank-0) Pareto front.
+pub fn non_dominated(points: &[(f64, f64)]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| !points.iter().any(|&b| dominates(b, points[i])))
+        .collect()
+}
+
+/// Non-domination rank of every point: 0 for the Pareto front, 1 for
+/// the front of what remains once rank-0 is peeled away, and so on
+/// (the NSGA-style onion). Every point gets a rank; duplicates share
+/// one (neither dominates the other).
+pub fn front_ranks(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut ranks = vec![usize::MAX; points.len()];
+    let mut remaining: Vec<usize> = (0..points.len()).collect();
+    let mut rank = 0;
+    while !remaining.is_empty() {
+        let sub: Vec<(f64, f64)> = remaining.iter().map(|&i| points[i]).collect();
+        let front = non_dominated(&sub);
+        for &local in &front {
+            ranks[remaining[local]] = rank;
+        }
+        let in_front: std::collections::HashSet<usize> = front.into_iter().collect();
+        remaining = remaining
+            .into_iter()
+            .enumerate()
+            .filter(|(j, _)| !in_front.contains(j))
+            .map(|(_, g)| g)
+            .collect();
+        rank += 1;
+    }
+    ranks
+}
+
+/// The `keep` indices a successive-halving rung promotes: whole fronts
+/// first (rank order), and when a front overflows the remaining quota,
+/// its cheapest points — ties broken by (cost, p99, input index) so
+/// promotion is deterministic under any thread count. Returned
+/// ascending, preserving the caller's grid order for the next rung.
+pub fn promote(points: &[(f64, f64)], keep: usize) -> Vec<usize> {
+    let ranks = front_ranks(points);
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&i, &j| {
+        ranks[i]
+            .cmp(&ranks[j])
+            .then(points[i].0.total_cmp(&points[j].0))
+            .then(points[i].1.total_cmp(&points[j].1))
+            .then(i.cmp(&j))
+    });
+    order.truncate(keep.min(points.len()));
+    order.sort_unstable();
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domination_requires_one_strict_axis() {
+        assert!(dominates((1.0, 2.0), (1.0, 3.0)));
+        assert!(dominates((1.0, 2.0), (2.0, 2.0)));
+        assert!(dominates((1.0, 2.0), (2.0, 3.0)));
+        // Equal points tie: neither direction dominates.
+        assert!(!dominates((1.0, 2.0), (1.0, 2.0)));
+        // Trade-offs (better on one axis, worse on the other) tie too.
+        assert!(!dominates((1.0, 3.0), (2.0, 2.0)));
+        assert!(!dominates((2.0, 2.0), (1.0, 3.0)));
+    }
+
+    #[test]
+    fn non_dominated_keeps_duplicate_optima() {
+        // Two identical best points plus a strictly worse one: the tie
+        // rule keeps both witnesses.
+        let pts = [(1.0, 1.0), (1.0, 1.0), (2.0, 2.0)];
+        assert_eq!(non_dominated(&pts), vec![0, 1]);
+    }
+
+    #[test]
+    fn non_dominated_finds_the_staircase() {
+        let pts = [
+            (1.0, 9.0), // frontier: cheapest
+            (3.0, 4.0), // frontier: trade-off
+            (3.0, 5.0), // dominated by (3,4)
+            (9.0, 1.0), // frontier: fastest
+            (4.0, 4.0), // dominated by (3,4)
+        ];
+        assert_eq!(non_dominated(&pts), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn front_ranks_peel_like_an_onion() {
+        let pts = [
+            (1.0, 1.0), // rank 0
+            (2.0, 2.0), // rank 1
+            (3.0, 3.0), // rank 2
+            (1.0, 1.0), // rank 0 (duplicate of the optimum)
+        ];
+        assert_eq!(front_ranks(&pts), vec![0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn promote_takes_whole_fronts_then_cheapest() {
+        let pts = [
+            (5.0, 5.0), // rank 1
+            (1.0, 9.0), // rank 0
+            (9.0, 1.0), // rank 0
+            (6.0, 6.0), // rank 2
+        ];
+        // keep=2: exactly the rank-0 front, ascending.
+        assert_eq!(promote(&pts, 2), vec![1, 2]);
+        // keep=3: rank-0 plus the best rank-1 point.
+        assert_eq!(promote(&pts, 3), vec![0, 1, 2]);
+        // Overflowing keep clamps to the population.
+        assert_eq!(promote(&pts, 99), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn promote_breaks_front_overflow_by_cost() {
+        // One front of three trade-off points; quota of two keeps the
+        // two cheapest, not the first two by index.
+        let pts = [(9.0, 1.0), (1.0, 9.0), (5.0, 5.0)];
+        assert_eq!(promote(&pts, 2), vec![1, 2]);
+    }
+}

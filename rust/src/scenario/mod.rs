@@ -24,6 +24,8 @@
 //! artifact emission, and the shared memoization for free.
 
 pub mod exec;
+pub mod frontier;
+pub mod pareto;
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -349,6 +351,14 @@ pub fn registry() -> Vec<ScenarioSpec> {
             params: SWEEP_PARAMS_COMPRESS,
             default_out: Some("compress_sweep.json"),
             run: run_compress,
+        },
+        ScenarioSpec {
+            name: "pareto",
+            figure: "SSPareto",
+            title: "successive-halving Pareto search over compression x serving",
+            params: SWEEP_PARAMS_PARETO,
+            default_out: Some("pareto_search.json"),
+            run: run_pareto,
         },
     ]
 }
@@ -851,6 +861,24 @@ const SWEEP_PARAMS_COMPRESS: &[ParamSpec] = &[
     ParamSpec { key: "max-batch", default: "", help: "single max-batch point" },
     ParamSpec { key: "max-batches", default: "", help: "max-batch grid (8,32)" },
     ParamSpec { key: "seq-max", default: "", help: "request seq-len upper bound (128)" },
+    THREADS_PARAM,
+];
+
+const SWEEP_PARAMS_PARETO: &[ParamSpec] = &[
+    ParamSpec { key: "requests", default: "", help: "final-rung trace length (2000)" },
+    ParamSpec { key: "rungs", default: "", help: "successive-halving rung count (4)" },
+    ParamSpec { key: "seed", default: "", help: "workload RNG seed (42)" },
+    ParamSpec { key: "slo-ms", default: "", help: "latency SLO in milliseconds (100)" },
+    ParamSpec { key: "max-wait-ms", default: "", help: "co-batching timeout in ms (10)" },
+    ParamSpec {
+        key: "demand",
+        default: "",
+        help: "offered demand as a multiple of one dense-FP16 MI100 B8 replica's saturation (2)",
+    },
+    ParamSpec { key: "seq-max", default: "", help: "request seq-len upper bound (128)" },
+    ParamSpec { key: "max-batches", default: "", help: "max-batch axis (4,8,16,32)" },
+    ParamSpec { key: "replicas", default: "", help: "replica-count axis (1,2,4)" },
+    ParamSpec { key: "devices", default: "", help: "device-preset axis (mi100,a100,v100)" },
     THREADS_PARAM,
 ];
 
@@ -1363,6 +1391,155 @@ fn run_compress(p: &Params) -> Result<ScenarioOutput> {
     Ok(ScenarioOutput { text, artifact: compress::compress_json(&cfg, &reports) })
 }
 
+fn run_pareto(p: &Params) -> Result<ScenarioOutput> {
+    let mut cfg = pareto::ParetoSearchConfig::bert_large_default();
+    // Parsed inline (not via `parse_sweep_common`): the search's knobs
+    // are whole axes (batches/replicas/devices), and its load knob is a
+    // fixed external demand, not a fraction of each point's own
+    // saturation.
+    let opt_u64 = |key: &str| -> Result<Option<u64>> {
+        match p.get(key) {
+            "" => Ok(None),
+            _ => p.get_u64(key).map(Some),
+        }
+    };
+    let opt_f64 = |key: &str| -> Result<Option<f64>> {
+        match p.get(key) {
+            "" => Ok(None),
+            _ => p.get_f64(key).map(Some),
+        }
+    };
+    if let Some(v) = opt_u64("requests")? {
+        cfg.requests = v;
+    }
+    if let Some(v) = opt_u64("rungs")? {
+        if !(1..=16).contains(&v) {
+            bail!("--rungs must be in 1..=16, got {v}");
+        }
+        cfg.rungs = v;
+    }
+    if let Some(v) = opt_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = opt_f64("slo-ms")? {
+        cfg.slo = v / 1e3;
+    }
+    if let Some(v) = opt_f64("max-wait-ms")? {
+        cfg.max_wait = v / 1e3;
+    }
+    if let Some(v) = opt_f64("demand")? {
+        if !(v.is_finite() && v > 0.0) {
+            bail!("--demand must be a positive finite saturation multiple, got {v}");
+        }
+        cfg.demand = v;
+    }
+    if let Some(v) = opt_u64("seq-max")? {
+        cfg.seq_max = v;
+    }
+    if !p.get("max-batches").is_empty() {
+        cfg.max_batches = p.get_u64_list("max-batches")?;
+    }
+    if !p.get("replicas").is_empty() {
+        cfg.replicas = p.get_u64_list("replicas")?;
+    }
+    match p.get("devices") {
+        "" => {}
+        list => {
+            let mut devs = Vec::new();
+            for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                devs.push(parse_device(name)?);
+            }
+            if devs.is_empty() {
+                bail!("--devices needs at least one preset");
+            }
+            cfg.devices = devs;
+        }
+    }
+    let max_replicas = cfg.replicas.iter().copied().max().unwrap_or(1);
+    if cfg.rung_requests(0) < max_replicas {
+        bail!(
+            "rung 0 would hand some replica an empty trace: {} requests over {} rungs \
+             is {} at rung 0, below the largest replica count {}",
+            cfg.requests,
+            cfg.rungs,
+            cfg.rung_requests(0),
+            max_replicas
+        );
+    }
+    let (outcome, cost) = pareto::run_search(&cfg, p.threads()?);
+
+    let mut text = format!(
+        "## SSPareto — successive-halving Pareto search ({} candidates, {} rungs, \
+         final rung {} req, {} evaluations, demand {:.1}x reference = {:.0} req/s, \
+         SLO {:.0} ms, seed {})\n",
+        outcome.candidates,
+        cfg.rungs,
+        cfg.requests,
+        outcome.searched,
+        cfg.demand,
+        outcome.demand_rps,
+        cfg.slo * 1e3,
+        cfg.seed
+    );
+    let cols: &[(&str, usize)] =
+        &[("rung", 6), ("requests", 10), ("evaluated", 11), ("survivors", 11)];
+    let rows: Vec<Vec<String>> = outcome
+        .rungs
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.rung),
+                format!("{}", r.requests),
+                format!("{}", r.evaluated),
+                format!("{}", r.survivors),
+            ]
+        })
+        .collect();
+    text.push_str(&report::sweep_table("", cols, &rows));
+    text.push_str("\n## Final-rung Pareto frontier ($/Mreq vs p99)\n");
+    let fcols: &[(&str, usize)] =
+        &[("config", 30), ("p99(ms)", 9), ("SLO%", 7), ("thr/s", 9), ("$/Mreq", 9)];
+    let frows: Vec<Vec<String>> = outcome
+        .final_points
+        .iter()
+        .filter(|pt| outcome.frontier.iter().any(|l| l == &pt.label))
+        .map(|pt| {
+            vec![
+                pt.label.clone(),
+                format!("{:.1}", pt.p99 * 1e3),
+                format!("{:.1}%", pt.slo_attainment * 100.0),
+                format!("{:.1}", pt.throughput),
+                format!("{:.2}", pt.cost_per_m_requests),
+            ]
+        })
+        .collect();
+    text.push_str(&report::sweep_table("", fcols, &frows));
+    match outcome.cheapest {
+        Some(i) => {
+            let w = &outcome.final_points[i];
+            text.push_str(&format!(
+                "\ncheapest meeting the {:.0} ms SLO: {} — ${:.2}/Mreq at p99 {:.1} ms\n",
+                cfg.slo * 1e3,
+                w.label,
+                w.cost_per_m_requests,
+                w.p99 * 1e3
+            ));
+        }
+        None => text.push_str(&format!(
+            "\nno candidate meets the {:.0} ms SLO at this demand\n",
+            cfg.slo * 1e3
+        )),
+    }
+    text.push_str(&format!(
+        "cost-cache: {} op shapes priced across {} lookups \
+         ({:.1}% deduplicated)\n",
+        cost.len(),
+        cost.lookups(),
+        cost.dedup_rate() * 100.0
+    ));
+    Ok(ScenarioOutput { text, artifact: pareto::pareto_json(&cfg, &outcome, &cost) })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1376,7 +1553,7 @@ mod tests {
         let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
         for required in [
             "fig04", "fig05", "fig07", "fig08", "fig09", "fig10", "fig12", "fig13", "fig15",
-            "table3", "memory", "whatif", "serve", "decode", "fleet", "compress",
+            "table3", "memory", "whatif", "serve", "decode", "fleet", "compress", "pareto",
         ] {
             assert!(names.contains(&required), "{required} missing from registry");
         }
@@ -1451,6 +1628,7 @@ mod tests {
                 "decode" => assert_eq!(s.default_out, Some("decode_sweep.json")),
                 "fleet" => assert_eq!(s.default_out, Some("fleet_sweep.json")),
                 "compress" => assert_eq!(s.default_out, Some("compress_sweep.json")),
+                "pareto" => assert_eq!(s.default_out, Some("pareto_search.json")),
                 _ => assert_eq!(s.default_out, None, "{}", s.name),
             }
         }
@@ -1521,6 +1699,46 @@ mod tests {
         let direct = compress::compress_json(&cfg, &compress::run_sweep(&cfg, 2));
         assert_eq!(out.artifact.to_string(), direct.to_string());
         assert!(out.text.contains("First variant meeting"));
+    }
+
+    #[test]
+    fn pareto_scenario_matches_the_direct_search_artifact() {
+        // Tiny axes so the test stays fast; the full-default search is
+        // golden-gated at the reduced budget and CI-diffed.
+        let p = pairs(&[
+            ("requests", "200"),
+            ("rungs", "2"),
+            ("devices", "mi100"),
+            ("max-batches", "8"),
+            ("replicas", "1,2"),
+            ("threads", "2"),
+        ]);
+        let out = run_by_name("pareto", &p, true).unwrap();
+        let mut cfg = pareto::ParetoSearchConfig::bert_large_default();
+        cfg.requests = 200;
+        cfg.rungs = 2;
+        cfg.devices = vec![DeviceSpec::mi100()];
+        cfg.max_batches = vec![8];
+        cfg.replicas = vec![1, 2];
+        let (outcome, cost) = pareto::run_search(&cfg, 2);
+        let direct = pareto::pareto_json(&cfg, &outcome, &cost);
+        assert_eq!(out.artifact.to_string(), direct.to_string());
+        assert!(out.text.contains("cost-cache"));
+        assert!(out.text.contains("Pareto frontier"));
+        assert!(out.text.contains("survivors"));
+    }
+
+    #[test]
+    fn pareto_rejects_degenerate_budgets() {
+        let err = run_by_name("pareto", &pairs(&[("rungs", "0")]), true).unwrap_err();
+        assert!(err.to_string().contains("--rungs must be"), "{err}");
+        let err = run_by_name(
+            "pareto",
+            &pairs(&[("requests", "2"), ("rungs", "4")]),
+            true,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("empty trace"), "{err}");
     }
 
     #[test]

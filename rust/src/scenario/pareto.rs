@@ -1,0 +1,622 @@
+//! Successive-halving Pareto search over the compression × serving
+//! space (DESIGN.md SSPareto) — the first scenario that *composes*
+//! every prior subsystem instead of sweeping one of them.
+//!
+//! The paper's closing argument is that BERT-era serving wants
+//! *holistic* optimization: compute, memory, and precision traded off
+//! together. The sweeps built so far (`compress`, `serve`, `fleet`)
+//! each walk one axis and leave a human eyeballing tables for the
+//! cheapest deployment that still meets the latency SLO. This module
+//! automates that: a deterministic successive-halving search over
+//! {`compress::prune` spec × precision (FP32/FP16/W8/W8A8) × max-batch
+//! × device preset × replica count}, scoring every candidate on
+//! **(cost-per-million-requests, p99)** and promoting the
+//! non-dominated half each rung ([`super::frontier::promote`]).
+//!
+//! Mechanics, all deterministic under any thread count:
+//!
+//! - **One shared demand.** Unlike the equal-pressure sweeps (each
+//!   point offered a fraction of its *own* saturation), the search
+//!   fixes external demand: `demand ×` the saturation rate of one
+//!   reference replica (dense FP16, MI100, B8). Candidates then differ
+//!   honestly — an overloaded config busts its p99, an overprovisioned
+//!   one wastes dollars — which is what makes the frontier non-trivial.
+//! - **Replica fan-out.** A candidate with `k` replicas splits the one
+//!   seeded Poisson trace round-robin (request `i` → replica `i % k`),
+//!   simulates each replica independently through `serve::Simulator`,
+//!   and merges: percentiles over all completions, makespan = slowest
+//!   replica, dollars summed per replica at the device's hourly rate.
+//! - **Rungs.** Rung `r` of `R` replays the same seed at
+//!   `requests >> (R-1-r)` requests — a Poisson prefix of the final
+//!   trace — so early rungs are cheap, and halves the survivor set by
+//!   non-domination rank until the final rung runs the full budget.
+//! - **One price table.** Every candidate prices its pruned forward
+//!   graph through a [`Cached`] wrapper over one grid-wide
+//!   [`CostCache`] ([`CompressedLatencyModel::with_pricer`]), so later
+//!   rungs and replica-sharing candidates reuse earlier op prices; the
+//!   artifact reports the measured dedup rate (scheduling-independent,
+//!   unlike raw hit/miss splits).
+//!
+//! The artifact ends in a `cheapest_meeting_slo` verdict: the lowest
+//! cost-per-M-requests final-rung point with p99 ≤ SLO — the answer
+//! the ROADMAP item asked for. Golden-gated and mirrored line-by-line
+//! in `python/mirror/golden_mirror.py`.
+
+use std::sync::Arc;
+
+use crate::compress::quant::{self, CompressPrecision};
+use crate::compress::{CompressVariant, CompressedLatencyModel, PruneSpec};
+use crate::config::ModelConfig;
+use crate::perf::device::DeviceSpec;
+use crate::perf::{Cached, CostCache, CostModel};
+use crate::scenario::{exec, frontier};
+use crate::serve::sim::percentile;
+use crate::serve::{hourly_usd, BatchCost, BatchPolicy, Request, Simulator, Workload};
+use crate::util::Json;
+
+/// The search space plus workload/scoring parameters. The default is
+/// the full 576-candidate BERT-Large space; tests shrink the axes.
+#[derive(Debug, Clone)]
+pub struct ParetoSearchConfig {
+    /// Dense served-model hyperparameters (Table 2).
+    pub model: ModelConfig,
+    /// Device presets on the search's device axis.
+    pub devices: Vec<DeviceSpec>,
+    /// Structured-pruning axis.
+    pub prunes: Vec<PruneSpec>,
+    /// Precision/quantization axis.
+    pub precisions: Vec<CompressPrecision>,
+    /// Dynamic-batching `max_batch` axis.
+    pub max_batches: Vec<u64>,
+    /// Replica-count axis.
+    pub replicas: Vec<u64>,
+    /// Successive-halving rung count (>= 1).
+    pub rungs: u64,
+    /// Final-rung trace length; rung `r` replays the same seed at
+    /// `requests >> (rungs-1-r)` requests.
+    pub requests: u64,
+    /// Workload RNG seed (same seed → identical artifact).
+    pub seed: u64,
+    /// End-to-end latency SLO in seconds (the 100 ms question).
+    pub slo: f64,
+    /// Dynamic-batching co-batching timeout, seconds.
+    pub max_wait: f64,
+    /// Offered demand as a multiple of the reference replica's
+    /// saturation rate (dense FP16 on MI100 at B8/`seq_max`).
+    pub demand: f64,
+    /// Maximum request sequence length (requests draw uniformly from
+    /// `[seq_max/8, seq_max]`, like the dense serving sweep).
+    pub seq_max: u64,
+}
+
+impl ParetoSearchConfig {
+    /// The default search: BERT-Large over {dense, half-heads, half-FFN,
+    /// both} × {FP32, FP16, W8, W8A8} × B{4,8,16,32} × {MI100, A100,
+    /// V100} × {1, 2, 4} replicas — 576 candidates, 4 rungs, 2000
+    /// final-rung requests against 2× one reference replica's
+    /// saturation, scored against the paper's 100 ms SLO.
+    pub fn bert_large_default() -> ParetoSearchConfig {
+        let model = ModelConfig::bert_large();
+        ParetoSearchConfig {
+            model,
+            devices: vec![DeviceSpec::mi100(), DeviceSpec::a100(), DeviceSpec::v100()],
+            prunes: default_prunes(&model),
+            precisions: CompressPrecision::all().to_vec(),
+            max_batches: vec![4, 8, 16, 32],
+            replicas: vec![1, 2, 4],
+            rungs: 4,
+            requests: 2000,
+            seed: 42,
+            slo: 0.100,
+            max_wait: 0.010,
+            demand: 2.0,
+            seq_max: 128,
+        }
+    }
+
+    /// The candidate grid in deterministic order: device outermost,
+    /// then prune, precision, max-batch, replicas. Promotion and the
+    /// artifact preserve this order end to end.
+    pub fn candidates(&self) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for dev in &self.devices {
+            for prune in &self.prunes {
+                for &precision in &self.precisions {
+                    for &max_batch in &self.max_batches {
+                        for &replicas in &self.replicas {
+                            out.push(Candidate {
+                                device: dev.clone(),
+                                prune: *prune,
+                                precision,
+                                max_batch,
+                                replicas,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Trace length at rung `r` (0-based): the final budget halved once
+    /// per remaining rung, never below one request.
+    pub fn rung_requests(&self, r: u64) -> u64 {
+        let shift = (self.rungs - 1 - r).min(63);
+        (self.requests >> shift).max(1)
+    }
+
+    /// The fixed external demand in requests/second: `demand ×` the
+    /// saturation rate of one dense-FP16 MI100 replica batching at 8.
+    /// Priced through the shared table so the reference shapes join the
+    /// grid's op-price store.
+    pub fn demand_rps(&self, table: &Arc<CostCache>) -> f64 {
+        let reference = CompressVariant::dense(&self.model, CompressPrecision::Mixed);
+        let dev = DeviceSpec::mi100();
+        let pricer = shared_pricer(CompressPrecision::Mixed, &dev, table);
+        let mut lm =
+            CompressedLatencyModel::new(self.model, &reference, dev).with_pricer(pricer);
+        self.demand * lm.saturation_rate(8, self.seq_max)
+    }
+}
+
+/// The default pruning axis: dense, half the heads, half the FFN, and
+/// both — the structured variants the compress sweep's golden story
+/// already characterizes.
+pub fn default_prunes(model: &ModelConfig) -> Vec<PruneSpec> {
+    vec![
+        PruneSpec::dense(model),
+        PruneSpec::dense(model).keep_heads(model.n_heads / 2),
+        PruneSpec::dense(model).keep_ff(model.d_ff / 2),
+        PruneSpec::dense(model)
+            .keep_heads(model.n_heads / 2)
+            .keep_ff(model.d_ff / 2),
+    ]
+}
+
+/// One point of the search space.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub device: DeviceSpec,
+    pub prune: PruneSpec,
+    pub precision: CompressPrecision,
+    pub max_batch: u64,
+    pub replicas: u64,
+}
+
+impl Candidate {
+    /// Stable display label, e.g. `"MI100 h8-ff2048-L24 W8A8 B8 x2"`.
+    pub fn label(&self, model: &ModelConfig) -> String {
+        format!(
+            "{} {} {} B{} x{}",
+            self.device.name,
+            self.prune.label(model),
+            self.precision.label(),
+            self.max_batch,
+            self.replicas
+        )
+    }
+}
+
+/// A scored candidate: the merged multi-replica serving metrics the
+/// frontier ranks on, plus enough identity to render the artifact row.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub label: String,
+    pub device: String,
+    pub prune: String,
+    pub precision: &'static str,
+    pub max_batch: u64,
+    pub replicas: u64,
+    /// Median end-to-end latency over all replicas' completions, s.
+    pub p50: f64,
+    /// 99th-percentile latency — the frontier's latency axis, s.
+    pub p99: f64,
+    /// Fraction of requests finishing within the SLO.
+    pub slo_attainment: f64,
+    /// Requests per second over the merged makespan.
+    pub throughput: f64,
+    /// Slowest replica's makespan, seconds.
+    pub makespan: f64,
+    /// Dollars billed: each replica's makespan at its device rate.
+    pub cost_usd: f64,
+    /// The frontier's cost axis.
+    pub cost_per_m_requests: f64,
+}
+
+/// One rung's bookkeeping for the artifact.
+#[derive(Debug, Clone)]
+pub struct RungSummary {
+    pub rung: u64,
+    pub requests: u64,
+    pub evaluated: u64,
+    pub survivors: u64,
+}
+
+/// Everything the search produced, artifact-ready.
+#[derive(Debug, Clone)]
+pub struct ParetoOutcome {
+    /// Per-rung evaluation/survivor counts in rung order.
+    pub rungs: Vec<RungSummary>,
+    /// Final-rung evaluations in candidate-grid order.
+    pub final_points: Vec<ParetoPoint>,
+    /// Labels of the final non-dominated set, grid order.
+    pub frontier: Vec<String>,
+    /// Index into `final_points` of the cheapest point with p99 ≤ SLO
+    /// (first in grid order on cost ties); `None` when nothing meets it.
+    pub cheapest: Option<usize>,
+    /// Candidate evaluations across all rungs.
+    pub searched: u64,
+    /// The grid size (rung-0 population).
+    pub candidates: u64,
+    /// The fixed offered demand, requests/second.
+    pub demand_rps: f64,
+}
+
+fn shared_pricer(
+    cp: CompressPrecision,
+    dev: &DeviceSpec,
+    table: &Arc<CostCache>,
+) -> Arc<dyn CostModel> {
+    Arc::new(Cached::with_table(quant::pricer(cp, dev), Arc::clone(table)))
+}
+
+/// Score one candidate at `requests` trace length: split the seeded
+/// trace round-robin over its replicas, simulate each replica, merge.
+pub fn evaluate_candidate(
+    cfg: &ParetoSearchConfig,
+    cand: &Candidate,
+    requests: u64,
+    demand_rps: f64,
+    table: &Arc<CostCache>,
+) -> ParetoPoint {
+    let label = cand.label(&cfg.model);
+    let variant = CompressVariant::new(&label, cand.prune, cand.precision);
+    let pricer = shared_pricer(cand.precision, &cand.device, table);
+    let mut lm = CompressedLatencyModel::new(cfg.model, &variant, cand.device.clone())
+        .with_pricer(pricer);
+    let trace = Workload::poisson(demand_rps, requests, cfg.seed)
+        .with_seq_range((cfg.seq_max / 8).max(1), cfg.seq_max)
+        .generate();
+    let sim = Simulator::new(BatchPolicy::new(cand.max_batch, cfg.max_wait), cfg.slo);
+    let k = cand.replicas.max(1);
+    let rate = hourly_usd(&cand.device.name);
+    let mut latencies: Vec<f64> = Vec::with_capacity(trace.len());
+    let mut makespan = 0.0_f64;
+    let mut cost_usd = 0.0_f64;
+    for rep in 0..k {
+        let sub: Vec<Request> = trace
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i as u64 % k == rep)
+            .map(|(_, q)| q.clone())
+            .collect();
+        let out = sim.run(&label, &sub, &mut lm);
+        for c in &out.completions {
+            latencies.push(c.done - c.arrival);
+        }
+        makespan = makespan.max(out.report.makespan);
+        cost_usd += out.report.makespan * rate / 3600.0;
+    }
+    let n = latencies.len() as f64;
+    let mut sorted = latencies;
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let within = sorted.iter().filter(|&&x| x <= cfg.slo).count();
+    ParetoPoint {
+        label,
+        device: cand.device.name.clone(),
+        prune: cand.prune.label(&cfg.model),
+        precision: cand.precision.label(),
+        max_batch: cand.max_batch,
+        replicas: cand.replicas,
+        p50: percentile(&sorted, 0.50),
+        p99: percentile(&sorted, 0.99),
+        slo_attainment: within as f64 / n,
+        throughput: n / makespan,
+        makespan,
+        cost_usd,
+        cost_per_m_requests: cost_usd / n * 1e6,
+    }
+}
+
+/// Run the successive-halving search, returning the outcome plus the
+/// grid-wide price table (for the artifact's cache stats).
+pub fn run_search(
+    cfg: &ParetoSearchConfig,
+    threads: usize,
+) -> (ParetoOutcome, Arc<CostCache>) {
+    assert!(cfg.rungs >= 1, "at least one rung");
+    let table = Arc::new(CostCache::new());
+    let demand_rps = cfg.demand_rps(&table);
+    let cands = cfg.candidates();
+    let mut survivors: Vec<usize> = (0..cands.len()).collect();
+    let mut rungs = Vec::new();
+    let mut searched = 0_u64;
+    let mut results: Vec<ParetoPoint> = Vec::new();
+    for r in 0..cfg.rungs {
+        let n_r = cfg.rung_requests(r);
+        let grid: Vec<Candidate> = survivors.iter().map(|&i| cands[i].clone()).collect();
+        results = exec::run_grid(&grid, threads, |cand| {
+            evaluate_candidate(cfg, cand, n_r, demand_rps, &table)
+        });
+        searched += grid.len() as u64;
+        let survivor_count = if r + 1 < cfg.rungs {
+            let points: Vec<(f64, f64)> =
+                results.iter().map(|p| (p.cost_per_m_requests, p.p99)).collect();
+            let keep = (survivors.len() + 1) / 2;
+            let promoted = frontier::promote(&points, keep);
+            survivors = promoted.iter().map(|&j| survivors[j]).collect();
+            survivors.len()
+        } else {
+            survivors.len()
+        };
+        rungs.push(RungSummary {
+            rung: r,
+            requests: n_r,
+            evaluated: grid.len() as u64,
+            survivors: survivor_count as u64,
+        });
+    }
+    let (frontier_labels, cheapest) = distill(cfg, &results);
+    let outcome = ParetoOutcome {
+        rungs,
+        final_points: results,
+        frontier: frontier_labels,
+        cheapest,
+        searched,
+        candidates: cands.len() as u64,
+        demand_rps,
+    };
+    (outcome, table)
+}
+
+/// Brute force for tests: every candidate at the full final budget,
+/// grid order, same shared table semantics as the search.
+pub fn run_full_grid(
+    cfg: &ParetoSearchConfig,
+    threads: usize,
+) -> (Vec<ParetoPoint>, Arc<CostCache>) {
+    let table = Arc::new(CostCache::new());
+    let demand_rps = cfg.demand_rps(&table);
+    let cands = cfg.candidates();
+    let results = exec::run_grid(&cands, threads, |cand| {
+        evaluate_candidate(cfg, cand, cfg.requests, demand_rps, &table)
+    });
+    (results, table)
+}
+
+/// Frontier labels (grid order) and the cheapest-meeting-SLO index of
+/// a scored set — shared by the search and the brute-force tests.
+pub fn distill(cfg: &ParetoSearchConfig, points: &[ParetoPoint]) -> (Vec<String>, Option<usize>) {
+    let pairs: Vec<(f64, f64)> =
+        points.iter().map(|p| (p.cost_per_m_requests, p.p99)).collect();
+    let labels = frontier::non_dominated(&pairs)
+        .into_iter()
+        .map(|i| points[i].label.clone())
+        .collect();
+    let mut cheapest: Option<usize> = None;
+    for (i, p) in points.iter().enumerate() {
+        if p.p99 <= cfg.slo
+            && cheapest.map_or(true, |c| p.cost_per_m_requests < points[c].cost_per_m_requests)
+        {
+            cheapest = Some(i);
+        }
+    }
+    (labels, cheapest)
+}
+
+fn point_json(p: &ParetoPoint) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(p.label.clone())),
+        ("device", Json::str(p.device.clone())),
+        ("prune", Json::str(p.prune.clone())),
+        ("precision", Json::str(p.precision)),
+        ("max_batch", Json::num(p.max_batch as f64)),
+        ("replicas", Json::num(p.replicas as f64)),
+        ("p50_ms", Json::num(p.p50 * 1e3)),
+        ("p99_ms", Json::num(p.p99 * 1e3)),
+        ("slo_attainment", Json::num(p.slo_attainment)),
+        ("throughput_rps", Json::num(p.throughput)),
+        ("makespan_s", Json::num(p.makespan)),
+        ("cost_usd", Json::num(p.cost_usd)),
+        ("cost_per_m_requests", Json::num(p.cost_per_m_requests)),
+    ])
+}
+
+/// The whole search as one seed-deterministic JSON artifact.
+pub fn pareto_json(
+    cfg: &ParetoSearchConfig,
+    outcome: &ParetoOutcome,
+    cost: &CostCache,
+) -> Json {
+    let m = &cfg.model;
+    Json::obj(vec![
+        ("study", Json::str("pareto_search")),
+        (
+            "model",
+            Json::obj(vec![
+                ("d_model", Json::num(m.d_model as f64)),
+                ("n_layers", Json::num(m.n_layers as f64)),
+                ("n_heads", Json::num(m.n_heads as f64)),
+                ("d_ff", Json::num(m.d_ff as f64)),
+                ("vocab", Json::num(m.vocab as f64)),
+            ]),
+        ),
+        ("requests", Json::num(cfg.requests as f64)),
+        ("seed", Json::str(cfg.seed.to_string())),
+        ("slo_ms", Json::num(cfg.slo * 1e3)),
+        ("max_wait_ms", Json::num(cfg.max_wait * 1e3)),
+        ("demand", Json::num(cfg.demand)),
+        ("demand_rps", Json::num(outcome.demand_rps)),
+        ("seq_max", Json::num(cfg.seq_max as f64)),
+        (
+            "space",
+            Json::obj(vec![
+                (
+                    "devices",
+                    Json::arr(
+                        cfg.devices.iter().map(|d| Json::str(d.name.clone())).collect(),
+                    ),
+                ),
+                (
+                    "prunes",
+                    Json::arr(
+                        cfg.prunes.iter().map(|p| Json::str(p.label(m))).collect(),
+                    ),
+                ),
+                (
+                    "precisions",
+                    Json::arr(
+                        cfg.precisions.iter().map(|p| Json::str(p.label())).collect(),
+                    ),
+                ),
+                (
+                    "max_batches",
+                    Json::arr(
+                        cfg.max_batches.iter().map(|&b| Json::num(b as f64)).collect(),
+                    ),
+                ),
+                (
+                    "replicas",
+                    Json::arr(
+                        cfg.replicas.iter().map(|&k| Json::num(k as f64)).collect(),
+                    ),
+                ),
+                ("candidates", Json::num(outcome.candidates as f64)),
+            ]),
+        ),
+        ("searched", Json::num(outcome.searched as f64)),
+        (
+            "rungs",
+            Json::arr(
+                outcome
+                    .rungs
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("rung", Json::num(r.rung as f64)),
+                            ("requests", Json::num(r.requests as f64)),
+                            ("evaluated", Json::num(r.evaluated as f64)),
+                            ("survivors", Json::num(r.survivors as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "cost_cache",
+            Json::obj(vec![
+                ("op_shapes", Json::num(cost.len() as f64)),
+                ("lookups", Json::num(cost.lookups() as f64)),
+                ("hit_rate", Json::num(cost.dedup_rate())),
+            ]),
+        ),
+        (
+            "final",
+            Json::arr(outcome.final_points.iter().map(point_json).collect()),
+        ),
+        (
+            "frontier",
+            Json::arr(outcome.frontier.iter().map(|s| Json::str(s.clone())).collect()),
+        ),
+        (
+            "cheapest_meeting_slo",
+            match outcome.cheapest {
+                Some(i) => point_json(&outcome.final_points[i]),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ParetoSearchConfig {
+        let model = ModelConfig::bert_large();
+        ParetoSearchConfig {
+            model,
+            devices: vec![DeviceSpec::mi100()],
+            prunes: vec![
+                PruneSpec::dense(&model),
+                PruneSpec::dense(&model)
+                    .keep_heads(model.n_heads / 2)
+                    .keep_ff(model.d_ff / 2),
+            ],
+            precisions: vec![CompressPrecision::Fp32, CompressPrecision::Int8Full],
+            max_batches: vec![8],
+            replicas: vec![1, 2],
+            rungs: 2,
+            requests: 200,
+            seed: 42,
+            slo: 0.100,
+            max_wait: 0.010,
+            demand: 2.0,
+            seq_max: 128,
+        }
+    }
+
+    #[test]
+    fn grid_order_is_device_prune_precision_batch_replicas() {
+        let cfg = tiny();
+        let cands = cfg.candidates();
+        assert_eq!(cands.len(), 8);
+        let labels: Vec<String> = cands.iter().map(|c| c.label(&cfg.model)).collect();
+        assert_eq!(labels[0], "MI100 dense FP32 B8 x1");
+        assert_eq!(labels[1], "MI100 dense FP32 B8 x2");
+        assert_eq!(labels[2], "MI100 dense W8A8 B8 x1");
+        assert_eq!(labels[7], "MI100 h8-ff2048-L24 W8A8 B8 x2");
+    }
+
+    #[test]
+    fn rung_requests_double_toward_the_final_budget() {
+        let cfg = tiny();
+        assert_eq!(cfg.rung_requests(0), 100);
+        assert_eq!(cfg.rung_requests(1), 200);
+    }
+
+    #[test]
+    fn replica_split_conserves_requests_and_spends_more() {
+        let cfg = tiny();
+        let table = Arc::new(CostCache::new());
+        let demand = cfg.demand_rps(&table);
+        let one = Candidate {
+            device: DeviceSpec::mi100(),
+            prune: PruneSpec::dense(&cfg.model),
+            precision: CompressPrecision::Int8Full,
+            max_batch: 8,
+            replicas: 1,
+        };
+        let two = Candidate { replicas: 2, ..one.clone() };
+        let p1 = evaluate_candidate(&cfg, &one, 200, demand, &table);
+        let p2 = evaluate_candidate(&cfg, &two, 200, demand, &table);
+        // Same total requests priced either way.
+        assert!((p1.slo_attainment * 200.0).round() >= 0.0);
+        // Two replicas split the load: tail latency can only improve,
+        // dollars can only grow (two machines billed in parallel).
+        assert!(p2.p99 <= p1.p99 + 1e-12);
+        assert!(p2.cost_usd > p1.cost_usd * 0.99);
+    }
+
+    #[test]
+    fn search_is_deterministic_across_thread_counts() {
+        let cfg = tiny();
+        let (a, ta) = run_search(&cfg, 1);
+        let (b, tb) = run_search(&cfg, 3);
+        assert_eq!(
+            pareto_json(&cfg, &a, &ta).to_string(),
+            pareto_json(&cfg, &b, &tb).to_string()
+        );
+    }
+
+    #[test]
+    fn shared_table_dedups_across_rungs_and_replicas() {
+        let cfg = tiny();
+        let (_, table) = run_search(&cfg, 2);
+        assert!(table.lookups() > 0);
+        // Rung 1 re-prices rung-0 shapes and the replica axis reuses
+        // whole models, so well over half the lookups dedup away.
+        assert!(table.dedup_rate() > 0.5, "dedup {}", table.dedup_rate());
+    }
+}

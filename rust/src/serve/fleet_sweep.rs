@@ -368,19 +368,16 @@ pub fn fleet_report_json(r: &FleetReport, pool: &str, arrival: &str) -> Json {
 
 /// The grid-order labels of the points no other point beats on *both*
 /// cost-per-million-requests and p99 — the artifact's headline
-/// frontier.
+/// frontier. Dominance (including the equal-points-both-survive tie
+/// rule) lives in [`crate::scenario::frontier`], shared with the
+/// successive-halving search.
 fn pareto_frontier(reports: &[FleetReport]) -> Vec<Json> {
-    let dominated = |i: usize| {
-        reports.iter().enumerate().any(|(j, b)| {
-            let a = &reports[i];
-            j != i
-                && b.cost_per_m_requests <= a.cost_per_m_requests
-                && b.sim.p99 <= a.sim.p99
-                && (b.cost_per_m_requests < a.cost_per_m_requests || b.sim.p99 < a.sim.p99)
-        })
-    };
-    (0..reports.len())
-        .filter(|&i| !dominated(i))
+    let points: Vec<(f64, f64)> = reports
+        .iter()
+        .map(|r| (r.cost_per_m_requests, r.sim.p99))
+        .collect();
+    crate::scenario::frontier::non_dominated(&points)
+        .into_iter()
         .map(|i| Json::str(reports[i].sim.label.clone()))
         .collect()
 }

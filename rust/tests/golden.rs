@@ -256,6 +256,56 @@ fn golden_compress_sweep() {
     check("compress_sweep", compress::compress_json(&cfg, &reports));
 }
 
+/// The reduced successive-halving budget the snapshot pins: the full
+/// 576-candidate default space, 3 rungs, 480 final-rung requests —
+/// search mechanics, shared-cache stats, frontier, and the
+/// cheapest-meeting-SLO verdict all ride inside the snapshot.
+fn pareto_golden_cfg() -> bertprof::scenario::pareto::ParetoSearchConfig {
+    let mut cfg = bertprof::scenario::pareto::ParetoSearchConfig::bert_large_default();
+    cfg.requests = 480;
+    cfg.rungs = 3;
+    cfg
+}
+
+#[test]
+fn golden_pareto_search() {
+    let cfg = pareto_golden_cfg();
+    let (outcome, cost) = bertprof::scenario::pareto::run_search(&cfg, 2);
+    let artifact = bertprof::scenario::pareto::pareto_json(&cfg, &outcome, &cost);
+    // The ISSUE acceptance shape rides inside the snapshot: a
+    // >200-candidate space, a shared-cache hit rate above one half,
+    // and a verdict that actually meets the SLO.
+    assert!(outcome.candidates >= 200, "space too small: {}", outcome.candidates);
+    assert!(
+        cost.dedup_rate() > 0.5,
+        "cache hit rate {:.2} under the acceptance bar",
+        cost.dedup_rate()
+    );
+    let verdict = artifact.get("cheapest_meeting_slo").expect("verdict key");
+    assert!(
+        !matches!(verdict, Json::Null),
+        "something must meet the 100 ms SLO on the default space"
+    );
+    check("pareto_search", artifact);
+}
+
+#[test]
+fn golden_pareto_matches_the_registry_path() {
+    // `bertprof run pareto --set requests=480 --set rungs=3` emits
+    // exactly the golden-gated artifact (the CI scenario-artifacts row).
+    let out = bertprof::scenario::run_by_name(
+        "pareto",
+        &[
+            ("requests".into(), "480".into()),
+            ("rungs".into(), "3".into()),
+            ("threads".into(), "2".into()),
+        ],
+        true,
+    )
+    .expect("pareto runs");
+    check("pareto_search", out.artifact);
+}
+
 #[test]
 fn golden_artifacts_are_run_to_run_stable() {
     // The "two consecutive runs" acceptance shape, in-process: every

@@ -1,0 +1,156 @@
+//! The successive-halving search against ground truth: frontier and
+//! verdict correctness versus a brute-force full-grid sweep on a small
+//! space, monotone rung shrinkage, artifact determinism across seeds
+//! and thread counts, and the compress-sweep golden story (pruned
+//! h8/ff2048 + W8A8 meets the 100 ms SLO where dense FP32 busts it).
+
+use bertprof::compress::{CompressPrecision, PruneSpec};
+use bertprof::config::ModelConfig;
+use bertprof::perf::device::DeviceSpec;
+use bertprof::scenario::pareto::{
+    pareto_json, run_full_grid, run_search, ParetoSearchConfig,
+};
+
+/// A 16-candidate space small enough to brute-force: one device, the
+/// dense and fully-pruned variants, the precision extremes, two batch
+/// points, two replica counts.
+fn small_space() -> ParetoSearchConfig {
+    let model = ModelConfig::bert_large();
+    ParetoSearchConfig {
+        model,
+        devices: vec![DeviceSpec::mi100()],
+        prunes: vec![
+            PruneSpec::dense(&model),
+            PruneSpec::dense(&model)
+                .keep_heads(model.n_heads / 2)
+                .keep_ff(model.d_ff / 2),
+        ],
+        precisions: vec![CompressPrecision::Fp32, CompressPrecision::Int8Full],
+        max_batches: vec![8, 32],
+        replicas: vec![1, 2],
+        rungs: 3,
+        requests: 400,
+        seed: 42,
+        slo: 0.100,
+        max_wait: 0.010,
+        demand: 2.0,
+        seq_max: 128,
+    }
+}
+
+#[test]
+fn search_verdict_matches_the_brute_force_frontier() {
+    let cfg = small_space();
+    let (outcome, _) = run_search(&cfg, 2);
+    let (grid, _) = run_full_grid(&cfg, 2);
+    let (brute_frontier, brute_cheapest) =
+        bertprof::scenario::pareto::distill(&cfg, &grid);
+
+    // The headline acceptance: the search's cheapest-meeting-SLO
+    // verdict is exactly what exhaustive evaluation finds.
+    let search_label = outcome.cheapest.map(|i| outcome.final_points[i].label.clone());
+    let brute_label = brute_cheapest.map(|i| grid[i].label.clone());
+    assert_eq!(search_label, brute_label);
+    assert!(search_label.is_some(), "something must meet the SLO on this space");
+
+    // Every frontier point the search reports is on the true frontier:
+    // final-rung scores equal full-grid scores (same seed, same
+    // budget), so survivors on the search frontier must reappear in
+    // the brute-force frontier.
+    for label in &outcome.frontier {
+        assert!(
+            brute_frontier.contains(label),
+            "search frontier point {label} is not on the brute-force frontier \
+             {brute_frontier:?}"
+        );
+    }
+}
+
+#[test]
+fn rung_shrinkage_is_monotone_halving() {
+    let cfg = small_space();
+    let (outcome, _) = run_search(&cfg, 2);
+    assert_eq!(outcome.rungs.len(), 3);
+    assert_eq!(outcome.candidates, 16);
+    let mut expected = 16u64;
+    let mut requests = cfg.requests >> (cfg.rungs - 1);
+    for (i, r) in outcome.rungs.iter().enumerate() {
+        assert_eq!(r.rung, i as u64);
+        assert_eq!(r.evaluated, expected, "rung {i} population");
+        assert_eq!(r.requests, requests, "rung {i} budget");
+        if i + 1 < outcome.rungs.len() {
+            let keep = (expected + 1) / 2;
+            assert_eq!(r.survivors, keep, "rung {i} promotion is ceil(half)");
+            expected = keep;
+        } else {
+            assert_eq!(r.survivors, r.evaluated, "final rung keeps its field");
+        }
+        requests *= 2;
+    }
+    assert_eq!(outcome.searched, 16 + 8 + 4);
+    assert_eq!(outcome.final_points.len(), 4);
+}
+
+#[test]
+fn artifact_is_deterministic_across_thread_counts_and_sensitive_to_seed() {
+    let cfg = small_space();
+    let (o1, t1) = run_search(&cfg, 1);
+    let (o4, t4) = run_search(&cfg, 4);
+    let a1 = pareto_json(&cfg, &o1, &t1).to_string();
+    let a4 = pareto_json(&cfg, &o4, &t4).to_string();
+    assert_eq!(a1, a4, "thread count must not leak into the artifact");
+
+    let mut reseeded = small_space();
+    reseeded.seed = 7;
+    let (o7, t7) = run_search(&reseeded, 2);
+    assert_ne!(
+        a1,
+        pareto_json(&reseeded, &o7, &t7).to_string(),
+        "a different seed must draw a different trace"
+    );
+}
+
+#[test]
+fn compression_story_dense_fp32_busts_where_pruned_w8a8_meets() {
+    let cfg = small_space();
+    let (grid, _) = run_full_grid(&cfg, 2);
+    let fp32: Vec<_> = grid
+        .iter()
+        .filter(|p| p.precision == "FP32" && p.prune == "dense")
+        .collect();
+    let pruned8: Vec<_> = grid
+        .iter()
+        .filter(|p| p.precision == "W8A8" && p.prune != "dense")
+        .collect();
+    assert!(!fp32.is_empty() && !pruned8.is_empty());
+    // The compress-sweep golden story under fixed 2x-reference demand:
+    // every dense-FP32 deployment on this space busts the 100 ms SLO...
+    for p in &fp32 {
+        assert!(
+            p.p99 > cfg.slo,
+            "{} should bust the SLO (p99 {:.1} ms)",
+            p.label,
+            p.p99 * 1e3
+        );
+    }
+    // ...while the pruned W8A8 variant meets it somewhere, and the
+    // cheapest qualifying config is one of those compressed points.
+    assert!(
+        pruned8.iter().any(|p| p.p99 <= cfg.slo),
+        "pruned W8A8 should meet the SLO somewhere"
+    );
+    let (_, cheapest) = bertprof::scenario::pareto::distill(&cfg, &grid);
+    let winner = &grid[cheapest.expect("a qualifying point exists")];
+    assert_eq!(winner.precision, "W8A8", "winner: {}", winner.label);
+}
+
+#[test]
+fn shared_cache_hit_rate_clears_the_acceptance_bar() {
+    let cfg = small_space();
+    let (_, table) = run_search(&cfg, 2);
+    assert!(
+        table.dedup_rate() > 0.5,
+        "replica reuse + rung re-pricing should dedup most lookups, got {:.2}",
+        table.dedup_rate()
+    );
+}
