@@ -1,7 +1,7 @@
 # bertprof build drivers. The HLO half of `make artifacts` is the only
 # step that needs python (JAX); everything else is cargo.
 
-.PHONY: build test bench doc artifacts bench-costmodel bench-decode bench-fleet bench-pareto clean-artifacts
+.PHONY: build test bench doc artifacts bench-costmodel bench-decode bench-fleet bench-pareto bench-gridscale clean-artifacts
 
 build:
 	cargo build --release
@@ -57,11 +57,20 @@ bench-pareto:
 	$(call require_cargo,bench-pareto,BENCH_pareto.json)
 	cargo bench --bench fig_pareto
 
+# The gridscale bench data point (DESIGN.md SSGridScale): sharded vs
+# single-lock cost cache and chunked vs cell-stride claiming at
+# 1/2/4/8 threads over the 20k-cell synthetic grid, written to
+# BENCH_gridscale.json (replacing the mirror's committed estimate —
+# python/mirror/bench_gridscale_estimate.py — with measured medians).
+bench-gridscale:
+	$(call require_cargo,bench-gridscale,BENCH_gridscale.json)
+	cargo bench --bench fig_gridscale
+
 # Lower every HLO artifact + manifest.json (DESIGN.md SS2; run from
 # python/ so aot.py's relative imports and default --out resolve) and
-# record the cost-model + decode + fleet + pareto bench trajectory
-# points.
-artifacts: bench-costmodel bench-decode bench-fleet bench-pareto
+# record the cost-model + decode + fleet + pareto + gridscale bench
+# trajectory points.
+artifacts: bench-costmodel bench-decode bench-fleet bench-pareto bench-gridscale
 	cd python && python3 -m compile.aot --out ../artifacts
 
 clean-artifacts:

@@ -16,6 +16,10 @@ import sys
 
 REL_TOL = 1e-3
 ABS_TOL = 1e-9
+# Wall-clock measurement block (the gridscale artifact's per-stage
+# timings): volatile by construction, skipped in recursion and in both
+# missing-key directions — same contract as rust/tests/common.
+VOLATILE_KEY = "timing"
 
 
 def diff(path, want, got, errs):
@@ -40,13 +44,13 @@ def diff(path, want, got, errs):
             diff(f"{path}[{i}]", x, y, errs)
     elif isinstance(want, dict) and isinstance(got, dict):
         for k in want:
-            if k not in got:
+            if k != VOLATILE_KEY and k not in got:
                 errs.append(f"{path}.{k}: missing from computed artifact")
         for k in got:
-            if k not in want:
+            if k != VOLATILE_KEY and k not in want:
                 errs.append(f"{path}.{k}: not in golden snapshot")
         for k in want:
-            if k in got:
+            if k != VOLATILE_KEY and k in got:
                 diff(f"{path}.{k}", want[k], got[k], errs)
     else:
         errs.append(f"{path}: type mismatch ({want!r} vs {got!r})")

@@ -1,0 +1,141 @@
+//! The gridscale bench: does the scaled engine actually scale?
+//!
+//! Two head-to-heads on the SSGridScale harness workload (DESIGN.md),
+//! each at 1/2/4/8 worker threads over the same synthetic grid:
+//!
+//! 1. **Sharded vs single-lock cost cache** — the same chunked
+//!    executor pricing the grid through `CostCache::for_threads(t)`
+//!    (striped) versus `CostCache::with_shards(1)` (the pre-PR
+//!    one-big-mutex layout).
+//! 2. **Chunked vs cell-stride claiming** — the same sharded cache
+//!    driven by `exec::run_grid` (contiguous chunk claims) versus
+//!    `exec::run_grid_cell_stride` (the pre-PR one-cell-per-cursor-bump
+//!    loop with per-slot locks).
+//!
+//! Correctness asserts (thread-count determinism, sharded == single-
+//! lock results, chunked == stride results) run before any timing.
+//! Results land in `BENCH_gridscale.json` (wired into `make
+//! artifacts`); when cargo is unavailable the committed file is the
+//! mirror's estimate and says so via `"estimated": true` — this bench
+//! overwrites it with measured numbers.
+
+use std::sync::Arc;
+
+use bertprof::model::{GraphIntern, GraphKey, IterationGraph};
+use bertprof::perf::{Cached, CostCache, CostModel, RooflinePricer};
+use bertprof::scenario::exec;
+use bertprof::scenario::gridscale::{grid_cells, run_gridscale, GridCell, GridScaleConfig};
+use bertprof::serve::graph::inference_run;
+use bertprof::util::bench::{black_box, Bench};
+use bertprof::util::Json;
+
+/// Price the whole grid through a caller-chosen table and executor;
+/// returns the grid-order throughput checksum.
+fn price_grid(cfg: &GridScaleConfig, threads: usize, table: &Arc<CostCache>, chunked: bool) -> f64 {
+    let grid = grid_cells(cfg);
+    let intern = Arc::new(GraphIntern::new());
+    let cell_fn = |cell: &GridCell| {
+        let run = inference_run(cfg.model, cell.batch, cfg.seq_len, cell.precision);
+        let g = intern
+            .get_or_build(GraphKey::base(&run, 0), || IterationGraph::build_inference(&run));
+        let pricer = Cached::with_table(
+            RooflinePricer::new(cfg.devices[cell.device].clone(), cell.precision),
+            Arc::clone(table),
+        );
+        (cell.replicas * cell.batch) as f64 / pricer.iteration_seconds(&g)
+    };
+    let out = if chunked {
+        exec::run_grid(&grid, threads, cell_fn)
+    } else {
+        exec::run_grid_cell_stride(&grid, threads, cell_fn)
+    };
+    out.iter().sum()
+}
+
+fn main() {
+    let cfg = GridScaleConfig::default_with_cells(20_000);
+    println!(
+        "## fig_gridscale — {} cells ({} combos x {} replica planes)",
+        cfg.total_cells(),
+        cfg.base_cells(),
+        cfg.replicas()
+    );
+
+    // Correctness first: the engine is deterministic across thread
+    // counts and across every cache/executor variant under test.
+    let base = run_gridscale(&cfg, 1);
+    let multi = run_gridscale(&cfg, 4);
+    assert_eq!(base.checksum, multi.checksum, "engine is nondeterministic");
+    assert_eq!(base.cache.hits, multi.cache.hits, "cache split drifted");
+    assert_eq!(base.intern, multi.intern, "intern split drifted");
+    let single_lock = price_grid(&cfg, 4, &Arc::new(CostCache::with_shards(1)), true);
+    assert_eq!(single_lock, base.checksum, "single-lock table diverged");
+    let strided = price_grid(&cfg, 4, &Arc::new(CostCache::for_threads(4)), false);
+    assert_eq!(strided, base.checksum, "cell-stride executor diverged");
+
+    let threads = [1usize, 2, 4, 8];
+    let mut bench = Bench::new("fig_gridscale");
+    let sec = |d: std::time::Duration| d.as_secs_f64();
+    let mut cache_speedup = Vec::new();
+    let mut exec_speedup = Vec::new();
+    let mut sharded_secs = Vec::new();
+    for &t in &threads {
+        let sharded = sec(bench
+            .run(&format!("sharded cache, chunked exec, {t}t"), || {
+                let table = Arc::new(CostCache::for_threads(t));
+                black_box(price_grid(&cfg, t, &table, true));
+            })
+            .median);
+        let one_lock = sec(bench
+            .run(&format!("single-lock cache, chunked exec, {t}t"), || {
+                let table = Arc::new(CostCache::with_shards(1));
+                black_box(price_grid(&cfg, t, &table, true));
+            })
+            .median);
+        let stride = sec(bench
+            .run(&format!("sharded cache, cell-stride exec, {t}t"), || {
+                let table = Arc::new(CostCache::for_threads(t));
+                black_box(price_grid(&cfg, t, &table, false));
+            })
+            .median);
+        cache_speedup.push(one_lock / sharded.max(1e-12));
+        exec_speedup.push(stride / sharded.max(1e-12));
+        sharded_secs.push(sharded);
+    }
+    bench.finish();
+
+    let cells = cfg.total_cells() as f64;
+    for (i, &t) in threads.iter().enumerate() {
+        println!(
+            "{t}t: sharded-vs-single-lock {:.2}x, chunked-vs-stride {:.2}x, {:.0} cells/s",
+            cache_speedup[i],
+            exec_speedup[i],
+            cells / sharded_secs[i].max(1e-12)
+        );
+    }
+
+    let per_thread = |v: &[f64]| {
+        Json::obj(vec![
+            ("t1", Json::num(v[0])),
+            ("t2", Json::num(v[1])),
+            ("t4", Json::num(v[2])),
+            ("t8", Json::num(v[3])),
+        ])
+    };
+    let out = Json::obj(vec![
+        ("bench", Json::str("fig_gridscale")),
+        ("estimated", Json::Bool(false)),
+        ("cells", Json::num(cells)),
+        ("base_cells", Json::num(cfg.base_cells() as f64)),
+        ("replicas", Json::num(cfg.replicas() as f64)),
+        ("sharded_vs_single_lock", per_thread(&cache_speedup)),
+        ("chunked_vs_cell_stride", per_thread(&exec_speedup)),
+        (
+            "cells_per_sec",
+            per_thread(&sharded_secs.iter().map(|s| cells / s.max(1e-12)).collect::<Vec<f64>>()),
+        ),
+    ]);
+    let path = "BENCH_gridscale.json";
+    std::fs::write(path, out.to_string()).expect("write bench artifact");
+    println!("wrote {path}");
+}

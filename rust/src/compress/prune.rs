@@ -38,7 +38,7 @@ use crate::model::IterationGraph;
 /// Values are *kept* sizes (not fractions) against the dense
 /// [`ModelConfig`] the spec is built from, so a spec is meaningful only
 /// for graphs built at that config's `n_heads`/`d_ff`/`n_layers`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PruneSpec {
     /// Attention heads kept per layer (1..=n_heads).
     pub heads: u64,

@@ -25,6 +25,7 @@ use anyhow::{Context, Result};
 use crate::compress::prune::PruneSpec;
 use crate::compress::quant::{self, CompressPrecision};
 use crate::config::ModelConfig;
+use crate::model::{GraphIntern, GraphKey};
 use crate::perf::device::DeviceSpec;
 use crate::perf::CostModel;
 use crate::scenario::exec;
@@ -123,6 +124,12 @@ pub struct CompressedLatencyModel {
     cache: HashMap<(u64, u64), f64>,
     /// The variant's pricer (`quant::pricer(self.precision, &device)`).
     pricer: Arc<dyn CostModel>,
+    /// Optional shared graph-intern table: when set, the dense base
+    /// graph and this variant's pruned rewrite are fetched from (or
+    /// deposited into) the table instead of being rebuilt per shape —
+    /// the grid-scale path, where hundreds of candidates share one
+    /// table (`scenario::pareto`, the gridscale harness).
+    intern: Option<Arc<GraphIntern>>,
 }
 
 impl fmt::Debug for CompressedLatencyModel {
@@ -136,6 +143,7 @@ impl fmt::Debug for CompressedLatencyModel {
             .field("seq_bucket", &self.seq_bucket)
             .field("cached_points", &self.cache.len())
             .field("pricer_fingerprint", &self.pricer.fingerprint())
+            .field("interned", &self.intern.is_some())
             .finish()
     }
 }
@@ -158,6 +166,7 @@ impl CompressedLatencyModel {
             seq_bucket: 32,
             cache: HashMap::new(),
             pricer,
+            intern: None,
         }
     }
 
@@ -184,6 +193,17 @@ impl CompressedLatencyModel {
         self
     }
 
+    /// Share a graph-intern table: the dense base graph and this
+    /// variant's pruned rewrite are looked up in `intern` (and built at
+    /// most once per table) instead of re-derived for every shape. The
+    /// interned graphs are op-for-op identical to fresh builds
+    /// (`rust/tests/gridscale.rs`), so modeled latencies — and every
+    /// downstream artifact byte — are unchanged.
+    pub fn with_intern(mut self, intern: Arc<GraphIntern>) -> CompressedLatencyModel {
+        self.intern = Some(intern);
+        self
+    }
+
     /// Number of distinct `(batch, padded_seq)` shapes costed so far.
     pub fn cached_points(&self) -> usize {
         self.cache.len()
@@ -201,9 +221,23 @@ impl BatchCost for CompressedLatencyModel {
             return t;
         }
         let run = inference_run(self.model, key.0, key.1, self.precision.exec_precision());
-        let g = forward_graph(&run, self.head);
-        let g = self.prune.apply(&run.model, &g);
-        let t = self.pricer.iteration_seconds(&g);
+        let t = match &self.intern {
+            // Interned path: base graph and pruned rewrite each derived
+            // once per table; the prune spec rides in the key, so the
+            // rewrite of an interned base is itself interned.
+            Some(intern) => {
+                let base_key = GraphKey::base(&run, self.head.intern_tag());
+                let base = intern.get_or_build(base_key, || forward_graph(&run, self.head));
+                let pruned = intern
+                    .get_or_build(base_key.pruned(self.prune), || self.prune.apply(&run.model, &base));
+                self.pricer.iteration_seconds(&pruned)
+            }
+            None => {
+                let g = forward_graph(&run, self.head);
+                let g = self.prune.apply(&run.model, &g);
+                self.pricer.iteration_seconds(&g)
+            }
+        };
         self.cache.insert(key, t);
         t
     }

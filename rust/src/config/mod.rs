@@ -39,7 +39,7 @@ impl Precision {
 }
 
 /// BERT hyperparameters, named as in Table 2 of the paper.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ModelConfig {
     /// Mini-batch size per device (B).
     pub batch: u64,
@@ -185,7 +185,7 @@ pub fn pretraining_mixture_seconds(ph1_iter: f64, ph2_iter: f64, total_iters: f6
 }
 
 /// BERT pre-training phase (SS2.1): Phase-1 n=128, Phase-2 n=512.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Phase {
     Phase1,
     Phase2,

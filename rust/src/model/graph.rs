@@ -4,8 +4,19 @@
 //! This is what the paper profiles with rocProf; everything downstream
 //! (Fig. 4/5/9/10 breakdowns, roofline times, distributed models, fusion
 //! studies) consumes an `IterationGraph`.
+//!
+//! Grid-scale sweeps (DESIGN.md SSGridScale) rebuild the *same* graph
+//! for thousands of cells — every pareto candidate at the same
+//! (config, precision, prune) point re-derives an identical op
+//! inventory. [`GraphIntern`] memoizes construction behind an `Arc`,
+//! keyed on everything a builder reads ([`GraphKey`]), so each
+//! distinct graph is derived once per grid.
 
-use crate::config::RunConfig;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::compress::prune::PruneSpec;
+use crate::config::{ModelConfig, Phase, Precision, RunConfig};
 use crate::model::op::{LayerClass, Op, OpCategory, Pass};
 use crate::model::{embedding, lamb, output, transformer};
 
@@ -118,10 +129,159 @@ impl IterationGraph {
     }
 }
 
+/// Everything an interned graph build is allowed to depend on. Two
+/// builds with equal keys must construct op-for-op identical graphs —
+/// that is the **key-coverage invariant**: the closure handed to
+/// [`GraphIntern::get_or_build`] may read nothing outside (its `key`,
+/// process-constant tables). `variant` is a caller-chosen builder
+/// discriminant (e.g. the serving head kind) so builders the key's
+/// config fields can't distinguish never alias; `prune` names the
+/// structural rewrite applied on top of the base build, keeping a
+/// pruned graph and its dense base as separate entries.
+///
+/// The key holds the full structs (not a u64 digest): equal keys are
+/// *guaranteed* equal inputs, so an intern hit can never alias two
+/// different graphs the way a truncated hash could.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GraphKey {
+    /// Full model hyperparameters the builder reads (covers batch and
+    /// sequence length).
+    pub model: ModelConfig,
+    /// Numeric precision the ops carry.
+    pub precision: Precision,
+    /// Training phase (seq-len regime) of the run config.
+    pub phase: Phase,
+    /// Caller-chosen builder discriminant (e.g. serve-head kind).
+    pub variant: u32,
+    /// Structural prune rewrite applied on top of the base build, if
+    /// any (`None` = the dense base graph).
+    pub prune: Option<PruneSpec>,
+}
+
+impl GraphKey {
+    /// The key for a forward/inference build of `run` under builder
+    /// `variant` (no prune rewrite).
+    pub fn base(run: &RunConfig, variant: u32) -> GraphKey {
+        GraphKey {
+            model: run.model,
+            precision: run.precision,
+            phase: run.phase,
+            variant,
+            prune: None,
+        }
+    }
+
+    /// The same point with a prune rewrite applied on top.
+    pub fn pruned(self, prune: PruneSpec) -> GraphKey {
+        GraphKey { prune: Some(prune), ..self }
+    }
+}
+
+/// A snapshot of an intern table's accounting ([`GraphIntern::stats`]).
+/// Counters are updated under the table lock, so every field is
+/// deterministic for a deterministic workload at any thread count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InternStats {
+    /// Requests served from the table.
+    pub hits: u64,
+    /// Requests that ran the build closure (== distinct keys).
+    pub misses: u64,
+    /// Distinct graphs resident.
+    pub entries: usize,
+}
+
+impl InternStats {
+    /// Total `get_or_build` requests.
+    pub fn requests(&self) -> u64 {
+        self.hits + self.misses
+    }
+}
+
+#[derive(Debug, Default)]
+struct InternState {
+    map: HashMap<GraphKey, Arc<IterationGraph>>,
+    hits: u64,
+    misses: u64,
+}
+
+/// A memo table over graph construction: each distinct [`GraphKey`] is
+/// built once and shared as an `Arc<IterationGraph>` thereafter.
+/// `Sync` — share one per grid (via `Arc`) across the parallel
+/// executor's workers.
+///
+/// The build closure runs *while holding the table lock*: graph
+/// assembly is pure in-memory op synthesis (microseconds, no I/O, no
+/// other locks), distinct graphs per grid number in the dozens, and
+/// computing under the lock makes the hit/miss split — and therefore
+/// the intern stats reported in the gridscale artifact — deterministic
+/// at any worker count (each key is built and counted as a miss
+/// exactly once). After warm-up every request is a hit whose critical
+/// section is one map probe plus an `Arc` clone.
+///
+/// Correctness rests on the key-coverage invariant documented on
+/// [`GraphKey`]; `rust/tests/gridscale.rs` pins that an interned
+/// pruned graph is op-for-op equal to a fresh rebuild.
+#[derive(Debug, Default)]
+pub struct GraphIntern {
+    state: Mutex<InternState>,
+}
+
+impl GraphIntern {
+    /// An empty intern table.
+    pub fn new() -> GraphIntern {
+        GraphIntern::default()
+    }
+
+    /// The graph for `key`, built by `build` on first request and
+    /// served from the table thereafter. `build` must be a pure
+    /// function of `key` (the key-coverage invariant).
+    pub fn get_or_build<F: FnOnce() -> IterationGraph>(
+        &self,
+        key: GraphKey,
+        build: F,
+    ) -> Arc<IterationGraph> {
+        let mut st = self.state.lock().expect("no panics hold this lock");
+        if let Some(g) = st.map.get(&key).cloned() {
+            st.hits += 1;
+            return g;
+        }
+        let g = Arc::new(build());
+        st.misses += 1;
+        st.map.insert(key, Arc::clone(&g));
+        g
+    }
+
+    /// Requests served from the table.
+    pub fn hits(&self) -> u64 {
+        self.state.lock().expect("no panics hold this lock").hits
+    }
+
+    /// Requests that ran a build (== distinct keys interned).
+    pub fn misses(&self) -> u64 {
+        self.state.lock().expect("no panics hold this lock").misses
+    }
+
+    /// Distinct graphs resident.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("no panics hold this lock").map.len()
+    }
+
+    /// True when nothing has been interned yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the accounting (one lock acquisition, so the fields
+    /// are mutually consistent).
+    pub fn stats(&self) -> InternStats {
+        let st = self.state.lock().expect("no panics hold this lock");
+        InternStats { hits: st.hits, misses: st.misses, entries: st.map.len() }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ModelConfig, Phase, Precision};
 
     fn run() -> RunConfig {
         RunConfig::new(ModelConfig::bert_large(), Phase::Phase1, Precision::Fp32)
@@ -200,5 +360,71 @@ mod tests {
         let names: Vec<&str> = g.ops.iter().map(|o| o.name.as_str()).collect();
         assert!(names.iter().any(|n| n.contains("FC-1")));
         assert!(names.iter().any(|n| n.contains("lamb stage1")));
+    }
+
+    #[test]
+    fn interned_graphs_are_built_once_and_shared() {
+        let intern = GraphIntern::new();
+        let r = run();
+        let key = GraphKey::base(&r, 0);
+        let a = intern.get_or_build(key, || IterationGraph::build_inference(&r));
+        let b = intern.get_or_build(key, || unreachable!("second request must hit"));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.ops, IterationGraph::build_inference(&r).ops);
+        let stats = intern.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        assert_eq!(stats.requests(), 2);
+        assert_eq!(intern.len(), 1);
+        assert!(!intern.is_empty());
+    }
+
+    #[test]
+    fn distinct_keys_never_alias() {
+        // Same config through a different variant tag, phase, batch, or
+        // prune marker is a distinct entry — the key holds full structs,
+        // so "equal key" is "equal builder inputs" by construction.
+        let intern = GraphIntern::new();
+        let r = run();
+        let base = GraphKey::base(&r, 0);
+        intern.get_or_build(base, || IterationGraph::build_inference(&r));
+        let variants = [
+            GraphKey { variant: 1, ..base },
+            GraphKey { phase: Phase::Phase2, ..base },
+            GraphKey { model: r.model.with_batch(4), ..base },
+            base.pruned(PruneSpec::dense(&r.model)),
+        ];
+        for (i, key) in variants.into_iter().enumerate() {
+            assert_ne!(key, base, "variant {i}");
+            intern.get_or_build(key, || IterationGraph::build_inference(&r));
+        }
+        assert_eq!(intern.stats().entries, 5);
+        assert_eq!(intern.hits(), 0);
+        assert_eq!(intern.misses(), 5);
+    }
+
+    #[test]
+    fn intern_is_deterministic_under_concurrency() {
+        // Many workers racing on the same small key set: every key is
+        // built exactly once (misses == entries) and totals are exact.
+        let intern = Arc::new(GraphIntern::new());
+        let r = run();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let intern = Arc::clone(&intern);
+                s.spawn(move || {
+                    for b in [1u64, 2, 4, 8] {
+                        let m = r.model.with_batch(b);
+                        let rc = RunConfig { model: m, ..r };
+                        let key = GraphKey::base(&rc, 0);
+                        let g = intern.get_or_build(key, || IterationGraph::build_inference(&rc));
+                        assert!(!g.ops.is_empty());
+                    }
+                });
+            }
+        });
+        let stats = intern.stats();
+        assert_eq!(stats.entries, 4);
+        assert_eq!(stats.misses, 4);
+        assert_eq!(stats.requests(), 8 * 4);
     }
 }

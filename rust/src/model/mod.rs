@@ -17,5 +17,5 @@ pub mod output;
 pub mod transformer;
 
 pub use gemm::{GemmDims, GemmKind};
-pub use graph::IterationGraph;
+pub use graph::{GraphIntern, GraphKey, InternStats, IterationGraph};
 pub use op::{LayerClass, Op, OpCategory, OpKind, Pass};

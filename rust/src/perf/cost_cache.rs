@@ -12,15 +12,43 @@
 //! point is priced once per grid no matter how many per-scenario
 //! pricers share the table.
 //!
-//! The table is `Sync` (a `Mutex`-guarded map plus atomic hit/miss
-//! counters) so one instance can be shared across the parallel grid
-//! executor's workers (`scenario::exec`); because every `CostModel` is
-//! required to be pure over the keyed fields, a cached value is
-//! bit-identical to a recomputed one and the artifacts of a cached
-//! sweep are byte-identical to the uncached ones (asserted in
-//! `rust/tests/cost_model.rs` and `rust/tests/scenario.rs`; the
-//! `fig_scenario_grid` and `fig_costmodel` benches record the measured
-//! cached-vs-uncached speedups).
+//! # Sharding
+//!
+//! The table is `Sync` so one instance can be shared across the
+//! parallel grid executor's workers (`scenario::exec`). A single
+//! `Mutex<HashMap>` serializes every lookup of every worker; at the
+//! 100k-cell grids the gridscale harness drives (DESIGN.md
+//! SSGridScale), that one lock is the engine's hottest point of
+//! contention. The map is therefore striped into N independently
+//! locked shards (N = nearest power of two ≥ 2× the worker count, so
+//! two workers rarely collide on a stripe even under a skewed key
+//! mix); a lookup locks only its key's shard.
+//!
+//! **Fingerprint-coverage invariant:** the shard index is a pure
+//! function of the *complete* [`CostKey`] — op kind, element width,
+//! layer, category, pass, **and the pricer fingerprint**. Because the
+//! fingerprint is inside the hashed key (not a second-level lookup),
+//! two pricers sharing a table can never race each other onto the same
+//! entry, a key always resolves to the same shard for its whole
+//! lifetime, and dropping or resizing nothing — the shard vector is
+//! fixed at construction — keeps every `&self` method lock-consistent.
+//!
+//! A miss prices the op *while holding its shard's lock* (one
+//! acquisition per lookup, where the pre-shard table locked twice and
+//! could price the same fresh shape on two racing workers). Pricing is
+//! pure arithmetic over the keyed fields — microseconds, no I/O, no
+//! other locks — so holding the stripe briefly is cheaper than the
+//! double acquisition, and it makes the hit/miss *split* deterministic:
+//! every distinct key is priced (and counted as a miss) exactly once,
+//! at any thread count. `rust/tests/gridscale.rs` pins that
+//! determinism; the `fig_gridscale` bench records the measured
+//! sharded-vs-single-lock speedup.
+//!
+//! Because every `CostModel` is required to be pure over the keyed
+//! fields, a cached value is bit-identical to a recomputed one and the
+//! artifacts of a cached sweep are byte-identical to the uncached ones
+//! (asserted in `rust/tests/cost_model.rs` and
+//! `rust/tests/scenario.rs`).
 //!
 //! Historically `CostCache` *was* the caching API — a parallel set of
 //! `estimate_op`/`iteration_seconds` signatures forking `perf::roofline`.
@@ -29,6 +57,7 @@
 //! state and its accounting.
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -63,44 +92,124 @@ impl CostKey {
     }
 }
 
+/// A point-in-time snapshot of the table's accounting, returned by
+/// [`CostCache::stats`]. With the compute-under-lock miss path every
+/// field is deterministic for a deterministic workload at *any* thread
+/// count (each distinct key is priced exactly once), which the
+/// gridscale stress test asserts across {1, 2, 8, 32} workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from the memo table.
+    pub hits: u64,
+    /// Lookups that ran the pricing arithmetic (== distinct keys).
+    pub misses: u64,
+    /// Distinct (op fields, pricer) points resident.
+    pub entries: usize,
+    /// Stripe count the table was built with.
+    pub shards: usize,
+}
+
+impl CacheStats {
+    /// Total lookups (`hits + misses`).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+}
+
+/// Shard count for `threads` concurrent workers: the nearest power of
+/// two ≥ `2 × threads` (power of two so the shard index is a mask, 2×
+/// so workers rarely collide on a stripe even under skewed key mixes).
+fn shard_count_for(threads: usize) -> usize {
+    (2 * threads.max(1)).next_power_of_two()
+}
+
 /// Shared memo table over [`CostModel::price_op`], keyed by the op's
-/// priceable fields and the pricer fingerprint. Cheap to create; share
-/// one per grid (via `Arc`) to dedupe costing across grid cells and
-/// worker threads.
-#[derive(Debug, Default)]
+/// priceable fields and the pricer fingerprint, striped into
+/// independently locked shards (see the module docs for the sharding
+/// and fingerprint-coverage invariants). Cheap to create; share one per
+/// grid (via `Arc`) to dedupe costing across grid cells and worker
+/// threads.
+#[derive(Debug)]
 pub struct CostCache {
-    map: Mutex<HashMap<CostKey, (f64, bool)>>,
+    /// Power-of-two stripe vector; a key's shard is `hash(key) & mask`.
+    shards: Vec<Mutex<HashMap<CostKey, (f64, bool)>>>,
+    /// `shards.len() - 1` (valid because the length is a power of two).
+    mask: usize,
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
+impl Default for CostCache {
+    fn default() -> CostCache {
+        CostCache::new()
+    }
+}
+
 impl CostCache {
-    /// An empty table.
+    /// An empty table, striped for this host's available parallelism.
     pub fn new() -> CostCache {
-        CostCache::default()
+        let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+        CostCache::with_shards(shard_count_for(threads))
+    }
+
+    /// An empty table striped for `threads` concurrent workers
+    /// (stripe count = nearest power of two ≥ 2×threads). Use this
+    /// when the worker count is a scenario parameter, so the stripe
+    /// count reported in artifacts is machine-independent.
+    pub fn for_threads(threads: usize) -> CostCache {
+        CostCache::with_shards(shard_count_for(threads))
+    }
+
+    /// An empty table with an explicit stripe count (rounded up to a
+    /// power of two, minimum 1). `with_shards(1)` is the single-lock
+    /// layout — the baseline the `fig_gridscale` bench measures the
+    /// striped table against.
+    pub fn with_shards(shards: usize) -> CostCache {
+        let n = shards.max(1).next_power_of_two();
+        CostCache {
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            mask: n - 1,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The stripe count (a power of two, fixed at construction).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The stripe for `key`: a pure function of the complete key —
+    /// including the pricer fingerprint — so one key maps to one shard
+    /// for its whole lifetime and cross-pricer entries never alias
+    /// (the fingerprint-coverage invariant, see module docs).
+    fn shard_for(&self, key: &CostKey) -> &Mutex<HashMap<CostKey, (f64, bool)>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) & self.mask]
     }
 
     /// Memoized `inner.price_op(op)` under fingerprint `fp` — the
     /// [`Cached`](crate::perf::Cached) decorator's engine. Identical
-    /// output (the cost of a hit is one map lookup instead of the
+    /// output (the cost of a hit is one shard lookup instead of the
     /// pricing arithmetic), plus hit/miss accounting.
+    ///
+    /// One lock acquisition per call: a miss prices the op while
+    /// holding its shard (pricing is pure, lock-free arithmetic), so a
+    /// distinct key is priced — and counted as a miss — exactly once
+    /// at any thread count.
     pub(crate) fn price_op_via<M: CostModel>(&self, fp: u64, op: &Op, inner: &M) -> OpTime {
         let key = CostKey::new(fp, op);
-        if let Some(&(seconds, memory_bound)) =
-            self.map.lock().expect("no panics hold this lock").get(&key)
-        {
+        let mut shard = self.shard_for(&key).lock().expect("no panics hold this lock");
+        if let Some(&(seconds, memory_bound)) = shard.get(&key) {
+            drop(shard);
             self.hits.fetch_add(1, Ordering::Relaxed);
             return OpTime { name: op.name.clone(), seconds, memory_bound };
         }
-        // Computed outside the lock: two racing workers may both price a
-        // fresh shape, but price_op is pure over the keyed fields so both
-        // insert the same value and the artifact stays deterministic.
-        self.misses.fetch_add(1, Ordering::Relaxed);
         let t = inner.price_op(op);
-        self.map
-            .lock()
-            .expect("no panics hold this lock")
-            .insert(key, (t.seconds, t.memory_bound));
+        shard.insert(key, (t.seconds, t.memory_bound));
+        drop(shard);
+        self.misses.fetch_add(1, Ordering::Relaxed);
         t
     }
 
@@ -109,22 +218,20 @@ impl CostCache {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// Lookups that had to run the pricing arithmetic.
+    /// Lookups that had to run the pricing arithmetic. With the
+    /// compute-under-lock miss path this equals the number of distinct
+    /// keys ever priced, independent of scheduling.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
 
-    /// Total lookups. Deterministic for a deterministic workload (every
-    /// `price_op` call bumps exactly one counter), unlike the hit/miss
-    /// *split*: two workers racing on a fresh key may both count a miss.
+    /// Total lookups (every `price_op` call bumps exactly one counter).
     pub fn lookups(&self) -> u64 {
         self.hits() + self.misses()
     }
 
     /// Fraction of lookups served from the table (0 when never
-    /// queried). Under concurrency this can undercount hits by the
-    /// handful of racing first-touches; for a scheduling-independent
-    /// figure use [`CostCache::dedup_rate`].
+    /// queried).
     pub fn hit_rate(&self) -> f64 {
         let h = self.hits() as f64;
         let m = self.misses() as f64;
@@ -147,14 +254,28 @@ impl CostCache {
         }
     }
 
-    /// Distinct (op fields, pricer) points priced so far.
+    /// Distinct (op fields, pricer) points priced so far, summed
+    /// across shards.
     pub fn len(&self) -> usize {
-        self.map.lock().expect("no panics hold this lock").len()
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("no panics hold this lock").len())
+            .sum()
     }
 
     /// True when nothing has been priced yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Snapshot of the accounting (see [`CacheStats`]).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits(),
+            misses: self.misses(),
+            entries: self.len(),
+            shards: self.shards(),
+        }
     }
 }
 
@@ -246,5 +367,74 @@ mod tests {
             }
         });
         assert!(!table.is_empty());
+    }
+
+    #[test]
+    fn shard_counts_are_powers_of_two() {
+        assert_eq!(CostCache::with_shards(1).shards(), 1);
+        assert_eq!(CostCache::with_shards(2).shards(), 2);
+        assert_eq!(CostCache::with_shards(3).shards(), 4);
+        assert_eq!(CostCache::with_shards(0).shards(), 1);
+        // for_threads: nearest power of two ≥ 2×threads.
+        assert_eq!(CostCache::for_threads(1).shards(), 2);
+        assert_eq!(CostCache::for_threads(2).shards(), 4);
+        assert_eq!(CostCache::for_threads(3).shards(), 8);
+        assert_eq!(CostCache::for_threads(8).shards(), 16);
+        assert!(CostCache::new().shards().is_power_of_two());
+    }
+
+    #[test]
+    fn single_shard_table_is_semantically_identical() {
+        // with_shards(1) is the bench baseline; every accessor and every
+        // priced value must match the striped layout exactly.
+        let striped = Arc::new(CostCache::for_threads(8));
+        let single = Arc::new(CostCache::with_shards(1));
+        let g = graph(Precision::Fp32);
+        for table in [&striped, &single] {
+            let pricer = Cached::with_table(
+                RooflinePricer::new(DeviceSpec::mi100(), Precision::Fp32),
+                Arc::clone(table),
+            );
+            pricer.iteration_seconds(&g);
+            pricer.iteration_seconds(&g);
+        }
+        assert_eq!(striped.hits(), single.hits());
+        assert_eq!(striped.misses(), single.misses());
+        assert_eq!(striped.len(), single.len());
+        assert_eq!(striped.dedup_rate(), single.dedup_rate());
+        assert_eq!(striped.stats().lookups(), single.stats().lookups());
+    }
+
+    #[test]
+    fn miss_split_is_deterministic_across_thread_counts() {
+        // The compute-under-lock miss path prices each distinct key
+        // exactly once: the hit/miss *split* (not just the total) is
+        // identical at any worker count.
+        let mut splits = Vec::new();
+        for workers in [1usize, 2, 8] {
+            let table = Arc::new(CostCache::for_threads(workers));
+            let g = graph(Precision::Mixed);
+            let pricer = Cached::with_table(
+                RooflinePricer::new(DeviceSpec::v100(), Precision::Mixed),
+                Arc::clone(&table),
+            );
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| {
+                        pricer.iteration_seconds(&g);
+                    });
+                }
+            });
+            let stats = table.stats();
+            assert_eq!(stats.misses as usize, stats.entries);
+            splits.push((stats.hits + stats.misses, stats.misses));
+        }
+        // Same lookup total per worker => hits scale with workers, but
+        // misses (distinct keys) never change.
+        let base_misses = splits[0].1;
+        for (i, &(lookups, misses)) in splits.iter().enumerate() {
+            assert_eq!(misses, base_misses);
+            assert_eq!(lookups, [1u64, 2, 8][i] * splits[0].0);
+        }
     }
 }

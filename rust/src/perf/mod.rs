@@ -19,7 +19,7 @@ pub mod memory;
 pub mod roofline;
 pub mod whatif;
 
-pub use cost_cache::CostCache;
+pub use cost_cache::{CacheStats, CostCache};
 pub use cost_model::{Cached, CalibratedPricer, CalibrationTable, CostModel, RooflinePricer};
 pub use device::DeviceSpec;
 pub use roofline::{estimate_graph, estimate_op, OpTime};

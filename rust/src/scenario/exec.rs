@@ -3,15 +3,46 @@
 //! Before the scenario engine, `serve::sweep` and `compress::sweep`
 //! each hand-rolled their own `std::thread::scope` fan-out with a
 //! static stride schedule. This module is the single replacement: a
-//! work-stealing queue (one shared atomic cursor — an idle worker
-//! steals the next unclaimed grid cell, so a straggler cell never
-//! serializes the tail behind a fixed stride) writing results into
-//! index-addressed slots, so the output order is the *grid* order
+//! work-stealing queue over one shared atomic cursor — an idle worker
+//! steals the next unclaimed span of grid cells, so a straggler cell
+//! never serializes the tail behind a fixed stride — writing results
+//! into index-addressed slots, so the output order is the *grid* order
 //! regardless of scheduling and a seeded sweep's artifact is
 //! byte-identical for any worker count.
+//!
+//! # Chunked claiming
+//!
+//! Claiming one cell per `fetch_add` is two points of per-cell
+//! overhead at 100k-cell grids (DESIGN.md SSGridScale): a contended
+//! atomic RMW on the cursor, and a per-slot `Mutex` on the result
+//! write. [`run_grid`] instead claims *contiguous chunks* of
+//! `max(1, n / (workers × 8))` cells per cursor bump — large enough to
+//! amortize the RMW, small enough (8 chunks/worker) that uneven cell
+//! costs still rebalance — and writes results through a pre-sized
+//! unlocked slot vector. The chunk claim itself is the
+//! synchronization: the cursor hands each index range to exactly one
+//! worker (split ownership), and the `thread::scope` join gives the
+//! collecting thread a happens-before edge over every write, so no
+//! per-slot lock is needed. The cell-per-claim schedule survives as
+//! [`run_grid_cell_stride`], the baseline the `fig_gridscale` bench
+//! measures the chunked engine against.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// A pre-sized result vector workers write to without locks. Sound
+/// because the atomic cursor hands each index to exactly one worker
+/// (disjoint `&mut` access by construction) and the scope join
+/// sequences all writes before the single-threaded drain.
+struct Slots<R> {
+    cells: Vec<UnsafeCell<Option<R>>>,
+}
+
+// SAFETY: shared across workers, but the chunk claim guarantees no two
+// workers ever touch the same index, and reads happen only after the
+// scope joins every writer.
+unsafe impl<R: Send> Sync for Slots<R> {}
 
 /// Run `run` over every item of `grid` across up to `threads` workers,
 /// returning results in grid order (not completion order).
@@ -21,6 +52,52 @@ use std::sync::Mutex;
 /// `perf::CostCache`) is fine as long as that state never changes a
 /// result, only its cost.
 pub fn run_grid<T, R, F>(grid: &[T], threads: usize, run: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = grid.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.clamp(1, n);
+    // 8 chunks per worker: coarse enough to amortize the cursor RMW,
+    // fine enough that one slow chunk still rebalances across workers.
+    let chunk = (n / (workers * 8)).max(1);
+    let slots = Slots {
+        cells: (0..n).map(|_| UnsafeCell::new(None)).collect(),
+    };
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + chunk).min(n) {
+                    let result = run(&grid[i]);
+                    // SAFETY: index i belongs to this worker's claimed
+                    // chunk alone (see Slots).
+                    unsafe { *slots.cells[i].get() = Some(result) };
+                }
+            });
+        }
+    });
+    slots
+        .cells
+        .into_iter()
+        .map(|c| c.into_inner().expect("every slot filled"))
+        .collect()
+}
+
+/// The pre-chunking schedule — one cell per cursor claim, one `Mutex`
+/// per result slot — kept as the measured baseline for the
+/// `fig_gridscale` bench. Semantically identical to [`run_grid`]
+/// (same grid-order output, same determinism guarantee), just slower
+/// at scale.
+pub fn run_grid_cell_stride<T, R, F>(grid: &[T], threads: usize, run: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
@@ -73,6 +150,8 @@ mod tests {
     fn empty_grid_is_fine() {
         let out: Vec<u64> = run_grid(&Vec::<u64>::new(), 8, |_| unreachable!());
         assert!(out.is_empty());
+        let out: Vec<u64> = run_grid_cell_stride(&Vec::<u64>::new(), 8, |_| unreachable!());
+        assert!(out.is_empty());
     }
 
     #[test]
@@ -100,5 +179,30 @@ mod tests {
             x + 1
         });
         assert_eq!(out, (1..=16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunked_and_cell_stride_agree_at_scale() {
+        // 10k cells, awkward worker counts: both schedules produce the
+        // identical grid-order output, and chunking covers the tail
+        // cells when n is not a multiple of workers*8.
+        let grid: Vec<u64> = (0..10_007).collect();
+        let want: Vec<u64> = grid.iter().map(|x| x.wrapping_mul(2654435761)).collect();
+        for threads in [1, 2, 3, 8, 32] {
+            let chunked = run_grid(&grid, threads, |&x| x.wrapping_mul(2654435761));
+            let strided = run_grid_cell_stride(&grid, threads, |&x| x.wrapping_mul(2654435761));
+            assert_eq!(chunked, want);
+            assert_eq!(strided, want);
+        }
+    }
+
+    #[test]
+    fn tiny_grids_and_huge_thread_counts_are_exact() {
+        // workers clamp to n; chunk size clamps to 1.
+        for n in [1usize, 2, 7] {
+            let grid: Vec<usize> = (0..n).collect();
+            let out = run_grid(&grid, 64, |&i| i + 1);
+            assert_eq!(out, (1..=n).collect::<Vec<_>>());
+        }
     }
 }

@@ -1,0 +1,369 @@
+//! The gridscale harness: a synthetic {device × precision × batch ×
+//! replica} grid that exists purely to exercise the sweep engine at
+//! 100k-cell scale (DESIGN.md SSGridScale).
+//!
+//! Every real sweep tops out around a few hundred cells; the ROADMAP's
+//! next axis (Megatron-style 512–4096-device sweeps) is three orders
+//! of magnitude beyond that. This scenario synthesizes a grid of any
+//! size (`--set cells=`) out of the crate's real pricing path — each
+//! cell derives an inference graph through the shared
+//! [`GraphIntern`], prices it through a [`Cached`] [`RooflinePricer`]
+//! over one sharded grid-wide [`CostCache`], and reports a modeled
+//! replica-group throughput — and measures the engine while doing it:
+//! per-stage wall time and cells/sec land in a `timing` block of the
+//! artifact (volatile, skipped by the golden comparators), while every
+//! other field — the grid-order throughput checksum, the cache and
+//! intern accounting — is deterministic at any thread count and
+//! golden-gated like any other scenario.
+//!
+//! The replica axis is what scales the grid: the 72 distinct
+//! (device, precision, batch) combinations repeat under replica counts
+//! 1..=R, so cache hits dominate at scale exactly the way a real
+//! mega-grid's repeated shapes would. The matching `fig_gridscale`
+//! bench measures the engine's two baselines (single-lock cache,
+//! cell-stride claiming) against the sharded/chunked paths.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::{ModelConfig, Precision};
+use crate::model::{GraphIntern, GraphKey, InternStats, IterationGraph};
+use crate::perf::device::DeviceSpec;
+use crate::perf::{CacheStats, Cached, CostCache, CostModel, RooflinePricer};
+use crate::scenario::exec;
+use crate::serve::graph::inference_run;
+use crate::util::Json;
+
+/// The synthetic grid's axes plus the requested cell floor.
+#[derive(Debug, Clone)]
+pub struct GridScaleConfig {
+    /// Served-model hyperparameters every cell derives its graph from.
+    pub model: ModelConfig,
+    /// Request sequence length each cell prices at.
+    pub seq_len: u64,
+    /// Device axis.
+    pub devices: Vec<DeviceSpec>,
+    /// Precision axis.
+    pub precisions: Vec<Precision>,
+    /// Batch axis.
+    pub batches: Vec<u64>,
+    /// Requested minimum cell count; the grid rounds up to a whole
+    /// number of replica planes ([`GridScaleConfig::total_cells`]).
+    pub cells: u64,
+}
+
+impl GridScaleConfig {
+    /// The default harness: BERT-Large at seq 128 over
+    /// {MI100, V100, A100} × {FP32, FP16, INT8} × batches 1..=128 —
+    /// a 72-cell base plane replicated up to `cells`.
+    pub fn default_with_cells(cells: u64) -> GridScaleConfig {
+        GridScaleConfig {
+            model: ModelConfig::bert_large(),
+            seq_len: 128,
+            devices: vec![DeviceSpec::mi100(), DeviceSpec::v100(), DeviceSpec::a100()],
+            precisions: vec![Precision::Fp32, Precision::Mixed, Precision::Int8],
+            batches: vec![1, 2, 4, 8, 16, 32, 64, 128],
+            cells,
+        }
+    }
+
+    /// Cells in one replica plane (the distinct-work count).
+    pub fn base_cells(&self) -> u64 {
+        (self.devices.len() * self.precisions.len() * self.batches.len()) as u64
+    }
+
+    /// Replica planes needed to reach the requested cell floor.
+    pub fn replicas(&self) -> u64 {
+        let base = self.base_cells().max(1);
+        self.cells.div_ceil(base).max(1)
+    }
+
+    /// Actual grid size: `base_cells × replicas` (the smallest whole
+    /// multiple of the base plane ≥ the requested `cells`).
+    pub fn total_cells(&self) -> u64 {
+        self.base_cells() * self.replicas()
+    }
+}
+
+/// One synthetic grid cell. `device` indexes the config's device axis
+/// (cells stay `Copy`-cheap; 100k of them materialize per run).
+#[derive(Debug, Clone, Copy)]
+pub struct GridCell {
+    /// Index into [`GridScaleConfig::devices`].
+    pub device: usize,
+    pub precision: Precision,
+    pub batch: u64,
+    /// Replica-group size this cell models (1..=R; the grid repeats
+    /// the base plane once per replica count).
+    pub replicas: u64,
+}
+
+/// Everything one gridscale run produces: the deterministic core the
+/// artifact snapshots plus the wall-clock measurements.
+#[derive(Debug, Clone)]
+pub struct GridScaleOutcome {
+    /// Actual cells executed (`base_cells × replicas`).
+    pub cells: u64,
+    /// Worker count after clamping to the grid size.
+    pub workers: usize,
+    /// Chunk size the executor claimed per cursor bump.
+    pub chunk: usize,
+    /// Grid-order sum of every cell's modeled throughput — one scalar
+    /// that moves if any cell's value or the grid order changes.
+    pub checksum: f64,
+    /// Smallest / largest modeled cell throughput (requests/second).
+    pub min_throughput: f64,
+    pub max_throughput: f64,
+    /// Shared price-table accounting (deterministic split).
+    pub cache: CacheStats,
+    /// Scheduling-independent dedup rate of the price table.
+    pub cache_dedup: f64,
+    /// Shared graph-intern accounting (deterministic split).
+    pub intern: InternStats,
+    /// Wall time materializing the grid + shared state.
+    pub build_seconds: f64,
+    /// Wall time pricing the grid through the executor.
+    pub price_seconds: f64,
+    /// End-to-end wall time.
+    pub total_seconds: f64,
+}
+
+impl GridScaleOutcome {
+    /// Measured engine throughput over the pricing stage.
+    pub fn cells_per_sec(&self) -> f64 {
+        if self.price_seconds > 0.0 {
+            self.cells as f64 / self.price_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Materialize the grid in deterministic order: replica plane
+/// outermost, then device → precision → batch (so every plane repeats
+/// the same 72-cell shape walk and the checksum order is obvious to
+/// mirror).
+pub fn grid_cells(cfg: &GridScaleConfig) -> Vec<GridCell> {
+    let mut grid = Vec::with_capacity(cfg.total_cells() as usize);
+    for rep in 1..=cfg.replicas() {
+        for device in 0..cfg.devices.len() {
+            for &precision in &cfg.precisions {
+                for &batch in &cfg.batches {
+                    grid.push(GridCell { device, precision, batch, replicas: rep });
+                }
+            }
+        }
+    }
+    grid
+}
+
+/// Run the harness: price every cell through the shared sharded cache
+/// and intern table, fanning out over [`exec::run_grid`].
+pub fn run_gridscale(cfg: &GridScaleConfig, threads: usize) -> GridScaleOutcome {
+    let t0 = Instant::now();
+    let grid = grid_cells(cfg);
+    let n = grid.len();
+    // Stripe for the actual worker count, so the artifact's shard
+    // count is a function of the scenario parameters, not the host.
+    let workers = threads.clamp(1, n.max(1));
+    let table = Arc::new(CostCache::for_threads(workers));
+    let intern = Arc::new(GraphIntern::new());
+    let build_seconds = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let throughputs: Vec<f64> = exec::run_grid(&grid, threads, |cell| {
+        let run = inference_run(cfg.model, cell.batch, cfg.seq_len, cell.precision);
+        let g = intern
+            .get_or_build(GraphKey::base(&run, 0), || IterationGraph::build_inference(&run));
+        let pricer = Cached::with_table(
+            RooflinePricer::new(cfg.devices[cell.device].clone(), cell.precision),
+            Arc::clone(&table),
+        );
+        let seconds = pricer.iteration_seconds(&g);
+        // Modeled aggregate throughput of the cell's replica group.
+        (cell.replicas * cell.batch) as f64 / seconds
+    });
+    let price_seconds = t1.elapsed().as_secs_f64();
+
+    let mut checksum = 0.0_f64;
+    let mut min_t = f64::INFINITY;
+    let mut max_t = f64::NEG_INFINITY;
+    for &t in &throughputs {
+        checksum += t;
+        min_t = min_t.min(t);
+        max_t = max_t.max(t);
+    }
+    GridScaleOutcome {
+        cells: n as u64,
+        workers,
+        // Mirrors exec::run_grid's adaptive chunk formula.
+        chunk: (n / (workers * 8)).max(1),
+        checksum,
+        min_throughput: min_t,
+        max_throughput: max_t,
+        cache: table.stats(),
+        cache_dedup: table.dedup_rate(),
+        intern: intern.stats(),
+        build_seconds,
+        price_seconds,
+        total_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// The run as one JSON artifact. Every field is deterministic for the
+/// given (config, threads) — except the `timing` block, which both
+/// golden comparators (`rust/tests/common`, `compare_artifacts.py`)
+/// skip by key.
+pub fn gridscale_json(cfg: &GridScaleConfig, out: &GridScaleOutcome, threads: usize) -> Json {
+    Json::obj(vec![
+        ("study", Json::str("gridscale")),
+        (
+            "engine",
+            Json::obj(vec![
+                ("threads", Json::num(threads as f64)),
+                ("workers", Json::num(out.workers as f64)),
+                ("chunk", Json::num(out.chunk as f64)),
+                ("shards", Json::num(out.cache.shards as f64)),
+            ]),
+        ),
+        ("cells_requested", Json::num(cfg.cells as f64)),
+        ("cells", Json::num(out.cells as f64)),
+        (
+            "grid",
+            Json::obj(vec![
+                (
+                    "devices",
+                    Json::arr(cfg.devices.iter().map(|d| Json::str(d.name.clone())).collect()),
+                ),
+                (
+                    "precisions",
+                    Json::arr(cfg.precisions.iter().map(|p| Json::str(p.label())).collect()),
+                ),
+                (
+                    "batches",
+                    Json::arr(cfg.batches.iter().map(|&b| Json::num(b as f64)).collect()),
+                ),
+                ("replicas", Json::num(cfg.replicas() as f64)),
+                ("base_cells", Json::num(cfg.base_cells() as f64)),
+                ("seq_len", Json::num(cfg.seq_len as f64)),
+            ]),
+        ),
+        (
+            "throughput",
+            Json::obj(vec![
+                ("checksum", Json::num(out.checksum)),
+                ("min_rps", Json::num(out.min_throughput)),
+                ("max_rps", Json::num(out.max_throughput)),
+            ]),
+        ),
+        (
+            "cost_cache",
+            Json::obj(vec![
+                ("entries", Json::num(out.cache.entries as f64)),
+                ("lookups", Json::num(out.cache.lookups() as f64)),
+                ("hits", Json::num(out.cache.hits as f64)),
+                ("misses", Json::num(out.cache.misses as f64)),
+                ("dedup_rate", Json::num(out.cache_dedup)),
+            ]),
+        ),
+        (
+            "graph_intern",
+            Json::obj(vec![
+                ("entries", Json::num(out.intern.entries as f64)),
+                ("requests", Json::num(out.intern.requests() as f64)),
+                ("hits", Json::num(out.intern.hits as f64)),
+                ("misses", Json::num(out.intern.misses as f64)),
+            ]),
+        ),
+        (
+            "timing",
+            Json::obj(vec![
+                ("build_s", Json::num(out.build_seconds)),
+                ("price_s", Json::num(out.price_seconds)),
+                ("total_s", Json::num(out.total_seconds)),
+                ("cells_per_sec", Json::num(out.cells_per_sec())),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> GridScaleConfig {
+        // One replica plane of the full axes at a small floor.
+        GridScaleConfig::default_with_cells(100)
+    }
+
+    #[test]
+    fn grid_rounds_up_to_whole_replica_planes() {
+        let cfg = tiny();
+        assert_eq!(cfg.base_cells(), 72);
+        assert_eq!(cfg.replicas(), 2);
+        assert_eq!(cfg.total_cells(), 144);
+        assert_eq!(grid_cells(&cfg).len(), 144);
+        let big = GridScaleConfig::default_with_cells(20_000);
+        assert_eq!(big.replicas(), 278);
+        assert_eq!(big.total_cells(), 20_016);
+    }
+
+    #[test]
+    fn grid_order_is_replica_device_precision_batch() {
+        let cfg = tiny();
+        let grid = grid_cells(&cfg);
+        assert_eq!(
+            (grid[0].replicas, grid[0].device, grid[0].precision, grid[0].batch),
+            (1, 0, Precision::Fp32, 1)
+        );
+        // Second plane repeats the first with replicas bumped.
+        assert_eq!(grid[72].replicas, 2);
+        assert_eq!(grid[72].device, grid[0].device);
+        assert_eq!(grid[72].batch, grid[0].batch);
+        // Batch is the innermost axis.
+        assert_eq!(grid[1].batch, 2);
+        assert_eq!(grid[1].precision, Precision::Fp32);
+    }
+
+    #[test]
+    fn outcome_core_is_identical_across_thread_counts() {
+        let cfg = tiny();
+        let base = run_gridscale(&cfg, 2);
+        assert_eq!(base.cells, 144);
+        // Graph construction is device-independent, so distinct graphs
+        // = precisions x batches = 24; the cache (whose key includes
+        // the device fingerprint) dedups at the op level instead.
+        assert_eq!(base.intern.entries, 24);
+        assert_eq!(base.intern.requests(), 144);
+        assert!(base.cache.hits > 0);
+        assert_eq!(base.cache.misses as usize, base.cache.entries);
+        for threads in [1usize, 8] {
+            let o = run_gridscale(&cfg, threads);
+            assert_eq!(o.checksum, base.checksum, "threads={threads}");
+            assert_eq!(o.min_throughput, base.min_throughput);
+            assert_eq!(o.max_throughput, base.max_throughput);
+            assert_eq!(o.cache.hits, base.cache.hits, "threads={threads}");
+            assert_eq!(o.cache.misses, base.cache.misses);
+            assert_eq!(o.cache.entries, base.cache.entries);
+            assert_eq!(o.intern, base.intern);
+        }
+    }
+
+    #[test]
+    fn artifact_shape_is_stable_and_timing_is_isolated() {
+        let cfg = tiny();
+        let out = run_gridscale(&cfg, 2);
+        let j = gridscale_json(&cfg, &out, 2);
+        assert_eq!(j.get("study").unwrap().as_str().unwrap(), "gridscale");
+        assert_eq!(j.get("cells").unwrap().as_f64().unwrap(), 144.0);
+        let engine = j.get("engine").unwrap();
+        assert_eq!(engine.get("threads").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(engine.get("shards").unwrap().as_f64().unwrap(), 4.0);
+        // The volatile measurements live under the one comparator-skipped
+        // key, and nowhere else.
+        assert!(j.get("timing").unwrap().get("cells_per_sec").is_some());
+        for key in ["throughput", "cost_cache", "graph_intern"] {
+            assert!(j.get(key).is_some(), "{key}");
+        }
+    }
+}

@@ -25,6 +25,7 @@
 
 pub mod exec;
 pub mod frontier;
+pub mod gridscale;
 pub mod pareto;
 
 use std::collections::BTreeMap;
@@ -359,6 +360,14 @@ pub fn registry() -> Vec<ScenarioSpec> {
             params: SWEEP_PARAMS_PARETO,
             default_out: Some("pareto_search.json"),
             run: run_pareto,
+        },
+        ScenarioSpec {
+            name: "gridscale",
+            figure: "SSGridScale",
+            title: "synthetic engine-scale grid (sharded cache x chunked executor x intern)",
+            params: SWEEP_PARAMS_GRIDSCALE,
+            default_out: Some("gridscale.json"),
+            run: run_gridscale,
         },
     ]
 }
@@ -879,6 +888,15 @@ const SWEEP_PARAMS_PARETO: &[ParamSpec] = &[
     ParamSpec { key: "max-batches", default: "", help: "max-batch axis (4,8,16,32)" },
     ParamSpec { key: "replicas", default: "", help: "replica-count axis (1,2,4)" },
     ParamSpec { key: "devices", default: "", help: "device-preset axis (mi100,a100,v100)" },
+    THREADS_PARAM,
+];
+
+const SWEEP_PARAMS_GRIDSCALE: &[ParamSpec] = &[
+    ParamSpec {
+        key: "cells",
+        default: "20000",
+        help: "minimum synthetic grid size; rounds up to whole 72-cell replica planes",
+    },
     THREADS_PARAM,
 ];
 
@@ -1540,6 +1558,51 @@ fn run_pareto(p: &Params) -> Result<ScenarioOutput> {
     Ok(ScenarioOutput { text, artifact: pareto::pareto_json(&cfg, &outcome, &cost) })
 }
 
+fn run_gridscale(p: &Params) -> Result<ScenarioOutput> {
+    let cells = p.get_u64("cells")?;
+    if cells == 0 {
+        bail!("--cells must be at least 1");
+    }
+    let cfg = gridscale::GridScaleConfig::default_with_cells(cells);
+    let threads = p.threads()?;
+    let out = gridscale::run_gridscale(&cfg, threads);
+
+    let mut text = format!(
+        "## SSGridScale — synthetic engine-scale grid ({} cells = {} combos x {} replica \
+         planes, {} workers)\n",
+        out.cells,
+        cfg.base_cells(),
+        cfg.replicas(),
+        out.workers
+    );
+    let cols: &[(&str, usize)] = &[("stage", 7), ("seconds", 10)];
+    let rows = vec![
+        vec!["build".to_string(), format!("{:.4}", out.build_seconds)],
+        vec!["price".to_string(), format!("{:.4}", out.price_seconds)],
+        vec!["total".to_string(), format!("{:.4}", out.total_seconds)],
+    ];
+    text.push_str(&report::sweep_table("", cols, &rows));
+    text.push_str(&format!(
+        "\nengine: {:.0} cells/s — chunk {} per claim, {} cache shards\n",
+        out.cells_per_sec(),
+        out.chunk,
+        out.cache.shards
+    ));
+    text.push_str(&format!(
+        "cost-cache: {} op shapes priced across {} lookups ({:.1}% deduplicated)\n",
+        out.cache.entries,
+        out.cache.lookups(),
+        out.cache_dedup * 100.0
+    ));
+    text.push_str(&format!(
+        "graph-intern: {} graphs built across {} requests ({} served from the table)\n",
+        out.intern.entries,
+        out.intern.requests(),
+        out.intern.hits
+    ));
+    Ok(ScenarioOutput { text, artifact: gridscale::gridscale_json(&cfg, &out, threads) })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1554,6 +1617,7 @@ mod tests {
         for required in [
             "fig04", "fig05", "fig07", "fig08", "fig09", "fig10", "fig12", "fig13", "fig15",
             "table3", "memory", "whatif", "serve", "decode", "fleet", "compress", "pareto",
+            "gridscale",
         ] {
             assert!(names.contains(&required), "{required} missing from registry");
         }
@@ -1629,6 +1693,7 @@ mod tests {
                 "fleet" => assert_eq!(s.default_out, Some("fleet_sweep.json")),
                 "compress" => assert_eq!(s.default_out, Some("compress_sweep.json")),
                 "pareto" => assert_eq!(s.default_out, Some("pareto_search.json")),
+                "gridscale" => assert_eq!(s.default_out, Some("gridscale.json")),
                 _ => assert_eq!(s.default_out, None, "{}", s.name),
             }
         }
@@ -1726,6 +1791,37 @@ mod tests {
         assert!(out.text.contains("cost-cache"));
         assert!(out.text.contains("Pareto frontier"));
         assert!(out.text.contains("survivors"));
+    }
+
+    #[test]
+    fn gridscale_scenario_matches_the_direct_engine_artifact() {
+        // Small grid so the test stays fast; the `timing` block is
+        // wall-clock and differs between runs, so compare every
+        // deterministic top-level key instead of whole-artifact bytes.
+        let p = pairs(&[("cells", "200"), ("threads", "2")]);
+        let out = run_by_name("gridscale", &p, true).unwrap();
+        let cfg = gridscale::GridScaleConfig::default_with_cells(200);
+        let direct = gridscale::gridscale_json(&cfg, &gridscale::run_gridscale(&cfg, 2), 2);
+        for key in [
+            "study", "engine", "cells_requested", "cells", "grid", "throughput",
+            "cost_cache", "graph_intern",
+        ] {
+            assert_eq!(
+                out.artifact.get(key).unwrap().to_string(),
+                direct.get(key).unwrap().to_string(),
+                "{key}"
+            );
+        }
+        assert!(out.artifact.get("timing").is_some());
+        assert!(out.text.contains("cost-cache"));
+        assert!(out.text.contains("graph-intern"));
+        assert!(out.text.contains("cells/s"));
+    }
+
+    #[test]
+    fn gridscale_rejects_an_empty_grid() {
+        let err = run_by_name("gridscale", &pairs(&[("cells", "0")]), true).unwrap_err();
+        assert!(err.to_string().contains("--cells must be"), "{err}");
     }
 
     #[test]

@@ -47,6 +47,7 @@ use std::sync::Arc;
 use crate::compress::quant::{self, CompressPrecision};
 use crate::compress::{CompressVariant, CompressedLatencyModel, PruneSpec};
 use crate::config::ModelConfig;
+use crate::model::GraphIntern;
 use crate::perf::device::DeviceSpec;
 use crate::perf::{Cached, CostCache, CostModel};
 use crate::scenario::{exec, frontier};
@@ -270,11 +271,30 @@ pub fn evaluate_candidate(
     demand_rps: f64,
     table: &Arc<CostCache>,
 ) -> ParetoPoint {
+    evaluate_candidate_interned(cfg, cand, requests, demand_rps, table, None)
+}
+
+/// [`evaluate_candidate`] with an optional shared graph-intern table:
+/// candidates at the same (batch, prune, precision) point reuse one
+/// derived graph instead of each rebuilding it. Interned graphs are
+/// op-for-op identical to fresh builds, so every scored number — and
+/// the artifact — is unchanged (`rust/tests/gridscale.rs`).
+pub fn evaluate_candidate_interned(
+    cfg: &ParetoSearchConfig,
+    cand: &Candidate,
+    requests: u64,
+    demand_rps: f64,
+    table: &Arc<CostCache>,
+    intern: Option<&Arc<GraphIntern>>,
+) -> ParetoPoint {
     let label = cand.label(&cfg.model);
     let variant = CompressVariant::new(&label, cand.prune, cand.precision);
     let pricer = shared_pricer(cand.precision, &cand.device, table);
     let mut lm = CompressedLatencyModel::new(cfg.model, &variant, cand.device.clone())
         .with_pricer(pricer);
+    if let Some(intern) = intern {
+        lm = lm.with_intern(Arc::clone(intern));
+    }
     let trace = Workload::poisson(demand_rps, requests, cfg.seed)
         .with_seq_range((cfg.seq_max / 8).max(1), cfg.seq_max)
         .generate();
@@ -326,7 +346,8 @@ pub fn run_search(
     threads: usize,
 ) -> (ParetoOutcome, Arc<CostCache>) {
     assert!(cfg.rungs >= 1, "at least one rung");
-    let table = Arc::new(CostCache::new());
+    let table = Arc::new(CostCache::for_threads(threads.max(1)));
+    let intern = Arc::new(GraphIntern::new());
     let demand_rps = cfg.demand_rps(&table);
     let cands = cfg.candidates();
     let mut survivors: Vec<usize> = (0..cands.len()).collect();
@@ -337,7 +358,7 @@ pub fn run_search(
         let n_r = cfg.rung_requests(r);
         let grid: Vec<Candidate> = survivors.iter().map(|&i| cands[i].clone()).collect();
         results = exec::run_grid(&grid, threads, |cand| {
-            evaluate_candidate(cfg, cand, n_r, demand_rps, &table)
+            evaluate_candidate_interned(cfg, cand, n_r, demand_rps, &table, Some(&intern))
         });
         searched += grid.len() as u64;
         let survivor_count = if r + 1 < cfg.rungs {
@@ -376,11 +397,12 @@ pub fn run_full_grid(
     cfg: &ParetoSearchConfig,
     threads: usize,
 ) -> (Vec<ParetoPoint>, Arc<CostCache>) {
-    let table = Arc::new(CostCache::new());
+    let table = Arc::new(CostCache::for_threads(threads.max(1)));
+    let intern = Arc::new(GraphIntern::new());
     let demand_rps = cfg.demand_rps(&table);
     let cands = cfg.candidates();
     let results = exec::run_grid(&cands, threads, |cand| {
-        evaluate_candidate(cfg, cand, cfg.requests, demand_rps, &table)
+        evaluate_candidate_interned(cfg, cand, cfg.requests, demand_rps, &table, Some(&intern))
     });
     (results, table)
 }

@@ -65,6 +65,16 @@ impl ServeHead {
             ServeHead::Squad => "squad-head",
         }
     }
+
+    /// The builder discriminant for [`crate::model::GraphKey::variant`]:
+    /// `forward_graph` builds a different op inventory per head at the
+    /// same model config, so interned entries must key on the head.
+    pub fn intern_tag(self) -> u32 {
+        match self {
+            ServeHead::Pretrain => 0,
+            ServeHead::Squad => 1,
+        }
+    }
 }
 
 /// A `RunConfig` at an arbitrary `(batch, seq_len)` serving point.

@@ -90,6 +90,13 @@ pub fn update_mode() -> bool {
     std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Object key holding wall-clock measurements (the gridscale
+/// artifact's per-stage timings): volatile by construction, so the
+/// comparison skips it entirely — in recursion and in both
+/// missing-key directions (the mirror-written snapshot omits it; the
+/// Rust artifact carries it).
+pub const VOLATILE_KEY: &str = "timing";
+
 /// Recursive field-by-field comparison; appends every divergence to
 /// `errs` as a `path: detail` line.
 pub fn diff(path: &str, want: &Json, got: &Json, errs: &mut Vec<String>) {
@@ -122,16 +129,19 @@ pub fn diff(path: &str, want: &Json, got: &Json, errs: &mut Vec<String>) {
         }
         (Json::Obj(a), Json::Obj(b)) => {
             for k in a.keys() {
-                if !b.contains_key(k) {
+                if k != VOLATILE_KEY && !b.contains_key(k) {
                     errs.push(format!("{path}.{k}: missing from computed artifact"));
                 }
             }
             for k in b.keys() {
-                if !a.contains_key(k) {
+                if k != VOLATILE_KEY && !a.contains_key(k) {
                     errs.push(format!("{path}.{k}: not in golden snapshot"));
                 }
             }
             for (k, x) in a {
+                if k == VOLATILE_KEY {
+                    continue;
+                }
                 if let Some(y) = b.get(k) {
                     diff(&format!("{path}.{k}"), x, y, errs);
                 }

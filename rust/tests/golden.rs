@@ -307,6 +307,35 @@ fn golden_pareto_matches_the_registry_path() {
 }
 
 #[test]
+fn golden_gridscale() {
+    // The reduced engine-scale grid the snapshot pins: 2000 requested
+    // cells -> 28 replica planes x 72 combos = 2016 cells, 2 workers.
+    // Everything but the wall-clock `timing` block (which the
+    // comparator skips) is deterministic at any thread count.
+    let cfg = bertprof::scenario::gridscale::GridScaleConfig::default_with_cells(2_000);
+    let out = bertprof::scenario::gridscale::run_gridscale(&cfg, 2);
+    // The ISSUE acceptance shape rides inside the snapshot: repeated
+    // planes make the shared cache dedup the overwhelming majority of
+    // its lookups, and the intern builds each distinct graph once.
+    assert!(out.cache_dedup > 0.9, "dedup {:.3} under the bar", out.cache_dedup);
+    assert_eq!(out.intern.misses as usize, out.intern.entries);
+    check("gridscale", bertprof::scenario::gridscale::gridscale_json(&cfg, &out, 2));
+}
+
+#[test]
+fn golden_gridscale_matches_the_registry_path() {
+    // `bertprof run gridscale --set cells=2000 --set threads=2` emits
+    // exactly the golden-gated artifact (the CI scenario-artifacts row).
+    let out = bertprof::scenario::run_by_name(
+        "gridscale",
+        &[("cells".into(), "2000".into()), ("threads".into(), "2".into())],
+        true,
+    )
+    .expect("gridscale runs");
+    check("gridscale", out.artifact);
+}
+
+#[test]
 fn golden_artifacts_are_run_to_run_stable() {
     // The "two consecutive runs" acceptance shape, in-process: every
     // artifact is byte-identical when recomputed.

@@ -1,0 +1,128 @@
+//! Engine-scale stress tests for the sharded cache, the chunked
+//! executor, and graph interning (the SSGridScale tentpole).
+//!
+//! The contract under load: a ≥10k-cell grid priced at {1, 2, 8, 32}
+//! worker threads produces *identical* per-cell outputs and *identical*
+//! cache accounting — not merely identical totals, but the same
+//! hit/miss split, because the compute-under-lock miss path prices each
+//! distinct key exactly once regardless of scheduling. And an interned
+//! pruned graph must be op-for-op the graph a fresh, intern-free
+//! rebuild produces — the table memoizes construction, never changes
+//! its result.
+
+use std::sync::Arc;
+
+use bertprof::compress::PruneSpec;
+use bertprof::config::Precision;
+use bertprof::model::{GraphIntern, GraphKey, IterationGraph};
+use bertprof::perf::{CacheStats, Cached, CostCache, CostModel, RooflinePricer};
+use bertprof::scenario::exec;
+use bertprof::scenario::gridscale::{grid_cells, run_gridscale, GridCell, GridScaleConfig};
+use bertprof::serve::graph::inference_run;
+
+/// Price every cell of `cfg`'s grid through one shared sharded table,
+/// returning the raw per-cell outputs plus the table's final split.
+fn price_grid(
+    cfg: &GridScaleConfig,
+    threads: usize,
+    chunked: bool,
+) -> (Vec<f64>, CacheStats) {
+    let grid = grid_cells(cfg);
+    let table = Arc::new(CostCache::for_threads(threads));
+    let intern = Arc::new(GraphIntern::new());
+    let cell_fn = |cell: &GridCell| {
+        let run = inference_run(cfg.model, cell.batch, cfg.seq_len, cell.precision);
+        let g = intern
+            .get_or_build(GraphKey::base(&run, 0), || IterationGraph::build_inference(&run));
+        let pricer = Cached::with_table(
+            RooflinePricer::new(cfg.devices[cell.device].clone(), cell.precision),
+            Arc::clone(&table),
+        );
+        (cell.replicas * cell.batch) as f64 / pricer.iteration_seconds(&g)
+    };
+    let out = if chunked {
+        exec::run_grid(&grid, threads, cell_fn)
+    } else {
+        exec::run_grid_cell_stride(&grid, threads, cell_fn)
+    };
+    (out, table.stats())
+}
+
+#[test]
+fn ten_k_cell_grid_is_exact_at_every_thread_count() {
+    // 10_000 requested -> 139 replica planes -> 10_008 cells.
+    let cfg = GridScaleConfig::default_with_cells(10_000);
+    assert!(cfg.total_cells() >= 10_000);
+    let (base_out, base_stats) = price_grid(&cfg, 1, true);
+    assert_eq!(base_out.len(), cfg.total_cells() as usize);
+    // Single-threaded ground truth: every lookup past the first plane's
+    // misses is a hit, and misses == resident entries.
+    assert_eq!(base_stats.misses as usize, base_stats.entries);
+    assert!(base_stats.hits > base_stats.misses, "{base_stats:?}");
+    for threads in [2usize, 8, 32] {
+        let (out, stats) = price_grid(&cfg, threads, true);
+        assert_eq!(out, base_out, "outputs drifted at {threads} threads");
+        // The full split — not just the total — is scheduling-
+        // independent; only the shard count varies with `threads`.
+        assert_eq!(stats.hits, base_stats.hits, "{threads} threads");
+        assert_eq!(stats.misses, base_stats.misses, "{threads} threads");
+        assert_eq!(stats.entries, base_stats.entries, "{threads} threads");
+        assert_eq!(stats.lookups(), base_stats.lookups());
+    }
+}
+
+#[test]
+fn chunked_and_cell_stride_executors_agree_under_load() {
+    let cfg = GridScaleConfig::default_with_cells(10_000);
+    let (chunked, chunked_stats) = price_grid(&cfg, 8, true);
+    let (strided, strided_stats) = price_grid(&cfg, 8, false);
+    assert_eq!(chunked, strided);
+    assert_eq!(chunked_stats, strided_stats);
+}
+
+#[test]
+fn gridscale_outcome_is_thread_count_invariant() {
+    let cfg = GridScaleConfig::default_with_cells(10_000);
+    let base = run_gridscale(&cfg, 1);
+    for threads in [2usize, 8, 32] {
+        let o = run_gridscale(&cfg, threads);
+        assert_eq!(o.checksum, base.checksum, "{threads} threads");
+        assert_eq!(o.min_throughput, base.min_throughput);
+        assert_eq!(o.max_throughput, base.max_throughput);
+        assert_eq!(o.cache.hits, base.cache.hits);
+        assert_eq!(o.cache.misses, base.cache.misses);
+        assert_eq!(o.intern, base.intern);
+    }
+    // One graph per distinct (device-independent) combo: precisions x
+    // batches; every replica plane reuses them.
+    assert_eq!(base.intern.requests(), cfg.total_cells());
+    assert!(base.intern.entries < base.intern.requests() as usize);
+}
+
+#[test]
+fn interned_pruned_graph_equals_a_fresh_rebuild() {
+    let run = inference_run(
+        bertprof::config::ModelConfig::bert_large(),
+        8,
+        128,
+        Precision::Mixed,
+    );
+    let spec = PruneSpec::dense(&run.model).keep_heads(8).keep_ff(2048);
+
+    let intern = GraphIntern::new();
+    let key = GraphKey::base(&run, 0);
+    let base = intern.get_or_build(key, || IterationGraph::build_inference(&run));
+    let pruned = intern.get_or_build(key.pruned(spec), || spec.apply(&run.model, &base));
+
+    // Intern-free ground truth: the table memoizes construction, never
+    // alters its result.
+    let fresh = spec.apply(&run.model, &IterationGraph::build_inference(&run));
+    assert_eq!(pruned.ops, fresh.ops, "interned pruned graph diverged from rebuild");
+
+    // A second request is served from the table — same allocation, no
+    // rebuild (the closure would panic).
+    let again = intern.get_or_build(key.pruned(spec), || unreachable!("must not rebuild"));
+    assert!(Arc::ptr_eq(&pruned, &again));
+    assert_eq!(intern.stats().entries, 2);
+    assert_eq!(intern.stats().hits, 1);
+}
