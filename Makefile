@@ -1,7 +1,7 @@
 # bertprof build drivers. The HLO half of `make artifacts` is the only
 # step that needs python (JAX); everything else is cargo.
 
-.PHONY: build test bench doc artifacts bench-costmodel bench-decode bench-fleet bench-pareto bench-gridscale clean-artifacts
+.PHONY: build test bench doc check artifacts bench-costmodel bench-decode bench-fleet bench-pareto bench-gridscale clean-artifacts
 
 build:
 	cargo build --release
@@ -28,6 +28,16 @@ define require_cargo
 		exit 1; \
 	}
 endef
+
+# The static-analysis gate (DESIGN.md SSAnalysis): seven pure-python
+# checkers over rust/ — delimiters, symbol resolution, struct-literal
+# coverage, trait conformance, unsafe inventory, determinism lints,
+# surface sync. Needs no cargo; runs in ~1s. CI runs this as a hard
+# gate, and `make artifacts` refuses to produce artifacts from a tree
+# that fails it. After a reviewed unsafe-surface change, regenerate the
+# inventory with: cd python && python3 -m analysis.bertcheck --root .. --update
+check:
+	cd python && python3 -m analysis.bertcheck --root ..
 
 # The cost-model bench data point (DESIGN.md SSCost): trait-dispatch +
 # cached-vs-uncached pricing overhead on the serve grid, written to
@@ -70,7 +80,7 @@ bench-gridscale:
 # python/ so aot.py's relative imports and default --out resolve) and
 # record the cost-model + decode + fleet + pareto + gridscale bench
 # trajectory points.
-artifacts: bench-costmodel bench-decode bench-fleet bench-pareto bench-gridscale
+artifacts: check bench-costmodel bench-decode bench-fleet bench-pareto bench-gridscale
 	cd python && python3 -m compile.aot --out ../artifacts
 
 clean-artifacts:

@@ -1,0 +1,9 @@
+"""Static-analysis tooling for the bertprof repo (DESIGN.md SSAnalysis).
+
+`analysis.bertcheck` is the toolchain-less audit pass: the per-PR
+hand-rolled Rust audits (CHANGES.md PRs 2-9), mechanized. Run it as
+
+    cd python && python3 -m analysis.bertcheck --root ..
+
+or via `make check` from the repo root.
+"""

@@ -1,0 +1,50 @@
+"""bertcheck — the CI-gated static-analysis pass over rust/.
+
+Every PR before this one re-derived some slice of the same audit by
+hand: delimiter balance (PR 2+), cross-module symbol existence (PR 8's
+five-file line-by-line pass), struct-literal field coverage (the PR 8
+`SimReport` 17-field check), trait-impl conformance (the `CostModel`
+trait-object seams), unsafe soundness notes (PR 9's `Slots`), and
+surface sync between the scenario registry, the Python mirror, CI, and
+DESIGN.md. This package is those audits as code: seven checkers over a
+string/comment-aware token stream, each returning `Finding`s, run by
+`analysis.bertcheck.runner` (`make check`).
+
+What this pass is NOT: a compiler. It proves name-level and
+shape-level facts (paths resolve, fields are covered, arities match);
+it cannot see type inference, borrows, or lifetimes. DESIGN.md
+SSAnalysis records each checker's blind spots.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Finding:
+    """One analyzer finding, pointing at a repo-relative file:line."""
+
+    checker: str
+    path: str
+    line: int
+    message: str
+    severity: str = "error"  # "error" gates CI; "warn" is advisory
+
+    def render(self) -> str:
+        sev = "error" if self.severity == "error" else "warn "
+        return f"[{self.checker}] {sev} {self.path}:{self.line}: {self.message}"
+
+
+# Inline waiver: a comment containing `bertcheck: allow(<checker>)` on
+# the flagged line or up to two lines above suppresses that checker
+# there. Waivers are for findings a human has judged sound (e.g. a
+# HashMap iteration whose output is sorted before use) — the directive
+# plus its trailing justification stays in the source, reviewable.
+ALLOW_SPAN = 2
+
+
+def allowed(rust_file, checker: str, line: int) -> bool:
+    """True if `line` (1-based) carries an allow(<checker>) waiver."""
+    for cline, text in rust_file.comments:
+        if cline <= line <= cline + ALLOW_SPAN and f"bertcheck: allow({checker})" in text:
+            return True
+    return False

@@ -1,0 +1,7 @@
+"""`python3 -m analysis.bertcheck` — see runner.py."""
+
+import sys
+
+from .runner import main
+
+sys.exit(main())

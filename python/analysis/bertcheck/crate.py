@@ -1,0 +1,298 @@
+"""Crate-level model: module tree, symbol tables, path resolution.
+
+Maps every .rs file to its module identity (`rust/src/serve/fleet.rs`
+-> `crate::serve::fleet`), builds a per-module symbol table including
+`pub use` re-exports, and resolves arbitrary `use`/inline paths with
+Rust-2018 uniform-path rules. Crate boundaries are modeled: `rust/
+tests`, `rust/benches`, `examples`, and `src/main.rs` are *external*
+crates that see only fully-`pub` chains through `bertprof::`, while
+in-crate paths accept `pub(crate)`/`pub(super)`/ancestor access.
+"""
+
+import re
+from dataclasses import dataclass
+
+from .parse import parse_file
+
+STD_ROOTS = {"std", "core", "alloc", "proc_macro"}
+LIB_ROOT = ("crate",)
+VENDOR_ROOTS = {"anyhow": ("anyhow",), "xla": ("xla",)}
+TEST_COMMON = ("xcommon",)
+
+
+def module_of_path(rel):
+    """(module tuple, crate kind) for a repo-relative .rs path.
+
+    kind: "lib" (the bertprof crate), "vendor", "external" (its own
+    crate rooted at the file: tests, benches, examples, main.rs), or
+    "test-common" (textually included into each test crate).
+    """
+    parts = rel.split("/")
+    if rel.startswith("rust/src/"):
+        tail = parts[2:]
+        if tail == ["lib.rs"]:
+            return LIB_ROOT, "lib"
+        if tail == ["main.rs"]:
+            return ("xbin_main",), "external"
+        if tail[-1] == "mod.rs":
+            return LIB_ROOT + tuple(tail[:-1]), "lib"
+        return LIB_ROOT + tuple(tail[:-1]) + (tail[-1][:-3],), "lib"
+    if rel.startswith("rust/vendor/"):
+        crate = parts[2]
+        return (crate,), "vendor"
+    if rel == "rust/tests/common/mod.rs":
+        return TEST_COMMON, "test-common"
+    if rel.startswith("rust/tests/"):
+        return ("xtest_" + parts[-1][:-3],), "external"
+    if rel.startswith("rust/benches/"):
+        return ("xbench_" + parts[-1][:-3],), "external"
+    if rel.startswith("examples/"):
+        return ("xexample_" + parts[-1][:-3],), "external"
+    return ("xother_" + parts[-1][:-3],), "external"
+
+
+@dataclass
+class Resolution:
+    ok: bool
+    reason: str = ""
+    item = None
+
+
+class Crate:
+    """All parsed files + symbol tables + the resolver."""
+
+    def __init__(self, tree):
+        """`tree`: {rel_path: RustFile}."""
+        self.files = {}
+        self.kinds = {}
+        for rel, rf in tree.items():
+            module, kind = module_of_path(rel)
+            self.files[rel] = parse_file(rf, module)
+            self.kinds[rel] = kind
+        # module tuple -> {name: ("item", Item) | ("reexport", Import)}
+        self.modules = {}
+        # module tuple -> vis of its `mod` declaration (roots are pub)
+        self.mod_vis = {}
+        self.existing_modules = set()
+        for rel, pf in self.files.items():
+            self.existing_modules.add(pf.module)
+            self.mod_vis.setdefault(pf.module, "pub")
+            for item in pf.items:
+                self.existing_modules.add(item.module)
+                tbl = self.modules.setdefault(item.module, {})
+                tbl[item.name] = ("item", item, rel)
+                if item.kind == "mod":
+                    self.mod_vis[item.module + (item.name,)] = item.vis
+            for imp in pf.imports:
+                if imp.vis.startswith("pub") and not imp.is_glob:
+                    tbl = self.modules.setdefault(imp.module, {})
+                    tbl[imp.alias] = ("reexport", imp, rel)
+        # `mod x;` declarations name child modules whose items live in
+        # another file; ensure the child module registers even when the
+        # child file failed to parse anything.
+        for rel, pf in self.files.items():
+            for md in pf.mod_decls:
+                self.existing_modules.add(md.module + (md.name,))
+                self.mod_vis.setdefault(md.module + (md.name,), md.vis)
+
+    # -- lookup ----------------------------------------------------------
+
+    def lookup(self, module, name, _seen=None):
+        """Resolve `name` in `module`, following pub-use re-exports.
+
+        Returns (Item, defining_rel_path) or None.
+        """
+        entry = self.modules.get(module, {}).get(name)
+        if entry is None:
+            return None
+        tag, payload, rel = entry
+        if tag == "item":
+            return payload, rel
+        # re-export: resolve its target path from its own context
+        _seen = _seen or set()
+        key = (module, name)
+        if key in _seen:
+            return None
+        _seen.add(key)
+        res = self.resolve(payload.segments, rel, payload.module,
+                           external=False, _seen=_seen)
+        if res.ok and res.item is not None:
+            return res.item
+        return None
+
+    def crate_root_of(self, rel):
+        module, kind = self.files[rel].module, self.kinds[rel]
+        if kind in ("lib", "vendor"):
+            return (module[0],) if kind == "vendor" else LIB_ROOT
+        return module  # external crates are rooted at the file
+
+    # -- the resolver ----------------------------------------------------
+
+    def resolve(self, segments, rel, from_module, external=False, _seen=None):
+        """Resolve a path from `from_module` in file `rel`.
+
+        `external` marks consumers outside the bertprof crate (tests,
+        benches, examples, main.rs) once the path crosses into it —
+        they see only fully-`pub` chains.
+        """
+        segs = list(segments)
+        if not segs:
+            return Resolution(True)
+        kind = self.kinds[rel]
+        cur = None
+        # --- root segment ---
+        head = segs[0]
+        if head in STD_ROOTS:
+            return Resolution(True)  # stdlib: out of audit scope
+        if head == "crate":
+            cur = self.crate_root_of(rel)
+            segs = segs[1:]
+        elif head == "super":
+            cur = from_module
+            while segs and segs[0] == "super":
+                if len(cur) <= 1:
+                    return Resolution(False, "`super` escapes the crate root")
+                cur = cur[:-1]
+                segs = segs[1:]
+        elif head == "self":
+            cur = from_module
+            segs = segs[1:]
+        elif head == "bertprof":
+            cur = LIB_ROOT
+            segs = segs[1:]
+            external = kind != "lib"
+        elif head in VENDOR_ROOTS:
+            cur = VENDOR_ROOTS[head]
+            segs = segs[1:]
+            external = kind != "vendor" or self.files[rel].module[0] != head
+        elif head == "common" and kind == "external" and \
+                self.files[rel].module[0].startswith("xtest_"):
+            cur = TEST_COMMON
+            segs = segs[1:]
+        else:
+            # Uniform path: a child module of the current module, an
+            # alias bound by an earlier `use`, or glob-imported.
+            if from_module + (head,) in self.existing_modules:
+                cur = from_module + (head,)
+                segs = segs[1:]
+            else:
+                spliced = self._alias_target(rel, head)
+                if spliced is not None:
+                    return self.resolve(
+                        tuple(spliced) + tuple(segs[1:]), rel, from_module,
+                        external=external, _seen=_seen)
+                found = self.lookup(from_module, head, _seen=_seen)
+                if found is not None:
+                    return self._finish_item(found, segs[1:], from_module,
+                                             external)
+                if self._has_glob(rel):
+                    return Resolution(True)  # glob import: can't verify
+                return Resolution(
+                    False, f"cannot resolve first segment `{head}`")
+        # --- walk modules ---
+        while segs:
+            seg = segs[0]
+            nxt = cur + (seg,)
+            if nxt in self.existing_modules:
+                vis = self.mod_vis.get(nxt, "")
+                if external and vis != "pub":
+                    return Resolution(
+                        False,
+                        f"module `{'::'.join(nxt)}` is not `pub` "
+                        f"(declared `{vis or 'private'}`) but is used from "
+                        "outside the crate")
+                if not self._visible(vis, cur, from_module, external=False):
+                    return Resolution(
+                        False,
+                        f"module `{'::'.join(nxt)}` (vis `{vis or 'private'}`)"
+                        f" is not visible from `{'::'.join(from_module)}`")
+                cur = nxt
+                segs = segs[1:]
+                continue
+            if seg == "*":
+                return Resolution(True)  # module glob
+            found = self.lookup(cur, seg, _seen=_seen)
+            if found is None:
+                return Resolution(
+                    False,
+                    f"`{seg}` not found in module `{'::'.join(cur)}`")
+            item, _ = found
+            vis = item.vis
+            if external and vis != "pub":
+                return Resolution(
+                    False,
+                    f"`{'::'.join(cur)}::{seg}` is `{vis or 'private'}` but "
+                    "is used from outside the crate (needs `pub`)")
+            if not external and not self._visible(vis, item.module,
+                                                  from_module, external=False):
+                return Resolution(
+                    False,
+                    f"`{'::'.join(cur)}::{seg}` is `{vis or 'private'}` and "
+                    f"not visible from `{'::'.join(from_module)}`")
+            return self._finish_item(found, segs[1:], from_module, external)
+        # Path names a module itself (e.g. `use crate::scenario::exec;`).
+        res = Resolution(True)
+        return res
+
+    def _finish_item(self, found, rest, from_module, external):
+        """Item located; validate any trailing segments (variants etc.)."""
+        item, rel = found
+        res = Resolution(True)
+        res.item = found
+        if not rest:
+            return res
+        if item.kind == "enum":
+            nxt = rest[0]
+            if nxt == "*":
+                return res  # enum-variant glob import
+            if nxt in item.variants or nxt in ("default",):
+                return res
+            # Not a variant: could be an associated fn/const from an
+            # inherent impl — those aren't indexed per-enum, accept.
+            return res
+        # Assoc items on structs/traits/fns: out of name-table scope.
+        return res
+
+    def _alias_target(self, rel, name):
+        """A `use` alias bound at file scope, e.g. `exec` -> crate::scenario::exec."""
+        for imp in self.files[rel].imports:
+            if not imp.is_glob and imp.alias == name:
+                return imp.segments
+        return None
+
+    def _has_glob(self, rel):
+        return any(imp.is_glob for imp in self.files[rel].imports)
+
+    @staticmethod
+    def _is_ancestor(a, b):
+        """a is b or an ancestor of b."""
+        return len(a) <= len(b) and b[: len(a)] == a
+
+    def _visible(self, vis, def_module, use_module, external):
+        if external:
+            return vis == "pub"
+        if self._is_ancestor(def_module, use_module):
+            return True  # descendants see everything above them
+        if vis in ("pub", "pub(crate)", "pub( crate )"):
+            return True
+        if vis.startswith("pub(super") or vis.startswith("pub( super"):
+            return self._is_ancestor(def_module[:-1], use_module)
+        if vis.startswith("pub(in") or vis.startswith("pub( in"):
+            return True  # rare; accept rather than false-positive
+        return False
+
+
+_INLINE_PATH = re.compile(
+    r"(?<![$\w])(crate|bertprof)\s*::\s*"
+    r"([A-Za-z_][A-Za-z0-9_]*(?:\s*::\s*[A-Za-z_][A-Za-z0-9_]*)*)"
+)
+
+
+def inline_paths(rust_file):
+    """(line, [segments]) for every crate::/bertprof::-rooted path in
+    the masked text — fn bodies included, strings/comments excluded."""
+    out = []
+    for m in _INLINE_PATH.finditer(rust_file.masked):
+        segs = [m.group(1)] + re.split(r"\s*::\s*", m.group(2))
+        out.append((rust_file.line_of(m.start()), segs))
+    return out

@@ -1,0 +1,48 @@
+"""Checker: string/comment-aware delimiter balance.
+
+The oldest audit in the repo — re-written ad hoc in every PR since
+PR 2 — now a first-class checker. Over the *masked* source (so a `{`
+inside a string literal, doc comment, or char literal can never count)
+each file's `()[]{}` must nest and close: a mismatched closer reports
+both ends, an unclosed opener reports where it opened, and a stray
+closer reports itself. This is the cheapest possible proxy for "the
+file at least tokenizes" in a container with no rustc.
+"""
+
+from . import Finding
+
+CHECKER = "delimiters"
+
+PAIRS = {"(": ")", "[": "]", "{": "}"}
+CLOSERS = {v: k for k, v in PAIRS.items()}
+
+
+def check_text(masked, line_of):
+    """Balance findings over one masked text. `line_of(pos)` maps to lines."""
+    out = []
+    stack = []  # (opener char, pos)
+    for pos, ch in enumerate(masked):
+        if ch in PAIRS:
+            stack.append((ch, pos))
+        elif ch in CLOSERS:
+            if not stack:
+                out.append((line_of(pos), f"unmatched `{ch}` with no opener"))
+                continue
+            opener, opos = stack.pop()
+            if PAIRS[opener] != ch:
+                out.append((
+                    line_of(pos),
+                    f"mismatched delimiter: `{opener}` opened at line "
+                    f"{line_of(opos)} but closed by `{ch}`"))
+    for opener, opos in stack:
+        out.append((line_of(opos), f"`{opener}` opened here is never closed"))
+    return out
+
+
+def run(ctx):
+    findings = []
+    for rel in sorted(ctx.tree):
+        rf = ctx.tree[rel]
+        for line, msg in check_text(rf.masked, rf.line_of):
+            findings.append(Finding(CHECKER, rel, line, msg))
+    return findings

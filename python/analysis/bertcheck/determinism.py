@@ -1,0 +1,143 @@
+"""Checker: determinism lints for artifact-producing code.
+
+Golden artifacts are byte-compared (rust/tests/golden/, the mirror,
+CI's compare_artifacts.py), so any wall-clock read or unordered-map
+iteration on an artifact path is a latent flake. Two lints over
+`rust/src`:
+
+1. **Wall-clock**: `Instant` / `SystemTime` / `UNIX_EPOCH` tokens are
+   banned outside the declared volatile-timing allowlist below. The
+   allowlist is the complete, reviewed set of places time may be read;
+   extending it is a reviewed diff of this file.
+2. **Unordered iteration**: iterating a `HashMap`/`HashSet` (`.iter()`,
+   `.keys()`, `.values()`, `.drain()`, `.into_iter()`, `for … in &m`)
+   is flagged when the receiver is locally known to be one — from a
+   `let x: HashMap<…>`, `x = HashMap::new()`, or a struct field typed
+   `HashMap<…>` in the same file. Sites whose order provably washes
+   out (e.g. sorted immediately after) carry an inline
+   `// bertcheck: allow(determinism)` waiver with justification.
+
+Blind spots: receiver types from other files / through generics are
+invisible; `BTreeMap` is deterministic and deliberately not flagged.
+"""
+
+import re
+
+from . import Finding, allowed
+from .parse import tokenize
+
+CHECKER = "determinism"
+
+# path -> why wall-clock reads are sound there. This IS the "declared
+# volatile timing allowlist" from DESIGN.md SSAnalysis: every entry is
+# either outside the artifact surface or feeds a comparator-skipped
+# `timing` block.
+WALLCLOCK_ALLOWLIST = {
+    "rust/src/util/bench.rs":
+        "the bench harness exists to measure wall-clock; BENCH_*.json "
+        "is a trajectory artifact, never byte-compared",
+    "rust/src/runtime/executor.rs":
+        "the measured-execution path (PJRT); measured numbers are "
+        "explicitly not golden-gated",
+    "rust/src/scenario/gridscale.rs":
+        "feeds only the volatile `timing` block that both comparators "
+        "(rust/tests/common, compare_artifacts.py) skip by key",
+    "rust/src/main.rs":
+        "`bertprof train` wall-clock progress print to stdout; not part "
+        "of any artifact",
+}
+
+WALLCLOCK_TOKENS = {"Instant", "SystemTime", "UNIX_EPOCH"}
+UNORDERED_TYPES = ("HashMap", "HashSet")
+ITER_METHODS = {
+    "iter", "iter_mut", "keys", "values", "values_mut", "drain",
+    "into_iter", "into_keys", "into_values",
+}
+
+_DECL_TYPE = re.compile(
+    r"\b([a-z_][A-Za-z0-9_]*)\s*:\s*(?:&\s*(?:mut\s+)?)?"
+    r"(?:std\s*::\s*collections\s*::\s*)?(?:HashMap|HashSet)\s*<"
+)
+_DECL_INIT = re.compile(
+    r"\blet\s+(?:mut\s+)?([a-z_][A-Za-z0-9_]*)\s*(?::[^=;]*)?=\s*"
+    r"(?:std\s*::\s*collections\s*::\s*)?(?:HashMap|HashSet)\s*::\s*"
+    r"(?:new|with_capacity|default|from)\b"
+)
+
+
+def _unordered_idents(masked):
+    idents = set(_DECL_TYPE.findall(masked))
+    idents.update(_DECL_INIT.findall(masked))
+    return idents
+
+
+def check_file(ctx, rel):
+    findings = []
+    rf = ctx.tree[rel]
+    toks = tokenize(rf.masked)
+    # -- lint 1: wall-clock --
+    if rel not in WALLCLOCK_ALLOWLIST:
+        for t, pos in toks:
+            if t in WALLCLOCK_TOKENS:
+                line = rf.line_of(pos)
+                if allowed(rf, CHECKER, line):
+                    continue
+                findings.append(Finding(
+                    CHECKER, rel, line,
+                    f"wall-clock token `{t}` outside the volatile-timing "
+                    "allowlist — goldens are byte-compared; route timing "
+                    "through a comparator-skipped `timing` block or add "
+                    "an allowlist entry with justification"))
+    # -- lint 2: unordered-map iteration --
+    idents = _unordered_idents(rf.masked)
+    if not idents:
+        return findings
+    n = len(toks)
+    for i, (t, pos) in enumerate(toks):
+        if t not in idents:
+            continue
+        line = rf.line_of(pos)
+        flagged = None
+        # x.iter() / self.x.keys() …
+        if i + 2 < n and toks[i + 1][0] == "." and toks[i + 2][0] in ITER_METHODS:
+            flagged = toks[i + 2][0]
+        # for v in [&|&mut] x {   /  .extend(x)-style iteration is rarer
+        else:
+            j = i - 1
+            while j >= 0 and toks[j][0] in ("&", "mut"):
+                j -= 1
+            if j >= 0 and toks[j][0] == "in" and i + 1 < n and toks[i + 1][0] == "{":
+                flagged = "for-loop"
+        if flagged is None:
+            continue
+        if allowed(rf, CHECKER, line):
+            continue
+        findings.append(Finding(
+            CHECKER, rel, line,
+            f"iteration over unordered map/set `{t}` via `{flagged}` — "
+            "HashMap order varies per process; sort the result, use "
+            "BTreeMap, or waive with `// bertcheck: allow(determinism)` "
+            "plus a justification if the order provably washes out"))
+    return findings
+
+
+def run(ctx):
+    findings = []
+    scope = [rel for rel in sorted(ctx.tree) if rel.startswith("rust/src/")]
+    for rel in scope:
+        findings.extend(check_file(ctx, rel))
+    # The allowlist itself must not rot: every entry should still name
+    # a file that exists and still reads the clock.
+    for rel, why in sorted(WALLCLOCK_ALLOWLIST.items()):
+        rf = ctx.tree.get(rel)
+        if rf is None:
+            findings.append(Finding(
+                CHECKER, rel, 1,
+                "stale wall-clock allowlist entry: file no longer exists"))
+        elif not any(tok in rf.masked for tok in WALLCLOCK_TOKENS):
+            findings.append(Finding(
+                CHECKER, rel, 1,
+                "stale wall-clock allowlist entry: file no longer reads "
+                "the clock — drop it from determinism.WALLCLOCK_ALLOWLIST",
+                severity="warn"))
+    return findings

@@ -1,0 +1,634 @@
+"""A lightweight Rust item parser over masked source.
+
+This is deliberately *not* a full grammar: it extracts exactly the
+item-level facts the checkers consume — module nesting, `use` trees,
+`pub` items, struct fields, enum variants, trait method signatures,
+and impl-block method sets — while skipping every function body with
+balanced-brace matching. Precision notes:
+
+* Generic argument lists are skipped by `<`/`>` depth; this is sound
+  in item/type position (comparison operators only occur inside the
+  bodies we skip), and the tokenizer emits `->`/`=>` as single tokens
+  so arrows never miscount as closers.
+* Arity is the number of top-level comma-separated parameter slots,
+  including any `self` receiver — both sides of a trait/impl
+  comparison count the same way, so the check is exact.
+* `#[cfg(test)]` modules are parsed like any other (their imports and
+  literals are checked too) but tagged `in_test`, so crate-external
+  visibility rules don't misfire on test-only items.
+"""
+
+import re
+from dataclasses import dataclass, field
+
+TOKEN_RE = re.compile(
+    r"[A-Za-z_][A-Za-z0-9_]*"
+    r"|[0-9][0-9A-Za-z_]*(?:\.[0-9][0-9A-Za-z_]*)?"
+    r"|::|->|=>|\.\.=|\.\.\.|\.\."
+    r"|\S"
+)
+
+KEYWORDS_NOT_NAMES = {
+    "match", "if", "while", "for", "loop", "else", "move", "return",
+    "break", "continue", "let", "in", "where", "unsafe", "async",
+}
+
+
+def tokenize(masked):
+    """[(text, byte offset)] over masked source."""
+    return [(m.group(0), m.start()) for m in TOKEN_RE.finditer(masked)]
+
+
+@dataclass
+class Import:
+    segments: tuple  # path segments, e.g. ("crate", "serve", "SimReport")
+    alias: str  # name bound locally ("_" for trait-only imports)
+    is_glob: bool
+    line: int
+    vis: str  # "", "pub", "pub(crate)", ...
+    in_test: bool
+    module: tuple  # module the use sits in
+
+
+@dataclass
+class Item:
+    kind: str  # fn|struct|enum|trait|const|static|type|macro|mod|union
+    name: str
+    vis: str
+    line: int
+    module: tuple
+    in_test: bool
+
+
+@dataclass
+class StructDef(Item):
+    fields: list = None  # [(name, line)] for named-field structs, else None
+
+
+@dataclass
+class EnumDef(Item):
+    variants: dict = field(default_factory=dict)  # name -> [(field, line)] | None
+
+
+@dataclass
+class TraitDef(Item):
+    methods: dict = field(default_factory=dict)  # name -> (arity, has_default, line)
+    assoc: dict = field(default_factory=dict)  # name -> (kind, has_default)
+
+
+@dataclass
+class ImplBlock:
+    trait_segs: tuple  # () for inherent impls
+    self_text: str
+    methods: dict  # name -> (arity, line)
+    assoc: dict  # name -> kind
+    line: int
+    module: tuple
+    in_test: bool
+    negative: bool = False
+
+
+@dataclass
+class ModDecl:
+    name: str
+    line: int
+    module: tuple
+    vis: str
+    in_test: bool
+
+
+@dataclass
+class ParsedFile:
+    path: str
+    module: tuple
+    imports: list = field(default_factory=list)
+    items: list = field(default_factory=list)  # every Item incl. structs etc.
+    structs: list = field(default_factory=list)
+    enums: list = field(default_factory=list)
+    traits: list = field(default_factory=list)
+    impls: list = field(default_factory=list)
+    mod_decls: list = field(default_factory=list)
+
+    def local_types(self):
+        """name -> def for structs/enums defined anywhere in this file."""
+        out = {}
+        for s in self.structs:
+            out[s.name] = s
+        for e in self.enums:
+            out[e.name] = e
+        return out
+
+
+OPEN = {"(": ")", "[": "]", "{": "}"}
+
+
+class FileParser:
+    def __init__(self, rust_file, module):
+        self.rf = rust_file
+        self.toks = tokenize(rust_file.masked)
+        self.out = ParsedFile(path=rust_file.path, module=module)
+
+    def line(self, i):
+        if i >= len(self.toks):
+            i = len(self.toks) - 1
+        return self.rf.line_of(self.toks[i][1])
+
+    def parse(self):
+        self.parse_items(0, len(self.toks), self.out.module, in_test=False)
+        return self.out
+
+    # -- token helpers ---------------------------------------------------
+
+    def tok(self, i):
+        return self.toks[i][0] if 0 <= i < len(self.toks) else ""
+
+    def skip_balanced(self, i):
+        """toks[i] is an opener; return index just past its closer."""
+        opener = self.tok(i)
+        closer = OPEN[opener]
+        depth = 0
+        while i < len(self.toks):
+            t = self.tok(i)
+            if t == opener:
+                depth += 1
+            elif t == closer:
+                depth -= 1
+                if depth == 0:
+                    return i + 1
+            i += 1
+        return i
+
+    def skip_angles(self, i):
+        """toks[i] == '<'; return index past the matching '>'."""
+        depth = 0
+        while i < len(self.toks):
+            t = self.tok(i)
+            if t == "<":
+                depth += 1
+            elif t == ">":
+                depth -= 1
+                if depth == 0:
+                    return i + 1
+            elif t in "([{":
+                i = self.skip_balanced(i)
+                continue
+            i += 1
+        return i
+
+    def find_body_or_semi(self, i, end):
+        """Scan to the first top-level `{` or `;`; return (index, which)."""
+        while i < end:
+            t = self.tok(i)
+            if t == "{":
+                return i, "{"
+            if t == ";":
+                return i, ";"
+            if t in "([":
+                i = self.skip_balanced(i)
+                continue
+            if t == "<":
+                i = self.skip_angles(i)
+                continue
+            i += 1
+        return end, ""
+
+    def skip_to_semi(self, i, end):
+        """Skip a `= expr ;` tail, tracking every bracket kind."""
+        while i < end:
+            t = self.tok(i)
+            if t == ";":
+                return i + 1
+            if t in "([{":
+                i = self.skip_balanced(i)
+                continue
+            i += 1
+        return end
+
+    # -- item loop -------------------------------------------------------
+
+    def parse_items(self, i, end, module, in_test, impl_sink=None):
+        attrs = []
+        vis = ""
+        while i < end:
+            t = self.tok(i)
+            if t == "#":
+                j = i + 1
+                if self.tok(j) == "!":
+                    j += 1
+                if self.tok(j) == "[":
+                    close = self.skip_balanced(j)
+                    attrs.append(" ".join(tt for tt, _ in self.toks[j:close]))
+                    i = close
+                    continue
+                i += 1
+                continue
+            if t == "pub":
+                vis = "pub"
+                if self.tok(i + 1) == "(":
+                    close = self.skip_balanced(i + 1)
+                    inner = " ".join(tt for tt, _ in self.toks[i + 2 : close - 1])
+                    vis = f"pub({inner})"
+                    i = close
+                else:
+                    i += 1
+                continue
+            if t in ("unsafe", "default", "async", "extern"):
+                if t == "extern" and self.tok(i + 1) == "{":
+                    i = self.skip_balanced(i + 1)
+                elif t == "extern" and self.tok(i + 1) == "crate":
+                    i = self.skip_to_semi(i, end)
+                else:
+                    i += 1
+                continue
+            if t == "use":
+                i = self.parse_use(i, end, module, vis, in_test)
+            elif t == "mod":
+                i = self.parse_mod(i, end, module, vis, in_test, attrs)
+            elif t in ("struct", "union"):
+                i = self.parse_struct(i, end, module, vis, in_test, kind=t)
+            elif t == "enum":
+                i = self.parse_enum(i, end, module, vis, in_test)
+            elif t == "trait":
+                i = self.parse_trait(i, end, module, vis, in_test)
+            elif t == "impl":
+                i = self.parse_impl(i, end, module, in_test)
+            elif t == "fn":
+                i = self.parse_fn(i, end, module, vis, in_test, impl_sink)
+            elif t in ("const", "static"):
+                if self.tok(i + 1) == "fn":
+                    i += 1
+                    continue
+                name_i = i + 1
+                if self.tok(name_i) == "mut":
+                    name_i += 1
+                name = self.tok(name_i)
+                if impl_sink is not None and t == "const":
+                    impl_sink.assoc[name] = "const"
+                elif name and name != "_":
+                    self.out.items.append(
+                        Item(t, name, vis, self.line(i), module, in_test)
+                    )
+                i = self.skip_to_semi(name_i, end)
+            elif t == "type":
+                name = self.tok(i + 1)
+                if impl_sink is not None:
+                    impl_sink.assoc[name] = "type"
+                else:
+                    self.out.items.append(
+                        Item("type", name, vis, self.line(i), module, in_test)
+                    )
+                i = self.skip_to_semi(i + 1, end)
+            elif t == "macro_rules":
+                name = self.tok(i + 2)  # macro_rules ! name
+                exported = any("macro_export" in a for a in attrs)
+                self.out.items.append(
+                    Item("macro", name, "pub" if exported else vis,
+                         self.line(i), module, in_test)
+                )
+                j, which = self.find_body_or_semi(i + 3, end)
+                i = self.skip_balanced(j) if which == "{" else j + 1
+            else:
+                i += 1
+                attrs, vis = [], ""
+                continue
+            attrs, vis = [], ""
+        return i
+
+    # -- use trees -------------------------------------------------------
+
+    def parse_use(self, i, end, module, vis, in_test):
+        line = self.line(i)
+        i += 1  # past `use`
+
+        def tree(j, prefix):
+            segs = list(prefix)
+            alias = None
+            while j < end:
+                t = self.tok(j)
+                if t == "{":
+                    close = self.skip_balanced(j)
+                    k = j + 1
+                    while k < close - 1:
+                        k = tree(k, segs)
+                        if self.tok(k) == ",":
+                            k += 1
+                    return close
+                if t == "*":
+                    self.out.imports.append(
+                        Import(tuple(segs), "*", True, line, vis, in_test, module)
+                    )
+                    return j + 1
+                if t == "as":
+                    alias = self.tok(j + 1)
+                    j += 2
+                    continue
+                if t == "::":
+                    j += 1
+                    continue
+                if re.match(r"[A-Za-z_]", t) and t != "as":
+                    segs.append(t)
+                    j += 1
+                    continue
+                break  # `,` `;` `}`
+            if len(segs) > len(prefix) or segs:
+                if segs and segs[-1] == "self" and len(segs) > 1:
+                    segs = segs[:-1]
+                self.out.imports.append(
+                    Import(tuple(segs), alias or (segs[-1] if segs else ""),
+                           False, line, vis, in_test, module)
+                )
+            return j
+
+        j = tree(i, [])
+        while j < end and self.tok(j) != ";":
+            j += 1
+        return j + 1
+
+    # -- items -----------------------------------------------------------
+
+    def parse_mod(self, i, end, module, vis, in_test, attrs):
+        name = self.tok(i + 1)
+        line = self.line(i)
+        cfg_test = any("cfg ( test )" in a or "cfg(test)" in a.replace(" ", "")
+                       for a in attrs)
+        self.out.items.append(Item("mod", name, vis, line, module, in_test))
+        if self.tok(i + 2) == ";":
+            self.out.mod_decls.append(ModDecl(name, line, module, vis, in_test))
+            return i + 3
+        if self.tok(i + 2) == "{":
+            close = self.skip_balanced(i + 2)
+            self.parse_items(i + 3, close - 1, module + (name,),
+                             in_test or cfg_test)
+            return close
+        return i + 2
+
+    def parse_struct(self, i, end, module, vis, in_test, kind):
+        name = self.tok(i + 1)
+        line = self.line(i)
+        j = i + 2
+        if self.tok(j) == "<":
+            j = self.skip_angles(j)
+        fields = None
+        if self.tok(j) == "(":
+            j = self.skip_balanced(j)
+            j, which = self.find_body_or_semi(j, end)
+            j += 1  # past `;` (unit/tuple structs end with one)
+        else:
+            j, which = self.find_body_or_semi(j, end)
+            if which == "{":
+                close = self.skip_balanced(j)
+                fields = self.parse_fields(j + 1, close - 1)
+                j = close
+            else:
+                j += 1
+        sd = StructDef("struct", name, vis, line, module, in_test, fields=fields)
+        self.out.structs.append(sd)
+        self.out.items.append(sd)
+        return j
+
+    def parse_fields(self, i, end):
+        """Named fields between braces: `vis? name: Type,`*"""
+        fields = []
+        while i < end:
+            t = self.tok(i)
+            if t == "#":
+                j = i + 1
+                if self.tok(j) == "[":
+                    i = self.skip_balanced(j)
+                    continue
+                i += 1
+                continue
+            if t == "pub":
+                if self.tok(i + 1) == "(":
+                    i = self.skip_balanced(i + 1)
+                else:
+                    i += 1
+                continue
+            if re.match(r"[A-Za-z_]", t) and self.tok(i + 1) == ":":
+                fields.append((t, self.line(i)))
+                # skip the type until a top-level comma
+                j = i + 2
+                while j < end:
+                    tt = self.tok(j)
+                    if tt == ",":
+                        break
+                    if tt in "([{":
+                        j = self.skip_balanced(j)
+                        continue
+                    if tt == "<":
+                        j = self.skip_angles(j)
+                        continue
+                    j += 1
+                i = j + 1
+                continue
+            i += 1
+        return fields
+
+    def parse_enum(self, i, end, module, vis, in_test):
+        name = self.tok(i + 1)
+        line = self.line(i)
+        j = i + 2
+        if self.tok(j) == "<":
+            j = self.skip_angles(j)
+        j, which = self.find_body_or_semi(j, end)
+        variants = {}
+        if which == "{":
+            close = self.skip_balanced(j)
+            k = j + 1
+            while k < close - 1:
+                t = self.tok(k)
+                if t == "#" and self.tok(k + 1) == "[":
+                    k = self.skip_balanced(k + 1)
+                    continue
+                if re.match(r"[A-Za-z_]", t):
+                    vname = t
+                    k += 1
+                    if self.tok(k) == "(":
+                        variants[vname] = None
+                        k = self.skip_balanced(k)
+                    elif self.tok(k) == "{":
+                        vclose = self.skip_balanced(k)
+                        variants[vname] = self.parse_fields(k + 1, vclose - 1)
+                        k = vclose
+                    else:
+                        variants[vname] = None
+                    while k < close - 1 and self.tok(k) != ",":
+                        if self.tok(k) in "([{":
+                            k = self.skip_balanced(k)
+                        else:
+                            k += 1
+                    k += 1
+                    continue
+                k += 1
+            j = close
+        else:
+            j += 1
+        ed = EnumDef("enum", name, vis, line, module, in_test, variants=variants)
+        self.out.enums.append(ed)
+        self.out.items.append(ed)
+        return j
+
+    def parse_fn_sig(self, i, end):
+        """toks[i] == 'fn'. Returns (name, arity, body_open_or_semi, which)."""
+        name = self.tok(i + 1)
+        j = i + 2
+        if self.tok(j) == "<":
+            j = self.skip_angles(j)
+        arity = 0
+        if self.tok(j) == "(":
+            close = self.skip_balanced(j)
+            depth_any = 0
+            slots = 0
+            nonempty = False
+            k = j + 1
+            while k < close - 1:
+                t = self.tok(k)
+                if t in "([{":
+                    k = self.skip_balanced(k)
+                    nonempty = True
+                    continue
+                if t == "<":
+                    k = self.skip_angles(k)
+                    nonempty = True
+                    continue
+                if t == ",":
+                    slots += 1
+                    k += 1
+                    continue
+                nonempty = True
+                k += 1
+            arity = slots + 1 if nonempty else 0
+            j = close
+        j, which = self.find_body_or_semi(j, end)
+        return name, arity, j, which
+
+    def parse_fn(self, i, end, module, vis, in_test, impl_sink):
+        line = self.line(i)
+        name, arity, j, which = self.parse_fn_sig(i, end)
+        if impl_sink is not None:
+            impl_sink.methods[name] = (arity, line)
+        else:
+            self.out.items.append(Item("fn", name, vis, line, module, in_test))
+        if which == "{":
+            return self.skip_balanced(j)
+        return j + 1
+
+    def parse_trait(self, i, end, module, vis, in_test):
+        name = self.tok(i + 1)
+        line = self.line(i)
+        j = i + 2
+        if self.tok(j) == "<":
+            j = self.skip_angles(j)
+        j, which = self.find_body_or_semi(j, end)
+        td = TraitDef("trait", name, vis, line, module, in_test)
+        if which == "{":
+            close = self.skip_balanced(j)
+            k = j + 1
+            while k < close - 1:
+                t = self.tok(k)
+                if t == "#" and self.tok(k + 1) == "[":
+                    k = self.skip_balanced(k + 1)
+                    continue
+                if t in ("unsafe", "default", "async"):
+                    k += 1
+                    continue
+                if t == "fn":
+                    mline = self.line(k)
+                    mname, arity, b, bwhich = self.parse_fn_sig(k, close - 1)
+                    has_default = bwhich == "{"
+                    td.methods[mname] = (arity, has_default, mline)
+                    k = self.skip_balanced(b) if has_default else b + 1
+                    continue
+                if t == "type":
+                    aname = self.tok(k + 1)
+                    semi = self.skip_to_semi(k + 1, close - 1)
+                    text = " ".join(tt for tt, _ in self.toks[k:semi])
+                    td.assoc[aname] = ("type", "=" in text)
+                    k = semi
+                    continue
+                if t == "const":
+                    aname = self.tok(k + 1)
+                    semi = self.skip_to_semi(k + 1, close - 1)
+                    text = " ".join(tt for tt, _ in self.toks[k:semi])
+                    td.assoc[aname] = ("const", "=" in text)
+                    k = semi
+                    continue
+                k += 1
+            j = close
+        else:
+            j += 1
+        self.out.traits.append(td)
+        self.out.items.append(td)
+        return j
+
+    def parse_impl(self, i, end, module, in_test):
+        line = self.line(i)
+        j = i + 1
+        if self.tok(j) == "<":
+            j = self.skip_angles(j)
+        # Header: tokens up to the body `{`, split at a top-level `for`
+        # (ignoring HRTB `for<…>`).
+        header = []
+        negative = False
+        while j < end:
+            t = self.tok(j)
+            if t == "{":
+                break
+            if t in "([":
+                close = self.skip_balanced(j)
+                header.extend(self.toks[j:close])
+                j = close
+                continue
+            if t == "<":
+                close = self.skip_angles(j)
+                header.extend(self.toks[j:close])
+                j = close
+                continue
+            header.append(self.toks[j])
+            j += 1
+        texts = [t for t, _ in header]
+        if "!" in texts[:2]:
+            negative = True
+        for_idx = None
+        for k, t in enumerate(texts):
+            if t == "for" and (k + 1 >= len(texts) or texts[k + 1] != "<"):
+                for_idx = k
+                break
+        if for_idx is not None:
+            trait_toks = texts[:for_idx]
+            self_toks = texts[for_idx + 1 :]
+        else:
+            trait_toks = []
+            self_toks = texts
+        if "where" in self_toks:
+            self_toks = self_toks[: self_toks.index("where")]
+        # Trait path: idents joined by `::` at angle depth 0.
+        trait_segs = []
+        depth = 0
+        for t in trait_toks:
+            if t == "<":
+                depth += 1
+            elif t == ">":
+                depth -= 1
+            elif depth == 0 and re.match(r"[A-Za-z_]", t) and t not in ("dyn", "where"):
+                trait_segs.append(t)
+        blk = ImplBlock(
+            trait_segs=tuple(trait_segs),
+            self_text=" ".join(self_toks),
+            methods={},
+            assoc={},
+            line=line,
+            module=module,
+            in_test=in_test,
+            negative=negative,
+        )
+        self.out.impls.append(blk)
+        if self.tok(j) == "{":
+            close = self.skip_balanced(j)
+            self.parse_items(j + 1, close - 1, module, in_test, impl_sink=blk)
+            return close
+        return j + 1
+
+
+def parse_file(rust_file, module):
+    return FileParser(rust_file, module).parse()

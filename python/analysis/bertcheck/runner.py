@@ -1,0 +1,110 @@
+"""Run every bertcheck checker and report; exit 1 on any error finding.
+
+Usage (from `make check`):
+
+    cd python && python3 -m analysis.bertcheck --root ..
+
+Flags:
+    --root PATH    repo root (default: two levels up from this package)
+    --update       regenerate committed artifacts (the unsafe inventory)
+                   instead of diffing against them
+    --json PATH    also dump findings as JSON (for tooling)
+    --only NAMES   comma-separated checker subset (debugging aid)
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from .rustsrc import load_tree
+from .crate import Crate
+from . import delimiters, symbols, structlit, traitconf, unsafety, determinism, surface
+
+CHECKERS = [
+    ("delimiters", delimiters),
+    ("symbols", symbols),
+    ("structlit", structlit),
+    ("traitconf", traitconf),
+    ("unsafety", unsafety),
+    ("determinism", determinism),
+    ("surface", surface),
+]
+
+
+class Context:
+    """Shared per-run state handed to each checker's run(ctx)."""
+
+    def __init__(self, root):
+        self.root = Path(root).resolve()
+        self.tree = load_tree(self.root)
+        self.crate = Crate(self.tree)
+
+
+def run_all(root, update=False, only=None):
+    """(findings, per-checker timing, file count)."""
+    t0 = time.monotonic()
+    ctx = Context(root)
+    timings = [("load+parse", time.monotonic() - t0, 0)]
+    findings = []
+    for name, mod in CHECKERS:
+        if only and name not in only:
+            continue
+        t1 = time.monotonic()
+        if name == "unsafety":
+            got = mod.run(ctx, update=update)
+        else:
+            got = mod.run(ctx)
+        timings.append((name, time.monotonic() - t1, len(got)))
+        findings.extend(got)
+    return findings, timings, len(ctx.tree)
+
+
+def main(argv=None):
+    default_root = Path(__file__).resolve().parents[3]
+    ap = argparse.ArgumentParser(prog="bertcheck", description=__doc__)
+    ap.add_argument("--root", default=str(default_root))
+    ap.add_argument("--update", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--only", default=None, metavar="NAMES")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - {name for name, _ in CHECKERS}
+        if unknown:
+            ap.error(f"unknown checker(s): {', '.join(sorted(unknown))}")
+
+    t0 = time.monotonic()
+    findings, timings, nfiles = run_all(args.root, update=args.update, only=only)
+    total = time.monotonic() - t0
+
+    findings.sort(key=lambda f: (f.path, f.line, f.checker))
+    errors = [f for f in findings if f.severity == "error"]
+    warns = [f for f in findings if f.severity != "error"]
+
+    for f in findings:
+        print(f.render())
+    if findings:
+        print()
+    stage_summary = "  ".join(
+        f"{name}:{dt * 1000:.0f}ms" + (f"/{n}" if n else "")
+        for name, dt, n in timings
+    )
+    print(f"bertcheck: {nfiles} files, {len(errors)} error(s), "
+          f"{len(warns)} warning(s) in {total:.2f}s  [{stage_summary}]")
+
+    if args.json:
+        payload = [
+            {"checker": f.checker, "path": f.path, "line": f.line,
+             "severity": f.severity, "message": f.message}
+            for f in findings
+        ]
+        Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

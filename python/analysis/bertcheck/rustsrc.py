@@ -1,0 +1,181 @@
+"""String/comment-aware Rust source masking and file loading.
+
+Everything downstream (delimiter balance, the item parser, the lint
+scans) runs over a *masked* view of each file: comment and string
+contents replaced by spaces, newlines preserved, so byte offsets and
+line numbers in the masked text equal those in the raw text. A `{`
+inside a string literal or a doc comment can therefore never unbalance
+a scope, and a `use` path inside a `format!` string is never resolved.
+
+The masker understands the full Rust literal surface this repo uses:
+line (`//`, `///`, `//!`) and nested block (`/* /* */ */`) comments,
+plain/byte strings with escapes, raw strings `r"…"`/`r#"…"#` (and
+`br`), char literals (escaped and plain), and it distinguishes char
+literals from lifetimes (`'a'` vs `<'a>`) without type context.
+"""
+
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+_RAW_STR = re.compile(r'(?:r|br|rb)(#*)"')
+
+
+def _space_out(chars, a, b):
+    for j in range(a, b):
+        if chars[j] != "\n":
+            chars[j] = " "
+
+
+def mask_source(text):
+    """Return (masked, comments).
+
+    `masked` is `text` with comment bodies and string/char-literal
+    contents replaced by spaces (string quotes are kept, so `"…"`
+    stays a visible-but-empty token; comments vanish entirely).
+    `comments` is a list of (1-based start line, full comment text).
+    """
+    n = len(text)
+    out = list(text)
+    comments = []
+    line = 1
+    i = 0
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c == "/" and text.startswith("//", i):
+            j = text.find("\n", i)
+            j = n if j == -1 else j
+            comments.append((line, text[i:j]))
+            _space_out(out, i, j)
+            i = j
+            continue
+        if c == "/" and text.startswith("/*", i):
+            depth, j, start_line = 1, i + 2, line
+            while j < n and depth:
+                if text.startswith("/*", j):
+                    depth, j = depth + 1, j + 2
+                elif text.startswith("*/", j):
+                    depth, j = depth - 1, j + 2
+                else:
+                    if text[j] == "\n":
+                        line += 1
+                    j += 1
+            comments.append((start_line, text[i:j]))
+            _space_out(out, i, j)
+            i = j
+            continue
+        if c == '"':
+            j = i + 1
+            while j < n:
+                if text[j] == "\\":
+                    if j + 1 < n and text[j + 1] == "\n":
+                        line += 1
+                    j += 2
+                elif text[j] == '"':
+                    break
+                else:
+                    if text[j] == "\n":
+                        line += 1
+                    j += 1
+            _space_out(out, i + 1, min(j, n))
+            i = min(j + 1, n)
+            continue
+        if c in "rb" and (i == 0 or not (text[i - 1].isalnum() or text[i - 1] == "_")):
+            m = _RAW_STR.match(text, i)
+            if m:
+                closer = '"' + m.group(1)
+                j = text.find(closer, m.end())
+                j = n if j == -1 else j + len(closer)
+                line += text.count("\n", i, j)
+                _space_out(out, m.end(), max(m.end(), j - len(closer)))
+                i = j
+                continue
+            if text.startswith("b'", i):
+                i += 1  # fall through to the char-literal arm below
+                c = "'"
+            elif text.startswith('b"', i):
+                i += 1
+                continue  # plain-string arm handles the opening quote
+            else:
+                i += 1
+                continue
+        if c == "'":
+            if i + 1 < n and text[i + 1] == "\\":
+                k = i + 2
+                e = text[k] if k < n else ""
+                if e == "x":
+                    k += 3
+                elif e == "u":
+                    close = text.find("}", k)
+                    k = (close + 1) if close != -1 else k + 1
+                else:
+                    k += 1
+                if k < n and text[k] == "'":
+                    _space_out(out, i, k + 1)
+                    i = k + 1
+                    continue
+                i += 1
+                continue
+            if i + 2 < n and text[i + 2] == "'" and text[i + 1] not in "'\\":
+                _space_out(out, i, i + 3)
+                i += 3
+                continue
+            i += 1  # a lifetime or loop label: keep, harmless to scans
+            continue
+        i += 1
+    return "".join(out), comments
+
+
+@dataclass
+class RustFile:
+    """One parsed-enough Rust source file."""
+
+    path: str  # repo-relative, forward slashes
+    raw: str
+    masked: str
+    comments: list  # [(1-based line, comment text)]
+    _line_starts: list = field(default_factory=list, repr=False)
+
+    @classmethod
+    def load(cls, root: Path, rel: str) -> "RustFile":
+        raw = (root / rel).read_text()
+        masked, comments = mask_source(raw)
+        return cls(path=rel, raw=raw, masked=masked, comments=comments)
+
+    def line_of(self, pos: int) -> int:
+        if not self._line_starts:
+            starts = [0]
+            for m in re.finditer("\n", self.raw):
+                starts.append(m.end())
+            self._line_starts = starts
+        starts = self._line_starts
+        lo, hi = 0, len(starts) - 1
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if starts[mid] <= pos:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo + 1
+
+
+def rust_files(root: Path, subdirs=("rust/src", "rust/tests", "rust/benches", "rust/vendor", "examples")):
+    """Every .rs file under the audit surface, repo-relative, sorted."""
+    rels = []
+    for sub in subdirs:
+        base = root / sub
+        if base.is_dir():
+            rels.extend(
+                p.relative_to(root).as_posix() for p in base.rglob("*.rs")
+            )
+    return sorted(rels)
+
+
+def load_tree(root: Path, subdirs=None) -> dict:
+    """Load + mask every tracked .rs file. Returns {rel_path: RustFile}."""
+    kwargs = {} if subdirs is None else {"subdirs": subdirs}
+    return {rel: RustFile.load(root, rel) for rel in rust_files(root, **kwargs)}

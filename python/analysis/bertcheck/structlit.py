@@ -1,0 +1,224 @@
+"""Checker: struct-literal field coverage (the PR 8 `SimReport` audit).
+
+For every struct literal (or struct pattern) whose type is defined in
+this repo, require that it either names every declared field or
+carries a `..` rest/functional-update tail. Field names that don't
+exist on the struct are errors too — that's the typo case the
+hand audit can miss.
+
+Resolution: a literal `Name { … }` binds to a struct via (a) a
+definition in the same file, (b) a `use` alias in the file, or (c) a
+qualified `a::b::Name` path through the crate resolver. Enum struct
+variants (`Kind::Variant { … }`) are checked against the variant's
+fields. Unresolvable names (external types, `Self`, generics via
+turbofish) are skipped — documented blind spots, not errors.
+"""
+
+import re
+
+from . import Finding, allowed
+from .parse import tokenize, KEYWORDS_NOT_NAMES
+
+CHECKER = "structlit"
+
+# Tokens that, immediately before `Name {`, mean "definition or header,
+# not a literal".
+NOT_LITERAL_BEFORE = {
+    "struct", "enum", "union", "trait", "impl", "mod", "fn", "for",
+    "use", "dyn", "as", "where", "type",
+}
+
+
+def _collect_path(toks, i):
+    """Walk backwards from toks[i] (an ident) to collect `a::b::Name`.
+
+    Returns (segments, index of first token of the path).
+    """
+    segs = [toks[i][0]]
+    j = i
+    while j >= 2 and toks[j - 1][0] == "::" and re.match(r"[A-Za-z_]", toks[j - 2][0]):
+        segs.insert(0, toks[j - 2][0])
+        j -= 2
+    return segs, j
+
+
+def _entries(toks, open_idx, close_idx):
+    """Split the brace group into top-level comma entries.
+
+    Returns (entries, top_arrow) where `top_arrow` is True when a
+    depth-0 `=>` appears — i.e. we grabbed a match body, not a literal.
+    """
+    entries = []
+    cur = []
+    top_arrow = False
+    depth = {"(": 0, "[": 0, "{": 0}
+    k = open_idx + 1
+    while k < close_idx:
+        t = toks[k][0]
+        if t in "([{":
+            depth[t] += 1
+        elif t == ")":
+            depth["("] -= 1
+        elif t == "]":
+            depth["["] -= 1
+        elif t == "}":
+            depth["{"] -= 1
+        at_top = not any(depth.values())
+        if t == "=>" and at_top:
+            top_arrow = True
+        if t == "," and at_top:
+            entries.append(cur)
+            cur = []
+        else:
+            cur.append(toks[k])
+        k += 1
+    if cur:
+        entries.append(cur)
+    return entries, top_arrow
+
+
+def _close_of(toks, open_idx):
+    depth = 0
+    for k in range(open_idx, len(toks)):
+        t = toks[k][0]
+        if t == "{":
+            depth += 1
+        elif t == "}":
+            depth -= 1
+            if depth == 0:
+                return k
+    return len(toks) - 1
+
+
+def _fields_of(ctx, rel, pf, segs):
+    """Resolve a literal path to a (type_label, field name list) or None."""
+    local = pf.local_types()
+    if len(segs) == 1:
+        d = local.get(segs[0])
+        if d is None:
+            d = _imported_type(ctx, rel, pf, segs[0])
+        if d is not None and d.kind == "struct" and d.fields is not None:
+            return d.name, [f for f, _ in d.fields]
+        return None
+    # Qualified path: try enum-variant first (`…::Enum::Variant`).
+    if len(segs) >= 2:
+        base = _resolve_type(ctx, rel, pf, segs[:-1])
+        if base is not None and base.kind == "enum":
+            fields = base.variants.get(segs[-1])
+            if isinstance(fields, list):
+                return f"{base.name}::{segs[-1]}", [f for f, _ in fields]
+            return None
+    d = _resolve_type(ctx, rel, pf, segs)
+    if d is not None and d.kind == "struct" and d.fields is not None:
+        return d.name, [f for f, _ in d.fields]
+    return None
+
+
+def _imported_type(ctx, rel, pf, name):
+    for imp in pf.imports:
+        if not imp.is_glob and imp.alias == name:
+            res = ctx.crate.resolve(imp.segments, rel, imp.module)
+            if res.ok and res.item is not None:
+                item, _ = res.item
+                if item.kind in ("struct", "enum"):
+                    return item
+            return None
+    return None
+
+
+def _resolve_type(ctx, rel, pf, segs):
+    # A one-segment qualified base can also be a local type.
+    if len(segs) == 1:
+        d = pf.local_types().get(segs[0])
+        if d is not None:
+            return d
+        return _imported_type(ctx, rel, pf, segs[0])
+    res = ctx.crate.resolve(tuple(segs), rel, pf.module)
+    if res.ok and res.item is not None:
+        item, _ = res.item
+        if item.kind in ("struct", "enum"):
+            return item
+    return None
+
+
+def check_file(ctx, rel):
+    findings = []
+    rf = ctx.tree[rel]
+    pf = ctx.crate.files[rel]
+    toks = tokenize(rf.masked)
+    for i, (t, pos) in enumerate(toks):
+        if t != "{" or i == 0:
+            continue
+        prev = toks[i - 1][0]
+        if not re.match(r"[A-Za-z_][A-Za-z0-9_]*$", prev):
+            continue
+        if prev in KEYWORDS_NOT_NAMES or prev in NOT_LITERAL_BEFORE:
+            continue
+        segs, start = _collect_path(toks, i - 1)
+        before = toks[start - 1][0] if start > 0 else ""
+        if before in NOT_LITERAL_BEFORE or before == ".":
+            continue
+        resolved = _fields_of(ctx, rel, pf, segs)
+        if resolved is None:
+            continue
+        label, declared = resolved
+        close = _close_of(toks, i)
+        entries, top_arrow = _entries(toks, i, close)
+        # A top-level `=>` means we mis-grabbed a match body, not a
+        # literal — bail rather than misreport.
+        if top_arrow:
+            continue
+        named = []
+        has_rest = False
+        bogus = False
+        for e in entries:
+            k = 0
+            while k < len(e) and e[k][0] in ("ref", "mut", "#"):
+                if e[k][0] == "#":
+                    # skip `#[…]` attribute tokens inside the entry
+                    while k < len(e) and e[k][0] != "]":
+                        k += 1
+                k += 1
+            if k >= len(e):
+                continue
+            first = e[k][0]
+            if first in ("..", "..=", "..."):
+                has_rest = True
+                continue
+            if re.match(r"[A-Za-z_][A-Za-z0-9_]*$", first) and (
+                k + 1 >= len(e) or e[k + 1][0] in (":", ",")
+                or k + 1 == len(e)
+            ):
+                named.append((first, rf.line_of(e[k][1])))
+            else:
+                bogus = True
+                break
+        if bogus:
+            continue
+        line = rf.line_of(pos)
+        if allowed(rf, CHECKER, line):
+            continue
+        declared_set = set(declared)
+        named_set = {n for n, _ in named}
+        unknown = [n for n, _ in named if n not in declared_set]
+        for n in unknown:
+            findings.append(Finding(
+                CHECKER, rel, line,
+                f"`{label}` literal names unknown field `{n}` "
+                f"(declared fields: {', '.join(declared)})"))
+        if not has_rest:
+            missing = [f for f in declared if f not in named_set]
+            if missing:
+                findings.append(Finding(
+                    CHECKER, rel, line,
+                    f"`{label}` literal covers {len(named_set)}/"
+                    f"{len(declared)} fields and has no `..` rest — "
+                    f"missing: {', '.join(missing)}"))
+    return findings
+
+
+def run(ctx):
+    findings = []
+    for rel in sorted(ctx.crate.files):
+        findings.extend(check_file(ctx, rel))
+    return findings

@@ -1,0 +1,187 @@
+"""Checker: surface sync across registry / mirror / CI / docs / goldens.
+
+The scenario set is declared in five places that have, until now, only
+agreed by discipline:
+
+1. `scenario::registry()` in `rust/src/scenario/mod.rs` — the source
+   of truth (`bertprof run <name>`);
+2. the mirror's `cli_surface_json()` in
+   `python/mirror/golden_mirror.py` (what regenerates the golden);
+3. the checked-in `rust/tests/golden/cli_surface.json` snapshot that
+   CI diffs against `bertprof list --json`;
+4. the `.github/workflows/ci.yml` `scenario-artifacts` matrix (each
+   row must name a real scenario and an existing golden snapshot);
+5. the DESIGN.md experiment index's Scenario column.
+
+Drift between them has been silent (a scenario runnable but
+undocumented, a CI row diffing a deleted golden, a mirror that stopped
+regenerating a name). This checker makes all five agree: 1=2=3 as
+ordered sequences, 5 as a set, and 4 as a validated subset.
+"""
+
+import json
+import re
+
+from . import Finding
+
+CHECKER = "surface"
+
+REGISTRY_REL = "rust/src/scenario/mod.rs"
+MIRROR_REL = "python/mirror/golden_mirror.py"
+CI_REL = ".github/workflows/ci.yml"
+DESIGN_REL = "DESIGN.md"
+CLI_GOLDEN_REL = "rust/tests/golden/cli_surface.json"
+GOLDEN_DIR_REL = "rust/tests/golden"
+
+
+def _brace_span(text, start):
+    """(open_idx, close_idx) of the first balanced {…} at/after start."""
+    open_idx = text.find("{", start)
+    if open_idx == -1:
+        return None
+    depth = 0
+    for i in range(open_idx, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return open_idx, i
+    return None
+
+
+def registry_names(ctx):
+    """Scenario names from scenario::registry(), in declaration order."""
+    rf = ctx.tree.get(REGISTRY_REL)
+    if rf is None:
+        return None, f"{REGISTRY_REL} not found"
+    m = re.search(r"\bfn\s+registry\s*\(", rf.masked)
+    if m is None:
+        return None, "no `fn registry(` in scenario/mod.rs"
+    span = _brace_span(rf.masked, m.end())
+    if span is None:
+        return None, "registry() body does not close"
+    body = rf.raw[span[0] : span[1]]
+    return re.findall(r'\bname:\s*"([A-Za-z0-9_]+)"', body), None
+
+
+def mirror_names(ctx):
+    """Scenario names from the mirror's cli_surface_json(), in order."""
+    text = (ctx.root / MIRROR_REL).read_text()
+    m = re.search(r"^def cli_surface_json\(", text, re.M)
+    if m is None:
+        return None, "no `def cli_surface_json(` in golden_mirror.py"
+    nxt = re.search(r"^def ", text[m.end():], re.M)
+    body = text[m.end() : m.end() + nxt.start()] if nxt else text[m.end():]
+    return re.findall(r'\bs\(\s*"([A-Za-z0-9_]+)"', body), None
+
+
+def ci_matrix(ctx):
+    """[(scenario, golden)] pairs from the scenario-artifacts matrix."""
+    text = (ctx.root / CI_REL).read_text()
+    pairs = []
+    scenario = None
+    for line in text.splitlines():
+        m = re.match(r"\s*-\s*scenario:\s*([A-Za-z0-9_]+)", line)
+        if m:
+            scenario = m.group(1)
+            continue
+        m = re.match(r"\s*golden:\s*([A-Za-z0-9_]+)", line)
+        if m and scenario is not None:
+            pairs.append((scenario, m.group(1)))
+            scenario = None
+    return pairs
+
+
+def design_names(ctx):
+    """Backticked names from the experiment index's Scenario column."""
+    text = (ctx.root / DESIGN_REL).read_text()
+    names = []
+    in_table = False
+    for line in text.splitlines():
+        if re.match(r"\|.*\|\s*Scenario\s*\|\s*$", line):
+            in_table = True
+            continue
+        if in_table:
+            if not line.startswith("|"):
+                in_table = False
+                continue
+            cells = [c.strip() for c in line.strip("|").split("|")]
+            if not cells or set(cells[-1]) <= {"-", " "}:
+                continue
+            names.extend(re.findall(r"`([A-Za-z0-9_]+)`", cells[-1]))
+    return names
+
+
+def cli_golden_names(ctx):
+    path = ctx.root / CLI_GOLDEN_REL
+    if not path.is_file():
+        return None, f"{CLI_GOLDEN_REL} missing"
+    data = json.loads(path.read_text())
+    return [s["name"] for s in data.get("scenarios", [])], None
+
+
+def _seq_diff(a_label, a, b_label, b):
+    """Human-readable difference between two name sequences."""
+    sa, sb = set(a), set(b)
+    parts = []
+    if sa - sb:
+        parts.append(f"only in {a_label}: {', '.join(sorted(sa - sb))}")
+    if sb - sa:
+        parts.append(f"only in {b_label}: {', '.join(sorted(sb - sa))}")
+    if not parts and a != b:
+        parts.append(f"same set, different order ({a_label}: {a}; "
+                     f"{b_label}: {b})")
+    return "; ".join(parts)
+
+
+def run(ctx):
+    findings = []
+
+    def err(rel, msg):
+        findings.append(Finding(CHECKER, rel, 1, msg))
+
+    reg, why = registry_names(ctx)
+    if reg is None:
+        err(REGISTRY_REL, why)
+        return findings
+    if not reg:
+        err(REGISTRY_REL, "registry() declares no scenarios")
+        return findings
+
+    mir, why = mirror_names(ctx)
+    if mir is None:
+        err(MIRROR_REL, why)
+    elif mir != reg:
+        err(MIRROR_REL,
+            "mirror cli_surface_json() disagrees with scenario::registry(): "
+            + _seq_diff("registry", reg, "mirror", mir))
+
+    cli, why = cli_golden_names(ctx)
+    if cli is None:
+        err(CLI_GOLDEN_REL, why)
+    elif cli != reg:
+        err(CLI_GOLDEN_REL,
+            "checked-in cli_surface.json disagrees with "
+            "scenario::registry(): " + _seq_diff("registry", reg, "golden", cli))
+
+    des = design_names(ctx)
+    if set(des) != set(reg):
+        err(DESIGN_REL,
+            "DESIGN.md experiment-index Scenario column disagrees with "
+            "scenario::registry(): " + _seq_diff("registry", reg, "DESIGN.md", des))
+
+    pairs = ci_matrix(ctx)
+    if not pairs:
+        err(CI_REL, "no scenario-artifacts matrix rows found")
+    for scenario, golden in pairs:
+        if scenario not in reg:
+            err(CI_REL,
+                f"CI matrix row runs unknown scenario `{scenario}` "
+                f"(registry: {', '.join(reg)})")
+        gpath = ctx.root / GOLDEN_DIR_REL / f"{golden}.json"
+        if not gpath.is_file():
+            err(CI_REL,
+                f"CI matrix row for `{scenario}` diffs against missing "
+                f"golden `{GOLDEN_DIR_REL}/{golden}.json`")
+    return findings

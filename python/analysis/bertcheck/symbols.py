@@ -1,0 +1,75 @@
+"""Checker: cross-module symbol resolution (the PR 8 audit, automated).
+
+Three passes over the whole tree:
+
+1. Every `use` declaration resolves — each module segment exists, the
+   final item exists, and visibility suffices from the consuming
+   context (crate-external consumers like tests/benches need full
+   `pub` chains; in-crate consumers get `pub(crate)`/ancestor rules).
+2. Every file-level `mod x;` declaration has a matching `x.rs` or
+   `x/mod.rs` next to it.
+3. Every inline `crate::…`/`bertprof::…` qualified path — function
+   bodies included — resolves the same way (`$crate` in macro bodies
+   is excluded by the lexer-level scan).
+
+Blind spots (DESIGN.md SSAnalysis): generic arguments, trait bounds,
+and method calls after the first item segment are not checked; glob
+imports make bare-name uses unverifiable and are skipped.
+"""
+
+from . import Finding, allowed
+from .crate import inline_paths
+
+CHECKER = "symbols"
+
+
+# Directories whose immediate .rs files are each their own crate root
+# (cargo compiles every integration test / bench / example separately),
+# so a `mod x;` there resolves next to the root file, not under its stem.
+_ROOT_DIRS = ("rust/tests", "rust/benches", "examples")
+
+
+def _mod_decl_candidates(rel, name):
+    """Files a `mod name;` in `rel` may point at."""
+    parent = rel.rsplit("/", 1)[0]
+    is_root = (
+        rel.endswith("/lib.rs") or rel.endswith("/main.rs")
+        or rel.endswith("/mod.rs") or parent in _ROOT_DIRS
+    )
+    base = parent if is_root else rel[: -len(".rs")]
+    return [f"{base}/{name}.rs", f"{base}/{name}/mod.rs"]
+
+
+def run(ctx):
+    findings = []
+    crate = ctx.crate
+    for rel, pf in sorted(crate.files.items()):
+        rf = ctx.tree[rel]
+        # -- pass 1: use declarations --
+        for imp in pf.imports:
+            res = crate.resolve(imp.segments, rel, imp.module)
+            if not res.ok:
+                if allowed(rf, CHECKER, imp.line):
+                    continue
+                findings.append(Finding(
+                    CHECKER, rel, imp.line,
+                    f"unresolved import `{'::'.join(imp.segments)}`"
+                    f"{'::*' if imp.is_glob else ''}: {res.reason}"))
+        # -- pass 2: mod declarations --
+        for md in pf.mod_decls:
+            cands = _mod_decl_candidates(rel, md.name)
+            if not any((ctx.root / c).is_file() for c in cands):
+                findings.append(Finding(
+                    CHECKER, rel, md.line,
+                    f"`mod {md.name};` has no backing file "
+                    f"(looked for {' or '.join(cands)})"))
+        # -- pass 3: inline qualified paths --
+        for line, segs in inline_paths(rf):
+            res = crate.resolve(tuple(segs), rel, pf.module)
+            if not res.ok:
+                if allowed(rf, CHECKER, line):
+                    continue
+                findings.append(Finding(
+                    CHECKER, rel, line,
+                    f"unresolved path `{'::'.join(segs)}`: {res.reason}"))
+    return findings

@@ -1,0 +1,93 @@
+"""Checker: trait-impl conformance for locally-defined traits.
+
+For every `impl Trait for Type` block whose trait resolves to a trait
+*defined in this repo* (`CostModel`, `BatchCost`, `RoutePolicy`,
+`BatchPolicy`, …— discovery is by resolution, not by a hardcoded
+list), require:
+
+* every required method (one declared without a default body) is
+  defined by the impl;
+* every method the impl defines exists on the trait;
+* arities match the trait declaration (parameter slots counted the
+  same way on both sides, `self` included);
+* required associated types/consts (no default) are provided.
+
+Impls of std/external traits (`Debug`, `Default`, `Sync`, …) don't
+resolve to a local TraitDef and are skipped, as are negative impls.
+Blind spots: parameter *types* are not compared (only arity), and
+generic/where constraints are invisible to this pass.
+"""
+
+from . import Finding, allowed
+
+CHECKER = "traitconf"
+
+
+def _local_trait(ctx, rel, impl):
+    """Resolve the impl's trait path to a TraitDef defined in-repo."""
+    segs = tuple(impl.trait_segs)
+    if not segs:
+        return None
+    pf = ctx.crate.files[rel]
+    # Same-file definition wins (no use decl needed).
+    if len(segs) == 1:
+        for td in pf.traits:
+            if td.name == segs[0]:
+                return td
+    res = ctx.crate.resolve(segs, rel, impl.module)
+    if res.ok and res.item is not None:
+        item, _ = res.item
+        if item.kind == "trait":
+            return item
+    return None
+
+
+def run(ctx):
+    findings = []
+    for rel in sorted(ctx.crate.files):
+        pf = ctx.crate.files[rel]
+        rf = ctx.tree[rel]
+        for impl in pf.impls:
+            if not impl.trait_segs or impl.negative:
+                continue
+            trait = _local_trait(ctx, rel, impl)
+            if trait is None:
+                continue
+            if allowed(rf, CHECKER, impl.line):
+                continue
+            label = f"impl {trait.name} for {impl.self_text or '?'}"
+            required = {
+                name for name, (_, has_default, _) in trait.methods.items()
+                if not has_default
+            }
+            for name in sorted(required - set(impl.methods)):
+                findings.append(Finding(
+                    CHECKER, rel, impl.line,
+                    f"{label}: missing required method `{name}` "
+                    f"(declared without a default at "
+                    f"{trait.name}::{name})"))
+            for name, (arity, mline) in sorted(impl.methods.items()):
+                decl = trait.methods.get(name)
+                if decl is None:
+                    findings.append(Finding(
+                        CHECKER, rel, mline,
+                        f"{label}: method `{name}` is not a member of "
+                        f"trait `{trait.name}` "
+                        f"(trait methods: {', '.join(sorted(trait.methods))})"))
+                    continue
+                want_arity = decl[0]
+                if arity != want_arity:
+                    findings.append(Finding(
+                        CHECKER, rel, mline,
+                        f"{label}: `{name}` takes {arity} parameter(s) "
+                        f"but the trait declares {want_arity}"))
+            required_assoc = {
+                name for name, (_, has_default) in trait.assoc.items()
+                if not has_default
+            }
+            for name in sorted(required_assoc - set(impl.assoc)):
+                kind = trait.assoc[name][0]
+                findings.append(Finding(
+                    CHECKER, rel, impl.line,
+                    f"{label}: missing required associated {kind} `{name}`"))
+    return findings

@@ -1,0 +1,122 @@
+"""Checker: unsafe inventory + `// SAFETY:` discipline.
+
+Every `unsafe` occurrence (block, `unsafe impl`, `unsafe fn`,
+`unsafe trait`) must carry an adjacent `// SAFETY:` comment — on the
+same line or within the few lines above — stating the invariant that
+makes it sound. The full inventory is also emitted as a committed,
+reviewable artifact (`python/analysis/unsafe_inventory.json`): adding
+or moving an unsafe block forces a diff in that file, so reviewers see
+the unsafe surface change explicitly instead of spelunking for it.
+
+Run the pass with `--update` after a legitimate change to regenerate
+the artifact.
+"""
+
+import json
+import re
+
+from . import Finding, allowed
+from .parse import tokenize
+
+CHECKER = "unsafety"
+INVENTORY_REL = "python/analysis/unsafe_inventory.json"
+
+
+def _safety_comment(rf, line):
+    """The SAFETY comment covering `line`, or None.
+
+    A comment counts if it is on the flagged line itself or belongs to
+    the contiguous run of comment lines ending directly above it — so a
+    multi-line `// SAFETY: …` block of any length qualifies, but a
+    comment separated from the unsafe site by code does not.
+    """
+    by_line = {}
+    for cline, text in rf.comments:
+        by_line.setdefault(cline, []).append(text)
+    block = list(by_line.get(line, []))
+    ln = line - 1
+    while ln in by_line:
+        block.extend(by_line[ln])
+        ln -= 1
+    for text in block:
+        if "SAFETY" in text:
+            return text.strip()
+    return None
+
+
+def _enclosing_context(rf, line):
+    """Best-effort label: the nearest preceding fn/impl header line."""
+    lines = rf.masked.split("\n")
+    for ln in range(line - 1, -1, -1):
+        text = lines[ln]
+        m = re.search(r"\b(?:fn\s+(\w+)|impl\b.*)", text)
+        if m:
+            header = rf.raw.split("\n")[ln].strip()
+            return header[:100]
+    return "<file scope>"
+
+
+def scan(ctx):
+    """All unsafe sites in the tree, in path/line order."""
+    sites = []
+    for rel in sorted(ctx.tree):
+        rf = ctx.tree[rel]
+        toks = tokenize(rf.masked)
+        for i, (t, pos) in enumerate(toks):
+            if t != "unsafe":
+                continue
+            nxt = toks[i + 1][0] if i + 1 < len(toks) else ""
+            if nxt == "{":
+                kind = "block"
+            elif nxt in ("fn", "impl", "trait"):
+                kind = f"unsafe {nxt}"
+            else:
+                kind = "other"
+            line = rf.line_of(pos)
+            sites.append({
+                "file": rel,
+                "line": line,
+                "kind": kind,
+                "context": _enclosing_context(rf, line),
+                "safety_comment": _safety_comment(rf, line),
+            })
+    return sites
+
+
+def run(ctx, update=False):
+    findings = []
+    sites = scan(ctx)
+    for s in sites:
+        rf = ctx.tree[s["file"]]
+        if s["safety_comment"] is None and not allowed(rf, CHECKER, s["line"]):
+            findings.append(Finding(
+                CHECKER, s["file"], s["line"],
+                f"`{s['kind']}` has no adjacent `// SAFETY:` comment "
+                f"(context: {s['context']}) — state the invariant that "
+                "makes it sound"))
+    inv_path = ctx.root / INVENTORY_REL
+    payload = {
+        "_comment": (
+            "Reviewable unsafe inventory (DESIGN.md SSAnalysis). "
+            "Regenerate with: cd python && "
+            "python3 -m analysis.bertcheck --root .. --update"
+        ),
+        "count": len(sites),
+        "sites": sites,
+    }
+    rendered = json.dumps(payload, indent=2, sort_keys=True) + "\n"
+    if update:
+        inv_path.parent.mkdir(parents=True, exist_ok=True)
+        inv_path.write_text(rendered)
+    elif not inv_path.is_file():
+        findings.append(Finding(
+            CHECKER, INVENTORY_REL, 1,
+            "unsafe inventory artifact missing — run with --update and "
+            "commit it"))
+    elif inv_path.read_text() != rendered:
+        findings.append(Finding(
+            CHECKER, INVENTORY_REL, 1,
+            f"unsafe inventory is stale ({len(sites)} site(s) found in "
+            "the tree) — the unsafe surface changed; review it, then "
+            "regenerate with --update and commit the diff"))
+    return findings

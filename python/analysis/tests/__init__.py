@@ -1,0 +1,4 @@
+"""Fixture-corpus tests for analysis.bertcheck.
+
+Run from `python/`:  python3 -m unittest analysis.tests.test_bertcheck -v
+"""

@@ -1,0 +1,5 @@
+// Fixture: `[` closed by `)` — the delimiters checker must fire.
+pub fn f(x: u32) -> u32 {
+    let v = [1, 2, 3);
+    v[0] + x
+}

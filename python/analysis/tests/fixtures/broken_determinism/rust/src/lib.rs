@@ -1,0 +1,17 @@
+// Fixture: a wall-clock read outside the allowlist and an unsorted
+// HashMap iteration — determinism must fire on both.
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn emit(m: &HashMap<String, u32>) -> Vec<String> {
+    let mut out = Vec::new();
+    for k in m.keys() {
+        out.push(k.clone());
+    }
+    out
+}
+
+pub fn stamp() -> f64 {
+    let t = Instant::now();
+    t.elapsed().as_secs_f64()
+}

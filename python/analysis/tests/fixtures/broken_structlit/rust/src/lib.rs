@@ -1,0 +1,15 @@
+// Fixture: one literal misses a field, another names a field the
+// struct does not have — structlit must fire on both.
+pub struct Report {
+    pub a: u32,
+    pub b: u32,
+    pub c: u32,
+}
+
+pub fn partial() -> Report {
+    Report { a: 1, b: 2 }
+}
+
+pub fn typo() -> Report {
+    Report { a: 1, b: 2, c: 3, d: 4 }
+}

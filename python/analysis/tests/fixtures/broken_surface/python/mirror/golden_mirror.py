@@ -1,0 +1,10 @@
+# Fixture mirror: cli_surface_json() dropped "serve" — surface must
+# report the registry/mirror disagreement.
+
+
+def s(name):
+    return {"name": name}
+
+
+def cli_surface_json():
+    return {"scenarios": [s("fig04")]}

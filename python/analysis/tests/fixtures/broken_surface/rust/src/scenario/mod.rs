@@ -1,0 +1,12 @@
+// Fixture registry: two scenarios; the mirror, DESIGN.md, and CI in
+// this mini-repo each drift from it in a different way.
+pub struct ScenarioSpec {
+    pub name: &'static str,
+}
+
+pub fn registry() -> Vec<ScenarioSpec> {
+    vec![
+        ScenarioSpec { name: "fig04" },
+        ScenarioSpec { name: "serve" },
+    ]
+}

@@ -1,0 +1,9 @@
+// Fixture: a `mod` with no backing file and an import of a symbol
+// that does not exist — the symbols checker must fire on both.
+pub mod ghost;
+
+use crate::ghost::Widget;
+
+pub struct Real {
+    pub id: u32,
+}

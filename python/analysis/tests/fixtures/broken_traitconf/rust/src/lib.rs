@@ -1,0 +1,25 @@
+// Fixture: an impl with wrong arity plus a method the trait does not
+// declare, and a second impl missing the required method entirely.
+pub trait Cost {
+    fn price(&self, units: u64) -> f64;
+    fn label(&self) -> String {
+        "cost".to_string()
+    }
+}
+
+pub struct Flat;
+
+impl Cost for Flat {
+    fn price(&self) -> f64 {
+        0.0
+    }
+    fn bogus(&self) {}
+}
+
+pub struct Empty;
+
+impl Cost for Empty {
+    fn label(&self) -> String {
+        "empty".to_string()
+    }
+}

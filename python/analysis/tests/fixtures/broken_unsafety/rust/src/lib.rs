@@ -1,0 +1,4 @@
+// Fixture: an unsafe block with no adjacent SAFETY comment.
+pub fn peek(v: &[u32]) -> u32 {
+    unsafe { *v.get_unchecked(0) }
+}

@@ -1,0 +1,40 @@
+//! Clean fixture: every checker must stay silent on this file,
+//! including the string-masking edge cases and the waiver path.
+
+use std::collections::HashMap;
+
+pub struct Pair {
+    pub key: String,
+    pub value: u64,
+}
+
+pub trait Scale {
+    fn factor(&self) -> f64;
+    fn scaled(&self, x: f64) -> f64 {
+        self.factor() * x
+    }
+}
+
+pub struct Unit;
+
+impl Scale for Unit {
+    fn factor(&self) -> f64 {
+        1.0
+    }
+}
+
+pub fn collect(m: &HashMap<String, u64>) -> Vec<Pair> {
+    // bertcheck: allow(determinism) — sorted below, order washes out.
+    let mut out: Vec<Pair> = m
+        .iter()
+        .map(|(k, v)| Pair { key: k.clone(), value: *v })
+        .collect();
+    out.sort_by(|a, b| a.key.cmp(&b.key));
+    out
+}
+
+pub fn tricky() -> &'static str {
+    // Unbalanced delimiters inside strings and chars must not count.
+    let _c = '}';
+    "delimiters like } ) ] here are masked"
+}

@@ -1,0 +1,182 @@
+"""Fixture-corpus tests for bertcheck.
+
+Each `fixtures/broken_*` directory is a minimal repo tree carrying one
+deliberate violation per checker; `fixtures/clean` must produce zero
+findings. The suite also asserts the *real* tree is clean and that the
+surface checker proves the full scenario set agrees everywhere — so
+`make check` going green is itself a tested property.
+"""
+
+import unittest
+from pathlib import Path
+
+from analysis.bertcheck import (
+    delimiters,
+    determinism,
+    structlit,
+    surface,
+    symbols,
+    traitconf,
+    unsafety,
+)
+from analysis.bertcheck.runner import CHECKERS, Context, run_all
+from analysis.bertcheck.rustsrc import mask_source
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+def fixture_findings(name, checker):
+    """Run one checker over a fixture mini-repo.
+
+    Findings are restricted to files inside the fixture tree: repo-level
+    artifacts a mini-repo legitimately lacks (the committed unsafe
+    inventory, the wall-clock allowlist's real paths) are out of scope
+    for per-file fixtures.
+    """
+    ctx = Context(FIXTURES / name)
+    return ctx, [f for f in checker.run(ctx) if f.path in ctx.tree]
+
+
+class Masking(unittest.TestCase):
+    def test_mask_preserves_geometry(self):
+        src = 'fn f() {\n    let s = "a } b"; // }{\n    let c = \'{\';\n}\n'
+        masked, comments = mask_source(src)
+        self.assertEqual(len(masked), len(src))
+        self.assertEqual(
+            [i for i, ch in enumerate(src) if ch == "\n"],
+            [i for i, ch in enumerate(masked) if ch == "\n"],
+        )
+        self.assertNotIn('a } b', masked)
+        self.assertEqual(comments, [(2, "// }{")])
+
+    def test_lifetime_is_not_a_char(self):
+        src = "fn f<'a>(x: &'a str) -> &'a str { x }"
+        masked, _ = mask_source(src)
+        self.assertEqual(masked, src)
+
+
+class BrokenCorpus(unittest.TestCase):
+    """Every deliberately-broken fixture must make its checker fire."""
+
+    def assert_fires(self, findings, *needles):
+        messages = [f.message for f in findings]
+        for needle in needles:
+            self.assertTrue(
+                any(needle in m for m in messages),
+                f"expected a finding containing {needle!r}, got: {messages}",
+            )
+
+    def test_delimiters(self):
+        _, got = fixture_findings("broken_delimiters", delimiters)
+        self.assert_fires(got, "mismatched delimiter")
+
+    def test_symbols(self):
+        _, got = fixture_findings("broken_symbols", symbols)
+        self.assert_fires(got, "has no backing file", "unresolved import")
+
+    def test_structlit(self):
+        _, got = fixture_findings("broken_structlit", structlit)
+        self.assert_fires(got, "missing: c", "unknown field `d`")
+
+    def test_traitconf(self):
+        _, got = fixture_findings("broken_traitconf", traitconf)
+        self.assert_fires(
+            got,
+            "missing required method `price`",
+            "not a member of trait `Cost`",
+            "takes 1 parameter(s) but the trait declares 2",
+        )
+
+    def test_unsafety(self):
+        _, got = fixture_findings("broken_unsafety", unsafety)
+        self.assert_fires(got, "no adjacent `// SAFETY:` comment")
+
+    def test_determinism(self):
+        _, got = fixture_findings("broken_determinism", determinism)
+        self.assert_fires(got, "wall-clock token `Instant`", "`keys`")
+
+    def test_surface(self):
+        # Surface findings point at repo-level files (DESIGN.md, ci.yml,
+        # the mirror), so no tree filter here.
+        ctx = Context(FIXTURES / "broken_surface")
+        messages = [f.message for f in surface.run(ctx)]
+        for needle in (
+            "mirror cli_surface_json() disagrees",
+            "DESIGN.md experiment-index Scenario column disagrees",
+            "unknown scenario `bogus`",
+            "missing golden",
+        ):
+            self.assertTrue(
+                any(needle in m for m in messages),
+                f"expected {needle!r} in: {messages}",
+            )
+
+
+class CleanCorpus(unittest.TestCase):
+    """The clean fixture stays clean under every per-file checker."""
+
+    def test_clean(self):
+        per_file = [delimiters, symbols, structlit, traitconf, unsafety,
+                    determinism]
+        for checker in per_file:
+            _, got = fixture_findings("clean", checker)
+            self.assertEqual(
+                [], [f.render() for f in got],
+                f"clean fixture not clean under {checker.CHECKER}",
+            )
+
+    def test_waiver_is_what_keeps_it_clean(self):
+        # Remove the allow(determinism) line and the HashMap iteration
+        # must fire — proving the waiver mechanism, not a parser gap,
+        # is why test_clean passes.
+        ctx = Context(FIXTURES / "clean")
+        rel = "rust/src/lib.rs"
+        rf = ctx.tree[rel]
+        rf.comments = [
+            (ln, text) for ln, text in rf.comments
+            if "bertcheck: allow" not in text
+        ]
+        got = determinism.check_file(ctx, rel)
+        self.assertTrue(
+            any("unordered map/set `m`" in f.message for f in got),
+            [f.render() for f in got],
+        )
+
+
+class RealTree(unittest.TestCase):
+    """`make check` green on this repo is a tested invariant."""
+
+    def test_repo_is_clean(self):
+        findings, _, nfiles = run_all(REPO_ROOT)
+        errors = [f.render() for f in findings if f.severity == "error"]
+        self.assertEqual([], errors, "\n".join(errors))
+        self.assertGreater(nfiles, 50)
+
+    def test_surface_agreement_is_total(self):
+        ctx = Context(REPO_ROOT)
+        reg, why = surface.registry_names(ctx)
+        self.assertIsNone(why)
+        self.assertEqual(19, len(reg), reg)
+        mir, why = surface.mirror_names(ctx)
+        self.assertIsNone(why)
+        self.assertEqual(reg, mir)
+        cli, why = surface.cli_golden_names(ctx)
+        self.assertIsNone(why)
+        self.assertEqual(reg, cli)
+        self.assertEqual(set(reg), set(surface.design_names(ctx)))
+        pairs = surface.ci_matrix(ctx)
+        self.assertTrue(pairs)
+        for scenario, _ in pairs:
+            self.assertIn(scenario, reg)
+
+    def test_every_checker_ran(self):
+        self.assertEqual(
+            ["delimiters", "symbols", "structlit", "traitconf",
+             "unsafety", "determinism", "surface"],
+            [name for name, _ in CHECKERS],
+        )
+
+
+if __name__ == "__main__":
+    unittest.main()

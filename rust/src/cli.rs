@@ -124,6 +124,7 @@ impl Args {
     /// `--set`s override earlier values and plain options, letting the
     /// legacy spellings and the registry channel coexist).
     pub fn param_pairs(&self) -> Vec<(String, String)> {
+        // bertcheck: allow(determinism) — sorted below, order washes out.
         let mut pairs: Vec<(String, String)> = self
             .opts
             .iter()

@@ -39,9 +39,16 @@ struct Slots<R> {
     cells: Vec<UnsafeCell<Option<R>>>,
 }
 
-// SAFETY: shared across workers, but the chunk claim guarantees no two
-// workers ever touch the same index, and reads happen only after the
-// scope joins every writer.
+// SAFETY: `&Slots` is shared across workers, but the only mutation is
+// the slot write in `run_grid`, and two invariants make that sound:
+// (1) disjoint chunk ranges — the `fetch_add(chunk)` cursor hands each
+//     `start..start+chunk` range to exactly one worker, so no index is
+//     ever written by two threads (equivalent to handing out disjoint
+//     `&mut` slices);
+// (2) scope join — `std::thread::scope` joins every worker before the
+//     drain below it runs, so all writes happen-before the single-
+//     threaded reads; no slot is read while any writer is live.
+// `R: Send` is required because results move across thread boundaries.
 unsafe impl<R: Send> Sync for Slots<R> {}
 
 /// Run `run` over every item of `grid` across up to `threads` workers,
@@ -78,8 +85,11 @@ where
                 }
                 for i in start..(start + chunk).min(n) {
                     let result = run(&grid[i]);
-                    // SAFETY: index i belongs to this worker's claimed
-                    // chunk alone (see Slots).
+                    // SAFETY: `i` lies in `start..start+chunk`, a range
+                    // this worker alone claimed via the atomic cursor
+                    // (disjoint chunk ranges), so no other thread writes
+                    // this cell; nothing reads it until the scope join
+                    // below sequences all writes before the drain.
                     unsafe { *slots.cells[i].get() = Some(result) };
                 }
             });
